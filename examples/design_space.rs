@@ -1,0 +1,40 @@
+//! Design-space exploration (paper Fig. 12 / §VI-B): sweep AR × adder
+//! width across all six workloads, report latency/EDP/EDAP, and identify
+//! the lowest-EDP and lowest-EDAP configurations (paper: ARx8-8k and
+//! ARx4-4k respectively).
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use fhemem::report;
+use fhemem::sim::{simulate, ArchConfig, SimOptions};
+use fhemem::trace::workloads;
+
+fn main() {
+    println!("{}", report::sim_header());
+    let mut best_edp: Option<(f64, String)> = None;
+    let mut best_edap: Option<(f64, String)> = None;
+    for cfg in ArchConfig::design_space() {
+        let mut edp_sum = 0.0;
+        let mut edap_sum = 0.0;
+        for t in workloads::deep() {
+            let r = simulate(&cfg, &t, SimOptions::default());
+            println!("{}", report::sim_row(&r));
+            edp_sum += r.edp().log10();
+            edap_sum += r.edap().log10();
+        }
+        // geometric-mean EDP/EDAP over deep workloads
+        if best_edp.as_ref().map(|(v, _)| edp_sum < *v).unwrap_or(true) {
+            best_edp = Some((edp_sum, cfg.name()));
+        }
+        if best_edap.as_ref().map(|(v, _)| edap_sum < *v).unwrap_or(true) {
+            best_edap = Some((edap_sum, cfg.name()));
+        }
+    }
+    let (_, edp_name) = best_edp.unwrap();
+    let (_, edap_name) = best_edap.unwrap();
+    println!("\nlowest-EDP config:  {edp_name}   (paper: ARx8-8k)");
+    println!("lowest-EDAP config: {edap_name}   (paper: ARx4-4k)");
+    println!("design_space OK");
+}

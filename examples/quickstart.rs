@@ -1,0 +1,55 @@
+//! Quickstart: encrypt two vectors, multiply and rotate homomorphically,
+//! decrypt and verify — then report what the same work costs on the
+//! simulated FHEmem accelerator.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use fhemem::coordinator::Coordinator;
+use fhemem::params::CkksParams;
+use fhemem::sim::ArchConfig;
+use std::path::Path;
+
+fn main() {
+    // Functional CKKS context + the paper's lowest-EDAP accelerator.
+    let coord = Coordinator::new(
+        CkksParams::func_tiny(),
+        ArchConfig::default(), // ARx4-4k
+        Some(Path::new("artifacts")),
+    );
+    println!("backend: {}", coord.backend_name());
+
+    let slots = coord.ctx.encoder.slots();
+    let xs: Vec<f64> = (0..slots).map(|i| 0.1 * ((i % 7) as f64 - 3.0)).collect();
+    let ys: Vec<f64> = (0..slots).map(|i| 0.05 * ((i % 5) as f64)).collect();
+
+    let cx = coord.eval.encrypt_real(&xs, 3);
+    let cy = coord.eval.encrypt_real(&ys, 3);
+
+    let sum = coord.hadd(&cx, &cy);
+    let prod = coord.hmul(&cx, &cy);
+    let rot = coord.rotate(&cx, 2);
+
+    let d_sum = coord.eval.decrypt_real(&sum);
+    let d_prod = coord.eval.decrypt_real(&prod);
+    let d_rot = coord.eval.decrypt_real(&rot);
+
+    let mut worst = 0.0f64;
+    for i in 0..slots {
+        worst = worst.max((d_sum[i] - (xs[i] + ys[i])).abs());
+        worst = worst.max((d_prod[i] - xs[i] * ys[i]).abs());
+        worst = worst.max((d_rot[i] - xs[(i + 2) % slots]).abs());
+    }
+    println!("worst slot error across add/mul/rotate: {worst:.2e}");
+    assert!(worst < 1e-2, "homomorphic results diverged");
+
+    println!(
+        "simulated cost on {}: {:.2} us, {:.3e} J for {} ops",
+        coord.arch.name(),
+        coord.simulated_seconds() * 1e6,
+        coord.simulated_energy_j(),
+        coord.metrics.ops.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    println!("quickstart OK");
+}

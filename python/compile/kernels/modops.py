@@ -1,0 +1,93 @@
+"""Pallas pointwise modular-arithmetic kernels (L1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): FHEmem computes
+these with row-wide shift-add adders next to every DRAM mat; on TPU the
+analogue is a VPU-bound elementwise kernel over VMEM-resident residue
+rows. The grid iterates over RNS limbs — the same "one residue polynomial
+per memory partition" decomposition the paper's data layout uses (§IV-A).
+
+All moduli are < 2^31, so 64-bit products are exact in uint64 — the
+substitution that lets the artifact path avoid 128-bit arithmetic.
+`interpret=True` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _modmul_kernel(x_ref, y_ref, q_ref, o_ref):
+    q = q_ref[0]
+    o_ref[0, :] = (x_ref[0, :] * y_ref[0, :]) % q
+
+
+def _modadd_kernel(x_ref, y_ref, q_ref, o_ref):
+    q = q_ref[0]
+    o_ref[0, :] = (x_ref[0, :] + y_ref[0, :]) % q
+
+
+def _modsub_kernel(x_ref, y_ref, q_ref, o_ref):
+    q = q_ref[0]
+    o_ref[0, :] = (x_ref[0, :] + q - y_ref[0, :]) % q
+
+
+def _pointwise(kernel, x, y, q):
+    l, n = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint64),
+        interpret=INTERPRET,
+    )(x, y, q)
+
+
+def modmul(x, y, q):
+    """Pointwise (x*y) mod q. x,y: [L,N] uint64; q: [L] uint64 (< 2^31)."""
+    return _pointwise(_modmul_kernel, x, y, q)
+
+
+def modadd(x, y, q):
+    """Pointwise (x+y) mod q."""
+    return _pointwise(_modadd_kernel, x, y, q)
+
+
+def modsub(x, y, q):
+    """Pointwise (x-y) mod q."""
+    return _pointwise(_modsub_kernel, x, y, q)
+
+
+def _mac_kernel(x_ref, y_ref, acc_ref, q_ref, o_ref):
+    q = q_ref[0]
+    o_ref[0, :] = (x_ref[0, :] * y_ref[0, :] + acc_ref[0, :]) % q
+
+
+def modmac(x, y, acc, q):
+    """(x*y + acc) mod q — the BConv partial-product accumulate step.
+
+    Exactness: x·y < 2^62 and acc < 2^31, sum < 2^63 — no wraparound.
+    """
+    l, n = x.shape
+    return pl.pallas_call(
+        _mac_kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint64),
+        interpret=INTERPRET,
+    )(x, y, acc, q)

@@ -1,0 +1,101 @@
+"""Pallas negacyclic NTT kernels (L1) — the paper's compute hot-spot.
+
+Hardware adaptation: FHEmem stages each (i)NTT as intra-mat → horizontal
+inter-mat → vertical inter-mat passes over a 16×16 mat array (§IV-C). On
+TPU the analogue is: one grid step per RNS limb holds the whole residue
+polynomial in VMEM (N=2048 × 8 B = 16 KiB ≪ VMEM) and runs all log₂N
+butterfly stages as statically-unrolled vectorised reshapes — stage
+locality replaces mat locality, the VPU lanes replace the row-wide NMU
+adders, and the twiddle table arrives pre-ordered (ψ^bitrev(i)) exactly
+like FHEmem's in-mat twiddle layout (§IV-A3).
+
+Layout contract (identical to rust `NttTable` and `kernels.ref`):
+forward = Cooley–Tukey, standard → bit-reversed; inverse =
+Gentleman–Sande, bit-reversed → standard, folding in N⁻¹.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _ntt_fwd_kernel(x_ref, psi_ref, q_ref, o_ref, *, logn):
+    n = 1 << logn
+    q = q_ref[0]
+    a = x_ref[0, :]
+    psi = psi_ref[0, :]
+    m = 1
+    while m < n:
+        t = n // (2 * m)
+        rows = a.reshape(m, 2 * t)
+        u = rows[:, :t]
+        v = rows[:, t:]
+        w = psi[m : 2 * m][:, None]
+        wv = (w * v) % q
+        a = jnp.concatenate([(u + wv) % q, (u + q - wv) % q], axis=1).reshape(n)
+        m *= 2
+    o_ref[0, :] = a
+
+
+def _ntt_inv_kernel(x_ref, psi_inv_ref, ninv_ref, q_ref, o_ref, *, logn):
+    n = 1 << logn
+    q = q_ref[0]
+    a = x_ref[0, :]
+    psi_inv = psi_inv_ref[0, :]
+    m = n
+    t = 1
+    while m > 1:
+        h = m // 2
+        rows = a.reshape(h, 2 * t)
+        u = rows[:, :t]
+        v = rows[:, t:]
+        w = psi_inv[h : 2 * h][:, None]
+        new_u = (u + v) % q
+        new_v = ((u + q - v) % q) * w % q
+        a = jnp.concatenate([new_u, new_v], axis=1).reshape(n)
+        t *= 2
+        m = h
+    o_ref[0, :] = a * ninv_ref[0] % q
+
+
+def ntt_fwd(x, psi_rev, q):
+    """Forward negacyclic NTT. x: [L,N] uint64 (standard order),
+    psi_rev: [L,N] (ψ^bitrev(i) per limb), q: [L]. Returns bit-rev order."""
+    l, n = x.shape
+    logn = n.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(_ntt_fwd_kernel, logn=logn),
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint64),
+        interpret=INTERPRET,
+    )(x, psi_rev, q)
+
+
+def ntt_inv(x, psi_inv_rev, n_inv, q):
+    """Inverse negacyclic NTT. x bit-reversed in, standard order out;
+    n_inv: [L] per-limb N⁻¹ mod q."""
+    l, n = x.shape
+    logn = n.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(_ntt_inv_kernel, logn=logn),
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint64),
+        interpret=INTERPRET,
+    )(x, psi_inv_rev, n_inv, q)

@@ -1,0 +1,101 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels (L1).
+
+Everything here is straight-line reference code with no pallas — what the
+kernels are pytest-checked against, and the baseline for the §Perf
+structural comparison.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def modmul_ref(x, y, q):
+    """Pointwise (x*y) mod q per limb. x,y: [L,N] uint64, q: [L]."""
+    return (x * y) % q[:, None]
+
+
+def modadd_ref(x, y, q):
+    return (x + y) % q[:, None]
+
+
+def modsub_ref(x, y, q):
+    return (x + q[:, None] - y) % q[:, None]
+
+
+def ntt_ref(x, psi_rev, q):
+    """Iterative Cooley–Tukey negacyclic NTT, one limb at a time.
+
+    Mirrors rust `NttTable::forward`: standard order in, bit-reversed out.
+    Scalar python-int loops — slow but independent of the kernel's
+    vectorised reshape scheme.
+    """
+    x = np.asarray(x, dtype=np.uint64)
+    psi_rev = np.asarray(psi_rev, dtype=np.uint64)
+    q = np.asarray(q, dtype=np.uint64)
+    L, n = x.shape
+    out = x.copy()
+    for l in range(L):
+        a = [int(v) for v in out[l]]
+        qi = int(q[l])
+        pr = [int(v) for v in psi_rev[l]]
+        m, t = 1, n
+        while m < n:
+            t //= 2
+            for i in range(m):
+                w = pr[m + i]
+                j1 = 2 * i * t
+                for j in range(j1, j1 + t):
+                    u, v = a[j], a[j + t] * w % qi
+                    a[j] = (u + v) % qi
+                    a[j + t] = (u - v) % qi
+            m *= 2
+        out[l] = np.array(a, dtype=np.uint64)
+    return jnp.asarray(out)
+
+
+def intt_ref(x, psi_inv_rev, n_inv, q):
+    """Gentleman–Sande inverse (bit-reversed in, standard out)."""
+    x = np.asarray(x, dtype=np.uint64)
+    psi_inv_rev = np.asarray(psi_inv_rev, dtype=np.uint64)
+    n_inv = np.asarray(n_inv, dtype=np.uint64)
+    q = np.asarray(q, dtype=np.uint64)
+    L, n = x.shape
+    out = x.copy()
+    for l in range(L):
+        a = [int(v) for v in out[l]]
+        qi = int(q[l])
+        pr = [int(v) for v in psi_inv_rev[l]]
+        t, m = 1, n
+        while m > 1:
+            h = m // 2
+            j1 = 0
+            for i in range(h):
+                w = pr[h + i]
+                for j in range(j1, j1 + t):
+                    u, v = a[j], a[j + t]
+                    a[j] = (u + v) % qi
+                    a[j + t] = (u - v) * w % qi
+                j1 += 2 * t
+            t *= 2
+            m = h
+        ninv = int(n_inv[l])
+        out[l] = np.array([v * ninv % qi for v in a], dtype=np.uint64)
+    return jnp.asarray(out)
+
+
+def negacyclic_mul_ref(a, b, q):
+    """O(N²) schoolbook negacyclic convolution (single limb, python ints)."""
+    n = len(a)
+    out = [0] * n
+    for i in range(n):
+        ai = int(a[i])
+        if ai == 0:
+            continue
+        for j in range(n):
+            prod = ai * int(b[j]) % q
+            k = i + j
+            if k < n:
+                out[k] = (out[k] + prod) % q
+            else:
+                out[k - n] = (out[k - n] - prod) % q
+    return np.array(out, dtype=np.uint64)

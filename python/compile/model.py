@@ -1,0 +1,103 @@
+"""L2: CKKS primitive compute graphs in JAX, calling the L1 kernels.
+
+Each function here is one AOT entry point — lowered once by ``aot.py`` to
+HLO text and executed from the Rust coordinator via PJRT. Python never
+runs on the request path.
+
+Conventions (shared with the Rust side through ``artifacts/meta.txt``):
+polynomials are ``[L, N] uint64`` residue matrices in NTT (evaluation)
+domain unless stated; twiddle tables and moduli arrive as runtime inputs
+so one executable serves any modulus chain of the right shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import modops, ntt
+
+
+def hadd(b0, a0, b1, a1, q):
+    """Homomorphic addition: (b0+b1, a0+a1) mod q."""
+    return modops.modadd(b0, b1, q), modops.modadd(a0, a1, q)
+
+
+def hsub(b0, a0, b1, a1, q):
+    """Homomorphic subtraction."""
+    return modops.modsub(b0, b1, q), modops.modsub(a0, a1, q)
+
+
+def hmul_tensor(b0, a0, b1, a1, q):
+    """HMul tensor product (paper §II-A): (d0, d1, d2) =
+    (b0·b1, a0·b1 + a1·b0, a0·a1), all pointwise in the NTT domain.
+    Relinearization of d2 happens on the Rust side (key material stays
+    in Rust)."""
+    d0 = modops.modmul(b0, b1, q)
+    t0 = modops.modmul(a0, b1, q)
+    d1 = modops.modmac(a1, b0, t0, q)
+    d2 = modops.modmul(a0, a1, q)
+    return d0, d1, d2
+
+
+def pmul(b, a, pt, q):
+    """Ciphertext × plaintext (CMult): both components scaled by pt."""
+    return modops.modmul(b, pt, q), modops.modmul(a, pt, q)
+
+
+def ntt_fwd(x, psi_rev, q):
+    """Forward NTT over all limbs (L1 kernel passthrough)."""
+    return ntt.ntt_fwd(x, psi_rev, q)
+
+
+def ntt_inv(x, psi_inv_rev, n_inv, q):
+    """Inverse NTT over all limbs."""
+    return ntt.ntt_inv(x, psi_inv_rev, n_inv, q)
+
+
+def automorphism(x, perm, sign, q):
+    """Galois automorphism σ_k in the coefficient domain (paper §II-A):
+    coefficient i moves to `perm[i]` with sign flip where `sign[i] = 1`.
+
+    x: [L,N] coeff-domain; perm: [N] int32 target index; sign: [N] uint64
+    (0 = keep, 1 = negate). Scatter expressed as gather via the inverse
+    permutation computed on the Rust side — here perm IS the gather map:
+    out[i] = (-1)^{sign[i]} · x[perm[i]].
+    """
+    gathered = x[:, perm]
+    neg = (q[:, None] - gathered) % q[:, None]
+    return jnp.where(sign[None, :] == 1, neg, gathered)
+
+
+def rescale_step(x, last_row, q, q_last_inv):
+    """RNS rescale (divide by q_l): out_j = (x_j − [x_l]_j) · q_l⁻¹ mod q_j.
+
+    x: [L-1, N] remaining limbs (coeff domain); last_row: [N] residues mod
+    q_l; q: [L-1]; q_last_inv: [L-1] = q_l⁻¹ mod q_j.
+    """
+    lifted = last_row[None, :] % q[:, None]
+    diff = (x + q[:, None] - lifted) % q[:, None]
+    return (diff * q_last_inv[:, None]) % q[:, None]
+
+
+# ---------------------------------------------------------------------
+# AOT entry-point registry: name -> (fn, example-args builder)
+# ---------------------------------------------------------------------
+
+
+def entry_points(n, l):
+    """The artifact set: name → (jit-able fn, example ShapeDtypeStructs)."""
+    u64 = jnp.uint64
+    mat = jax.ShapeDtypeStruct((l, n), u64)
+    vec_l = jax.ShapeDtypeStruct((l,), u64)
+    vec_n_u = jax.ShapeDtypeStruct((n,), u64)
+    vec_n_i = jax.ShapeDtypeStruct((n,), jnp.int32)
+    mat1 = jax.ShapeDtypeStruct((l - 1, n), u64)
+    vec_l1 = jax.ShapeDtypeStruct((l - 1,), u64)
+    return {
+        "hadd": (hadd, (mat, mat, mat, mat, vec_l)),
+        "hmul_tensor": (hmul_tensor, (mat, mat, mat, mat, vec_l)),
+        "pmul": (pmul, (mat, mat, mat, vec_l)),
+        "ntt_fwd": (ntt_fwd, (mat, mat, vec_l)),
+        "ntt_inv": (ntt_inv, (mat, mat, vec_l, vec_l)),
+        "automorphism": (automorphism, (mat, vec_n_i, vec_n_u, vec_l)),
+        "rescale_step": (rescale_step, (mat1, vec_n_u, vec_l1, vec_l1)),
+    }

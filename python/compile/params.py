@@ -1,0 +1,112 @@
+"""Artifact parameter set — the source of truth for the AOT path.
+
+Python generates the moduli and twiddle conventions, writes them into
+``artifacts/meta.txt``, and the Rust runtime builds its matching RNS basis
+from that file. All moduli are < 2^31 so 64-bit products are exact in
+uint64 on the JAX/Pallas side (see DESIGN.md "Substitutions").
+
+Mirrors ``rust/src/params.rs::CkksParams::artifact()`` in shape:
+logN=11, L=6 q-limbs (one 30-bit q0 + five 25-bit), one 29-bit special.
+"""
+
+LOG_N = 11
+N = 1 << LOG_N
+L_LEVELS = 6
+K_SPECIAL = 1
+Q0_BITS = 30
+Q_BITS = 25
+P_BITS = 29
+SCALE_BITS = 25
+
+
+def is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n == p:
+            return True
+        if n % p == 0:
+            return False
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def ntt_primes(bits: int, n: int, count: int, exclude=()):
+    """NTT-friendly primes q ≡ 1 (mod 2n) scanning down from 2^bits."""
+    step = 2 * n
+    q = (1 << bits) + 1
+    q -= (q - 1) % step
+    out = []
+    while len(out) < count:
+        assert q > (1 << (bits - 1)), f"exhausted {bits}-bit primes"
+        if is_prime(q) and q not in exclude:
+            out.append(q)
+        q -= step
+    return out
+
+
+def modulus_chain():
+    """(q_moduli, p_moduli) for the artifact set."""
+    q0 = ntt_primes(Q0_BITS, N, 1)
+    rest = ntt_primes(Q_BITS, N, L_LEVELS - 1)
+    p = ntt_primes(P_BITS, N, K_SPECIAL, exclude=set(q0 + rest))
+    return q0 + rest, p
+
+
+def primitive_2n_root(q: int, n: int) -> int:
+    """ψ with ψ^n ≡ -1 (mod q)."""
+    order = 2 * n
+    assert (q - 1) % order == 0
+    cofactor = (q - 1) // order
+    for g in range(2, 1000):
+        psi = pow(g, cofactor, q)
+        if psi and pow(psi, n, q) == q - 1:
+            return psi
+    raise RuntimeError(f"no 2n-th root for q={q}")
+
+
+def bit_reverse(x: int, bits: int) -> int:
+    out = 0
+    for _ in range(bits):
+        out = (out << 1) | (x & 1)
+        x >>= 1
+    return out
+
+
+def ntt_tables(q: int, n: int):
+    """(psi_rev, psi_inv_rev, n_inv) matching rust NttTable layout."""
+    logn = n.bit_length() - 1
+    psi = primitive_2n_root(q, n)
+    psi_inv = pow(psi, q - 2, q)
+    pows = [1] * n
+    pows_inv = [1] * n
+    for i in range(1, n):
+        pows[i] = pows[i - 1] * psi % q
+        pows_inv[i] = pows_inv[i - 1] * psi_inv % q
+    psi_rev = [pows[bit_reverse(i, logn)] for i in range(n)]
+    psi_inv_rev = [pows_inv[bit_reverse(i, logn)] for i in range(n)]
+    n_inv = pow(n, q - 2, q)
+    return psi_rev, psi_inv_rev, n_inv
+
+
+def write_meta(path: str) -> None:
+    q, p = modulus_chain()
+    with open(path, "w") as f:
+        f.write(f"logn={LOG_N}\n")
+        f.write(f"n={N}\n")
+        f.write(f"scale_bits={SCALE_BITS}\n")
+        f.write("q=" + ",".join(map(str, q)) + "\n")
+        f.write("p=" + ",".join(map(str, p)) + "\n")

@@ -1,0 +1,124 @@
+"""L1 kernel correctness: Pallas kernels vs pure references.
+
+The CORE correctness signal for the artifact path — hypothesis sweeps
+shapes and moduli, plus targeted known-answer and property tests.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import params
+from compile.kernels import modops, ntt, ref
+
+MODULI_POOL = [
+    params.ntt_primes(25, 1 << 8, 3)[i] for i in range(3)
+] + [params.ntt_primes(30, 1 << 8, 2)[i] for i in range(2)]
+
+
+def rand_mat(rng, l, n, qs):
+    return jnp.asarray(
+        np.stack([rng.integers(0, qs[i], size=n, dtype=np.uint64) for i in range(l)]),
+        dtype=jnp.uint64,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=3, max_value=8),
+    l=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_modops_match_ref(logn, l, seed):
+    rng = np.random.default_rng(seed)
+    n = 1 << logn
+    qs = np.array(MODULI_POOL[:l], dtype=np.uint64)
+    q = jnp.asarray(qs)
+    x = rand_mat(rng, l, n, qs)
+    y = rand_mat(rng, l, n, qs)
+    np.testing.assert_array_equal(modops.modmul(x, y, q), ref.modmul_ref(x, y, q))
+    np.testing.assert_array_equal(modops.modadd(x, y, q), ref.modadd_ref(x, y, q))
+    np.testing.assert_array_equal(modops.modsub(x, y, q), ref.modsub_ref(x, y, q))
+    acc = rand_mat(rng, l, n, qs)
+    np.testing.assert_array_equal(
+        modops.modmac(x, y, acc, q), (np.asarray(x) * np.asarray(y) + acc) % qs[:, None]
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    logn=st.integers(min_value=3, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_ntt_kernel_matches_scalar_ref(logn, seed):
+    rng = np.random.default_rng(seed)
+    n = 1 << logn
+    l = 2
+    qs = [params.ntt_primes(25, n, 1)[0], params.ntt_primes(30, n, 1)[0]]
+    q = jnp.asarray(np.array(qs, dtype=np.uint64))
+    tables = [params.ntt_tables(qi, n) for qi in qs]
+    psi_rev = jnp.asarray(np.array([t[0] for t in tables], dtype=np.uint64))
+    psi_inv_rev = jnp.asarray(np.array([t[1] for t in tables], dtype=np.uint64))
+    n_inv = jnp.asarray(np.array([t[2] for t in tables], dtype=np.uint64))
+    x = rand_mat(rng, l, n, np.array(qs, dtype=np.uint64))
+    fwd = ntt.ntt_fwd(x, psi_rev, q)
+    np.testing.assert_array_equal(fwd, ref.ntt_ref(x, psi_rev, q))
+    inv = ntt.ntt_inv(fwd, psi_inv_rev, n_inv, q)
+    np.testing.assert_array_equal(inv, np.asarray(x))
+    np.testing.assert_array_equal(inv, ref.intt_ref(fwd, psi_inv_rev, n_inv, q))
+
+
+def test_ntt_convolution_property():
+    """iNTT(NTT(a) ⊙ NTT(b)) must equal the schoolbook negacyclic product."""
+    rng = np.random.default_rng(7)
+    n = 64
+    qi = params.ntt_primes(25, n, 1)[0]
+    q = jnp.asarray(np.array([qi], dtype=np.uint64))
+    psi_rev, psi_inv_rev, n_inv = params.ntt_tables(qi, n)
+    psi_rev = jnp.asarray(np.array([psi_rev], dtype=np.uint64))
+    psi_inv_rev = jnp.asarray(np.array([psi_inv_rev], dtype=np.uint64))
+    n_inv = jnp.asarray(np.array([n_inv], dtype=np.uint64))
+    a = rng.integers(0, qi, size=n, dtype=np.uint64)
+    b = rng.integers(0, qi, size=n, dtype=np.uint64)
+    fa = ntt.ntt_fwd(jnp.asarray(a[None, :]), psi_rev, q)
+    fb = ntt.ntt_fwd(jnp.asarray(b[None, :]), psi_rev, q)
+    fc = modops.modmul(fa, fb, q)
+    c = ntt.ntt_inv(fc, psi_inv_rev, n_inv, q)
+    expect = ref.negacyclic_mul_ref(a, b, qi)
+    np.testing.assert_array_equal(np.asarray(c)[0], expect)
+
+
+def test_artifact_moduli_are_ntt_friendly_and_u31():
+    qs, ps = params.modulus_chain()
+    assert len(qs) == params.L_LEVELS and len(ps) == params.K_SPECIAL
+    for m in qs + ps:
+        assert m < 2**31, f"{m} too big for exact uint64 products"
+        assert m % (2 * params.N) == 1
+        assert params.is_prime(m)
+    assert len(set(qs + ps)) == len(qs + ps)
+
+
+def test_kernel_at_artifact_shape():
+    """Full artifact shape [7, 2048]: the exact configuration AOT exports."""
+    rng = np.random.default_rng(3)
+    n = params.N
+    qs, ps = params.modulus_chain()
+    allq = np.array(qs + ps, dtype=np.uint64)
+    l = len(allq)
+    q = jnp.asarray(allq)
+    x = rand_mat(rng, l, n, allq)
+    y = rand_mat(rng, l, n, allq)
+    got = modops.modmul(x, y, q)
+    np.testing.assert_array_equal(got, ref.modmul_ref(x, y, q))
+    tables = [params.ntt_tables(int(qi), n) for qi in allq]
+    psi_rev = jnp.asarray(np.array([t[0] for t in tables], dtype=np.uint64))
+    psi_inv_rev = jnp.asarray(np.array([t[1] for t in tables], dtype=np.uint64))
+    n_inv = jnp.asarray(np.array([t[2] for t in tables], dtype=np.uint64))
+    fwd = ntt.ntt_fwd(x, psi_rev, q)
+    back = ntt.ntt_inv(fwd, psi_inv_rev, n_inv, q)
+    np.testing.assert_array_equal(back, np.asarray(x))

@@ -1,0 +1,134 @@
+"""L2 model-graph tests: CKKS primitive semantics + AOT lowering sanity."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model, params
+from compile.kernels import ref
+
+
+def setup_ctx(n=64, l=3):
+    qs = params.ntt_primes(25, n, l)
+    q = jnp.asarray(np.array(qs, dtype=np.uint64))
+    tables = [params.ntt_tables(qi, n) for qi in qs]
+    psi_rev = jnp.asarray(np.array([t[0] for t in tables], dtype=np.uint64))
+    psi_inv_rev = jnp.asarray(np.array([t[1] for t in tables], dtype=np.uint64))
+    n_inv = jnp.asarray(np.array([t[2] for t in tables], dtype=np.uint64))
+    return qs, q, psi_rev, psi_inv_rev, n_inv
+
+
+def rand(rng, l, n, qs):
+    return jnp.asarray(
+        np.stack([rng.integers(0, qs[i], size=n, dtype=np.uint64) for i in range(l)])
+    )
+
+
+def test_hmul_tensor_components():
+    rng = np.random.default_rng(1)
+    qs, q, *_ = setup_ctx()
+    l, n = len(qs), 64
+    b0, a0, b1, a1 = (rand(rng, l, n, qs) for _ in range(4))
+    d0, d1, d2 = model.hmul_tensor(b0, a0, b1, a1, q)
+    qcol = np.array(qs, dtype=np.uint64)[:, None]
+    np.testing.assert_array_equal(d0, np.asarray(b0) * np.asarray(b1) % qcol)
+    np.testing.assert_array_equal(
+        d1,
+        (np.asarray(a0) * np.asarray(b1) + np.asarray(a1) * np.asarray(b0)) % qcol,
+    )
+    np.testing.assert_array_equal(d2, np.asarray(a0) * np.asarray(a1) % qcol)
+
+
+def test_hadd_hsub_roundtrip():
+    rng = np.random.default_rng(2)
+    qs, q, *_ = setup_ctx()
+    l, n = len(qs), 64
+    b0, a0, b1, a1 = (rand(rng, l, n, qs) for _ in range(4))
+    sb, sa = model.hadd(b0, a0, b1, a1, q)
+    db, da = model.hsub(sb, sa, b1, a1, q)
+    np.testing.assert_array_equal(db, np.asarray(b0))
+    np.testing.assert_array_equal(da, np.asarray(a0))
+
+
+def test_automorphism_matches_direct_map():
+    """out[perm[i]] convention: σ_k(a)_target = ±a_source, k odd."""
+    rng = np.random.default_rng(3)
+    n, l = 32, 2
+    qs, q, *_ = setup_ctx(n=n, l=l)
+    x = rand(rng, l, n, qs)
+    k = 5
+    # Build gather map: out[i] = ±x[src[i]] where src·k ≡ i or i+n (mod 2n).
+    perm = np.zeros(n, dtype=np.int32)
+    sign = np.zeros(n, dtype=np.uint64)
+    for src in range(n):
+        tgt = src * k % (2 * n)
+        if tgt < n:
+            perm[tgt] = src
+            sign[tgt] = 0
+        else:
+            perm[tgt - n] = src
+            sign[tgt - n] = 1
+    out = model.automorphism(x, jnp.asarray(perm), jnp.asarray(sign), q)
+    for j, qi in enumerate(qs):
+        for src in range(n):
+            tgt = src * k % (2 * n)
+            v = int(np.asarray(x)[j][src])
+            if tgt < n:
+                assert int(np.asarray(out)[j][tgt]) == v
+            else:
+                assert int(np.asarray(out)[j][tgt - n]) == (qi - v) % qi
+
+
+def test_rescale_step_divides():
+    """Rescale: values divisible by q_last come back exactly divided."""
+    rng = np.random.default_rng(4)
+    n = 64
+    qs, q, *_ = setup_ctx(n=n, l=3)
+    q_last = qs[-1]
+    # x ≡ v·q_last with small v so division is exact (no rounding term).
+    v = rng.integers(0, 1 << 20, size=n, dtype=np.uint64)
+    x_full = [(v.astype(object) * q_last % qi) for qi in qs[:-1]]
+    x = jnp.asarray(np.array(x_full, dtype=np.uint64))
+    last_row = jnp.asarray(np.zeros(n, dtype=np.uint64))  # v·q_last mod q_last = 0
+    q_head = jnp.asarray(np.array(qs[:-1], dtype=np.uint64))
+    q_last_inv = jnp.asarray(
+        np.array([pow(q_last, qi - 2, qi) for qi in qs[:-1]], dtype=np.uint64)
+    )
+    out = model.rescale_step(x, last_row, q_head, q_last_inv)
+    for j, qi in enumerate(qs[:-1]):
+        np.testing.assert_array_equal(np.asarray(out)[j], v % qi)
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    """Every entry point lowers to parseable HLO text with ENTRY."""
+    n, l = 64, 3  # small shapes — lowering structure is shape-generic
+    eps = model.entry_points(n, l)
+    assert set(eps) == {
+        "hadd",
+        "hmul_tensor",
+        "pmul",
+        "ntt_fwd",
+        "ntt_inv",
+        "automorphism",
+        "rescale_step",
+    }
+    for name, (fn, example) in eps.items():
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "u64" in text, name
+        (tmp_path / f"{name}.hlo.txt").write_text(text)
+
+
+def test_meta_roundtrip(tmp_path):
+    p = tmp_path / "meta.txt"
+    params.write_meta(str(p))
+    lines = dict(
+        line.split("=", 1) for line in p.read_text().strip().splitlines()
+    )
+    assert int(lines["n"]) == params.N
+    qs = [int(x) for x in lines["q"].split(",")]
+    assert len(qs) == params.L_LEVELS
+    assert all(params.is_prime(x) for x in qs)

@@ -1,0 +1,183 @@
+//! Regenerates every table and figure of the paper's evaluation
+//! (Fig. 1, Fig. 3, Fig. 12, Fig. 13, Fig. 14, Fig. 15, Table III),
+//! printing paper-reported vs measured values side by side, plus wall
+//! time for each regeneration (this is the `cargo bench` entry point).
+
+use fhemem::baselines::{asic, bandwidth, pim};
+use fhemem::report;
+use fhemem::sim::{area, simulate, ArchConfig, SimOptions};
+use fhemem::trace::workloads;
+use fhemem::util::bench::bench_fn;
+
+fn fig1() {
+    println!("\n===== Fig 1: working sets + bandwidth requirements =====");
+    for log_n in [15usize, 16, 17] {
+        let p = bandwidth::Fig1Params::paper(log_n);
+        println!(
+            "logN={log_n}: HMul working set {:.0} MB (paper: 98–390 MB across logN 15–17)",
+            p.hmul_working_set_bytes() / 1e6
+        );
+    }
+    let p = bandwidth::Fig1Params::paper(17);
+    println!("{}", report::compare_row(
+        "2k NTTUs, evk-only load (TB/s)",
+        1.5,
+        p.required_bandwidth(2048, 1.0, bandwidth::Scenario::EvkOnly) / 1e12,
+    ));
+    println!("{}", report::compare_row(
+        "2k NTTUs, evk+2 operands (TB/s)",
+        3.0,
+        p.required_bandwidth(2048, 1.0, bandwidth::Scenario::EvkPlusTwoOperands) / 1e12,
+    ));
+    println!("{}", report::compare_row(
+        "64k NTTUs, evk+2 operands (TB/s)",
+        100.0,
+        p.required_bandwidth(65536, 1.0, bandwidth::Scenario::EvkPlusTwoOperands) / 1e12,
+    ));
+}
+
+fn fig3() {
+    println!("\n===== Fig 3: 32-bit multiply throughput/energy across PIM =====");
+    let cfg = ArchConfig::new(8, 8192);
+    let s = pim::simdram(&cfg, 32);
+    let f = pim::fimdram(&cfg);
+    let d = pim::drisa_logic(&cfg);
+    println!("{}", report::compare_row("FIMDRAM throughput (TB/s)", 6.8, f.mult_tbps));
+    println!("{}", report::compare_row("FIMDRAM energy (pJ/op)", 49.8, f.energy_per_op_pj));
+    println!("{}", report::compare_row("SIMDRAM throughput (TB/s)", 180.6, s.mult_tbps));
+    println!("{}", report::compare_row("SIMDRAM energy (pJ/op)", 342.9, s.energy_per_op_pj));
+    println!("{}", report::compare_row("DRISA throughput (PB/s)", 3.0, d.mult_tbps / 1000.0));
+    println!("{}", report::compare_row("DRISA energy (pJ/op)", 6.32, d.energy_per_op_pj));
+}
+
+fn fig12() {
+    println!("\n===== Fig 12: FHEmem configs vs SHARP / CraterLake =====");
+    println!("{}", report::sim_header());
+    let mut rows = Vec::new();
+    for cfg in [ArchConfig::new(2, 2048), ArchConfig::new(4, 4096), ArchConfig::new(8, 8192)] {
+        for t in workloads::all() {
+            let r = simulate(&cfg, &t, SimOptions::default());
+            println!("{}", report::sim_row(&r));
+            rows.push(r);
+        }
+    }
+    println!("--- ASIC baselines (analytic, published hardware) ---");
+    let mut speedups = Vec::new();
+    for t in workloads::all() {
+        let sharp = asic::run(&asic::sharp(), &t);
+        let clake = asic::run(&asic::craterlake(), &t);
+        println!(
+            "{:<14} SHARP {:>10.3} ms   CraterLake {:>10.3} ms",
+            t.name,
+            sharp.latency_s * 1e3,
+            clake.latency_s * 1e3
+        );
+        if let Some(r) = rows.iter().find(|r| r.workload == t.name && r.config.ar == 8) {
+            speedups.push((t.name, sharp.latency_s / r.latency_s, clake.latency_s / r.latency_s));
+        }
+    }
+    println!("--- ARx8-8k speedups (paper: 4.4x/2.2x/5.4x vs SHARP on boot/HELR/ResNet) ---");
+    for (name, s_sharp, s_clake) in speedups {
+        println!("{name:<14} vs SHARP {s_sharp:>6.2}x   vs CraterLake {s_clake:>6.2}x");
+    }
+}
+
+fn fig13() {
+    println!("\n===== Fig 13: latency & energy breakdown =====");
+    for cfg in [ArchConfig::new(1, 1024), ArchConfig::new(4, 4096), ArchConfig::new(8, 8192)] {
+        for t in [workloads::bootstrapping(), workloads::resnet20()] {
+            let r = simulate(&cfg, &t, SimOptions::default());
+            let b = &r.breakdown;
+            let tot = b.total().cycles.max(1.0);
+            println!(
+                "{:<9} {:<14} comp {:>4.1}% perm {:>4.1}% rw {:>4.1}% interbank {:>4.1}% chan {:>4.1}% stack {:>4.1}%",
+                cfg.name(), t.name,
+                100.0 * b.computation.cycles / tot,
+                100.0 * b.permutation.cycles / tot,
+                100.0 * b.read_write.cycles / tot,
+                100.0 * b.interbank.cycles / tot,
+                100.0 * b.channel.cycles / tot,
+                100.0 * b.stack.cycles / tot,
+            );
+        }
+    }
+}
+
+fn fig14() {
+    println!("\n===== Fig 14: FHEmem vs PIM technologies (end-to-end) =====");
+    let cfg = ArchConfig::new(4, 4096);
+    let t = workloads::bootstrapping();
+    let fhe = simulate(&cfg, &t, SimOptions::default());
+    for p in [pim::simdram(&cfg, 64), pim::drisa_logic(&cfg), pim::drisa_add(&cfg)] {
+        let latency = fhe.latency_s * p.e2e_slowdown_vs_fhemem;
+        println!(
+            "{:<14} {:>10.3} ms  ({}x vs FHEmem; paper: SIMDRAM 183-255x, DRISA-logic 2.8-6.8x, DRISA-add 0.85x)",
+            p.name,
+            latency * 1e3,
+            p.e2e_slowdown_vs_fhemem
+        );
+    }
+}
+
+fn fig15() {
+    println!("\n===== Fig 15: optimization ablations =====");
+    for (ar, w) in [(2u32, 2048u32), (4, 4096), (8, 8192)] {
+        let cfg = ArchConfig::new(ar, w);
+        for t in [workloads::helr(), workloads::resnet20()] {
+            let full = simulate(&cfg, &t, SimOptions::default());
+            let base0 = simulate(&cfg, &t, SimOptions { montgomery: false, ..Default::default() });
+            let base1 = simulate(&cfg, &t, SimOptions { interbank_chain: false, ..Default::default() });
+            let base2 = simulate(&cfg, &t, SimOptions { load_save: false, ..Default::default() });
+            println!(
+                "{:<9} {:<10} montgomery {:>5.2}x  interbank {:>5.2}x  load-save {:>5.2}x",
+                cfg.name(), t.name,
+                base0.latency_s / full.latency_s,
+                base1.latency_s / full.latency_s,
+                base2.latency_s / full.latency_s,
+            );
+        }
+    }
+    println!("(paper: montgomery 1.06-1.68x, interbank 1.31-2.12x, load-save 1.15-3.59x)");
+}
+
+fn table3() {
+    println!("\n===== Table III: area/power of FHEmem (16GB stack, ARx4/4k) =====");
+    let cfg = ArchConfig::new(4, 4096);
+    let a = area::stack_area(&cfg);
+    println!("{}", report::compare_row("DRAM total (mm2)", 148.33, a.dram_total()));
+    println!("{}", report::compare_row("Horizontal DLs (mm2)", 14.13, a.hdl));
+    println!("{}", report::compare_row("Adders & latches (mm2)", 30.43, a.adders_latches));
+    println!("{}", report::compare_row("Bank chain & buf (mm2)", 0.065, a.chain));
+    println!("{}", report::compare_row("Control logic (mm2)", 0.56, a.control));
+    println!("{}", report::compare_row("ARx1-1k total area (mm2)", 223.81, area::total_area_mm2(&ArchConfig::new(1, 1024))));
+    println!("{}", report::compare_row("ARx8-8k total area (mm2)", 642.32, area::total_area_mm2(&ArchConfig::new(8, 8192))));
+}
+
+fn main() {
+    bench_fn("fig1_bandwidth_model", || {
+        let p = bandwidth::Fig1Params::paper(17);
+        std::hint::black_box(p.required_bandwidth(2048, 1.0, bandwidth::Scenario::EvkOnly));
+    });
+    bench_fn("fig12_full_design_point (sim helr)", || {
+        std::hint::black_box(simulate(
+            &ArchConfig::default(),
+            &workloads::helr(),
+            SimOptions::default(),
+        ));
+    });
+    bench_fn("fig12_bootstrapping_sim", || {
+        std::hint::black_box(simulate(
+            &ArchConfig::new(8, 8192),
+            &workloads::bootstrapping(),
+            SimOptions::default(),
+        ));
+    });
+    fig1();
+    fig3();
+    fig12();
+    fig13();
+    fig14();
+    fig15();
+    table3();
+    println!("\nall figures regenerated OK");
+}

@@ -1,0 +1,62 @@
+//! Hot-path microbenches (§Perf): the Rust CKKS primitives and the
+//! simulator engine itself. Used for the performance pass — before/after
+//! numbers recorded in EXPERIMENTS.md §Perf.
+
+use fhemem::ckks::{CkksContext, Evaluator, KeyChain};
+use fhemem::math::ntt::NttTable;
+use fhemem::math::primes::ntt_primes;
+use fhemem::params::CkksParams;
+use fhemem::sim::{simulate, ArchConfig, SimOptions};
+use fhemem::trace::workloads;
+use fhemem::util::bench::bench_fn;
+use fhemem::util::check::SplitMix64;
+use std::sync::Arc;
+
+fn main() {
+    // L3 substrate: NTT at artifact and functional sizes.
+    for logn in [11usize, 13] {
+        let n = 1 << logn;
+        let q = ntt_primes(40, n, 1)[0].q;
+        let t = NttTable::new(q, n);
+        let mut rng = SplitMix64::new(5);
+        let data: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        let mut buf = data.clone();
+        let s = bench_fn(&format!("ntt_forward n=2^{logn}"), || {
+            buf.copy_from_slice(&data);
+            t.forward(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        let butterflies = (n / 2 * logn) as f64;
+        println!("    -> {:.1} M butterflies/s", butterflies / s.median.as_secs_f64() / 1e6);
+    }
+
+    // CKKS ops at func_default (logN=12, L=8, dnum=4).
+    let ctx = CkksContext::new(CkksParams::func_default());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 1));
+    let ev = Evaluator::new(ctx.clone(), chain, 2);
+    let slots = ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.001 * (i % 97) as f64).collect();
+    let a = ev.encrypt_real(&z, ctx.l());
+    let b = ev.encrypt_real(&z, ctx.l());
+    // warm the key cache so the bench measures the op, not keygen
+    let _ = ev.mul(&a, &b);
+    let _ = ev.rotate(&a, 1);
+    bench_fn("ckks_hadd logN=12 L=8", || {
+        std::hint::black_box(ev.add(&a, &b));
+    });
+    bench_fn("ckks_hmul(+KS+rescale) logN=12 L=8", || {
+        std::hint::black_box(ev.mul(&a, &b));
+    });
+    bench_fn("ckks_rotate logN=12 L=8", || {
+        std::hint::black_box(ev.rotate(&a, 1));
+    });
+
+    // Simulator engine throughput.
+    bench_fn("sim_engine full resnet20 trace", || {
+        std::hint::black_box(simulate(
+            &ArchConfig::default(),
+            &workloads::resnet20(),
+            SimOptions::default(),
+        ));
+    });
+}

@@ -1,0 +1,178 @@
+//! ASIC accelerator baselines (Fig. 12): SHARP [8] and CraterLake [6],
+//! modeled analytically from their published hardware (the same method
+//! the paper's §II-B / Fig. 1 analysis uses): per-workload time =
+//! max(compute time from multiplier throughput, memory time from
+//! off-chip bandwidth), on the identical op trace the FHEmem engine runs.
+
+use crate::sim::cost::FheShape;
+use crate::trace::{FheOp, Trace};
+
+/// Published ASIC hardware parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AsicSpec {
+    pub name: &'static str,
+    /// Modular multipliers × frequency → mults/s.
+    pub mults_per_sec: f64,
+    /// On-chip SRAM bytes.
+    pub sram_bytes: f64,
+    /// Off-chip bandwidth, bytes/s.
+    pub offchip_bps: f64,
+    /// Die area (mm²) + 32 GB HBM2E (2×110 mm²) for the Fig. 12 frame.
+    pub area_mm2: f64,
+    /// Reported power, W.
+    pub power_w: f64,
+    /// Energy per modular multiply, pJ.
+    pub e_mult_pj: f64,
+}
+
+/// SHARP [8]: 24K 36-bit multipliers @ 1 GHz, 180 MB SRAM (§VI-A3).
+pub fn sharp() -> AsicSpec {
+    AsicSpec {
+        name: "SHARP",
+        mults_per_sec: 24_000.0 * 1e9,
+        sram_bytes: 180e6,
+        offchip_bps: 1.0e12, // 2×HBM3-class
+        area_mm2: 178.8 + 220.0,
+        power_w: 94.7,
+        e_mult_pj: 3.1,
+    }
+}
+
+/// CraterLake [6]: ~150K 28-bit multipliers @ 1 GHz, 256 MB SRAM.
+pub fn craterlake() -> AsicSpec {
+    AsicSpec {
+        name: "CraterLake",
+        mults_per_sec: 150_000.0 * 1e9,
+        sram_bytes: 256e6,
+        offchip_bps: 1.0e12,
+        area_mm2: 472.3 + 220.0,
+        power_w: 320.0,
+        e_mult_pj: 4.1,
+    }
+}
+
+/// Modular multiplications per high-level op (same counting as the
+/// FHEmem cost model, so both sides run the identical trace).
+fn mults_per_op(op: FheOp, shape: &FheShape) -> f64 {
+    let n = shape.n() as f64;
+    let l = shape.limbs as f64;
+    let k = shape.k_special as f64;
+    let dnum = shape.dnum.min(shape.limbs).max(1) as f64;
+    let alpha = (l / dnum).ceil();
+    let logn = shape.log_n as f64;
+    let ntt = n * logn / 2.0; // butterflies per limb-NTT
+    match op {
+        FheOp::HAdd => 0.0,
+        FheOp::PMul => 3.0 * l * n,
+        FheOp::Rescale => 2.0 * l * n,
+        FheOp::HMul | FheOp::HRot => {
+            // tensor/automorphism + key switch (dominant):
+            let tensor = 4.0 * l * n;
+            let ks_ntts = (l + dnum * (l + k) + 2.0 * k + 2.0 * l) * ntt;
+            let bconv = dnum * alpha * (l - alpha + k) * n + 2.0 * k * l * n;
+            let inner = 2.0 * dnum * (l + k) * n;
+            tensor + ks_ntts + bconv + inner
+        }
+        FheOp::Bootstrap => unreachable!("expand first"),
+    }
+}
+
+/// Result mirror of `sim::SimResult` for an ASIC.
+#[derive(Debug, Clone)]
+pub struct AsicResult {
+    pub name: &'static str,
+    pub workload: &'static str,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+}
+
+impl AsicResult {
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.latency_s
+    }
+    pub fn edap(&self) -> f64 {
+        self.edp() * self.area_mm2
+    }
+}
+
+/// Run a workload trace through the analytic ASIC model.
+pub fn run(spec: &AsicSpec, trace: &Trace) -> AsicResult {
+    let trace = trace.expand_bootstrap();
+    let shape = FheShape {
+        log_n: trace.log_n,
+        limbs: trace.limbs,
+        k_special: if trace.log_n >= 16 { 6 } else { 1 },
+        dnum: if trace.log_n >= 16 { 4 } else { 1 },
+        mult_shifts: 1,
+    };
+    let total_mults: f64 = trace.ops.iter().map(|&op| mults_per_op(op, &shape)).sum();
+    let compute_s = total_mults / spec.mults_per_sec;
+
+    // Memory: evk + operand traffic that misses SRAM (§II-B): each
+    // KS-bearing op streams its evk; ciphertexts spill once the working
+    // set exceeds SRAM.
+    let n = shape.n() as f64;
+    let evk_bytes = 2.0 * shape.dnum as f64 * (shape.limbs + shape.k_special) as f64 * n * 8.0;
+    let ks_ops = trace
+        .ops
+        .iter()
+        .filter(|o| matches!(o, FheOp::HMul | FheOp::HRot))
+        .count() as f64;
+    let ct_bytes = 2.0 * shape.limbs as f64 * n * 8.0;
+    let working_set = evk_bytes * 4.0 + ct_bytes * 8.0 + trace.const_bytes;
+    let miss_factor = (working_set / spec.sram_bytes).min(4.0).max(0.05);
+    // SHARP inherits ARK's runtime evk generation + minimum-key reuse,
+    // which removes most off-chip key traffic — modeled as a 0.25 reuse
+    // factor on the evk stream (documented in DESIGN.md substitutions).
+    let key_reuse = 0.25;
+    let bytes_moved = ks_ops * evk_bytes * miss_factor * key_reuse + trace.const_bytes;
+    let memory_s = bytes_moved / spec.offchip_bps;
+
+    let latency = compute_s.max(memory_s);
+    let energy = total_mults * spec.e_mult_pj * 1e-12
+        + bytes_moved * 8.0 * 0.77e-12 // off-chip IO pJ/bit
+        + spec.power_w * 0.2 * latency; // static fraction
+    AsicResult {
+        name: spec.name,
+        workload: trace.name,
+        latency_s: latency,
+        energy_j: energy,
+        area_mm2: spec.area_mm2,
+        power_w: spec.power_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workloads;
+
+    #[test]
+    fn craterlake_faster_than_sharp_on_raw_compute() {
+        assert!(craterlake().mults_per_sec > sharp().mults_per_sec);
+    }
+
+    #[test]
+    fn asic_results_positive() {
+        for t in workloads::all() {
+            for spec in [sharp(), craterlake()] {
+                let r = run(&spec, &t);
+                assert!(r.latency_s > 0.0 && r.energy_j > 0.0, "{} {}", r.name, t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn deep_workloads_are_memory_or_compute_bound_sanely() {
+        // Bootstrapping on SHARP is in the ms range per input batch of
+        // paper-scale work — catch unit errors (not ns, not minutes).
+        let r = run(&sharp(), &workloads::bootstrapping());
+        assert!(
+            (1e-5..10.0).contains(&r.latency_s),
+            "SHARP bootstrap latency {} s",
+            r.latency_s
+        );
+    }
+}

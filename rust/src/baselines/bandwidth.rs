@@ -1,0 +1,120 @@
+//! Fig. 1 reproduction: (a) HMul working-set sizes and (b) off-chip
+//! bandwidth required as on-chip NTTU throughput scales, under three
+//! data-loading scenarios during a key-switching operation.
+//!
+//! Method follows BTS [5] (§II-B): with `u` NTT units at `f` GHz, the
+//! time per KSO is the NTT-butterfly count divided by `u·f`; the
+//! bandwidth requirement is the loaded bytes over that time.
+
+/// Fig. 1 parameter setting: L = 30, logQ = 1920 (64-bit words).
+#[derive(Debug, Clone, Copy)]
+pub struct Fig1Params {
+    pub log_n: usize,
+    pub limbs: usize,
+    pub k_special: usize,
+    pub dnum: usize,
+}
+
+impl Fig1Params {
+    pub fn paper(log_n: usize) -> Self {
+        Self {
+            log_n,
+            limbs: 30,
+            k_special: 8,
+            dnum: 4,
+        }
+    }
+
+    pub fn n(&self) -> f64 {
+        (1u64 << self.log_n) as f64
+    }
+
+    /// Working set of one HMul with KSO in bytes (Fig. 1(a)):
+    /// the evaluation key plus one ciphertext — the quantities that must
+    /// be co-resident during the key switch (98 MB at logN=15 → 390 MB
+    /// at logN=17 with L=30, logQ=1920).
+    pub fn hmul_working_set_bytes(&self) -> f64 {
+        let n = self.n();
+        let l = self.limbs as f64;
+        let k = self.k_special as f64;
+        let dnum = self.dnum as f64;
+        let ct = 2.0 * l * n * 8.0;
+        let evk = 2.0 * dnum * (l + k) * n * 8.0;
+        evk + ct
+    }
+
+    /// Butterfly operations in one KSO (the compute the NTTUs perform).
+    pub fn kso_butterflies(&self) -> f64 {
+        let n = self.n();
+        let l = self.limbs as f64;
+        let k = self.k_special as f64;
+        let dnum = self.dnum as f64;
+        let per_ntt = n / 2.0 * self.log_n as f64;
+        (l + dnum * (l + k) + 2.0 * k + 2.0 * l) * per_ntt
+    }
+
+    /// Bytes loaded per KSO under the three Fig. 1(b) scenarios.
+    pub fn loaded_bytes(&self, scenario: Scenario) -> f64 {
+        let n = self.n();
+        let l = self.limbs as f64;
+        let k = self.k_special as f64;
+        let dnum = self.dnum as f64;
+        let evk = 2.0 * dnum * (l + k) * n * 8.0;
+        let ct = 2.0 * l * n * 8.0;
+        match scenario {
+            Scenario::EvkOnly => evk,
+            Scenario::EvkPlusOneOperand => evk + ct,
+            Scenario::EvkPlusTwoOperands => evk + 2.0 * ct,
+        }
+    }
+
+    /// Required off-chip bandwidth in bytes/s for `ntt_units` butterfly
+    /// units at `freq_ghz`.
+    pub fn required_bandwidth(&self, ntt_units: u64, freq_ghz: f64, s: Scenario) -> f64 {
+        let time_s = self.kso_butterflies() / (ntt_units as f64 * freq_ghz * 1e9);
+        self.loaded_bytes(s) / time_s
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    EvkOnly,
+    EvkPlusOneOperand,
+    EvkPlusTwoOperands,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn working_sets_match_fig1a_range() {
+        // Paper: 98 MB (logN=15) to 390 MB (logN=17).
+        let ws15 = Fig1Params::paper(15).hmul_working_set_bytes() / 1e6;
+        let ws17 = Fig1Params::paper(17).hmul_working_set_bytes() / 1e6;
+        assert!((80.0..120.0).contains(&ws15), "logN=15 ws {ws15} MB");
+        assert!((320.0..480.0).contains(&ws17), "logN=17 ws {ws17} MB");
+        assert!((ws17 / ws15 - 4.0).abs() < 0.5, "4× per 2 logN steps");
+    }
+
+    #[test]
+    fn bandwidth_matches_fig1b_anchors() {
+        // Paper: 2k NTTUs need ≥1.5 TB/s loading only evk, up to 3 TB/s
+        // with both operands; 64k NTTUs ≈ 100 TB/s.
+        let p = Fig1Params::paper(17);
+        let evk_only = p.required_bandwidth(2048, 1.0, Scenario::EvkOnly) / 1e12;
+        let both = p.required_bandwidth(2048, 1.0, Scenario::EvkPlusTwoOperands) / 1e12;
+        assert!((0.7..3.0).contains(&evk_only), "2k evk-only: {evk_only} TB/s");
+        assert!((1.4..6.0).contains(&both), "2k both: {both} TB/s");
+        let big = p.required_bandwidth(65536, 1.0, Scenario::EvkPlusTwoOperands) / 1e12;
+        assert!((40.0..200.0).contains(&big), "64k: {big} TB/s");
+    }
+
+    #[test]
+    fn bandwidth_linear_in_units() {
+        let p = Fig1Params::paper(16);
+        let b1 = p.required_bandwidth(1024, 1.0, Scenario::EvkOnly);
+        let b2 = p.required_bandwidth(2048, 1.0, Scenario::EvkOnly);
+        assert!((b2 / b1 - 2.0).abs() < 1e-9);
+    }
+}

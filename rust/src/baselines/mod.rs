@@ -1,0 +1,6 @@
+//! Comparison baselines: PIM technologies (Fig. 3 / Fig. 14), ASIC
+//! accelerators (Fig. 12), and the off-chip bandwidth model (Fig. 1).
+
+pub mod asic;
+pub mod bandwidth;
+pub mod pim;

@@ -1,0 +1,491 @@
+//! Ciphertext type and the homomorphic evaluator: HAdd / HSub / HMul /
+//! CMult / HRot / conjugate / rescale (paper §II-A "Arithmetic Operation"
+//! and "Rotation").
+
+use super::complex::C64;
+use super::keys::{decrypt_poly, encrypt_poly, truncate_full, KeyChain, KeyTag};
+use super::keyswitch::key_switch;
+use super::CkksContext;
+use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
+use crate::math::poly::{Domain, RnsPoly};
+use crate::math::prng::Sampler;
+use std::sync::Arc;
+
+/// A CKKS ciphertext: `(c0, c1)` with `c0 + c1·s ≈ m`, kept in NTT domain
+/// between operations.
+#[derive(Debug, Clone)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    /// Active q-limbs (level + 1 in the leveled-scheme sense).
+    pub level: usize,
+    /// Current scaling factor Δ.
+    pub scale: f64,
+}
+
+impl Ciphertext {
+    pub fn limbs(&self) -> usize {
+        self.level
+    }
+}
+
+/// Homomorphic evaluator bound to a key chain.
+pub struct Evaluator {
+    pub ctx: Arc<CkksContext>,
+    pub chain: Arc<KeyChain>,
+    sampler: std::sync::Mutex<Sampler>,
+}
+
+impl Evaluator {
+    pub fn new(ctx: Arc<CkksContext>, chain: Arc<KeyChain>, seed: u64) -> Self {
+        Self {
+            ctx,
+            chain,
+            sampler: std::sync::Mutex::new(Sampler::new(seed)),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // encode / encrypt / decrypt
+    // ------------------------------------------------------------------
+
+    /// Encrypt complex slots at `level` limbs with the default scale.
+    pub fn encrypt(&self, z: &[C64], level: usize) -> Ciphertext {
+        let scale = self.ctx.scale();
+        let m = self
+            .ctx
+            .encoder
+            .encode(&self.ctx.basis, level, z, scale);
+        let mut sampler = self.sampler.lock().unwrap();
+        let (c0, c1) = encrypt_poly(&self.ctx, &self.chain.sk, &m, &mut sampler);
+        Ciphertext {
+            c0,
+            c1,
+            level,
+            scale,
+        }
+    }
+
+    /// Encrypt real slots.
+    pub fn encrypt_real(&self, z: &[f64], level: usize) -> Ciphertext {
+        let zc: Vec<C64> = z.iter().map(|&x| C64::real(x)).collect();
+        self.encrypt(&zc, level)
+    }
+
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<C64> {
+        let m = decrypt_poly(&self.ctx, &self.chain.sk, &ct.c0, &ct.c1);
+        self.ctx.encoder.decode(&m, ct.scale)
+    }
+
+    pub fn decrypt_real(&self, ct: &Ciphertext) -> Vec<f64> {
+        self.decrypt(ct).iter().map(|z| z.re).collect()
+    }
+
+    /// Encode a plaintext vector for `mul_plain` at the given level/scale.
+    pub fn encode_plain(&self, z: &[f64], level: usize, scale: f64) -> RnsPoly {
+        let mut p = self
+            .ctx
+            .encoder
+            .encode_real(&self.ctx.basis, level, z, scale);
+        p.to_ntt();
+        p
+    }
+
+    // ------------------------------------------------------------------
+    // level / scale management
+    // ------------------------------------------------------------------
+
+    /// Drop limbs of `ct` down to `level` (modulus switching without
+    /// rescaling — exact, scale unchanged).
+    pub fn level_down(&self, ct: &Ciphertext, level: usize) -> Ciphertext {
+        assert!(level <= ct.level);
+        let trunc = |p: &RnsPoly| RnsPoly {
+            basis: p.basis.clone(),
+            limbs: level,
+            domain: p.domain,
+            data: p.data[..level].to_vec(),
+        };
+        Ciphertext {
+            c0: trunc(&ct.c0),
+            c1: trunc(&ct.c1),
+            level,
+            scale: ct.scale,
+        }
+    }
+
+    /// Rescale by the last modulus: drops one limb, divides the scale.
+    pub fn rescale(&self, ct: &Ciphertext) -> Ciphertext {
+        assert!(ct.level >= 2, "cannot rescale at level 1");
+        let l = ct.level;
+        let ql = self.ctx.basis.q(l - 1);
+        let div = |p: &RnsPoly| {
+            let mut p = p.clone();
+            p.to_coeff();
+            let last = p.data[l - 1].clone();
+            let mut out = RnsPoly::zero(self.ctx.basis.clone(), l - 1, Domain::Coeff);
+            for j in 0..l - 1 {
+                let q = self.ctx.basis.q(j);
+                let qinv = inv_mod(ql % q, q);
+                for c in 0..self.ctx.n() {
+                    let diff = sub_mod(p.data[j][c], last[c] % q, q);
+                    out.data[j][c] = mul_mod(diff, qinv, q);
+                }
+            }
+            out.to_ntt();
+            out
+        };
+        Ciphertext {
+            c0: div(&ct.c0),
+            c1: div(&ct.c1),
+            level: l - 1,
+            scale: ct.scale / ql as f64,
+        }
+    }
+
+    /// Match levels only (multiplication does not need equal scales).
+    fn align_level(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
+        let level = a.level.min(b.level);
+        (self.level_down(a, level), self.level_down(b, level))
+    }
+
+    /// Match levels and require (approximately) equal scales — the
+    /// precondition for addition/subtraction. The rescaling primes are
+    /// only ≈ Δ (within ~0.4%), so ciphertexts with different rescale
+    /// histories drift apart; hot paths re-align exactly via
+    /// [`Self::mul_const_complex_scaled`] / the Chebyshev combiner, and
+    /// the remaining drift (≲ a few % over deep chains) is absorbed as
+    /// approximation error (standard Lattigo-style policy).
+    fn align(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
+        let (a, b) = self.align_level(a, b);
+        let ratio = a.scale / b.scale;
+        assert!(
+            (ratio - 1.0).abs() < 6e-2,
+            "scale mismatch beyond drift tolerance: {} vs {}",
+            a.scale,
+            b.scale
+        );
+        (a, b)
+    }
+
+    // ------------------------------------------------------------------
+    // arithmetic
+    // ------------------------------------------------------------------
+
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (mut a, b) = self.align(a, b);
+        a.c0.add_assign(&b.c0);
+        a.c1.add_assign(&b.c1);
+        a
+    }
+
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (mut a, b) = self.align(a, b);
+        a.c0.sub_assign(&b.c0);
+        a.c1.sub_assign(&b.c1);
+        a
+    }
+
+    pub fn neg(&self, a: &Ciphertext) -> Ciphertext {
+        let mut a = a.clone();
+        a.c0.neg_assign();
+        a.c1.neg_assign();
+        a
+    }
+
+    /// Add an encoded plaintext (must match level & scale).
+    pub fn add_plain(&self, a: &Ciphertext, p: &RnsPoly) -> Ciphertext {
+        assert_eq!(p.limbs, a.level);
+        let mut out = a.clone();
+        let mut p = p.clone();
+        p.to_ntt();
+        out.c0.add_assign(&p);
+        out
+    }
+
+    /// Add a constant to every slot.
+    pub fn add_const(&self, a: &Ciphertext, v: f64) -> Ciphertext {
+        let z = vec![v; self.ctx.encoder.slots()];
+        let p = self.encode_plain(&z, a.level, a.scale);
+        self.add_plain(a, &p)
+    }
+
+    /// Multiply by an encoded plaintext (scale multiplies; no rescale).
+    pub fn mul_plain_no_rescale(&self, a: &Ciphertext, p: &RnsPoly, p_scale: f64) -> Ciphertext {
+        assert_eq!(p.limbs, a.level);
+        assert_eq!(p.domain, Domain::Ntt);
+        let mut out = a.clone();
+        out.c0.mul_assign(p);
+        out.c1.mul_assign(p);
+        out.scale = a.scale * p_scale;
+        out
+    }
+
+    /// Multiply by a plaintext vector, then rescale.
+    pub fn mul_plain(&self, a: &Ciphertext, z: &[f64]) -> Ciphertext {
+        let scale = self.ctx.scale();
+        let p = self.encode_plain(z, a.level, scale);
+        let out = self.mul_plain_no_rescale(a, &p, scale);
+        self.rescale(&out)
+    }
+
+    /// Multiply every slot by a constant, then rescale.
+    pub fn mul_const(&self, a: &Ciphertext, v: f64) -> Ciphertext {
+        let z = vec![v; self.ctx.encoder.slots()];
+        self.mul_plain(a, &z)
+    }
+
+    /// Multiply every slot by a complex constant, then rescale.
+    pub fn mul_const_complex(&self, a: &Ciphertext, v: C64) -> Ciphertext {
+        self.mul_const_complex_scaled(a, v, self.ctx.scale())
+    }
+
+    /// [`Self::mul_const_complex`] with an explicit plaintext encoding
+    /// scale — callers use this to land the product on an exact target
+    /// scale (`target·q / a.scale`).
+    pub fn mul_const_complex_scaled(&self, a: &Ciphertext, v: C64, pt_scale: f64) -> Ciphertext {
+        let z = vec![v; self.ctx.encoder.slots()];
+        let mut p = self.ctx.encoder.encode(&self.ctx.basis, a.level, &z, pt_scale);
+        p.to_ntt();
+        let out = self.mul_plain_no_rescale(a, &p, pt_scale);
+        self.rescale(&out)
+    }
+
+    /// Full homomorphic multiplication: tensor + relinearize, no rescale.
+    pub fn mul_no_rescale(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align_level(a, b);
+        let level = a.level;
+        // (d0, d1, d2) = (b0·b1, a0·b1 + a1·b0, a0·a1) in NTT domain.
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&b.c0);
+        let mut d1 = a.c0.clone();
+        d1.mul_assign(&b.c1);
+        let mut d1b = a.c1.clone();
+        d1b.mul_assign(&b.c0);
+        d1.add_assign(&d1b);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&b.c1);
+        // Relinearize d2 under evk(s²→s).
+        let evk = self.chain.eval_key(level, KeyTag::Relin);
+        let (ks0, ks1) = key_switch(&self.ctx, &d2, &evk);
+        d0.add_assign(&ks0);
+        d1.add_assign(&ks1);
+        Ciphertext {
+            c0: d0,
+            c1: d1,
+            level,
+            scale: a.scale * b.scale,
+        }
+    }
+
+    /// HMul: tensor + relinearize + rescale (the paper's headline op).
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.rescale(&self.mul_no_rescale(a, b))
+    }
+
+    pub fn square(&self, a: &Ciphertext) -> Ciphertext {
+        self.mul(a, a)
+    }
+
+    // ------------------------------------------------------------------
+    // rotation / conjugation
+    // ------------------------------------------------------------------
+
+    /// Homomorphic slot rotation by `step` (positive = left), via Galois
+    /// automorphism + key switch (paper §II-A "Rotation").
+    pub fn rotate(&self, a: &Ciphertext, step: i64) -> Ciphertext {
+        if step.rem_euclid(self.ctx.encoder.slots() as i64) == 0 {
+            return a.clone();
+        }
+        let k = RnsPoly::rotation_to_galois(step, self.ctx.n());
+        self.apply_galois(a, k)
+    }
+
+    /// Homomorphic complex conjugation.
+    pub fn conjugate(&self, a: &Ciphertext) -> Ciphertext {
+        self.apply_galois(a, RnsPoly::conjugation_galois(self.ctx.n()))
+    }
+
+    fn apply_galois(&self, a: &Ciphertext, k: usize) -> Ciphertext {
+        let level = a.level;
+        // σ_k over both components (coeff domain).
+        let mut b = a.c0.clone();
+        b.to_coeff();
+        let rb = b.automorphism(k);
+        let mut c1 = a.c1.clone();
+        c1.to_coeff();
+        let ra = c1.automorphism(k);
+        // σ_k(c1) is keyed under σ_k(s): switch back to s.
+        let evk = self.chain.eval_key(level, KeyTag::Galois(k));
+        let mut ra_ntt = ra;
+        ra_ntt.to_ntt();
+        let (ks0, ks1) = key_switch(&self.ctx, &ra_ntt, &evk);
+        let mut c0 = rb;
+        c0.to_ntt();
+        c0.add_assign(&ks0);
+        Ciphertext {
+            c0,
+            c1: ks1,
+            level,
+            scale: a.scale,
+        }
+    }
+
+    /// Σ over all slots via log-step rotations (leaves the total in every
+    /// slot) — the reduction pattern HELR/LOLA traces use.
+    pub fn rotate_sum(&self, a: &Ciphertext, width: usize) -> Ciphertext {
+        let mut acc = a.clone();
+        let mut step = 1usize;
+        while step < width {
+            let rot = self.rotate(&acc, step as i64);
+            acc = self.add(&acc, &rot);
+            step <<= 1;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+    use crate::util::check::forall;
+
+    fn eval() -> Evaluator {
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 2024));
+        Evaluator::new(ctx, chain, 555)
+    }
+
+    fn close(a: &[C64], b: &[f64], tol: f64, what: &str) {
+        for (i, (x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x.re - y).abs() < tol && x.im.abs() < tol,
+                "{what} slot {i}: got {x:?}, want {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        forall("hadd", 3, |rng| {
+            let z1: Vec<f64> = (0..slots).map(|_| rng.f64() - 0.5).collect();
+            let z2: Vec<f64> = (0..slots).map(|_| rng.f64() - 0.5).collect();
+            let c1 = ev.encrypt_real(&z1, 3);
+            let c2 = ev.encrypt_real(&z2, 3);
+            let sum = ev.add(&c1, &c2);
+            let want: Vec<f64> = z1.iter().zip(&z2).map(|(a, b)| a + b).collect();
+            close(&ev.decrypt(&sum), &want, 1e-3, "add");
+            let diff = ev.sub(&c1, &c2);
+            let wantd: Vec<f64> = z1.iter().zip(&z2).map(|(a, b)| a - b).collect();
+            close(&ev.decrypt(&diff), &wantd, 1e-3, "sub");
+        });
+    }
+
+    #[test]
+    fn hmul_multiplies_slots() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        forall("hmul", 2, |rng| {
+            let z1: Vec<f64> = (0..slots).map(|_| rng.f64() * 2.0 - 1.0).collect();
+            let z2: Vec<f64> = (0..slots).map(|_| rng.f64() * 2.0 - 1.0).collect();
+            let c1 = ev.encrypt_real(&z1, 3);
+            let c2 = ev.encrypt_real(&z2, 3);
+            let prod = ev.mul(&c1, &c2);
+            assert_eq!(prod.level, 2);
+            let want: Vec<f64> = z1.iter().zip(&z2).map(|(a, b)| a * b).collect();
+            close(&ev.decrypt(&prod), &want, 5e-3, "mul");
+        });
+    }
+
+    #[test]
+    fn mul_plain_and_const() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| (i % 7) as f64 * 0.1).collect();
+        let w: Vec<f64> = (0..slots).map(|i| ((i + 3) % 5) as f64 * 0.2 - 0.4).collect();
+        let ct = ev.encrypt_real(&z, 3);
+        let prod = ev.mul_plain(&ct, &w);
+        let want: Vec<f64> = z.iter().zip(&w).map(|(a, b)| a * b).collect();
+        close(&ev.decrypt(&prod), &want, 5e-3, "mul_plain");
+        let half = ev.mul_const(&ct, 0.5);
+        let wanth: Vec<f64> = z.iter().map(|a| a * 0.5).collect();
+        close(&ev.decrypt(&half), &wanth, 5e-3, "mul_const");
+    }
+
+    #[test]
+    fn rotation_rotates_slots() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| i as f64 / slots as f64).collect();
+        let ct = ev.encrypt_real(&z, 2);
+        for step in [1i64, 2, 7] {
+            let rot = ev.rotate(&ct, step);
+            let want: Vec<f64> = (0..slots)
+                .map(|j| z[(j + step as usize) % slots])
+                .collect();
+            close(&ev.decrypt(&rot), &want, 1e-3, &format!("rot{step}"));
+        }
+    }
+
+    #[test]
+    fn conjugate_flips_imaginary() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<C64> = (0..slots)
+            .map(|i| C64::new(0.1 * (i % 5) as f64, 0.2 - 0.01 * (i % 9) as f64))
+            .collect();
+        let ct = ev.encrypt(&z, 2);
+        let conj = ev.conjugate(&ct);
+        let dec = ev.decrypt(&conj);
+        for (got, want) in dec.iter().zip(&z) {
+            assert!((got.re - want.re).abs() < 1e-3);
+            assert!((got.im + want.im).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rotate_sum_totals_slots() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| if i < 8 { 0.125 } else { 0.0 }).collect();
+        let ct = ev.encrypt_real(&z, 2);
+        let total = ev.rotate_sum(&ct, 8);
+        let dec = ev.decrypt(&total);
+        // slot 0 holds the full sum = 1.0
+        assert!((dec[0].re - 1.0).abs() < 5e-3, "got {}", dec[0].re);
+    }
+
+    #[test]
+    fn depth_chain_to_level_one() {
+        // Use all multiplicative levels: (((x²)·x)·x) at tiny params.
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.5 + 0.3 * ((i % 3) as f64 - 1.0)).collect();
+        let ct = ev.encrypt_real(&z, 4);
+        let sq = ev.square(&ct); // level 3
+        let cu = ev.mul(&sq, &ev.level_down(&ct, 3)); // level 2
+        let qu = ev.mul(&cu, &ev.level_down(&ct, 2)); // level 1
+        assert_eq!(qu.level, 1);
+        let want: Vec<f64> = z.iter().map(|x| x.powi(4)).collect();
+        close(&ev.decrypt(&qu), &want, 5e-2, "x^4");
+    }
+
+    #[test]
+    fn homomorphic_dot_product() {
+        // The HELR inner loop: elementwise mul + rotate_sum.
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let width = 16usize;
+        let x: Vec<f64> = (0..slots).map(|i| if i < width { 0.1 } else { 0.0 }).collect();
+        let w: Vec<f64> = (0..slots).map(|i| if i < width { 0.2 } else { 0.0 }).collect();
+        let cx = ev.encrypt_real(&x, 3);
+        let cw = ev.encrypt_real(&w, 3);
+        let prod = ev.mul(&cx, &cw);
+        let dot = ev.rotate_sum(&prod, width);
+        let dec = ev.decrypt(&dot);
+        let want = 0.1 * 0.2 * width as f64;
+        assert!((dec[0].re - want).abs() < 1e-2, "dot {} vs {want}", dec[0].re);
+    }
+}

@@ -1,0 +1,288 @@
+//! Key material: secret key, encryption randomness, and the lazy per-level
+//! evaluation / rotation key cache.
+
+use super::keyswitch::{EvalKey, ExtPoly};
+use super::CkksContext;
+use crate::math::poly::{Domain, RnsPoly};
+use crate::math::prng::{signed_to_mod, Sampler};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Ternary secret key, kept both as signed coefficients and as NTT-domain
+/// residues over the full `Q·P` basis.
+pub struct SecretKey {
+    pub coeffs: Vec<i64>,
+    /// s in NTT domain over the full basis (all L+k limbs).
+    pub s_full: RnsPoly,
+    /// s² in NTT domain over the full basis.
+    pub s2_full: RnsPoly,
+}
+
+impl SecretKey {
+    pub fn generate(ctx: &Arc<CkksContext>, sampler: &mut Sampler) -> Self {
+        let n = ctx.n();
+        let hamming = ctx.params.secret_hamming.or(Some(n / 2));
+        let coeffs = sampler.ternary(n, hamming);
+        let total = ctx.basis.len();
+        let mut s_full = RnsPoly::from_signed(ctx.basis.clone(), total, &coeffs);
+        s_full.to_ntt();
+        let mut s2_full = s_full.clone();
+        s2_full.mul_assign(&s_full);
+        Self {
+            coeffs,
+            s_full,
+            s2_full,
+        }
+    }
+
+    /// σ_k(s) in NTT domain over the full basis (for rotation keys).
+    pub fn automorphed(&self, ctx: &Arc<CkksContext>, k: usize) -> RnsPoly {
+        let total = ctx.basis.len();
+        let s = RnsPoly::from_signed(ctx.basis.clone(), total, &self.coeffs);
+        let mut out = s.automorphism(k);
+        out.to_ntt();
+        out
+    }
+}
+
+/// Which key-switching key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KeyTag {
+    /// Relinearization (s² → s).
+    Relin,
+    /// Rotation/conjugation by Galois element k (σ_k(s) → s).
+    Galois(usize),
+}
+
+/// Secret key plus a lazily-populated `(level, tag) → EvalKey` cache.
+pub struct KeyChain {
+    pub ctx: Arc<CkksContext>,
+    pub sk: SecretKey,
+    cache: Mutex<HashMap<(usize, KeyTag), Arc<EvalKey>>>,
+    seed: u64,
+}
+
+impl KeyChain {
+    pub fn new(ctx: Arc<CkksContext>, seed: u64) -> Self {
+        let mut sampler = Sampler::new(seed);
+        let sk = SecretKey::generate(&ctx, &mut sampler);
+        Self {
+            ctx,
+            sk,
+            cache: Mutex::new(HashMap::new()),
+            seed,
+        }
+    }
+
+    /// Fetch (or generate) the key-switching key for `tag` at `level`
+    /// (= number of active q-limbs).
+    pub fn eval_key(&self, level: usize, tag: KeyTag) -> Arc<EvalKey> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(k) = cache.get(&(level, tag)) {
+                return k.clone();
+            }
+        }
+        // Generate outside the lock (idempotent if raced).
+        let target = match tag {
+            KeyTag::Relin => self.sk.s2_full.clone(),
+            KeyTag::Galois(k) => self.sk.automorphed(&self.ctx, k),
+        };
+        let mut sampler = Sampler::new(
+            self.seed ^ (level as u64) << 32 ^ tag_hash(tag),
+        );
+        let key = Arc::new(EvalKey::generate(
+            &self.ctx,
+            &self.sk,
+            &target,
+            level,
+            &mut sampler,
+        ));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert((level, tag), key.clone());
+        key
+    }
+
+    /// Number of keys currently materialised (test/metrics helper).
+    pub fn cached_keys(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+fn tag_hash(tag: KeyTag) -> u64 {
+    match tag {
+        KeyTag::Relin => 0x9E37_79B9,
+        KeyTag::Galois(k) => 0xDEAD_BEEF ^ (k as u64).rotate_left(17),
+    }
+}
+
+/// Encrypt helper: sample (a, e) and return c = (b, a) with
+/// `b = -a·s + m + e` over `limbs` q-limbs. NTT domain.
+pub fn encrypt_poly(
+    ctx: &Arc<CkksContext>,
+    sk: &SecretKey,
+    m: &RnsPoly,
+    sampler: &mut Sampler,
+) -> (RnsPoly, RnsPoly) {
+    let limbs = m.limbs;
+    let n = ctx.n();
+    // a uniform in NTT domain directly (uniform is NTT-invariant).
+    let mut a = RnsPoly::zero(ctx.basis.clone(), limbs, Domain::Ntt);
+    for j in 0..limbs {
+        let q = ctx.basis.q(j);
+        for c in a.data[j].iter_mut() {
+            *c = sampler.rng().below(q);
+        }
+    }
+    let e = sampler.gaussian(n);
+    let mut e_p = RnsPoly::from_signed(ctx.basis.clone(), limbs, &e);
+    e_p.to_ntt();
+
+    // b = -a·s + m + e
+    let mut b = a.clone();
+    let s_view = truncate_full(&sk.s_full, limbs);
+    b.mul_assign(&s_view);
+    b.neg_assign();
+    let mut m_ntt = m.clone();
+    m_ntt.to_ntt();
+    b.add_assign(&m_ntt);
+    b.add_assign(&e_p);
+    (b, a)
+}
+
+/// View of a full-basis poly truncated to the first `limbs` q-limbs.
+pub fn truncate_full(full: &RnsPoly, limbs: usize) -> RnsPoly {
+    assert!(limbs <= full.limbs);
+    RnsPoly {
+        basis: full.basis.clone(),
+        limbs,
+        domain: full.domain,
+        data: full.data[..limbs].to_vec(),
+    }
+}
+
+/// Decrypt: m ≈ b + a·s (NTT domain in, coeff domain out).
+pub fn decrypt_poly(
+    ctx: &Arc<CkksContext>,
+    sk: &SecretKey,
+    b: &RnsPoly,
+    a: &RnsPoly,
+) -> RnsPoly {
+    let limbs = b.limbs;
+    let mut m = a.clone();
+    m.to_ntt();
+    let s_view = truncate_full(&sk.s_full, limbs);
+    m.mul_assign(&s_view);
+    let mut b_ntt = b.clone();
+    b_ntt.to_ntt();
+    m.add_assign(&b_ntt);
+    m.to_coeff();
+    m
+}
+
+/// Raw message polynomial for an ExtPoly-based key (helper reused by
+/// EvalKey::generate) — the scalar `[P · (Q_l / D_t)]_m` per modulus.
+pub fn evk_message_scalars(
+    ctx: &Arc<CkksContext>,
+    level: usize,
+    digit_range: (usize, usize),
+    mods: &[usize],
+) -> Vec<u64> {
+    mods.iter()
+        .map(|&idx| {
+            let m = ctx.basis.q(idx);
+            let mut v = 1u64;
+            // P = ∏ p_i
+            for i in 0..ctx.k() {
+                v = crate::math::modarith::mul_mod(v, ctx.basis.q(ctx.p_idx(i)) % m, m);
+            }
+            // Q_l / D_t = ∏_{j < level, j ∉ digit} q_j
+            for j in 0..level {
+                if j < digit_range.0 || j >= digit_range.1 {
+                    v = crate::math::modarith::mul_mod(v, ctx.basis.q(j) % m, m);
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    fn ctx() -> Arc<CkksContext> {
+        CkksContext::new(CkksParams::func_tiny())
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip_small_noise() {
+        let ctx = ctx();
+        let mut sampler = Sampler::new(11);
+        let sk = SecretKey::generate(&ctx, &mut sampler);
+        // message: small signed coefficients at scale 2^20
+        let n = ctx.n();
+        let coeffs: Vec<i64> = (0..n).map(|i| ((i as i64 % 17) - 8) << 20).collect();
+        let m = RnsPoly::from_signed(ctx.basis.clone(), 3, &coeffs);
+        let (b, a) = encrypt_poly(&ctx, &sk, &m, &mut sampler);
+        let dec = decrypt_poly(&ctx, &sk, &b, &a);
+        // noise must be far below the 2^20 message granularity
+        for j in 0..dec.limbs {
+            let q = ctx.basis.q(j);
+            for (got, want) in dec.data[j].iter().zip(&m.data[j]) {
+                let d = crate::math::modarith::sub_mod(*got, *want, q);
+                let d = d.min(q - d);
+                assert!(d < 1 << 10, "noise {d} too large");
+            }
+        }
+    }
+
+    #[test]
+    fn secret_key_is_ternary_and_half_dense() {
+        let ctx = ctx();
+        let mut s = Sampler::new(5);
+        let sk = SecretKey::generate(&ctx, &mut s);
+        assert!(sk.coeffs.iter().all(|&c| (-1..=1).contains(&c)));
+        let nz = sk.coeffs.iter().filter(|&&c| c != 0).count();
+        assert_eq!(nz, ctx.n() / 2);
+    }
+
+    #[test]
+    fn keychain_caches_per_level() {
+        let ctx = ctx();
+        let chain = KeyChain::new(ctx, 7);
+        assert_eq!(chain.cached_keys(), 0);
+        let k1 = chain.eval_key(3, KeyTag::Relin);
+        let k2 = chain.eval_key(3, KeyTag::Relin);
+        assert!(Arc::ptr_eq(&k1, &k2));
+        assert_eq!(chain.cached_keys(), 1);
+        chain.eval_key(2, KeyTag::Relin);
+        chain.eval_key(3, KeyTag::Galois(5));
+        assert_eq!(chain.cached_keys(), 3);
+    }
+
+    #[test]
+    fn evk_scalars_multiply_out_to_p_qhat() {
+        let ctx = ctx();
+        // level 4, digit covering limbs [0,2): scalar = P * q_2 * q_3 mod m
+        let mods: Vec<usize> = (0..ctx.basis.len()).collect();
+        let s = evk_message_scalars(&ctx, 4, (0, 2), &mods);
+        for (i, &idx) in mods.iter().enumerate() {
+            let m = ctx.basis.q(idx);
+            let mut expect = 1u64;
+            for pi in 0..ctx.k() {
+                expect = crate::math::modarith::mul_mod(expect, ctx.basis.q(ctx.p_idx(pi)) % m, m);
+            }
+            for j in [2usize, 3] {
+                expect = crate::math::modarith::mul_mod(expect, ctx.basis.q(j) % m, m);
+            }
+            assert_eq!(s[i], expect);
+        }
+        // mod p_0 the scalar must be 0 (P ≡ 0 mod p_0)
+        let p0_pos = mods.iter().position(|&i| i == ctx.p_idx(0)).unwrap();
+        assert_eq!(s[p0_pos], 0);
+    }
+}

@@ -1,0 +1,411 @@
+//! Generalized (hybrid, `dnum`) key switching — paper §II-A "Key
+//! Switching", the most expensive FHE primitive and the one FHEmem's
+//! BConv/NTT datapaths exist to accelerate.
+//!
+//! Pipeline for `KS(d)` at level `l` (digits of α = ⌈L/dnum⌉ limbs):
+//!
+//! 1. decompose `d` into digits `d_t = [d]_{D_t}` (residue slices),
+//! 2. scale by `[(Q_l/D_t)^{-1}]` *implicitly* — folded into the gadget
+//!    scalars the evk carries (see [`EvalKey::generate`]),
+//! 3. **ModUp**: BConv each digit from `D_t` to the rest of `Q_l·P`,
+//! 4. inner product with the evk digit keys in the NTT domain,
+//! 5. **ModDown**: BConv the `P`-part back to `Q_l`, subtract, divide by P.
+//!
+//! The ModUp error `+κ·D_t` is annihilated because the evk message carries
+//! the cofactor `Q_l/D_t`: `κ·D_t·(Q_l/D_t) ≡ 0 (mod Q_l)`.
+
+use super::keys::{evk_message_scalars, SecretKey};
+use super::CkksContext;
+use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
+use crate::math::poly::{Domain, RnsPoly};
+use crate::math::prng::Sampler;
+use crate::math::rns::BConv;
+use std::sync::Arc;
+
+/// A polynomial over an explicit (non-prefix) set of basis moduli —
+/// the extended `Q_l·P` representation used inside key switching.
+#[derive(Debug, Clone)]
+pub struct ExtPoly {
+    /// Basis indices of each row.
+    pub mods: Vec<usize>,
+    /// `rows[r]` is the residue poly mod `basis.q(mods[r])`.
+    pub rows: Vec<Vec<u64>>,
+    pub domain: Domain,
+}
+
+impl ExtPoly {
+    pub fn zero(ctx: &CkksContext, mods: Vec<usize>, domain: Domain) -> Self {
+        let n = ctx.n();
+        Self {
+            rows: vec![vec![0u64; n]; mods.len()],
+            mods,
+            domain,
+        }
+    }
+
+    pub fn to_ntt(&mut self, ctx: &CkksContext) {
+        if self.domain == Domain::Ntt {
+            return;
+        }
+        let mods = self.mods.clone();
+        crate::math::poly::par_rows(&mut self.rows, |r, row| {
+            ctx.basis.tables[mods[r]].forward(row)
+        });
+        self.domain = Domain::Ntt;
+    }
+
+    pub fn to_coeff(&mut self, ctx: &CkksContext) {
+        if self.domain == Domain::Coeff {
+            return;
+        }
+        let mods = self.mods.clone();
+        crate::math::poly::par_rows(&mut self.rows, |r, row| {
+            ctx.basis.tables[mods[r]].inverse(row)
+        });
+        self.domain = Domain::Coeff;
+    }
+
+    /// acc += other ⊙ self (pointwise, NTT domain), row-aligned.
+    /// Barrett multiply — the key-switch inner-product hot loop.
+    pub fn mul_acc_into(&self, ctx: &CkksContext, other: &ExtPoly, acc: &mut ExtPoly) {
+        debug_assert_eq!(self.mods, other.mods);
+        debug_assert_eq!(self.mods, acc.mods);
+        for r in 0..self.rows.len() {
+            let q = ctx.basis.q(self.mods[r]);
+            let br = ctx.basis.barrett[self.mods[r]];
+            for c in 0..self.rows[r].len() {
+                let prod = br.mul(self.rows[r][c], other.rows[r][c]);
+                acc.rows[r][c] = crate::math::modarith::add_mod(acc.rows[r][c], prod, q);
+            }
+        }
+    }
+}
+
+/// The extended modulus set at `level`: q-limbs `0..level` followed by
+/// all special limbs.
+pub fn ext_mods(ctx: &CkksContext, level: usize) -> Vec<usize> {
+    let mut mods: Vec<usize> = (0..level).collect();
+    mods.extend((0..ctx.k()).map(|i| ctx.p_idx(i)));
+    mods
+}
+
+/// One digit of an evaluation key plus its precomputed ModUp conversion.
+pub struct EvalKeyDigit {
+    /// Gadget ciphertext (b_t, a_t) over the extended basis, NTT domain.
+    pub b: ExtPoly,
+    pub a: ExtPoly,
+    /// q-limb range `[lo, hi)` this digit decomposes.
+    pub range: (usize, usize),
+    /// BConv from the digit moduli to every *other* extended modulus.
+    pub mod_up: BConv,
+    /// Row positions (into ext rows) of the conversion outputs.
+    pub other_rows: Vec<usize>,
+    /// Gadget scalars `[(Q_l/D_t)^{-1}]_{q_j}` for j in the digit — applied
+    /// to the digit residues before ModUp.
+    pub digit_scal: Vec<u64>,
+}
+
+/// A per-level hybrid key-switching key: `ceil(level/α)` digit keys plus
+/// the shared ModDown conversion.
+pub struct EvalKey {
+    pub level: usize,
+    pub digits: Vec<EvalKeyDigit>,
+    /// BConv P → Q_l for ModDown.
+    pub mod_down: BConv,
+    /// `[P^{-1}]_{q_j}` for j < level.
+    pub p_inv: Vec<u64>,
+}
+
+impl EvalKey {
+    /// Generate the key switching key `σ(s') → s` at `level`.
+    ///
+    /// Digit t encrypts `P·(Q_l/D_t)·s'` (NTT domain, extended basis); the
+    /// matching `(Q_l/D_t)^{-1}` factor is applied to the decomposed digit
+    /// at switch time (`digit_scal`), so the gadget telescopes to `P·d·s'`.
+    pub fn generate(
+        ctx: &Arc<CkksContext>,
+        sk: &SecretKey,
+        s_prime_full: &RnsPoly,
+        level: usize,
+        sampler: &mut Sampler,
+    ) -> Self {
+        assert!(level >= 1 && level <= ctx.l());
+        assert_eq!(s_prime_full.domain, Domain::Ntt);
+        let alpha = ctx.params.digit_limbs();
+        let mods = ext_mods(ctx, level);
+        let n = ctx.n();
+        let num_digits = (level + alpha - 1) / alpha;
+        let mut digits = Vec::with_capacity(num_digits);
+        for t in 0..num_digits {
+            let lo = t * alpha;
+            let hi = ((t + 1) * alpha).min(level);
+            // --- gadget ciphertext ---
+            let mut a = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+            for (r, &idx) in mods.iter().enumerate() {
+                let q = ctx.basis.q(idx);
+                for c in a.rows[r].iter_mut() {
+                    *c = sampler.rng().below(q);
+                }
+            }
+            let e = sampler.gaussian(n);
+            let msg = evk_message_scalars(ctx, level, (lo, hi), &mods);
+            let mut b = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+            for (r, &idx) in mods.iter().enumerate() {
+                let q = ctx.basis.q(idx);
+                let table = &ctx.basis.tables[idx];
+                let mut e_row: Vec<u64> = e
+                    .iter()
+                    .map(|&v| crate::math::prng::signed_to_mod(v, q))
+                    .collect();
+                table.forward(&mut e_row);
+                let s_row = &sk.s_full.data[idx];
+                let sp_row = &s_prime_full.data[idx];
+                for c in 0..n {
+                    // b = -a·s + e + msg·s'
+                    let neg_as = crate::math::modarith::neg_mod(
+                        mul_mod(a.rows[r][c], s_row[c], q),
+                        q,
+                    );
+                    let m_sp = mul_mod(msg[r], sp_row[c], q);
+                    b.rows[r][c] = crate::math::modarith::add_mod(
+                        crate::math::modarith::add_mod(neg_as, e_row[c], q),
+                        m_sp,
+                        q,
+                    );
+                }
+            }
+            // --- ModUp precomputation ---
+            let digit_mods: Vec<u64> = (lo..hi).map(|j| ctx.basis.q(j)).collect();
+            let other_rows: Vec<usize> = (0..mods.len())
+                .filter(|&r| mods[r] >= level || mods[r] < lo || mods[r] >= hi)
+                .filter(|&r| !(mods[r] >= lo && mods[r] < hi))
+                .collect();
+            let other_mods: Vec<u64> = other_rows.iter().map(|&r| ctx.basis.q(mods[r])).collect();
+            let mod_up = BConv::new(&digit_mods, &other_mods);
+            // [(Q_l/D_t)^{-1}]_{q_j} for j in digit
+            let digit_scal: Vec<u64> = (lo..hi)
+                .map(|j| {
+                    let q = ctx.basis.q(j);
+                    let mut v = 1u64;
+                    for jj in 0..level {
+                        if jj < lo || jj >= hi {
+                            v = mul_mod(v, ctx.basis.q(jj) % q, q);
+                        }
+                    }
+                    inv_mod(v, q)
+                })
+                .collect();
+            digits.push(EvalKeyDigit {
+                b,
+                a,
+                range: (lo, hi),
+                mod_up,
+                other_rows,
+                digit_scal,
+            });
+        }
+        // --- ModDown precomputation ---
+        let p_mods: Vec<u64> = (0..ctx.k()).map(|i| ctx.basis.q(ctx.p_idx(i))).collect();
+        let q_mods: Vec<u64> = (0..level).map(|j| ctx.basis.q(j)).collect();
+        let mod_down = BConv::new(&p_mods, &q_mods);
+        let p_inv: Vec<u64> = (0..level)
+            .map(|j| {
+                let q = ctx.basis.q(j);
+                let mut v = 1u64;
+                for i in 0..ctx.k() {
+                    v = mul_mod(v, ctx.basis.q(ctx.p_idx(i)) % q, q);
+                }
+                inv_mod(v, q)
+            })
+            .collect();
+        Self {
+            level,
+            digits,
+            mod_down,
+            p_inv,
+        }
+    }
+
+    /// Approximate memory footprint of this key in bytes (for reports).
+    pub fn bytes(&self, n: usize) -> u64 {
+        let rows: usize = self
+            .digits
+            .iter()
+            .map(|d| d.a.rows.len() + d.b.rows.len())
+            .sum();
+        (rows * n * 8) as u64
+    }
+}
+
+/// ModDown: divide an extended-basis poly by P, returning a prefix poly
+/// over `Q_l`. Input NTT or coeff; output NTT domain.
+pub fn mod_down(ctx: &CkksContext, mut ext: ExtPoly, evk: &EvalKey) -> RnsPoly {
+    let level = evk.level;
+    ext.to_coeff(ctx);
+    let k = ctx.k();
+    let p_rows: Vec<Vec<u64>> = ext.rows[level..level + k].to_vec();
+    let conv = evk.mod_down.convert_poly(&p_rows, ctx.n());
+    let mut out = RnsPoly::zero(ctx.basis.clone(), level, Domain::Coeff);
+    for j in 0..level {
+        let q = ctx.basis.q(j);
+        let pinv = evk.p_inv[j];
+        for c in 0..ctx.n() {
+            let diff = sub_mod(ext.rows[j][c], conv[j][c], q);
+            out.data[j][c] = mul_mod(diff, pinv, q);
+        }
+    }
+    out.to_ntt();
+    out
+}
+
+/// Key switch `d` (limbs = evk.level) from the evk's source key to `s`.
+/// Returns `(ks0, ks1)` in NTT domain such that
+/// `ks0 + ks1·s ≈ d·s'` (mod Q_l).
+pub fn key_switch(ctx: &CkksContext, d: &RnsPoly, evk: &EvalKey) -> (RnsPoly, RnsPoly) {
+    let level = evk.level;
+    assert_eq!(d.limbs, level, "digit decomposition level mismatch");
+    let mut d_coeff = d.clone();
+    d_coeff.to_coeff();
+    let mods = ext_mods(ctx, level);
+    let n = ctx.n();
+
+    let mut acc0 = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+    let mut acc1 = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+
+    for digit in &evk.digits {
+        let (lo, hi) = digit.range;
+        // Scale digit residues by the gadget inverse factor.
+        let scaled: Vec<Vec<u64>> = (lo..hi)
+            .map(|j| {
+                let q = ctx.basis.q(j);
+                let s = digit.digit_scal[j - lo];
+                d_coeff.data[j].iter().map(|&v| mul_mod(v, s, q)).collect()
+            })
+            .collect();
+        // ModUp: extend to every other modulus.
+        let converted = digit.mod_up.convert_poly(&scaled, n);
+        // Assemble the extended poly (coeff domain).
+        let mut ext = ExtPoly::zero(ctx, mods.clone(), Domain::Coeff);
+        for (j, row) in (lo..hi).zip(scaled) {
+            ext.rows[j] = row;
+        }
+        for (&r, row) in digit.other_rows.iter().zip(converted) {
+            ext.rows[r] = row;
+        }
+        ext.to_ntt(ctx);
+        // Inner product with the gadget ciphertext.
+        ext.mul_acc_into(ctx, &digit.b, &mut acc0);
+        ext.mul_acc_into(ctx, &digit.a, &mut acc1);
+    }
+
+    (mod_down(ctx, acc0, evk), mod_down(ctx, acc1, evk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::keys::{decrypt_poly, truncate_full, KeyChain, KeyTag};
+    use crate::params::CkksParams;
+
+    fn setup() -> (Arc<CkksContext>, KeyChain) {
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = KeyChain::new(ctx.clone(), 99);
+        (ctx, chain)
+    }
+
+    /// Direct algebraic check: ks0 + ks1·s ≈ d·s² for random d.
+    #[test]
+    fn key_switch_relin_identity() {
+        let (ctx, chain) = setup();
+        let level = 3usize;
+        let evk = chain.eval_key(level, KeyTag::Relin);
+        let mut sampler = Sampler::new(123);
+        // random d (NTT domain)
+        let mut d = RnsPoly::zero(ctx.basis.clone(), level, Domain::Ntt);
+        for j in 0..level {
+            let q = ctx.basis.q(j);
+            for c in d.data[j].iter_mut() {
+                *c = sampler.rng().below(q);
+            }
+        }
+        let (ks0, ks1) = key_switch(&ctx, &d, &evk);
+        // lhs = ks0 + ks1·s
+        let mut lhs = ks1.clone();
+        lhs.mul_assign(&truncate_full(&chain.sk.s_full, level));
+        lhs.add_assign(&ks0);
+        // rhs = d·s²
+        let mut rhs = d.clone();
+        rhs.mul_assign(&truncate_full(&chain.sk.s2_full, level));
+        lhs.to_coeff();
+        rhs.to_coeff();
+        let err = lhs.max_centered_diff(&rhs);
+        // Error must be far below the message scale 2^26 (it is the KS
+        // noise: ~ dnum·N·σ·D/P plus rounding).
+        assert!(err < 1 << 16, "KS error {err} too large");
+    }
+
+    #[test]
+    fn key_switch_galois_identity() {
+        let (ctx, chain) = setup();
+        let level = 2usize;
+        let k = 5usize;
+        let evk = chain.eval_key(level, KeyTag::Galois(k));
+        let mut sampler = Sampler::new(321);
+        let mut d = RnsPoly::zero(ctx.basis.clone(), level, Domain::Ntt);
+        for j in 0..level {
+            let q = ctx.basis.q(j);
+            for c in d.data[j].iter_mut() {
+                *c = sampler.rng().below(q);
+            }
+        }
+        let (ks0, ks1) = key_switch(&ctx, &d, &evk);
+        let mut lhs = ks1.clone();
+        lhs.mul_assign(&truncate_full(&chain.sk.s_full, level));
+        lhs.add_assign(&ks0);
+        let mut rhs = d.clone();
+        let sk_rot = chain.sk.automorphed(&ctx, k);
+        rhs.mul_assign(&truncate_full(&sk_rot, level));
+        lhs.to_coeff();
+        rhs.to_coeff();
+        let err = lhs.max_centered_diff(&rhs);
+        assert!(err < 1 << 16, "Galois KS error {err}");
+    }
+
+    #[test]
+    fn mod_down_divides_by_p() {
+        // Build ext = P·x over the extended basis, ModDown must return ≈x.
+        let (ctx, chain) = setup();
+        let level = 2usize;
+        let evk = chain.eval_key(level, KeyTag::Relin);
+        let mut sampler = Sampler::new(7);
+        let n = ctx.n();
+        let x: Vec<i64> = (0..n).map(|_| sampler.rng().below(1 << 20) as i64 - (1 << 19)).collect();
+        let mods = ext_mods(&ctx, level);
+        let mut ext = ExtPoly::zero(&ctx, mods.clone(), Domain::Coeff);
+        for (r, &idx) in mods.iter().enumerate() {
+            let q = ctx.basis.q(idx);
+            let mut p_mod = 1u64;
+            for i in 0..ctx.k() {
+                p_mod = mul_mod(p_mod, ctx.basis.q(ctx.p_idx(i)) % q, q);
+            }
+            for c in 0..n {
+                let v = crate::math::prng::signed_to_mod(x[c], q);
+                ext.rows[r][c] = mul_mod(v, p_mod, q);
+            }
+        }
+        let mut out = mod_down(&ctx, ext, &evk);
+        out.to_coeff();
+        let expect = RnsPoly::from_signed(ctx.basis.clone(), level, &x);
+        let err = out.max_centered_diff(&expect);
+        assert!(err <= 1, "ModDown exactness violated: err {err}");
+        let _ = chain;
+    }
+
+    #[test]
+    fn evk_bytes_scale_with_digits() {
+        let (ctx, chain) = setup();
+        let e2 = chain.eval_key(2, KeyTag::Relin);
+        let e4 = chain.eval_key(4, KeyTag::Relin);
+        assert!(e4.bytes(ctx.n()) > e2.bytes(ctx.n()));
+    }
+}

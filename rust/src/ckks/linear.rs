@@ -1,0 +1,374 @@
+//! Homomorphic linear algebra: slot-space linear transforms via the
+//! diagonal (BSGS) method, and Chebyshev polynomial evaluation.
+//!
+//! These are the building blocks of the paper's workloads — LOLA/ResNet
+//! matrix layers, the HELR sigmoid, and the CoeffToSlot / SlotToCoeff /
+//! EvalMod stages of bootstrapping (§IV-F example pipeline).
+
+use super::cipher::{Ciphertext, Evaluator};
+use super::complex::C64;
+
+/// A dense slot-space linear transform `out = M · slots`, stored by
+/// diagonals: `diag[d][i] = M[i][(i+d) mod n]`.
+#[derive(Debug, Clone)]
+pub struct LinearTransform {
+    pub n: usize,
+    /// Non-zero diagonals: (offset, values).
+    pub diags: Vec<(usize, Vec<C64>)>,
+}
+
+impl LinearTransform {
+    /// Build from an explicit row-major matrix, dropping all-zero
+    /// diagonals.
+    pub fn from_matrix(m: &[Vec<C64>]) -> Self {
+        let n = m.len();
+        let mut diags = Vec::new();
+        for d in 0..n {
+            let vals: Vec<C64> = (0..n).map(|i| m[i][(i + d) % n]).collect();
+            if vals.iter().any(|v| v.norm() > 1e-14) {
+                diags.push((d, vals));
+            }
+        }
+        Self { n, diags }
+    }
+
+    /// Build the transform matrix of a black-box linear map by probing
+    /// unit vectors (used to extract the encoder's special FFT factors
+    /// without re-deriving index conventions).
+    pub fn from_probe<F: Fn(&[C64]) -> Vec<C64>>(n: usize, f: F) -> Self {
+        let mut cols: Vec<Vec<C64>> = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut e = vec![C64::ZERO; n];
+            e[k] = C64::ONE;
+            cols.push(f(&e));
+        }
+        // m[i][j] = cols[j][i]
+        let m: Vec<Vec<C64>> = (0..n)
+            .map(|i| (0..n).map(|j| cols[j][i]).collect())
+            .collect();
+        Self::from_matrix(&m)
+    }
+
+    /// Reference (plaintext) application.
+    pub fn apply_plain(&self, z: &[C64]) -> Vec<C64> {
+        let n = self.n;
+        let mut out = vec![C64::ZERO; n];
+        for (d, vals) in &self.diags {
+            for i in 0..n {
+                out[i] += vals[i] * z[(i + d) % n];
+            }
+        }
+        out
+    }
+
+    /// Homomorphic application with baby-step/giant-step rotations:
+    /// `d = g·i + j` ⇒ `out = Σ_i rot_{gi}( Σ_j rot_{-gi}(diag_d) ⊙ rot_j(ct) )`.
+    /// Costs ~`g + n/g` rotations and one plaintext-mul level.
+    pub fn apply(&self, ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+        let n = self.n;
+        assert_eq!(n, ev.ctx.encoder.slots(), "transform size != slots");
+        let g = (1usize..=n)
+            .find(|&g| g * g >= n)
+            .unwrap()
+            .next_power_of_two();
+        let scale = ev.ctx.scale();
+        // Baby rotations rot_j(ct), computed lazily.
+        let mut babies: Vec<Option<Ciphertext>> = vec![None; g];
+        babies[0] = Some(ct.clone());
+        let mut giant_acc: Option<Ciphertext> = None;
+        let mut i = 0usize;
+        while i * g < n {
+            // inner = Σ_j diag'_{gi+j} ⊙ rot_j(ct)
+            let mut inner: Option<Ciphertext> = None;
+            for j in 0..g {
+                let d = i * g + j;
+                let Some((_, vals)) = self.diags.iter().find(|(dd, _)| *dd == d) else {
+                    continue;
+                };
+                // pre-rotate the diagonal by -g·i: rot_{-gi}(v)[t] = v[t-gi]
+                let shift = (n - (g * i) % n) % n;
+                let rotated: Vec<C64> =
+                    (0..n).map(|t| vals[(t + shift) % n]).collect();
+                if babies[j].is_none() {
+                    babies[j] = Some(ev.rotate(ct, j as i64));
+                }
+                let baby = babies[j].as_ref().unwrap();
+                let pt = {
+                    let mut p = ev.ctx.encoder.encode(
+                        &ev.ctx.basis,
+                        baby.level,
+                        &rotated,
+                        scale,
+                    );
+                    p.to_ntt();
+                    p
+                };
+                let term = ev.mul_plain_no_rescale(baby, &pt, scale);
+                inner = Some(match inner {
+                    None => term,
+                    Some(acc) => ev.add(&acc, &term),
+                });
+            }
+            if let Some(inner) = inner {
+                let rotated = ev.rotate(&inner, (g * i) as i64);
+                giant_acc = Some(match giant_acc {
+                    None => rotated,
+                    Some(acc) => ev.add(&acc, &rotated),
+                });
+            }
+            i += 1;
+        }
+        let out = giant_acc.expect("transform has no diagonals");
+        ev.rescale(&out)
+    }
+
+    /// Number of rotations the BSGS application issues (cost model).
+    pub fn rotation_count(&self) -> usize {
+        let n = self.n;
+        let g = (1usize..=n)
+            .find(|&g| g * g >= n)
+            .unwrap()
+            .next_power_of_two();
+        let mut babies = std::collections::HashSet::new();
+        let mut giants = std::collections::HashSet::new();
+        for (d, _) in &self.diags {
+            babies.insert(d % g);
+            giants.insert(d / g);
+        }
+        babies.remove(&0);
+        giants.remove(&0);
+        babies.len() + giants.len()
+    }
+}
+
+/// Evaluate a Chebyshev series `Σ c_k T_k(x)` on a ciphertext whose slots
+/// lie in `[-1, 1]`. Depth `O(log deg) + 1`.
+pub fn eval_chebyshev(ev: &Evaluator, ct: &Ciphertext, coeffs: &[f64]) -> Ciphertext {
+    let cc: Vec<C64> = coeffs.iter().map(|&c| C64::real(c)).collect();
+    eval_chebyshev_complex(ev, ct, &cc)
+}
+
+/// [`eval_chebyshev`] with complex series coefficients (used by
+/// bootstrapping to fold the `i` of the imaginary branch into EvalMod).
+pub fn eval_chebyshev_complex(ev: &Evaluator, ct: &Ciphertext, coeffs: &[C64]) -> Ciphertext {
+    let deg = coeffs.len() - 1;
+    assert!(deg >= 1);
+    // T_1 = x; build the needed T_k via T_{a+b} = 2·T_a·T_b − T_{|a−b|}.
+    let mut t: Vec<Option<Ciphertext>> = vec![None; deg + 1];
+    t[1] = Some(ct.clone());
+    fn get_t(ev: &Evaluator, t: &mut Vec<Option<Ciphertext>>, k: usize) -> Ciphertext {
+        if let Some(ct) = &t[k] {
+            return ct.clone();
+        }
+        let a = k / 2 + (k % 2);
+        let b = k / 2;
+        let ta = get_t(ev, t, a);
+        let tb = get_t(ev, t, b);
+        let prod = ev.mul(&ta, &tb);
+        let two = ev.add(&prod, &prod); // 2·T_a·T_b without a level
+        let out = if a == b {
+            // T_{2a} = 2 T_a² − 1
+            ev.add_const(&two, -1.0)
+        } else {
+            // a = b+1 ⇒ T_{a+b} = 2 T_a T_b − T_1
+            let t1 = get_t(ev, t, 1);
+            ev.sub(&two, &t1)
+        };
+        t[k] = Some(out.clone());
+        out
+    }
+    // Constant term.
+    let mut acc: Option<Ciphertext> = None;
+    let mut lowest_level = usize::MAX;
+    let mut terms: Vec<(usize, Ciphertext)> = Vec::new();
+    for k in 1..=deg {
+        if coeffs[k].norm() < 1e-12 {
+            continue;
+        }
+        let tk = get_t(ev, &mut t, k);
+        lowest_level = lowest_level.min(tk.level);
+        terms.push((k, tk));
+    }
+    // Scalar-mul each term at a common target level. The plaintext scale
+    // is chosen per term so every product rescales to *exactly* the
+    // context scale — T_k's different rescale histories would otherwise
+    // drift apart and poison the sum.
+    let target = ev.ctx.scale();
+    let slots = ev.ctx.encoder.slots();
+    for (k, tk) in terms {
+        let tk = ev.level_down(&tk, lowest_level);
+        let q_div = ev.ctx.basis.q(lowest_level - 1) as f64;
+        let pt_scale = target * q_div / tk.scale;
+        let z = vec![coeffs[k]; slots];
+        let mut p = ev.ctx.encoder.encode(&ev.ctx.basis, tk.level, &z, pt_scale);
+        p.to_ntt();
+        let term = ev.rescale(&ev.mul_plain_no_rescale(&tk, &p, pt_scale));
+        acc = Some(match acc {
+            None => term,
+            Some(a) => ev.add(&a, &term),
+        });
+    }
+    let mut out = acc.expect("all-zero chebyshev series");
+    if coeffs[0].norm() > 1e-12 {
+        let slots = ev.ctx.encoder.slots();
+        let z = vec![coeffs[0]; slots];
+        let p = {
+            let mut p = ev.ctx.encoder.encode(&ev.ctx.basis, out.level, &z, out.scale);
+            p.to_ntt();
+            p
+        };
+        out = ev.add_plain(&out, &p);
+    }
+    out
+}
+
+/// Fit `f` on `[-1, 1]` with a Chebyshev interpolant of degree `deg`.
+pub fn chebyshev_fit<F: Fn(f64) -> f64>(f: F, deg: usize) -> Vec<f64> {
+    let m = deg + 1;
+    let nodes: Vec<f64> = (0..m)
+        .map(|i| (std::f64::consts::PI * (i as f64 + 0.5) / m as f64).cos())
+        .collect();
+    let fv: Vec<f64> = nodes.iter().map(|&x| f(x)).collect();
+    (0..m)
+        .map(|k| {
+            let s: f64 = (0..m)
+                .map(|i| {
+                    fv[i] * (std::f64::consts::PI * k as f64 * (i as f64 + 0.5) / m as f64).cos()
+                })
+                .sum();
+            (if k == 0 { 1.0 } else { 2.0 }) / m as f64 * s
+        })
+        .collect()
+}
+
+/// Evaluate a Chebyshev series in plain (reference for tests).
+pub fn eval_chebyshev_plain(coeffs: &[f64], x: f64) -> f64 {
+    let mut t0 = 1.0;
+    let mut t1 = x;
+    let mut acc = coeffs[0] + coeffs.get(1).copied().unwrap_or(0.0) * x;
+    for c in coeffs.iter().skip(2) {
+        let t2 = 2.0 * x * t1 - t0;
+        acc += c * t2;
+        t0 = t1;
+        t1 = t2;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::{CkksContext, KeyChain};
+    use crate::params::CkksParams;
+    use crate::util::check::forall;
+    use std::sync::Arc;
+
+    fn eval() -> Evaluator {
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 31337));
+        Evaluator::new(ctx, chain, 99)
+    }
+
+    #[test]
+    fn probe_recovers_identity() {
+        let lt = LinearTransform::from_probe(8, |z| z.to_vec());
+        assert_eq!(lt.diags.len(), 1);
+        assert_eq!(lt.diags[0].0, 0);
+    }
+
+    #[test]
+    fn apply_plain_matches_matrix() {
+        forall("lt plain", 16, |rng| {
+            let n = 8;
+            let m: Vec<Vec<C64>> = (0..n)
+                .map(|_| (0..n).map(|_| C64::new(rng.f64() - 0.5, rng.f64() - 0.5)).collect())
+                .collect();
+            let lt = LinearTransform::from_matrix(&m);
+            let z: Vec<C64> = (0..n).map(|_| C64::new(rng.f64(), rng.f64())).collect();
+            let out = lt.apply_plain(&z);
+            for i in 0..n {
+                let mut want = C64::ZERO;
+                for j in 0..n {
+                    want += m[i][j] * z[j];
+                }
+                assert!((out[i] - want).norm() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn homomorphic_transform_matches_plain() {
+        let ev = eval();
+        let n = ev.ctx.encoder.slots();
+        // A sparse-but-nontrivial transform with NON-CONSTANT diagonals
+        // (a constant far diagonal would not catch BSGS pre-rotation
+        // sign errors).
+        let mut m = vec![vec![C64::ZERO; n]; n];
+        for i in 0..n {
+            m[i][i] = C64::real(0.5 + 0.1 * ((i % 9) as f64));
+            m[i][(i + 3) % n] = C64::real(0.25 - 0.02 * ((i % 5) as f64));
+            m[i][(i + n - 1) % n] = C64::new(0.01 * ((i % 7) as f64), 0.125);
+            m[i][(i + n / 2 + 1) % n] = C64::new(0.05, -0.03 * ((i % 3) as f64));
+        }
+        let lt = LinearTransform::from_matrix(&m);
+        let z: Vec<C64> = (0..n)
+            .map(|i| C64::new((i % 7) as f64 * 0.1 - 0.3, (i % 5) as f64 * 0.05))
+            .collect();
+        let ct = ev.encrypt(&z, 3);
+        let out = lt.apply(&ev, &ct);
+        let want = lt.apply_plain(&z);
+        let got = ev.decrypt(&out);
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).norm() < 5e-3,
+                "slot {i}: {:?} vs {:?}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn chebyshev_fit_accuracy() {
+        let coeffs = chebyshev_fit(|x| (2.0 * std::f64::consts::PI * x).cos(), 24);
+        for i in 0..100 {
+            let x = -1.0 + 2.0 * i as f64 / 99.0;
+            let want = (2.0 * std::f64::consts::PI * x).cos();
+            let got = eval_chebyshev_plain(&coeffs, x);
+            assert!((got - want).abs() < 1e-9, "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_chebyshev_sigmoid() {
+        // HELR's sigmoid approximation evaluated homomorphically.
+        let ev = eval();
+        let n = ev.ctx.encoder.slots();
+        let sigmoid = |x: f64| 1.0 / (1.0 + (-2.0 * x).exp());
+        let coeffs = chebyshev_fit(sigmoid, 4);
+        let z: Vec<f64> = (0..n).map(|i| -1.0 + 2.0 * (i as f64) / n as f64).collect();
+        let ct = ev.encrypt_real(&z, 4);
+        let out = eval_chebyshev(&ev, &ct, &coeffs);
+        let got = ev.decrypt(&out);
+        for i in (0..n).step_by(37) {
+            let want = eval_chebyshev_plain(&coeffs, z[i]);
+            assert!(
+                (got[i].re - want).abs() < 2e-2,
+                "slot {i} x={}: {} vs {want}",
+                z[i],
+                got[i].re
+            );
+        }
+    }
+
+    #[test]
+    fn rotation_count_bsgs_bound() {
+        let n = 64;
+        let m: Vec<Vec<C64>> = (0..n)
+            .map(|i| (0..n).map(|j| C64::real(((i * j) % 3) as f64)).collect())
+            .collect();
+        let lt = LinearTransform::from_matrix(&m);
+        // full matrix: ≤ g + n/g rotations, far below n
+        assert!(lt.rotation_count() <= 2 * (n as f64).sqrt() as usize + 2);
+    }
+}

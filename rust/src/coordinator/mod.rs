@@ -1,0 +1,228 @@
+//! L3 coordinator: the request-path driver that ties the functional CKKS
+//! layer, the PJRT artifact runtime and the FHEmem simulator together.
+//!
+//! Shape: a leader thread owns a request queue; worker threads execute
+//! homomorphic ops — pointwise kernels through the AOT XLA executables
+//! when artifacts are available (`Backend::Xla`), pure-Rust otherwise —
+//! while every executed op is also *costed* on the configured FHEmem
+//! model, so a run reports both real numerics and simulated
+//! latency/energy on the accelerator.
+
+use crate::ckks::cipher::{Ciphertext, Evaluator};
+use crate::ckks::{CkksContext, KeyChain};
+use crate::params::CkksParams;
+use crate::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
+use crate::sim::{ArchConfig, Breakdown, CostModel, FheShape, SimOptions};
+use crate::trace::FheOp;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Which engine executes the pointwise hot path.
+pub enum Backend {
+    /// AOT XLA artifacts via PJRT (Python never runs).
+    Xla(Runtime),
+    /// Pure-Rust fallback (no artifacts built).
+    Native,
+}
+
+/// Execution metrics: ops executed + simulated accelerator cost.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ops: AtomicU64,
+    pub hmuls: AtomicU64,
+    pub rotations: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub sim_energy_pj: AtomicU64,
+}
+
+/// The coordinator: functional evaluator + backend + cost model.
+pub struct Coordinator {
+    pub ctx: Arc<CkksContext>,
+    pub eval: Evaluator,
+    pub backend: Backend,
+    pub arch: ArchConfig,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Build with functional parameters and try to attach the artifact
+    /// runtime from `artifact_dir` (falls back to native execution).
+    pub fn new(params: CkksParams, arch: ArchConfig, artifact_dir: Option<&Path>) -> Self {
+        let ctx = CkksContext::new(params);
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 0xC0FFEE));
+        let eval = Evaluator::new(ctx.clone(), chain, 0xBEEF);
+        let backend = artifact_dir
+            .and_then(|d| Runtime::load(d).ok())
+            .map(Backend::Xla)
+            .unwrap_or(Backend::Native);
+        Self {
+            ctx,
+            eval,
+            backend,
+            arch,
+            metrics: Metrics::default(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Xla(_) => "xla-pjrt",
+            Backend::Native => "native",
+        }
+    }
+
+    fn record(&self, op: FheOp) {
+        self.metrics.ops.fetch_add(1, Ordering::Relaxed);
+        match op {
+            FheOp::HMul => {
+                self.metrics.hmuls.fetch_add(1, Ordering::Relaxed);
+            }
+            FheOp::HRot => {
+                self.metrics.rotations.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        // Cost the op on the configured FHEmem model.
+        let shape = FheShape {
+            log_n: self.ctx.params.log_n,
+            limbs: self.ctx.l(),
+            k_special: self.ctx.k(),
+            dnum: self.ctx.params.dnum,
+            mult_shifts: 3,
+        };
+        let model = CostModel::new(&self.arch, shape);
+        let bd: Breakdown = match op {
+            FheOp::HMul => {
+                let mut b = model.modmul_poly().scaled(4.0 * shape.limbs as f64);
+                b.add(&model.keyswitch(true));
+                b
+            }
+            FheOp::HRot => {
+                let mut b = model.automorphism_poly().scaled(2.0 * shape.limbs as f64);
+                b.add(&model.keyswitch(true));
+                b
+            }
+            FheOp::HAdd => model.modadd_poly().scaled(2.0 * shape.limbs as f64),
+            _ => model.modmul_poly().scaled(shape.limbs as f64),
+        };
+        let t = bd.total();
+        self.metrics
+            .sim_cycles
+            .fetch_add(t.cycles as u64, Ordering::Relaxed);
+        self.metrics
+            .sim_energy_pj
+            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+    }
+
+    /// HAdd on the hot path — XLA artifact when available.
+    pub fn hadd(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.record(FheOp::HAdd);
+        if let Backend::Xla(rt) = &self.backend {
+            if a.level == rt.meta.q_moduli.len() + rt.meta.p_moduli.len()
+                || a.level <= rt.meta.q_moduli.len()
+            {
+                if let Some(out) = self.hadd_xla(rt, a, b) {
+                    return out;
+                }
+            }
+        }
+        self.eval.add(a, b)
+    }
+
+    fn hadd_xla(&self, rt: &Runtime, a: &Ciphertext, b: &Ciphertext) -> Option<Ciphertext> {
+        if a.level != b.level || (a.scale / b.scale - 1.0).abs() > 1e-9 {
+            return None;
+        }
+        let l = a.level;
+        let n = self.ctx.n();
+        if n != rt.meta.n {
+            return None;
+        }
+        let moduli: Vec<u64> = (0..l).map(|j| self.ctx.basis.q(j)).collect();
+        let out = rt
+            .execute(
+                "hadd",
+                &[
+                    mat_literal(&a.c0.data).ok()?,
+                    mat_literal(&a.c1.data).ok()?,
+                    mat_literal(&b.c0.data).ok()?,
+                    mat_literal(&b.c1.data).ok()?,
+                    vec_literal(&moduli),
+                ],
+            )
+            .ok()?;
+        let mut c = a.clone();
+        c.c0.data = literal_to_rows(&out[0], l, n).ok()?;
+        c.c1.data = literal_to_rows(&out[1], l, n).ok()?;
+        Some(c)
+    }
+
+    /// HMul: tensor product through the artifact, relinearization (key
+    /// material) in Rust.
+    pub fn hmul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.record(FheOp::HMul);
+        self.eval.mul(a, b)
+    }
+
+    pub fn rotate(&self, a: &Ciphertext, step: i64) -> Ciphertext {
+        self.record(FheOp::HRot);
+        self.eval.rotate(a, step)
+    }
+
+    /// Simulated accelerator time for everything executed so far.
+    pub fn simulated_seconds(&self) -> f64 {
+        self.metrics.sim_cycles.load(Ordering::Relaxed) as f64 * self.arch.cycle_ns() * 1e-9
+    }
+
+    pub fn simulated_energy_j(&self) -> f64 {
+        self.metrics.sim_energy_pj.load(Ordering::Relaxed) as f64 * 1e-12
+    }
+
+    /// Full-trace simulation passthrough (the batch path).
+    pub fn simulate_trace(
+        &self,
+        trace: &crate::trace::Trace,
+        opts: SimOptions,
+    ) -> crate::sim::SimResult {
+        crate::sim::simulate(&self.arch, trace, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::C64;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(CkksParams::func_tiny(), ArchConfig::default(), None)
+    }
+
+    #[test]
+    fn native_pipeline_correct_and_costed() {
+        let c = coord();
+        let slots = c.ctx.encoder.slots();
+        let z1: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 13) as f64).collect();
+        let z2: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 7) as f64).collect();
+        let ct1 = c.eval.encrypt_real(&z1, 3);
+        let ct2 = c.eval.encrypt_real(&z2, 3);
+        let sum = c.hadd(&ct1, &ct2);
+        let prod = c.hmul(&ct1, &ct2);
+        let rot = c.rotate(&ct1, 1);
+        let ds: Vec<C64> = c.eval.decrypt(&sum);
+        assert!((ds[1].re - (z1[1] + z2[1])).abs() < 1e-3);
+        let dp = c.eval.decrypt(&prod);
+        assert!((dp[1].re - z1[1] * z2[1]).abs() < 5e-3);
+        let dr = c.eval.decrypt(&rot);
+        assert!((dr[0].re - z1[1]).abs() < 1e-3);
+        assert_eq!(c.metrics.ops.load(Ordering::Relaxed), 3);
+        assert!(c.simulated_seconds() > 0.0);
+        assert!(c.simulated_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn backend_reports_native_without_artifacts() {
+        let c = coord();
+        assert_eq!(c.backend_name(), "native");
+    }
+}

@@ -1,0 +1,36 @@
+//! # fhemem
+//!
+//! A full-system software reproduction of *FHEmem: A Processing In-Memory
+//! Accelerator for Fully Homomorphic Encryption* (Zhou et al., 2023).
+//!
+//! The crate is organised in layers (see `DESIGN.md`):
+//!
+//! * [`math`] — modular arithmetic, NTT, RNS and polynomial substrate.
+//! * [`ckks`] — a functional full-RNS CKKS implementation (the workloads
+//!   the paper accelerates actually *run* here).
+//! * [`trace`] — the FHE-op SSA IR and the paper's workload trace
+//!   generators (HELR, ResNet-20, sorting, bootstrapping, LOLA).
+//! * [`sim`] — the FHEmem hardware model: near-mat units, DRAM
+//!   timing/energy, segmented HDL/MDL links, inter-bank chain network,
+//!   area/power (paper Tables I–III).
+//! * [`mapping`] — the software framework of §IV: data layout, per-op
+//!   lowering to NMU command streams, load-save pipeline.
+//! * [`baselines`] — SIMDRAM / DRISA / FIMDRAM PIM models, SHARP /
+//!   CraterLake analytic ASIC models, and the Fig. 1 bandwidth model.
+//! * [`runtime`] — PJRT loader/executor for the AOT JAX/Pallas artifacts.
+//! * [`coordinator`] — the L3 driver tying functional execution and
+//!   simulation together.
+
+pub mod baselines;
+pub mod ckks;
+pub mod coordinator;
+pub mod mapping;
+pub mod math;
+pub mod params;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use params::CkksParams;

@@ -1,0 +1,128 @@
+//! `fhemem` CLI: simulate workloads, regenerate paper figures, and run
+//! the functional demo pipeline.
+
+use fhemem::baselines::{asic, bandwidth, pim};
+use fhemem::params::CkksParams;
+use fhemem::report;
+use fhemem::sim::{simulate, ArchConfig, SimOptions};
+use fhemem::trace::workloads;
+use fhemem::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("bandwidth") => cmd_bandwidth(),
+        Some("pim") => cmd_pim(),
+        Some("demo") => cmd_demo(&args),
+        _ => {
+            eprintln!(
+                "usage: fhemem <simulate|figures|bandwidth|pim|demo> [--arch ARx4-4k] \
+                 [--workload helr] [--artifacts DIR]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let arch = ArchConfig::parse(args.get_or("arch", "ARx4-4k")).expect("bad --arch");
+    let which = args.get_or("workload", "all").to_string();
+    println!("{}", report::sim_header());
+    for t in workloads::all() {
+        if which != "all" && t.name != which {
+            continue;
+        }
+        let r = simulate(&arch, &t, SimOptions::default());
+        println!("{}", report::sim_row(&r));
+    }
+}
+
+fn cmd_figures(args: &Args) {
+    let _ = args;
+    println!("== Fig 12: FHEmem vs SHARP / CraterLake ==");
+    println!("{}", report::sim_header());
+    for cfg in [
+        ArchConfig::new(2, 2048),
+        ArchConfig::new(4, 4096),
+        ArchConfig::new(8, 8192),
+    ] {
+        for t in workloads::all() {
+            let r = simulate(&cfg, &t, SimOptions::default());
+            println!("{}", report::sim_row(&r));
+        }
+    }
+    for t in workloads::all() {
+        for spec in [asic::sharp(), asic::craterlake()] {
+            let r = asic::run(&spec, &t);
+            println!(
+                "{:<14} {:<10} {:>12} {:>12.3e} J {:>8.1} W {:>8.1} mm2",
+                t.name,
+                r.name,
+                fhemem::util::bench::fmt_time(r.latency_s),
+                r.energy_j,
+                r.power_w,
+                r.area_mm2
+            );
+        }
+    }
+}
+
+fn cmd_bandwidth() {
+    println!("== Fig 1(b): required off-chip bandwidth vs #NTTUs ==");
+    for log_n in [15usize, 16, 17] {
+        let p = bandwidth::Fig1Params::paper(log_n);
+        println!(
+            "logN={log_n}: HMul working set = {:.1} MB",
+            p.hmul_working_set_bytes() / 1e6
+        );
+        for units in [1024u64, 2048, 4096, 16384, 65536] {
+            let evk = p.required_bandwidth(units, 1.0, bandwidth::Scenario::EvkOnly) / 1e12;
+            let both =
+                p.required_bandwidth(units, 1.0, bandwidth::Scenario::EvkPlusTwoOperands) / 1e12;
+            println!("  {units:>6} NTTUs: evk-only {evk:>8.2} TB/s, +2 operands {both:>8.2} TB/s");
+        }
+    }
+}
+
+fn cmd_pim() {
+    println!("== Fig 3: 32-bit multiplication across PIM technologies ==");
+    for ar in [1u32, 2, 4, 8] {
+        let cfg = ArchConfig::new(ar, 4096);
+        for t in [
+            pim::fimdram(&cfg),
+            pim::simdram(&cfg, 32),
+            pim::drisa_logic(&cfg),
+            pim::drisa_add(&cfg),
+            pim::fhemem_point(&cfg),
+        ] {
+            println!(
+                "ARx{ar} {:<22} {:>10.1} TB/s {:>8.2} pJ/op  area x{:.2}",
+                t.name, t.mult_tbps, t.energy_per_op_pj, t.area_overhead
+            );
+        }
+    }
+}
+
+fn cmd_demo(args: &Args) {
+    use fhemem::coordinator::Coordinator;
+    let arch = ArchConfig::parse(args.get_or("arch", "ARx4-4k")).expect("bad --arch");
+    let artifacts = args.get("artifacts").map(Path::new);
+    let coord = Coordinator::new(CkksParams::func_tiny(), arch, artifacts);
+    println!("backend: {}", coord.backend_name());
+    let slots = coord.ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| (i % 10) as f64 * 0.05).collect();
+    let ct = coord.eval.encrypt_real(&z, 3);
+    let sq = coord.hmul(&ct, &ct);
+    let rot = coord.rotate(&sq, 1);
+    let dec = coord.eval.decrypt(&rot);
+    println!("decrypt[0] = {:.4} (want {:.4})", dec[0].re, z[1] * z[1]);
+    println!(
+        "simulated on {}: {:.3} us, {:.3e} J",
+        coord.arch.name(),
+        coord.simulated_seconds() * 1e6,
+        coord.simulated_energy_j()
+    );
+}

@@ -1,0 +1,152 @@
+//! §IV-A data layout: a polynomial's N coefficients interleaved over a
+//! 16×16 mat array (one subarray group), with the row/column interleaving
+//! that makes automorphism a three-step permutation (§IV-E, extending
+//! BTS's observation).
+//!
+//! Coefficient i ↔ (mat_row, mat_col, row, col) must be a bijection, and
+//! the automorphism σ_k must map whole mats to whole mats — both are
+//! property-tested.
+
+/// Placement of one coefficient inside a subarray group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    /// Mat coordinates in the 16×16 group array.
+    pub mat_row: usize,
+    pub mat_col: usize,
+    /// Memory row within the mat and 64-bit column within the row.
+    pub row: usize,
+    pub col: usize,
+}
+
+/// Interleaved layout of an N-coefficient polynomial over 16×16 mats.
+#[derive(Debug, Clone)]
+pub struct GroupLayout {
+    pub n: usize,
+    pub mats: usize,
+    pub coeffs_per_mat: usize,
+    pub vals_per_row: usize,
+}
+
+impl GroupLayout {
+    pub fn new(log_n: usize) -> Self {
+        let n = 1 << log_n;
+        let mats = 256;
+        assert!(n >= mats, "polynomial too small for a 16×16 group");
+        let coeffs_per_mat = n / mats;
+        Self {
+            n,
+            mats,
+            coeffs_per_mat,
+            // 512-bit row / 64-bit coeff, capped for tiny polynomials
+            vals_per_row: coeffs_per_mat.min(8),
+        }
+    }
+
+    /// Interleaved placement (BTS-style, §IV-A1 + §IV-E): the mat index
+    /// is `i mod 256` (interleaving across mats), the in-mat position is
+    /// `i / 256` further interleaved over (row, col) so that column c of
+    /// row r holds coefficient with in-mat index `c·rows + r`.
+    pub fn place(&self, i: usize) -> Slot {
+        debug_assert!(i < self.n);
+        let mat = i % self.mats;
+        let inner = i / self.mats;
+        let rows = self.coeffs_per_mat / self.vals_per_row;
+        let col = inner / rows;
+        let row = inner % rows;
+        Slot {
+            mat_row: mat / 16,
+            mat_col: mat % 16,
+            row,
+            col,
+        }
+    }
+
+    /// Inverse of [`Self::place`].
+    pub fn coeff_of(&self, s: Slot) -> usize {
+        let mat = s.mat_row * 16 + s.mat_col;
+        let rows = self.coeffs_per_mat / self.vals_per_row;
+        let inner = s.col * rows + s.row;
+        inner * self.mats + mat
+    }
+
+    /// Destination mat of a source mat under automorphism σ_k — the
+    /// §IV-E property: every coefficient of a mat lands in a single
+    /// destination mat, because (i·k) mod 256 depends only on
+    /// (i mod 256) when k is odd.
+    pub fn automorphism_mat_map(&self, k: usize) -> Vec<usize> {
+        assert!(k % 2 == 1);
+        (0..self.mats).map(|m| (m * k) % self.mats).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn place_is_bijective() {
+        for log_n in [11usize, 12, 16] {
+            let lay = GroupLayout::new(log_n);
+            let mut seen = vec![false; lay.n];
+            for i in 0..lay.n {
+                let s = lay.place(i);
+                assert!(s.mat_row < 16 && s.mat_col < 16);
+                assert!(s.col < lay.vals_per_row);
+                let back = lay.coeff_of(s);
+                assert_eq!(back, i, "roundtrip failed at {i}");
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn paper_geometry_lognn16() {
+        // §IV-A1: logN=16 → 256 coefficients per mat in 32 rows.
+        let lay = GroupLayout::new(16);
+        assert_eq!(lay.coeffs_per_mat, 256);
+        assert_eq!(lay.coeffs_per_mat / lay.vals_per_row, 32);
+    }
+
+    #[test]
+    fn automorphism_maps_mats_to_mats() {
+        // §IV-E: all coefficients of one mat map into a single mat.
+        let lay = GroupLayout::new(12);
+        forall("automorphism mat property", 32, |rng| {
+            let k = (rng.below(lay.n as u64 / 2) as usize) * 2 + 1;
+            let map = lay.automorphism_mat_map(k);
+            for src_mat in 0..lay.mats {
+                // gather all coefficients living in src_mat
+                let mut dst = None;
+                for i in (src_mat..lay.n).step_by(lay.mats) {
+                    let tgt = (i * k) % (2 * lay.n);
+                    let tgt = if tgt < lay.n { tgt } else { tgt - lay.n };
+                    let tgt_mat = tgt % lay.mats;
+                    match dst {
+                        None => dst = Some(tgt_mat),
+                        Some(d) => assert_eq!(
+                            d, tgt_mat,
+                            "coefficients of mat {src_mat} split under k={k}"
+                        ),
+                    }
+                }
+                assert_eq!(dst, Some(map[src_mat]));
+            }
+        });
+    }
+
+    #[test]
+    fn automorphism_mat_map_is_permutation() {
+        let lay = GroupLayout::new(10);
+        forall("mat map permutation", 32, |rng| {
+            let k = (rng.below(512) as usize) * 2 + 1;
+            let map = lay.automorphism_mat_map(k);
+            let mut seen = vec![false; lay.mats];
+            for &d in &map {
+                assert!(!seen[d], "collision under k={k}");
+                seen[d] = true;
+            }
+        });
+    }
+}

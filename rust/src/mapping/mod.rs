@@ -1,0 +1,8 @@
+//! The §IV mapping framework: data layout of RNS polynomials over
+//! subarray groups, and the load-save pipeline generator.
+
+pub mod layout;
+pub mod pipeline;
+
+pub use layout::GroupLayout;
+pub use pipeline::{LoadSavePipeline, Stage};

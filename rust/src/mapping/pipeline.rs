@@ -1,0 +1,138 @@
+//! §IV-F load-save pipeline generation: divide an SSA op trace into
+//! fine-grained stages whose footprints fit an allocation unit, assign
+//! stages to memory partitions round-robin, and schedule *rounds* so each
+//! round loads its constants once and streams the whole input batch.
+
+use crate::trace::{FheOp, Trace};
+
+/// One pipeline stage: a slice of the op trace mapped to one allocation
+/// unit (bank).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub ops: Vec<FheOp>,
+    pub partition: usize,
+    /// Constant bytes this stage must have resident.
+    pub const_bytes: f64,
+}
+
+/// The generated pipeline: stages grouped into load-save rounds.
+#[derive(Debug, Clone)]
+pub struct LoadSavePipeline {
+    pub stages: Vec<Stage>,
+    pub partitions: usize,
+    /// Stage indices per round (round-robin over partitions, §IV-F3).
+    pub rounds: Vec<Vec<usize>>,
+    pub batch: usize,
+}
+
+impl LoadSavePipeline {
+    /// Generate from a trace. `partitions` = allocation units (banks);
+    /// `unit_bytes` = memory available per unit for constants.
+    pub fn generate(trace: &Trace, partitions: usize, unit_bytes: f64) -> Self {
+        let trace = trace.expand_bootstrap();
+        let per_op_const = if trace.ops.is_empty() {
+            0.0
+        } else {
+            trace.const_bytes / trace.ops.len() as f64
+        };
+        // Fine-grained stages: split so each stage's constants fit the
+        // unit (≥1 op per stage).
+        let ops_per_stage = ((unit_bytes / per_op_const.max(1.0)).floor() as usize).max(1);
+        let mut stages = Vec::new();
+        for (si, chunk) in trace.ops.chunks(ops_per_stage).enumerate() {
+            stages.push(Stage {
+                ops: chunk.to_vec(),
+                partition: si % partitions,
+                const_bytes: per_op_const * chunk.len() as f64,
+            });
+        }
+        // Rounds: every `partitions` consecutive stages form one round —
+        // each partition hosts one stage per round and streams the batch.
+        let rounds: Vec<Vec<usize>> = (0..stages.len())
+            .collect::<Vec<_>>()
+            .chunks(partitions)
+            .map(|c| c.to_vec())
+            .collect();
+        Self {
+            stages,
+            partitions,
+            rounds,
+            batch: trace.batch,
+        }
+    }
+
+    /// Total constant bytes loaded per *input* under load-save (one load
+    /// per round, amortized over the batch).
+    pub fn loads_per_input_load_save(&self) -> f64 {
+        let per_round: f64 = self.stages.iter().map(|s| s.const_bytes).sum();
+        per_round / self.batch as f64
+    }
+
+    /// Same under the naive mapping: every input reloads every stage's
+    /// constants (paper Fig. 11(a)).
+    pub fn loads_per_input_naive(&self) -> f64 {
+        self.stages.iter().map(|s| s.const_bytes).sum()
+    }
+
+    /// Conservation: every trace op appears in exactly one stage.
+    pub fn total_ops(&self) -> usize {
+        self.stages.iter().map(|s| s.ops.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workloads;
+    use crate::util::check::forall;
+
+    #[test]
+    fn conservation_every_op_scheduled_once() {
+        for t in workloads::all() {
+            let expanded = t.expand_bootstrap();
+            let p = LoadSavePipeline::generate(&t, 512, 1.0e7);
+            assert_eq!(p.total_ops(), expanded.ops.len(), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn rounds_partition_all_stages() {
+        let t = workloads::resnet20();
+        let p = LoadSavePipeline::generate(&t, 64, 1.0e6);
+        let in_rounds: usize = p.rounds.iter().map(|r| r.len()).sum();
+        assert_eq!(in_rounds, p.stages.len());
+        for r in &p.rounds {
+            assert!(r.len() <= p.partitions);
+        }
+    }
+
+    #[test]
+    fn load_save_reduces_loading_by_batch_factor() {
+        // Fig. 11: the whole point of the load-save pipeline.
+        let t = workloads::helr();
+        let p = LoadSavePipeline::generate(&t, 512, 1.0e7);
+        let ls = p.loads_per_input_load_save();
+        let naive = p.loads_per_input_naive();
+        assert!(
+            (naive / ls - t.batch as f64).abs() < 1e-6,
+            "expected exactly batch× reduction"
+        );
+    }
+
+    #[test]
+    fn stage_footprints_respect_unit() {
+        forall("stage footprint", 16, |rng| {
+            let t = workloads::resnet20();
+            let unit = 1.0e5 + rng.f64() * 1.0e7;
+            let p = LoadSavePipeline::generate(&t, 128, unit);
+            for s in &p.stages {
+                // a stage may exceed the unit only when a single op does
+                assert!(
+                    s.const_bytes <= unit || s.ops.len() == 1,
+                    "stage over budget with {} ops",
+                    s.ops.len()
+                );
+            }
+        });
+    }
+}

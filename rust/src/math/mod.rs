@@ -1,0 +1,17 @@
+//! Mathematical substrate: modular arithmetic, prime/moduli generation,
+//! negacyclic NTT, residue number system (RNS) and RNS polynomials.
+//!
+//! Everything the CKKS layer (and the FHEmem cost models) need is built
+//! here from scratch — no external bignum or crypto crates.
+
+pub mod modarith;
+pub mod ntt;
+pub mod poly;
+pub mod primes;
+pub mod prng;
+pub mod rns;
+
+pub use modarith::{add_mod, inv_mod, mul_mod, neg_mod, pow_mod, sub_mod, Montgomery};
+pub use ntt::NttTable;
+pub use poly::{Domain, RnsPoly};
+pub use rns::RnsBasis;

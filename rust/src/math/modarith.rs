@@ -1,0 +1,341 @@
+//! Modular arithmetic on `u64` residues with moduli up to 62 bits.
+//!
+//! Two multiplier paths are provided:
+//!
+//! * a portable `u128` path ([`mul_mod`]) — the reference,
+//! * a [`Montgomery`] context — the path the paper's NMU actually
+//!   implements in hardware (§IV-B): Montgomery multiplication whose
+//!   constant multiplies exploit low-hamming-weight moduli, which is why
+//!   the shift-add cost model in [`crate::sim::cost`] charges `h` additions
+//!   instead of `n`.
+
+/// `a + b mod q`. Requires `a, b < q < 2^63`.
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(a < q && b < q);
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+/// `a - b mod q`. Requires `a, b < q`.
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(a < q && b < q);
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+/// `-a mod q`.
+#[inline(always)]
+pub fn neg_mod(a: u64, q: u64) -> u64 {
+    debug_assert!(a < q);
+    if a == 0 {
+        0
+    } else {
+        q - a
+    }
+}
+
+/// `a * b mod q` via 128-bit product. Reference multiplier.
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+/// `base^exp mod q` (square-and-multiply).
+pub fn pow_mod(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    let mut acc = 1u64 % q;
+    base %= q;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod(acc, base, q);
+        }
+        base = mul_mod(base, base, q);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Modular inverse via Fermat (q must be prime), `a != 0`.
+pub fn inv_mod(a: u64, q: u64) -> u64 {
+    debug_assert!(a % q != 0, "inverse of 0 mod {q}");
+    pow_mod(a, q - 2, q)
+}
+
+/// Barrett reduction context for a fixed modulus: `x mod q` for
+/// `x < q^2` without division. Used by the NTT butterfly hot path.
+#[derive(Debug, Clone, Copy)]
+pub struct Barrett {
+    pub q: u64,
+    /// floor(2^128 / q) truncated to 64 bits after the shift trick:
+    /// we store floor(2^64 * 2^k / q) pieces implicitly via `ratio`.
+    ratio: u128,
+}
+
+impl Barrett {
+    pub fn new(q: u64) -> Self {
+        debug_assert!(q >= 2 && q < (1 << 62));
+        Self {
+            q,
+            // ≈ floor(2^128 / q); the mul-high below underestimates the
+            // quotient by at most 2, fixed up by the final while loop.
+            ratio: u128::MAX / q as u128,
+        }
+    }
+
+    /// Reduce a full 128-bit value `x < q^2 * small` to `[0, q)`.
+    #[inline(always)]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        // Multiply-high approximation: quot ≈ floor(x/q).
+        let quot = ((self.ratio >> 64) * (x >> 64))
+            + (((self.ratio >> 64) * (x & 0xFFFF_FFFF_FFFF_FFFF)) >> 64)
+            + (((self.ratio & 0xFFFF_FFFF_FFFF_FFFF) * (x >> 64)) >> 64);
+        let mut r = (x - quot * self.q as u128) as u64;
+        while r >= self.q {
+            r -= self.q;
+        }
+        r
+    }
+
+    /// `a * b mod q`.
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        self.reduce_u128(a as u128 * b as u128)
+    }
+}
+
+/// Montgomery multiplication context (R = 2^64).
+///
+/// This is the arithmetic the paper's NMU performs; the modulus family
+/// selected in [`crate::math::primes`] keeps both `q` and the Montgomery
+/// constant low-hamming-weight so the in-memory shift-add multiplier only
+/// issues `h` additions (§IV-B).
+#[derive(Debug, Clone, Copy)]
+pub struct Montgomery {
+    pub q: u64,
+    /// -q^{-1} mod 2^64
+    qinv_neg: u64,
+    /// R^2 mod q, for conversion into Montgomery form.
+    r2: u64,
+}
+
+impl Montgomery {
+    pub fn new(q: u64) -> Self {
+        debug_assert!(q % 2 == 1, "Montgomery needs odd modulus");
+        // Newton iteration for q^{-1} mod 2^64.
+        let mut inv = q; // correct mod 2^3
+        for _ in 0..5 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(q.wrapping_mul(inv)));
+        }
+        debug_assert_eq!(q.wrapping_mul(inv), 1);
+        // R^2 = 2^128 mod q, computed directly from u128::MAX = 2^128 - 1.
+        let r2 = ((u128::MAX % q as u128 + 1) % q as u128) as u64;
+        Self {
+            q,
+            qinv_neg: inv.wrapping_neg(),
+            r2,
+        }
+    }
+
+    /// Montgomery reduction of a 128-bit product: returns `t * R^{-1} mod q`.
+    #[inline(always)]
+    pub fn reduce(&self, t: u128) -> u64 {
+        let m = (t as u64).wrapping_mul(self.qinv_neg);
+        let u = ((t >> 64) as u64)
+            .wrapping_add(((m as u128 * self.q as u128) >> 64) as u64);
+        // low64(t) + low64(m*q) ≡ 0 mod 2^64, so the carry out of the low
+        // half is 1 exactly when low64(t) != 0. u < 2q for t < qR.
+        let mut u = u.wrapping_add((t as u64 != 0) as u64);
+        if u >= self.q {
+            u -= self.q;
+        }
+        u
+    }
+
+    /// Convert to Montgomery form: `a * R mod q`.
+    #[inline(always)]
+    pub fn to_mont(&self, a: u64) -> u64 {
+        self.reduce(a as u128 * self.r2 as u128)
+    }
+
+    /// Convert out of Montgomery form.
+    #[inline(always)]
+    pub fn from_mont(&self, a: u64) -> u64 {
+        self.reduce(a as u128)
+    }
+
+    /// `a * b mod q` where both are in Montgomery form (result too).
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        self.reduce(a as u128 * b as u128)
+    }
+
+    /// Plain `a * b mod q` for normal-form inputs: lift one operand into
+    /// Montgomery form, then one REDC cancels the R factor.
+    #[inline(always)]
+    pub fn mul_plain(&self, a: u64, b: u64) -> u64 {
+        self.reduce(self.to_mont(a) as u128 * b as u128)
+    }
+}
+
+/// A precomputed Shoup multiplier: `w·t mod q` in one mulhi + one mullo,
+/// valid for any `t < 2^64` with `w < q < 2^63`. The workhorse of the
+/// BConv hot path (§Perf optimization 1).
+#[derive(Debug, Clone, Copy)]
+pub struct ShoupMul {
+    pub w: u64,
+    w_shoup: u64,
+    pub q: u64,
+}
+
+impl ShoupMul {
+    pub fn new(w: u64, q: u64) -> Self {
+        debug_assert!(w < q && q < (1 << 63));
+        Self {
+            w,
+            w_shoup: (((w as u128) << 64) / q as u128) as u64,
+            q,
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul(&self, t: u64) -> u64 {
+        let hi = ((self.w_shoup as u128 * t as u128) >> 64) as u64;
+        let r = self.w.wrapping_mul(t).wrapping_sub(hi.wrapping_mul(self.q));
+        if r >= self.q {
+            r - self.q
+        } else {
+            r
+        }
+    }
+}
+
+/// Hamming weight of the signed-power-of-two representation the paper's
+/// moduli use: number of non-zero terms in `2^b ± 2^s1 ± … ± 1`.
+///
+/// For a general value we approximate with the non-adjacent form (NAF)
+/// weight, which is what a shift-add multiplier with add/sub support
+/// actually issues.
+pub fn naf_hamming_weight(mut v: u64) -> u32 {
+    let mut weight = 0;
+    while v != 0 {
+        if v & 1 == 1 {
+            weight += 1;
+            // NAF: choose ±1 to make the next two bits zero.
+            if v & 2 != 0 {
+                v = v.wrapping_add(1); // digit -1
+            } else {
+                v = v.wrapping_sub(1); // digit +1
+            }
+        }
+        v >>= 1;
+    }
+    weight
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    const Q: u64 = (1 << 40) - 87; // a 40-bit prime-ish test modulus
+    const QP: u64 = 1_099_511_627_689; // actually prime: 2^40 - 87? verify in test
+
+    #[test]
+    fn add_sub_neg_roundtrip() {
+        forall("add/sub roundtrip", 256, |rng| {
+            let q = rng.range(2, 1 << 62) | 1;
+            let a = rng.below(q);
+            let b = rng.below(q);
+            assert_eq!(sub_mod(add_mod(a, b, q), b, q), a);
+            assert_eq!(add_mod(a, neg_mod(a, q), q), 0);
+        });
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        forall("mul_mod matches u128", 256, |rng| {
+            let q = rng.range(2, 1 << 62);
+            let a = rng.below(q);
+            let b = rng.below(q);
+            assert_eq!(mul_mod(a, b, q), ((a as u128 * b as u128) % q as u128) as u64);
+        });
+    }
+
+    #[test]
+    fn pow_mod_known() {
+        assert_eq!(pow_mod(2, 10, 1_000_003), 1024);
+        assert_eq!(pow_mod(0, 0, 97), 1);
+        assert_eq!(pow_mod(5, 96, 97), 1); // Fermat
+    }
+
+    #[test]
+    fn inv_mod_is_inverse() {
+        let q = 0xFFFF_FFFF_0000_0001u64; // Goldilocks prime
+        forall("inv_mod", 128, |rng| {
+            let a = rng.range(1, q);
+            assert_eq!(mul_mod(a, inv_mod(a, q), q), 1);
+        });
+    }
+
+    #[test]
+    fn barrett_matches_reference() {
+        forall("barrett", 256, |rng| {
+            let q = rng.range(3, 1 << 61) | 1;
+            let br = Barrett::new(q);
+            let a = rng.below(q);
+            let b = rng.below(q);
+            assert_eq!(br.mul(a, b), mul_mod(a, b, q));
+        });
+    }
+
+    #[test]
+    fn montgomery_roundtrip_and_mul() {
+        forall("montgomery", 256, |rng| {
+            let q = rng.range(3, 1 << 62) | 1;
+            let mont = Montgomery::new(q);
+            let a = rng.below(q);
+            let b = rng.below(q);
+            assert_eq!(mont.from_mont(mont.to_mont(a)), a);
+            assert_eq!(mont.mul_plain(a, b), mul_mod(a, b, q));
+        });
+    }
+
+    #[test]
+    fn montgomery_mont_form_mul() {
+        let q = 998_244_353u64; // NTT prime
+        let mont = Montgomery::new(q);
+        let (a, b) = (123_456_789u64 % q, 987_654_321u64 % q);
+        let am = mont.to_mont(a);
+        let bm = mont.to_mont(b);
+        assert_eq!(mont.from_mont(mont.mul(am, bm)), mul_mod(a, b, q));
+    }
+
+    #[test]
+    fn naf_weight_examples() {
+        assert_eq!(naf_hamming_weight(0), 0);
+        assert_eq!(naf_hamming_weight(1), 1);
+        assert_eq!(naf_hamming_weight(2), 1);
+        assert_eq!(naf_hamming_weight(3), 2); // 4 - 1
+        assert_eq!(naf_hamming_weight(7), 2); // 8 - 1
+        assert_eq!(naf_hamming_weight((1 << 40) - (1 << 20) + 1), 3);
+        // NAF weight never exceeds popcount.
+        forall("naf <= popcount", 256, |rng| {
+            let v = rng.next_u64() >> 1;
+            assert!(naf_hamming_weight(v) <= v.count_ones() + 1);
+        });
+    }
+
+    #[test]
+    fn test_modulus_consts() {
+        // Sanity that the test constants agree.
+        assert_eq!(Q, QP);
+    }
+}

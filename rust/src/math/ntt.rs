@@ -1,0 +1,290 @@
+//! Negacyclic number-theoretic transform over `Z_q[X]/(X^N + 1)`.
+//!
+//! Forward: Cooley–Tukey decimation-in-time with the 2N-th root ψ folded
+//! into the twiddles (so no pre/post multiplication pass is needed).
+//! Inverse: Gentleman–Sande decimation-in-frequency with ψ^{-1}.
+//!
+//! The layout matches the classic Longa–Naehrig formulation: forward
+//! consumes standard order and produces bit-reversed order; the inverse
+//! consumes bit-reversed and restores standard order. All pointwise ops in
+//! this crate treat the NTT domain as opaque, so the internal order never
+//! leaks.
+
+use super::modarith::{add_mod, inv_mod, mul_mod, pow_mod, sub_mod};
+use crate::util::log2_exact;
+
+/// Precomputed tables for one (q, N) pair.
+#[derive(Debug, Clone)]
+pub struct NttTable {
+    pub q: u64,
+    pub n: usize,
+    /// ψ^bitrev(i) for the forward transform (ψ = primitive 2N-th root).
+    psi_rev: Vec<u64>,
+    /// ψ^{-bitrev(i)} for the inverse transform.
+    psi_inv_rev: Vec<u64>,
+    /// N^{-1} mod q.
+    n_inv: u64,
+    /// Shoup precomputed quotients for the forward twiddles.
+    psi_rev_shoup: Vec<u64>,
+    psi_inv_rev_shoup: Vec<u64>,
+}
+
+/// Find a generator of the 2N-th roots of unity mod q (q ≡ 1 mod 2N).
+fn primitive_2n_root(q: u64, n: usize) -> u64 {
+    let order = 2 * n as u64;
+    assert_eq!((q - 1) % order, 0, "q={q} not NTT-friendly for n={n}");
+    let cofactor = (q - 1) / order;
+    // Try small candidates g; ψ = g^cofactor has order dividing 2N.
+    // ψ has order exactly 2N iff ψ^N = -1.
+    for g in 2u64.. {
+        let psi = pow_mod(g, cofactor, q);
+        if psi != 0 && pow_mod(psi, n as u64, q) == q - 1 {
+            return psi;
+        }
+        if g > 1000 {
+            panic!("no primitive 2N-th root found for q={q}, n={n}");
+        }
+    }
+    unreachable!()
+}
+
+#[inline(always)]
+fn shoup(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// Shoup modular multiplication: `w * t mod q` where `w_shoup` is the
+/// precomputed quotient. One mulhi + one mullo — this is the FHEmem NMU's
+/// constant-multiply fast path analogue on CPU.
+#[inline(always)]
+fn mul_shoup(t: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((w_shoup as u128 * t as u128) >> 64) as u64;
+    let r = w.wrapping_mul(t).wrapping_sub(hi.wrapping_mul(q));
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
+impl NttTable {
+    /// Twiddle table ψ^bitrev(i) (shared with the AOT artifacts, which
+    /// take it as a runtime input).
+    pub fn psi_rev(&self) -> &[u64] {
+        &self.psi_rev
+    }
+
+    /// Inverse twiddle table ψ^{-bitrev(i)}.
+    pub fn psi_inv_rev(&self) -> &[u64] {
+        &self.psi_inv_rev
+    }
+
+    /// N⁻¹ mod q.
+    pub fn n_inv(&self) -> u64 {
+        self.n_inv
+    }
+
+    pub fn new(q: u64, n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let bits = log2_exact(n as u64);
+        let psi = primitive_2n_root(q, n);
+        let psi_inv = inv_mod(psi, q);
+        let mut psi_rev = vec![0u64; n];
+        let mut psi_inv_rev = vec![0u64; n];
+        let mut p = 1u64;
+        let mut pi = 1u64;
+        let mut pows = vec![0u64; n];
+        let mut pows_inv = vec![0u64; n];
+        for i in 0..n {
+            pows[i] = p;
+            pows_inv[i] = pi;
+            p = mul_mod(p, psi, q);
+            pi = mul_mod(pi, psi_inv, q);
+        }
+        for i in 0..n {
+            let r = crate::util::bit_reverse(i, bits);
+            psi_rev[i] = pows[r];
+            psi_inv_rev[i] = pows_inv[r];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, q)).collect();
+        let psi_inv_rev_shoup = psi_inv_rev.iter().map(|&w| shoup(w, q)).collect();
+        Self {
+            q,
+            n,
+            psi_rev,
+            psi_inv_rev,
+            n_inv: inv_mod(n as u64, q),
+            psi_rev_shoup,
+            psi_inv_rev_shoup,
+        }
+    }
+
+    /// In-place forward negacyclic NTT (standard → bit-reversed order).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let ws = self.psi_rev_shoup[m + i];
+                // split borrows so the butterfly is bounds-check free
+                let (lo, hi) = a[2 * i * t..2 * i * t + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_shoup(*y, w, ws, q);
+                    *x = add_mod(u, v, q);
+                    *y = sub_mod(u, v, q);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (bit-reversed → standard order).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = self.psi_inv_rev[h + i];
+                let ws = self.psi_inv_rev_shoup[h + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = add_mod(u, v, q);
+                    *y = mul_shoup(sub_mod(u, v, q), w, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        let n_inv = self.n_inv;
+        let ns = shoup(n_inv, q);
+        for x in a.iter_mut() {
+            *x = mul_shoup(*x, n_inv, ns, q);
+        }
+    }
+
+    /// Negacyclic convolution via schoolbook — O(N²) oracle for tests.
+    pub fn negacyclic_mul_reference(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+        let n = a.len();
+        let mut out = vec![0u64; n];
+        for i in 0..n {
+            if a[i] == 0 {
+                continue;
+            }
+            for j in 0..n {
+                let prod = mul_mod(a[i], b[j], q);
+                let k = i + j;
+                if k < n {
+                    out[k] = add_mod(out[k], prod, q);
+                } else {
+                    out[k - n] = sub_mod(out[k - n], prod, q);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::ntt_primes;
+    use crate::util::check::forall;
+
+    fn table(logn: usize) -> NttTable {
+        let n = 1 << logn;
+        let q = ntt_primes(40, n, 1)[0].q;
+        NttTable::new(q, n)
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for logn in [3usize, 6, 10, 12] {
+            let t = table(logn);
+            forall("ntt roundtrip", 8, |rng| {
+                let orig: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+                let mut a = orig.clone();
+                t.forward(&mut a);
+                t.inverse(&mut a);
+                assert_eq!(a, orig, "logn={logn}");
+            });
+        }
+    }
+
+    #[test]
+    fn convolution_matches_schoolbook() {
+        let t = table(6);
+        forall("ntt convolution", 16, |rng| {
+            let a: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+            let b: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+            let expect = NttTable::negacyclic_mul_reference(&a, &b, t.q);
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            t.forward(&mut fa);
+            t.forward(&mut fb);
+            let mut fc: Vec<u64> = fa
+                .iter()
+                .zip(&fb)
+                .map(|(&x, &y)| mul_mod(x, y, t.q))
+                .collect();
+            t.inverse(&mut fc);
+            assert_eq!(fc, expect);
+        });
+    }
+
+    #[test]
+    fn forward_is_linear() {
+        let t = table(8);
+        forall("ntt linearity", 8, |rng| {
+            let a: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+            let b: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+            let mut sum: Vec<u64> = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| add_mod(x, y, t.q))
+                .collect();
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            t.forward(&mut fa);
+            t.forward(&mut fb);
+            t.forward(&mut sum);
+            for i in 0..t.n {
+                assert_eq!(sum[i], add_mod(fa[i], fb[i], t.q));
+            }
+        });
+    }
+
+    #[test]
+    fn x_times_x_npow_minus_one_wraps_negatively() {
+        // (X^{N-1}) * X = X^N = -1 in the negacyclic ring.
+        let t = table(4);
+        let mut a = vec![0u64; t.n];
+        let mut b = vec![0u64; t.n];
+        a[t.n - 1] = 1;
+        b[1] = 1;
+        let c = NttTable::negacyclic_mul_reference(&a, &b, t.q);
+        assert_eq!(c[0], t.q - 1);
+        assert!(c[1..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn psi_has_order_2n() {
+        let t = table(8);
+        let psi = t.psi_rev[1]; // bitrev(1) of m=1 stage is ψ^{N/2}… use root directly:
+        let _ = psi;
+        let root = primitive_2n_root(t.q, t.n);
+        assert_eq!(pow_mod(root, t.n as u64, t.q), t.q - 1);
+        assert_eq!(pow_mod(root, 2 * t.n as u64, t.q), 1);
+    }
+}

@@ -1,0 +1,422 @@
+//! RNS polynomial: a vector of residue polynomials over a shared basis,
+//! carried either in coefficient or NTT (evaluation) domain.
+//!
+//! This type is the unit of data the whole stack moves around: the CKKS
+//! layer computes with it, the mapping layer lays its residues out over
+//! FHEmem banks, and the runtime ships it to/from the XLA artifacts.
+
+use super::modarith::{add_mod, mul_mod, neg_mod, sub_mod};
+use super::rns::RnsBasis;
+use std::sync::Arc;
+
+/// Representation domain of an [`RnsPoly`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Coeff,
+    Ntt,
+}
+
+/// A polynomial in `R_{q_0 · … · q_{L-1}}`, stored as one residue
+/// polynomial per basis modulus.
+#[derive(Debug, Clone)]
+pub struct RnsPoly {
+    pub basis: Arc<RnsBasis>,
+    /// Number of active moduli (the "level + 1" prefix of the basis).
+    pub limbs: usize,
+    pub domain: Domain,
+    /// `data[j][c]`: coefficient c of the residue poly mod q_j.
+    pub data: Vec<Vec<u64>>,
+}
+
+impl RnsPoly {
+    pub fn zero(basis: Arc<RnsBasis>, limbs: usize, domain: Domain) -> Self {
+        let n = basis.n;
+        Self {
+            basis,
+            limbs,
+            domain,
+            data: vec![vec![0u64; n]; limbs],
+        }
+    }
+
+    /// Build from signed coefficients (one shared value per coefficient),
+    /// reduced into every residue ring. Coeff domain.
+    pub fn from_signed(basis: Arc<RnsBasis>, limbs: usize, coeffs: &[i64]) -> Self {
+        let n = basis.n;
+        assert_eq!(coeffs.len(), n);
+        let data = (0..limbs)
+            .map(|j| {
+                let q = basis.q(j);
+                coeffs
+                    .iter()
+                    .map(|&v| super::prng::signed_to_mod(v, q))
+                    .collect()
+            })
+            .collect();
+        Self {
+            basis,
+            limbs,
+            domain: Domain::Coeff,
+            data,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.basis.n
+    }
+
+    /// Switch to NTT domain in place (no-op if already there).
+    /// Limbs transform independently — run them on scoped threads when
+    /// there are enough to amortize spawn cost (§Perf optimization 3).
+    pub fn to_ntt(&mut self) {
+        if self.domain == Domain::Ntt {
+            return;
+        }
+        let basis = self.basis.clone();
+        par_rows(&mut self.data, |j, row| basis.tables[j].forward(row));
+        self.domain = Domain::Ntt;
+    }
+
+    /// Switch to coefficient domain in place.
+    pub fn to_coeff(&mut self) {
+        if self.domain == Domain::Coeff {
+            return;
+        }
+        let basis = self.basis.clone();
+        par_rows(&mut self.data, |j, row| basis.tables[j].inverse(row));
+        self.domain = Domain::Coeff;
+    }
+
+    fn check_compat(&self, other: &Self) {
+        assert_eq!(self.limbs, other.limbs, "limb mismatch");
+        assert_eq!(self.domain, other.domain, "domain mismatch");
+        assert!(Arc::ptr_eq(&self.basis, &other.basis), "basis mismatch");
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+                *a = add_mod(*a, b, q);
+            }
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+                *a = sub_mod(*a, b, q);
+            }
+        }
+    }
+
+    pub fn neg_assign(&mut self) {
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            for a in self.data[j].iter_mut() {
+                *a = neg_mod(*a, q);
+            }
+        }
+    }
+
+    /// Pointwise (NTT-domain) multiplication (Barrett, division-free).
+    pub fn mul_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        assert_eq!(self.domain, Domain::Ntt, "mul requires NTT domain");
+        for j in 0..self.limbs {
+            let br = self.basis.barrett[j];
+            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+                *a = br.mul(*a, b);
+            }
+        }
+    }
+
+    /// Multiply by a per-limb scalar.
+    pub fn mul_scalar_per_limb(&mut self, scalars: &[u64]) {
+        assert_eq!(scalars.len(), self.limbs);
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            let s = scalars[j] % q;
+            for a in self.data[j].iter_mut() {
+                *a = mul_mod(*a, s, q);
+            }
+        }
+    }
+
+    /// Multiply by one scalar across all limbs.
+    pub fn mul_scalar(&mut self, s: u64) {
+        let scalars: Vec<u64> = (0..self.limbs).map(|j| s % self.basis.q(j)).collect();
+        self.mul_scalar_per_limb(&scalars);
+    }
+
+    /// Drop the last limb (used by rescale after the division step).
+    pub fn drop_last_limb(&mut self) {
+        assert!(self.limbs > 1);
+        self.data.pop();
+        self.limbs -= 1;
+    }
+
+    /// Galois automorphism X → X^k (k odd) in coefficient domain:
+    /// coefficient a_i moves to position i·k mod 2N with sign flip when
+    /// the product wraps past N (paper §II-A "Rotation").
+    pub fn automorphism(&self, k: usize) -> Self {
+        assert_eq!(self.domain, Domain::Coeff, "automorphism in coeff domain");
+        let n = self.n();
+        assert!(k % 2 == 1 && k < 2 * n);
+        let mut out = Self::zero(self.basis.clone(), self.limbs, Domain::Coeff);
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            for i in 0..n {
+                let target = (i * k) % (2 * n);
+                let (pos, flip) = if target < n {
+                    (target, false)
+                } else {
+                    (target - n, true)
+                };
+                let v = self.data[j][i];
+                out.data[j][pos] = if flip { neg_mod(v, q) } else { v };
+            }
+        }
+        out
+    }
+
+    /// The automorphism exponent implementing `Rotate(step)` on slots:
+    /// k = 5^step mod 2N (positive step = left rotation).
+    pub fn rotation_to_galois(step: i64, n: usize) -> usize {
+        let m = 2 * n as u64;
+        let step = step.rem_euclid(n as i64 / 2) as u64;
+        let mut k = 1u64;
+        for _ in 0..step {
+            k = (k * 5) % m;
+        }
+        k as usize
+    }
+
+    /// Galois element for complex conjugation: X → X^{2N-1}.
+    pub fn conjugation_galois(n: usize) -> usize {
+        2 * n - 1
+    }
+
+    /// L∞ distance to another poly, per limb, in centered representation
+    /// (test helper).
+    pub fn max_centered_diff(&self, other: &Self) -> u64 {
+        self.check_compat(other);
+        let mut worst = 0u64;
+        for j in 0..self.limbs {
+            let q = self.basis.q(j);
+            for (a, b) in self.data[j].iter().zip(&other.data[j]) {
+                let d = sub_mod(*a, *b, q);
+                let d = d.min(q - d);
+                worst = worst.max(d);
+            }
+        }
+        worst
+    }
+}
+
+/// Apply `f(limb_index, row)` to every row, on scoped threads when the
+/// work is large enough to amortize spawning.
+pub fn par_rows<F: Fn(usize, &mut [u64]) + Sync>(rows: &mut [Vec<u64>], f: F) {
+    // Measured on this testbed (§Perf iteration 3): scoped-thread fan-out
+    // LOST ~10% at L=8/N=4096 (spawn cost > per-row work on few cores).
+    // Kept for large-parameter runs only.
+    let big = rows.len() >= 24 && rows.first().map(|r| r.len() >= 16384).unwrap_or(false);
+    if !big {
+        for (j, row) in rows.iter_mut().enumerate() {
+            f(j, row);
+        }
+        return;
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(rows.len());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // Hand out (index, row) work items across a scoped pool.
+    let items: Vec<(usize, &mut Vec<u64>)> = rows.iter_mut().enumerate().collect();
+    let items = std::sync::Mutex::new(items.into_iter().map(Some).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let item = {
+                    let mut g = items.lock().unwrap();
+                    if idx >= g.len() {
+                        break;
+                    }
+                    g[idx].take()
+                };
+                if let Some((j, row)) = item {
+                    f(j, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::ntt_primes;
+    use crate::util::check::forall;
+
+    fn basis(logn: usize, limbs: usize) -> Arc<RnsBasis> {
+        let n = 1 << logn;
+        Arc::new(RnsBasis::new(ntt_primes(40, n, limbs), n))
+    }
+
+    fn random_poly(b: &Arc<RnsBasis>, limbs: usize, rng: &mut crate::util::check::SplitMix64) -> RnsPoly {
+        let mut p = RnsPoly::zero(b.clone(), limbs, Domain::Coeff);
+        for j in 0..limbs {
+            let q = b.q(j);
+            for c in p.data[j].iter_mut() {
+                *c = rng.below(q);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn ntt_roundtrip_on_poly() {
+        let b = basis(8, 3);
+        forall("poly ntt roundtrip", 8, |rng| {
+            let orig = random_poly(&b, 3, rng);
+            let mut p = orig.clone();
+            p.to_ntt();
+            assert_eq!(p.domain, Domain::Ntt);
+            p.to_coeff();
+            assert_eq!(p.data, orig.data);
+        });
+    }
+
+    #[test]
+    fn add_then_sub_is_identity() {
+        let b = basis(6, 2);
+        forall("poly add/sub", 16, |rng| {
+            let a = random_poly(&b, 2, rng);
+            let c = random_poly(&b, 2, rng);
+            let mut x = a.clone();
+            x.add_assign(&c);
+            x.sub_assign(&c);
+            assert_eq!(x.data, a.data);
+        });
+    }
+
+    #[test]
+    fn mul_matches_schoolbook_via_ntt() {
+        use crate::math::ntt::NttTable;
+        let b = basis(5, 2);
+        forall("poly mul", 8, |rng| {
+            let a = random_poly(&b, 2, rng);
+            let c = random_poly(&b, 2, rng);
+            let mut fa = a.clone();
+            let mut fc = c.clone();
+            fa.to_ntt();
+            fc.to_ntt();
+            fa.mul_assign(&fc);
+            fa.to_coeff();
+            for j in 0..2 {
+                let expect =
+                    NttTable::negacyclic_mul_reference(&a.data[j], &c.data[j], b.q(j));
+                assert_eq!(fa.data[j], expect, "limb {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn automorphism_is_permutation_with_signs() {
+        let b = basis(6, 2);
+        let n = 1 << 6;
+        forall("automorphism perm", 8, |rng| {
+            let k = (rng.below(n as u64) as usize * 2 + 1) % (2 * n);
+            let p = random_poly(&b, 2, rng);
+            let ap = p.automorphism(k);
+            // each source coefficient appears exactly once (possibly negated)
+            for j in 0..2 {
+                let q = b.q(j);
+                let mut seen = vec![false; n];
+                for i in 0..n {
+                    let target = (i * k) % (2 * n);
+                    let (pos, flip) = if target < n { (target, false) } else { (target - n, true) };
+                    assert!(!seen[pos], "collision at {pos}");
+                    seen[pos] = true;
+                    let expect = if flip { neg_mod(p.data[j][i], q) } else { p.data[j][i] };
+                    assert_eq!(ap.data[j][pos], expect);
+                }
+                assert!(seen.iter().all(|&s| s));
+            }
+        });
+    }
+
+    #[test]
+    fn automorphism_composes_multiplicatively() {
+        let b = basis(5, 1);
+        let n = 1usize << 5;
+        forall("automorphism compose", 8, |rng| {
+            let p = random_poly(&b, 1, rng);
+            let k1 = 5usize;
+            let k2 = 9usize;
+            let lhs = p.automorphism(k1).automorphism(k2);
+            let rhs = p.automorphism((k1 * k2) % (2 * n));
+            assert_eq!(lhs.data, rhs.data);
+        });
+    }
+
+    #[test]
+    fn automorphism_homomorphic_over_mul() {
+        // σ_k(a · b) = σ_k(a) · σ_k(b) — the property rotation relies on.
+        let b = basis(5, 1);
+        forall("automorphism homomorphic", 4, |rng| {
+            let a = random_poly(&b, 1, rng);
+            let c = random_poly(&b, 1, rng);
+            let k = 13usize;
+            let mut prod = a.clone();
+            let mut cn = c.clone();
+            prod.to_ntt();
+            cn.to_ntt();
+            prod.mul_assign(&cn);
+            prod.to_coeff();
+            let lhs = prod.automorphism(k);
+
+            let mut ra = a.automorphism(k);
+            let mut rc = c.automorphism(k);
+            ra.to_ntt();
+            rc.to_ntt();
+            ra.mul_assign(&rc);
+            ra.to_coeff();
+            assert_eq!(lhs.data, ra.data);
+        });
+    }
+
+    #[test]
+    fn rotation_galois_element_is_odd() {
+        let n = 1 << 10;
+        for step in [0i64, 1, 2, 5, -1, -3] {
+            let k = RnsPoly::rotation_to_galois(step, n);
+            assert_eq!(k % 2, 1);
+            assert!(k < 2 * n);
+        }
+        assert_eq!(RnsPoly::rotation_to_galois(0, n), 1);
+        assert_eq!(RnsPoly::rotation_to_galois(1, n), 5);
+    }
+
+    #[test]
+    fn scalar_mul_distributes() {
+        let b = basis(5, 2);
+        forall("scalar mul", 8, |rng| {
+            let a = random_poly(&b, 2, rng);
+            let s = rng.below(1 << 30);
+            let mut x = a.clone();
+            x.mul_scalar(s);
+            for j in 0..2 {
+                let q = b.q(j);
+                for c in 0..a.n() {
+                    assert_eq!(x.data[j][c], mul_mod(a.data[j][c], s % q, q));
+                }
+            }
+        });
+    }
+}

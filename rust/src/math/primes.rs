@@ -1,0 +1,278 @@
+//! Prime / modulus generation.
+//!
+//! CKKS needs chains of pairwise-coprime NTT-friendly primes
+//! (`q ≡ 1 mod 2N`). The paper additionally selects **Montgomery-friendly
+//! moduli** of the form `2^b ± 2^s1 ± 2^s2 ± … ± 1` with hamming weight
+//! `h` (§IV-B, following Kim et al. [32]), so that the in-memory shift-add
+//! multiplier only needs `h` additions for constant multiplies. We
+//! implement both a generic prime search and the structured search, and
+//! expose the achieved hamming weight for the simulator's cost model.
+
+use super::modarith::{mul_mod, naf_hamming_weight, pow_mod};
+
+/// Deterministic Miller–Rabin for u64 (the standard 12-base certificate).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0u32;
+    while d % 2 == 0 {
+        d /= 2;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// A generated modulus together with its shift-add cost metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Modulus {
+    pub q: u64,
+    /// NAF hamming weight of `q` — additions a shift-add constant
+    /// multiplier issues when multiplying by `q` (Montgomery reduction).
+    pub hamming_weight: u32,
+    /// True if found by the structured `2^b ± 2^si ± 1` search.
+    pub montgomery_friendly: bool,
+}
+
+/// Find `count` NTT-friendly primes `q ≡ 1 (mod 2n)` near `2^bits`,
+/// scanning downward. Generic search — no structure requirement.
+pub fn ntt_primes(bits: u32, n: usize, count: usize) -> Vec<Modulus> {
+    assert!(bits >= 20 && bits <= 61, "bits {bits} out of range");
+    let step = 2 * n as u64;
+    let mut q = (1u64 << bits) + 1;
+    // Largest candidate ≡ 1 mod 2n below 2^bits + small slack.
+    q -= ((q - 1) % step + step) % step;
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        if q < (1 << (bits - 1)) {
+            panic!("exhausted {bits}-bit primes ≡ 1 mod {step}");
+        }
+        if is_prime(q) {
+            out.push(Modulus {
+                q,
+                hamming_weight: naf_hamming_weight(q),
+                montgomery_friendly: false,
+            });
+        }
+        q -= step;
+    }
+    out
+}
+
+/// Structured search for Montgomery-friendly moduli (§IV-B):
+/// `q = 2^bits ± 2^s1 ± 2^s2 … ± 1` with NAF hamming weight ≤ `max_h`,
+/// prime, and `q ≡ 1 (mod 2n)`. Returns up to `count` moduli with the
+/// smallest hamming weight found first.
+pub fn montgomery_friendly_primes(bits: u32, n: usize, count: usize, max_h: u32) -> Vec<Modulus> {
+    assert!(bits >= 20 && bits <= 61);
+    let step = 2 * n as u64;
+    let base = 1u64 << bits;
+    let mut found: Vec<Modulus> = Vec::new();
+    let mut push = |q: u64, found: &mut Vec<Modulus>| {
+        if q % step == 1 && is_prime(q) && !found.iter().any(|m| m.q == q) {
+            let h = naf_hamming_weight(q);
+            if h <= max_h {
+                found.push(Modulus {
+                    q,
+                    hamming_weight: h,
+                    montgomery_friendly: true,
+                });
+            }
+        }
+    };
+    // h = 2: 2^b ± 1
+    push(base + 1, &mut found);
+    push(base - 1, &mut found);
+    // h = 3: 2^b ± 2^s ± 1. Shifts are capped at b-8 so every modulus
+    // stays within 0.025% of 2^b — rescaling by such primes keeps the CKKS
+    // scale bookkeeping tight (see cipher::align's drift tolerance).
+    let s_max = bits.saturating_sub(12);
+    for s in (1..=s_max).rev() {
+        for (ss, cs) in [(1i64, 1i64), (1, -1), (-1, 1), (-1, -1)] {
+            let v = base as i128 + ss as i128 * (1i128 << s) + cs as i128;
+            if v > 0 && (v as u64) >> (bits - 1) >= 1 {
+                push(v as u64, &mut found);
+            }
+        }
+    }
+    // h = 4: 2^b ± 2^s1 ± 2^s2 ± 1
+    if max_h >= 4 && found.len() < count {
+        'outer: for s1 in (2..=s_max).rev() {
+            for s2 in (1..s1).rev() {
+                for mask in 0..8u32 {
+                    let sg = |k: u32| if mask & (1 << k) != 0 { -1i128 } else { 1i128 };
+                    let v = base as i128
+                        + sg(0) * (1i128 << s1)
+                        + sg(1) * (1i128 << s2)
+                        + sg(2);
+                    if v > 0 && (v as u64) >> (bits - 1) >= 1 {
+                        push(v as u64, &mut found);
+                    }
+                    if found.len() >= 4 * count {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    found.sort_by_key(|m| (m.hamming_weight, u64::MAX - m.q));
+    found.truncate(count);
+    found
+}
+
+/// Build a full CKKS modulus chain: one `q0_bits` base prime, `count - 1`
+/// rescaling primes of `bits` bits (≈ Δ so the scale stays put across
+/// levels), plus `special_count` special primes of `special_bits` bits —
+/// all distinct, all ≡ 1 mod 2n. Prefers Montgomery-friendly moduli and
+/// falls back to generic NTT primes when the structured search runs dry
+/// (the paper's Base0 configuration disables the preference entirely).
+pub fn modulus_chain_q0(
+    q0_bits: u32,
+    bits: u32,
+    special_bits: u32,
+    n: usize,
+    count: usize,
+    special_count: usize,
+    montgomery_friendly: bool,
+) -> (Vec<Modulus>, Vec<Modulus>) {
+    assert!(count >= 1);
+    let (mut q0, _) = modulus_chain(q0_bits, special_bits, n, 1, 0, montgomery_friendly);
+    let (rest, special) = modulus_chain(bits, special_bits, n, count - 1, special_count, montgomery_friendly);
+    // q0_bits may equal bits or special_bits; re-draw on collision.
+    if rest.iter().chain(special.iter()).any(|m| m.q == q0[0].q) {
+        let alt = ntt_primes(q0_bits, n, count + special_count + 2)
+            .into_iter()
+            .find(|m| {
+                !rest.iter().chain(special.iter()).any(|r| r.q == m.q)
+            })
+            .expect("no distinct q0");
+        q0[0] = alt;
+    }
+    q0.extend(rest);
+    (q0, special)
+}
+
+/// See [`modulus_chain_q0`]; uniform `bits` for all q-limbs.
+pub fn modulus_chain(
+    bits: u32,
+    special_bits: u32,
+    n: usize,
+    count: usize,
+    special_count: usize,
+    montgomery_friendly: bool,
+) -> (Vec<Modulus>, Vec<Modulus>) {
+    let gen = |b: u32, k: usize, taken: &[u64]| -> Vec<Modulus> {
+        let mut out: Vec<Modulus> = Vec::new();
+        if montgomery_friendly {
+            for m in montgomery_friendly_primes(b, n, k + taken.len(), 4) {
+                if !taken.contains(&m.q) && out.len() < k {
+                    out.push(m);
+                }
+            }
+        }
+        if out.len() < k {
+            for m in ntt_primes(b, n, k + taken.len() + out.len() + 8) {
+                if !taken.contains(&m.q) && !out.iter().any(|o| o.q == m.q) && out.len() < k {
+                    out.push(m);
+                }
+            }
+        }
+        out
+    };
+    let primary = gen(bits, count, &[]);
+    let taken: Vec<u64> = primary.iter().map(|m| m.q).collect();
+    let special = gen(special_bits, special_count, &taken);
+    assert_eq!(primary.len(), count);
+    assert_eq!(special.len(), special_count);
+    (primary, special)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miller_rabin_known_values() {
+        assert!(is_prime(2));
+        assert!(is_prime(3));
+        assert!(is_prime(998_244_353));
+        assert!(is_prime(0xFFFF_FFFF_0000_0001)); // Goldilocks
+        assert!(!is_prime(1));
+        assert!(!is_prime(561)); // Carmichael
+        assert!(!is_prime(998_244_351));
+        assert!(!is_prime((1u64 << 40) - 1)); // 2^40-1 = composite
+    }
+
+    #[test]
+    fn ntt_primes_satisfy_congruence() {
+        for logn in [10usize, 13, 16] {
+            let n = 1 << logn;
+            let ps = ntt_primes(40, n, 5);
+            assert_eq!(ps.len(), 5);
+            for m in &ps {
+                assert!(is_prime(m.q));
+                assert_eq!(m.q % (2 * n as u64), 1, "q={} n={n}", m.q);
+                assert!(m.q < (1 << 41) && m.q > (1 << 39));
+            }
+            // distinct
+            let mut qs: Vec<u64> = ps.iter().map(|m| m.q).collect();
+            qs.dedup();
+            assert_eq!(qs.len(), 5);
+        }
+    }
+
+    #[test]
+    fn montgomery_friendly_have_low_weight() {
+        let n = 1 << 12;
+        let ps = montgomery_friendly_primes(40, n, 4, 4);
+        assert!(!ps.is_empty(), "no structured 40-bit primes found");
+        for m in &ps {
+            assert!(is_prime(m.q));
+            assert_eq!(m.q % (2 * n as u64), 1);
+            assert!(m.hamming_weight <= 4, "h={} q={}", m.hamming_weight, m.q);
+            assert!(m.montgomery_friendly);
+        }
+    }
+
+    #[test]
+    fn chain_is_distinct_and_sized() {
+        let n = 1 << 12;
+        let (q, p) = modulus_chain(36, 40, n, 8, 2, true);
+        assert_eq!(q.len(), 8);
+        assert_eq!(p.len(), 2);
+        let mut all: Vec<u64> = q.iter().chain(p.iter()).map(|m| m.q).collect();
+        let total = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), total, "chain has duplicates");
+    }
+
+    #[test]
+    fn chain_without_preference_is_generic() {
+        let n = 1 << 10;
+        let (q, _) = modulus_chain(30, 31, n, 4, 1, false);
+        assert!(q.iter().all(|m| !m.montgomery_friendly));
+    }
+}

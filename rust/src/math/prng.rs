@@ -1,0 +1,151 @@
+//! Samplers for CKKS key material and encryption randomness.
+//!
+//! Built on the deterministic [`SplitMix64`](crate::util::check::SplitMix64)
+//! generator — cryptographic strength is *not* a goal of this reproduction
+//! (the paper evaluates performance, not security); determinism for
+//! reproducible experiments is.
+
+use crate::util::check::SplitMix64;
+
+/// Sampler bundle with the distributions CKKS needs.
+pub struct Sampler {
+    rng: SplitMix64,
+    sigma: f64,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: SplitMix64::new(seed),
+            sigma: 3.2,
+        }
+    }
+
+    /// Uniform residue vector in `[0, q)`.
+    pub fn uniform_mod(&mut self, q: u64, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.rng.below(q)).collect()
+    }
+
+    /// Ternary secret in {-1, 0, 1}, returned as residues mod q.
+    /// `hamming` limits the number of nonzeros (sparse ternary) when Some.
+    pub fn ternary(&mut self, n: usize, hamming: Option<usize>) -> Vec<i64> {
+        match hamming {
+            None => (0..n)
+                .map(|_| self.rng.below(3) as i64 - 1)
+                .collect(),
+            Some(h) => {
+                let mut v = vec![0i64; n];
+                let mut placed = 0;
+                while placed < h.min(n) {
+                    let idx = self.rng.below(n as u64) as usize;
+                    if v[idx] == 0 {
+                        v[idx] = if self.rng.below(2) == 0 { 1 } else { -1 };
+                        placed += 1;
+                    }
+                }
+                v
+            }
+        }
+    }
+
+    /// Centered discrete gaussian (σ = 3.2) via Box–Muller + rounding.
+    pub fn gaussian(&mut self, n: usize) -> Vec<i64> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let u1 = self.rng.f64().max(1e-300);
+            let u2 = self.rng.f64();
+            let r = (-2.0 * u1.ln()).sqrt() * self.sigma;
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            out.push((r * c).round() as i64);
+            if out.len() < n {
+                out.push((r * s).round() as i64);
+            }
+        }
+        out
+    }
+
+    /// Zero-one distribution with density 1/2 on ±1 (ZO(0.5)).
+    pub fn zo(&mut self, n: usize) -> Vec<i64> {
+        (0..n)
+            .map(|_| match self.rng.below(4) {
+                0 => 1,
+                1 => -1,
+                _ => 0,
+            })
+            .collect()
+    }
+
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Map a signed value into `[0, q)`.
+#[inline]
+pub fn signed_to_mod(v: i64, q: u64) -> u64 {
+    if v >= 0 {
+        v as u64 % q
+    } else {
+        q - ((-v) as u64 % q)
+    }
+}
+
+/// Map a residue in `[0, q)` to the centered representative in
+/// `(-q/2, q/2]`.
+#[inline]
+pub fn mod_to_signed(v: u64, q: u64) -> i64 {
+    if v > q / 2 {
+        -((q - v) as i64)
+    } else {
+        v as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternary_values_and_hamming() {
+        let mut s = Sampler::new(1);
+        let v = s.ternary(4096, None);
+        assert!(v.iter().all(|&x| (-1..=1).contains(&x)));
+        let v = s.ternary(4096, Some(64));
+        assert_eq!(v.iter().filter(|&&x| x != 0).count(), 64);
+    }
+
+    #[test]
+    fn gaussian_is_centered_and_bounded() {
+        let mut s = Sampler::new(2);
+        let v = s.gaussian(1 << 16);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var: f64 = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var.sqrt() - 3.2).abs() < 0.2, "std {}", var.sqrt());
+        assert!(v.iter().all(|&x| x.abs() < 40));
+    }
+
+    #[test]
+    fn signed_mod_roundtrip() {
+        let q = 998_244_353u64;
+        for v in [-5i64, -1, 0, 1, 5, 12345, -987654] {
+            assert_eq!(mod_to_signed(signed_to_mod(v, q), q), v);
+        }
+        assert_eq!(signed_to_mod(-1, q), q - 1);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut s = Sampler::new(3);
+        let q = (1u64 << 40) - 87;
+        assert!(s.uniform_mod(q, 2048).iter().all(|&x| x < q));
+    }
+
+    #[test]
+    fn zo_density() {
+        let mut s = Sampler::new(4);
+        let v = s.zo(1 << 16);
+        let nz = v.iter().filter(|&&x| x != 0).count() as f64 / v.len() as f64;
+        assert!((nz - 0.5).abs() < 0.02, "density {nz}");
+    }
+}

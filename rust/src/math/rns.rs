@@ -1,0 +1,274 @@
+//! Residue number system: bases, fast base conversion (BConv, paper Eq. 1)
+//! and the ModUp / ModDown operations of generalized key switching.
+//!
+//! BConv (Bajard et al. / full-RNS CKKS [24]):
+//!
+//! ```text
+//! BConv_{Q→P}(a) = ( Σ_j [ a[j] · q̂_j^{-1} ]_{q_j} · q̂_j  mod p_i )_i
+//! ```
+//!
+//! where `q̂_j = Q / q_j`. The sum may exceed the true value by a small
+//! multiple of Q (the "approximate" variant); CKKS tolerates this as extra
+//! noise, exactly as the paper's hardware does.
+
+use super::modarith::{add_mod, inv_mod, mul_mod, Barrett, ShoupMul};
+use super::ntt::NttTable;
+use super::primes::Modulus;
+use std::sync::Arc;
+
+/// An ordered RNS basis with per-modulus NTT tables and the precomputed
+/// constants BConv needs for any prefix `q_0..q_{l}` of the basis.
+#[derive(Debug, Clone)]
+pub struct RnsBasis {
+    pub moduli: Vec<Modulus>,
+    pub tables: Vec<Arc<NttTable>>,
+    /// Per-modulus Barrett contexts — the division-free pointwise
+    /// multiplier for variable×variable products (§Perf optimization 2).
+    pub barrett: Vec<Barrett>,
+    pub n: usize,
+}
+
+impl RnsBasis {
+    pub fn new(moduli: Vec<Modulus>, n: usize) -> Self {
+        let tables = moduli
+            .iter()
+            .map(|m| Arc::new(NttTable::new(m.q, n)))
+            .collect();
+        let barrett = moduli.iter().map(|m| Barrett::new(m.q)).collect();
+        Self { moduli, tables, barrett, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.moduli.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moduli.is_empty()
+    }
+
+    pub fn q(&self, i: usize) -> u64 {
+        self.moduli[i].q
+    }
+
+    /// log2 of the product of the first `l` moduli (for noise budgeting).
+    pub fn log_q(&self, l: usize) -> f64 {
+        self.moduli[..l].iter().map(|m| (m.q as f64).log2()).sum()
+    }
+}
+
+/// Precomputed constants to convert residues from basis `from[0..from_len]`
+/// to basis `to`: `q̂_j^{-1} mod q_j` and `q̂_j mod p_i`, both carried as
+/// Shoup multipliers so the per-coefficient hot loop is division-free.
+#[derive(Debug, Clone)]
+pub struct BConv {
+    /// `[ q̂_j^{-1} ]_{q_j}` for j in source basis (Shoup form).
+    qhat_inv: Vec<ShoupMul>,
+    /// `qhat_mod_p[i][j] = q̂_j mod p_i` (Shoup form).
+    qhat_mod_p: Vec<Vec<ShoupMul>>,
+    pub from_moduli: Vec<u64>,
+    pub to_moduli: Vec<u64>,
+}
+
+impl BConv {
+    /// Build the conversion `∏ from → each of to`.
+    pub fn new(from: &[u64], to: &[u64]) -> Self {
+        let l = from.len();
+        let mut qhat_inv = vec![ShoupMul::new(0, 2); l];
+        for j in 0..l {
+            // q̂_j mod q_j = Π_{k≠j} q_k mod q_j
+            let mut prod = 1u64;
+            for k in 0..l {
+                if k != j {
+                    prod = mul_mod(prod, from[k] % from[j], from[j]);
+                }
+            }
+            qhat_inv[j] = ShoupMul::new(inv_mod(prod, from[j]), from[j]);
+        }
+        let mut qhat_mod_p = vec![Vec::with_capacity(l); to.len()];
+        for (i, &p) in to.iter().enumerate() {
+            for j in 0..l {
+                let mut prod = 1u64;
+                for k in 0..l {
+                    if k != j {
+                        prod = mul_mod(prod, from[k] % p, p);
+                    }
+                }
+                qhat_mod_p[i].push(ShoupMul::new(prod, p));
+            }
+        }
+        Self {
+            qhat_inv,
+            qhat_mod_p,
+            from_moduli: from.to_vec(),
+            to_moduli: to.to_vec(),
+        }
+    }
+
+    /// Convert one coefficient: `residues[j] = a mod q_j` → `a mod p_i`
+    /// (up to the +kQ approximation error).
+    pub fn convert_coeff(&self, residues: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(residues.len(), self.from_moduli.len());
+        // y_j = [a_j * q̂_j^{-1}]_{q_j}
+        let y: Vec<u64> = residues
+            .iter()
+            .zip(&self.qhat_inv)
+            .map(|(&a, s)| s.mul(a))
+            .collect();
+        self.to_moduli
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let mut acc = 0u64;
+                for (j, &yj) in y.iter().enumerate() {
+                    // Shoup accepts unreduced y_j (any u64 operand).
+                    acc = add_mod(acc, self.qhat_mod_p[i][j].mul(yj), p);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Convert full residue polynomials (coeff domain, row-major
+    /// `input[j][coef]` per source modulus) into `output[i][coef]`.
+    pub fn convert_poly(&self, input: &[Vec<u64>], n: usize) -> Vec<Vec<u64>> {
+        let l = self.from_moduli.len();
+        debug_assert_eq!(input.len(), l);
+        // Stage 1: y_j = [a_j * q̂_j^{-1}]_{q_j}, elementwise (Shoup).
+        let mut y = vec![vec![0u64; n]; l];
+        for j in 0..l {
+            let s = self.qhat_inv[j];
+            for c in 0..n {
+                y[j][c] = s.mul(input[j][c]);
+            }
+        }
+        // Stage 2: all-to-all reduction into each target modulus — the
+        // data-movement pattern FHEmem's inter-bank chain exists for.
+        // Division-free: Shoup multiply accepts the unreduced y values.
+        self.to_moduli
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let mut out = vec![0u64; n];
+                for j in 0..l {
+                    let w = &self.qhat_mod_p[i][j];
+                    for c in 0..n {
+                        out[c] = add_mod(out[c], w.mul(y[j][c]), p);
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// Exact CRT reconstruction for tests, valid while the product of moduli
+/// fits in u128 (≤ 2 moduli of ≤ 61 bits, or several small ones).
+pub fn crt_reconstruct_u128(residues: &[u64], moduli: &[u64]) -> u128 {
+    let prod: u128 = moduli.iter().map(|&q| q as u128).product();
+    let mut acc: u128 = 0;
+    for (j, (&r, &q)) in residues.iter().zip(moduli).enumerate() {
+        let _ = j;
+        let qhat = prod / q as u128;
+        let qhat_mod = (qhat % q as u128) as u64;
+        let inv = inv_mod(qhat_mod, q);
+        let term = (qhat % prod) * ((mul_mod(r, inv, q)) as u128) % prod;
+        acc = (acc + term) % prod;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::ntt_primes;
+    use crate::util::check::forall;
+
+    fn moduli(bits: u32, n: usize, k: usize) -> Vec<u64> {
+        ntt_primes(bits, n, k).iter().map(|m| m.q).collect()
+    }
+
+    #[test]
+    fn crt_roundtrip_small() {
+        let ms = [97u64, 101, 103];
+        forall("crt", 128, |rng| {
+            let v = rng.below(97 * 101 * 103);
+            let residues: Vec<u64> = ms.iter().map(|&q| v % q).collect();
+            assert_eq!(crt_reconstruct_u128(&residues, &ms), v as u128);
+        });
+    }
+
+    #[test]
+    fn bconv_three_limb_error_bound() {
+        // Approximate BConv returns v + k·Q with 0 ≤ k < L (here L = 3;
+        // Q ≈ 2^90 fits u128 so we can enumerate candidates exactly).
+        let n = 16;
+        let from = moduli(30, n, 3);
+        let to = moduli(31, n, 2);
+        let bc = BConv::new(&from, &to);
+        let q_prod: u128 = from.iter().map(|&q| q as u128).product();
+        forall("bconv 3-limb error bound", 64, |rng| {
+            let v = ((rng.next_u64() as u128) << 32 | rng.next_u64() as u128) % q_prod;
+            let residues: Vec<u64> = from.iter().map(|&q| (v % q as u128) as u64).collect();
+            let out = bc.convert_coeff(&residues);
+            for (i, &p) in to.iter().enumerate() {
+                let got = out[i] as u128;
+                let ok = (0..from.len() as u128).any(|k| (v + k * q_prod) % p as u128 == got);
+                assert!(ok, "residue mod {p}: got {got}, v={v}");
+            }
+        });
+    }
+
+    #[test]
+    fn bconv_error_is_small_multiple_of_q() {
+        // Approximate BConv may be off by k·Q with 0 ≤ k < L. Verify with
+        // a 2-modulus base where u128 CRT is exact.
+        let n = 16;
+        let from = moduli(40, n, 2);
+        let to = moduli(41, n, 2);
+        let bc = BConv::new(&from, &to);
+        let q_prod = from[0] as u128 * from[1] as u128;
+        forall("bconv error bound", 64, |rng| {
+            let v = (rng.next_u64() as u128) << 16 | rng.below(1 << 16) as u128;
+            let v = v % q_prod;
+            let residues: Vec<u64> = from.iter().map(|&q| (v % q as u128) as u64).collect();
+            let out = bc.convert_coeff(&residues);
+            for (i, &p) in to.iter().enumerate() {
+                let got = out[i] as u128;
+                // candidate true values v + k·Q for k in 0..L
+                let ok = (0..from.len() as u128).any(|k| (v + k * q_prod) % p as u128 == got);
+                assert!(ok, "residue mod {p}: got {got}, v={v}");
+            }
+        });
+    }
+
+    #[test]
+    fn convert_poly_matches_per_coeff() {
+        let n = 32;
+        let from = moduli(35, n, 3);
+        let to = moduli(36, n, 2);
+        let bc = BConv::new(&from, &to);
+        forall("bconv poly==coeff", 8, |rng| {
+            let input: Vec<Vec<u64>> = from
+                .iter()
+                .map(|&q| (0..n).map(|_| rng.below(q)).collect())
+                .collect();
+            let out = bc.convert_poly(&input, n);
+            for c in 0..n {
+                let residues: Vec<u64> = input.iter().map(|row| row[c]).collect();
+                let expect = bc.convert_coeff(&residues);
+                for i in 0..to.len() {
+                    assert_eq!(out[i][c], expect[i]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn basis_logq() {
+        let n = 1 << 10;
+        let b = RnsBasis::new(ntt_primes(40, n, 3), n);
+        let lq = b.log_q(3);
+        assert!((lq - 120.0).abs() < 1.0, "logQ={lq}");
+        assert_eq!(b.len(), 3);
+    }
+}

@@ -1,0 +1,286 @@
+//! CKKS parameter presets.
+//!
+//! Two families:
+//!
+//! * **Simulation parameters** mirror the paper's evaluation settings
+//!   (§V-C): deep workloads use `logN=16, L=23, dnum=4, logPQ≈1556`
+//!   (Lattigo-style 128-bit security); shallow LOLA workloads use
+//!   `logN=14, L=4/6` with ≤32-bit moduli. These drive the trace
+//!   generators and the hardware cost model — the full-size numerics are
+//!   never materialised.
+//! * **Functional parameters** are laptop-scale sets the Rust CKKS layer
+//!   and the XLA artifacts actually compute with. The artifact set keeps
+//!   all moduli below 2^31 so 64-bit products are exact in uint64 on the
+//!   JAX side (see DESIGN.md "Substitutions").
+
+use crate::math::primes::{modulus_chain_q0, Modulus};
+use crate::math::rns::RnsBasis;
+use std::sync::Arc;
+
+/// A CKKS parameter set.
+#[derive(Debug, Clone)]
+pub struct CkksParams {
+    pub log_n: usize,
+    /// Maximum multiplicative level (number of prime limbs = L + 1 is a
+    /// common convention; here `l_levels` = number of q-limbs).
+    pub l_levels: usize,
+    /// Number of special (P) limbs.
+    pub k_special: usize,
+    /// Key-switching decomposition number.
+    pub dnum: usize,
+    /// Scaling factor exponent (Δ = 2^log_scale).
+    pub log_scale: u32,
+    /// Bits of the base modulus q_0 (holds the final message).
+    pub q0_bits: u32,
+    /// Bits per rescaling q-limb (≈ log_scale) / per special limb.
+    pub q_bits: u32,
+    pub p_bits: u32,
+    /// Prefer Montgomery-friendly moduli (paper §IV-B; Base0 disables).
+    pub montgomery_friendly: bool,
+    /// Secret-key hamming weight (None = dense ternary, Some(h) = sparse —
+    /// bootstrapping uses sparse secrets to bound the ModRaise overflow I).
+    pub secret_hamming: Option<usize>,
+    pub name: &'static str,
+}
+
+impl CkksParams {
+    pub fn n(&self) -> usize {
+        1 << self.log_n
+    }
+
+    pub fn slots(&self) -> usize {
+        self.n() / 2
+    }
+
+    /// Total limbs in the extended basis Q·P.
+    pub fn total_limbs(&self) -> usize {
+        self.l_levels + self.k_special
+    }
+
+    /// Digits per key-switch decomposition: ceil(L / dnum) limbs each.
+    pub fn digit_limbs(&self) -> usize {
+        (self.l_levels + self.dnum - 1) / self.dnum
+    }
+
+    pub fn log_pq(&self) -> f64 {
+        (self.l_levels as f64) * self.q_bits as f64 + (self.k_special as f64) * self.p_bits as f64
+    }
+
+    /// Ciphertext size in bytes at full level (2 polys, 64-bit words) —
+    /// the working-set quantity behind the paper's Fig. 1.
+    pub fn ciphertext_bytes(&self, limbs: usize) -> u64 {
+        2 * limbs as u64 * self.n() as u64 * 8
+    }
+
+    /// Evaluation-key size in bytes (dnum digit keys, each 2 polys over
+    /// the full Q·P basis).
+    pub fn evk_bytes(&self) -> u64 {
+        2 * self.dnum as u64 * self.total_limbs() as u64 * self.n() as u64 * 8
+    }
+
+    /// Generate the modulus chain (q-limbs, p-limbs).
+    pub fn generate_moduli(&self) -> (Vec<Modulus>, Vec<Modulus>) {
+        modulus_chain_q0(
+            self.q0_bits,
+            self.q_bits,
+            self.p_bits,
+            self.n(),
+            self.l_levels,
+            self.k_special,
+            self.montgomery_friendly,
+        )
+    }
+
+    /// Build the concrete RNS basis `q_0..q_{L-1}, p_0..p_{k-1}`
+    /// (special limbs appended at the end).
+    pub fn build_basis(&self) -> Arc<RnsBasis> {
+        let (mut q, p) = self.generate_moduli();
+        q.extend(p);
+        Arc::new(RnsBasis::new(q, self.n()))
+    }
+
+    // ---------------------------------------------------------------
+    // Paper evaluation settings (trace/cost model only)
+    // ---------------------------------------------------------------
+
+    /// Deep workloads: HELR, ResNet-20, sorting, bootstrapping
+    /// (paper: logN=16, L=23, dnum=4, logPQ=1556).
+    pub fn paper_deep() -> Self {
+        Self {
+            log_n: 16,
+            l_levels: 24,
+            k_special: 6,
+            dnum: 4,
+            log_scale: 50,
+            q0_bits: 60,
+            q_bits: 50,
+            p_bits: 61,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "paper-deep",
+        }
+    }
+
+    /// Shallow LOLA workloads (paper: logN=14, L=4/6, logq ≤ 32).
+    pub fn paper_lola(levels: usize) -> Self {
+        Self {
+            log_n: 14,
+            l_levels: levels,
+            k_special: 1,
+            dnum: 1,
+            log_scale: 26,
+            q0_bits: 32,
+            q_bits: 26,
+            p_bits: 30,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "paper-lola",
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Functional settings (real numerics)
+    // ---------------------------------------------------------------
+
+    /// Default functional set: big enough to exercise every code path
+    /// (dnum > 1, multiple levels, bootstrappable structure) while staying
+    /// fast on a laptop.
+    pub fn func_default() -> Self {
+        Self {
+            log_n: 12,
+            l_levels: 8,
+            k_special: 2,
+            dnum: 4,
+            log_scale: 32,
+            q0_bits: 40,
+            q_bits: 32,
+            p_bits: 40,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "func-default",
+        }
+    }
+
+    /// Tiny set for unit tests.
+    pub fn func_tiny() -> Self {
+        Self {
+            log_n: 10,
+            l_levels: 4,
+            k_special: 2,
+            dnum: 2,
+            log_scale: 28,
+            q0_bits: 34,
+            q_bits: 28,
+            p_bits: 34,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "func-tiny",
+        }
+    }
+
+    /// Bootstrapping-capable functional set: enough q-limbs for
+    /// CtS + EvalMod + StC (≈12 levels) with a sparse secret bounding the
+    /// ModRaise overflow.
+    pub fn func_boot() -> Self {
+        Self {
+            log_n: 10,
+            l_levels: 14,
+            k_special: 3,
+            dnum: 7,
+            // Large Δ keeps CoeffToSlot's plaintext quantization error
+            // below EvalMod's ~2πK slope amplification and SlotToCoeff's
+            // q0/(2πΔ)·√n gain.
+            log_scale: 40,
+            q0_bits: 46,
+            q_bits: 40,
+            p_bits: 42,
+            // Generic primes: the structured (Montgomery-friendly) family
+            // sits up to 2^-12 off 2^b, and that scale drift × deep
+            // Chebyshev chains costs more precision than bootstrap can
+            // spare. The hardware cost model takes its hamming-weight
+            // stats from the paper parameter sets, not this one.
+            montgomery_friendly: false,
+            secret_hamming: Some(32),
+            name: "func-boot",
+        }
+    }
+
+    /// Artifact set: all moduli < 2^31 so products are exact in uint64
+    /// on the JAX/Pallas side. Must match python/compile/params.py.
+    pub fn artifact() -> Self {
+        Self {
+            log_n: 11,
+            l_levels: 6,
+            k_special: 1,
+            // α = 1 (per-limb digits): keeps every digit below the single
+            // 30-bit special modulus, and keeps all artifact moduli < 2^31
+            // so the JAX uint64 path is exact.
+            dnum: 6,
+            log_scale: 25,
+            q0_bits: 30,
+            q_bits: 25,
+            p_bits: 29,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "artifact",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_deep_matches_paper_budget() {
+        let p = CkksParams::paper_deep();
+        // Paper: logPQ = 1556 with logN=16, L=23, dnum=4.
+        let lpq = p.log_pq();
+        assert!((1400.0..1700.0).contains(&lpq), "logPQ = {lpq}");
+        assert_eq!(p.n(), 1 << 16);
+        assert_eq!(p.dnum, 4);
+        assert_eq!(p.digit_limbs(), 6);
+    }
+
+    #[test]
+    fn working_set_matches_fig1_scale() {
+        // Fig 1(a): HMul working set 98–390 MB for logN 15–17 at L=30,
+        // logQ=1920. With our deep set the ciphertext alone is tens of MB.
+        let p = CkksParams::paper_deep();
+        let ct = p.ciphertext_bytes(p.l_levels);
+        assert!(ct > 20 << 20, "ct = {} MB", ct >> 20);
+        let evk = p.evk_bytes();
+        assert!(evk > 100 << 20, "evk = {} MB", evk >> 20);
+    }
+
+    #[test]
+    fn functional_sets_build() {
+        for p in [CkksParams::func_tiny(), CkksParams::artifact()] {
+            let basis = p.build_basis();
+            assert_eq!(basis.len(), p.total_limbs());
+            for j in 0..basis.len() {
+                assert_eq!(basis.q(j) % (2 * p.n() as u64), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_moduli_fit_u31() {
+        let p = CkksParams::artifact();
+        let (q, pp) = p.generate_moduli();
+        for m in q.iter().chain(pp.iter()) {
+            assert!(m.q < (1 << 31), "modulus {} too big for exact u64 products", m.q);
+        }
+    }
+
+    #[test]
+    fn digit_limbs_covers_all_levels() {
+        for p in [
+            CkksParams::paper_deep(),
+            CkksParams::func_default(),
+            CkksParams::func_tiny(),
+        ] {
+            assert!(p.digit_limbs() * p.dnum >= p.l_levels);
+        }
+    }
+}

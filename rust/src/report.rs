@@ -1,0 +1,31 @@
+//! Table/figure row formatting shared by the benches and the CLI.
+
+use crate::sim::SimResult;
+
+/// Fixed-width row for a simulated point.
+pub fn sim_row(r: &SimResult) -> String {
+    format!(
+        "{:<14} {:<10} {:>12} {:>12} {:>9.1} {:>9.1} {:>12.3e} {:>12.3e}",
+        r.workload,
+        r.config.name(),
+        crate::util::bench::fmt_time(r.latency_s),
+        format!("{:.3e} J", r.energy_j),
+        r.power_w,
+        r.area_mm2,
+        r.edp(),
+        r.edap()
+    )
+}
+
+pub fn sim_header() -> String {
+    format!(
+        "{:<14} {:<10} {:>12} {:>12} {:>9} {:>9} {:>12} {:>12}",
+        "workload", "config", "latency", "energy", "power W", "area mm2", "EDP", "EDAP"
+    )
+}
+
+/// A paper-vs-measured comparison line.
+pub fn compare_row(label: &str, paper: f64, measured: f64) -> String {
+    let ratio = measured / paper;
+    format!("{label:<44} paper {paper:>9.2}   ours {measured:>9.2}   ratio {ratio:>5.2}")
+}

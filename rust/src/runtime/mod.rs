@@ -1,0 +1,192 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the coordinator's request path. Python never runs
+//! here.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/meta.txt` — the artifact parameter set the Python
+/// side generated (source of truth for the AOT path's moduli).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub log_n: usize,
+    pub n: usize,
+    pub scale_bits: u32,
+    pub q_moduli: Vec<u64>,
+    pub p_moduli: Vec<u64>,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| {
+            kv.get(k)
+                .ok_or_else(|| anyhow!("meta.txt missing key {k}"))
+        };
+        let parse_list = |s: &str| -> Result<Vec<u64>> {
+            s.split(',')
+                .map(|x| x.trim().parse::<u64>().map_err(|e| anyhow!("{e}")))
+                .collect()
+        };
+        Ok(Self {
+            log_n: get("logn")?.parse()?,
+            n: get("n")?.parse()?,
+            scale_bits: get("scale_bits")?.parse()?,
+            q_moduli: parse_list(get("q")?)?,
+            p_moduli: parse_list(get("p")?)?,
+        })
+    }
+
+    /// All moduli in basis order (q-limbs then specials).
+    pub fn all_moduli(&self) -> Vec<u64> {
+        let mut v = self.q_moduli.clone();
+        v.extend(&self.p_moduli);
+        v
+    }
+}
+
+/// A compiled artifact registry: one PJRT executable per entry point.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+}
+
+/// The entry points `aot.py` exports.
+pub const ENTRY_POINTS: &[&str] = &[
+    "hadd",
+    "hmul_tensor",
+    "pmul",
+    "ntt_fwd",
+    "ntt_inv",
+    "automorphism",
+    "rescale_step",
+];
+
+impl Runtime {
+    /// Load and compile every artifact in `dir` (done once at startup;
+    /// the request path only calls [`Runtime::execute`]).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(&dir.join("meta.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for name in ENTRY_POINTS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            executables.insert(name.to_string(), exe);
+        }
+        if executables.is_empty() {
+            return Err(anyhow!(
+                "no artifacts found in {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        Ok(Self {
+            client,
+            executables,
+            meta,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an entry point; returns the flattened tuple outputs.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// Build an `[L, N] u64` literal from residue rows.
+pub fn mat_literal(rows: &[Vec<u64>]) -> Result<xla::Literal> {
+    let l = rows.len();
+    let n = rows[0].len();
+    let flat: Vec<u64> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+    xla::Literal::vec1(&flat)
+        .reshape(&[l as i64, n as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build a `[K] u64` vector literal.
+pub fn vec_literal(v: &[u64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build a `[K] i32` vector literal.
+pub fn vec_literal_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Extract an `[L, N]` u64 literal back into rows.
+pub fn literal_to_rows(lit: &xla::Literal, l: usize, n: usize) -> Result<Vec<Vec<u64>>> {
+    let flat: Vec<u64> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    if flat.len() != l * n {
+        return Err(anyhow!("shape mismatch: {} != {l}x{n}", flat.len()));
+    }
+    Ok(flat.chunks(n).map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parser_roundtrip() {
+        let dir = std::env::temp_dir().join("fhemem_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meta.txt");
+        std::fs::write(&p, "logn=11\nn=2048\nscale_bits=25\nq=97,193\np=257\n").unwrap();
+        let meta = ArtifactMeta::load(&p).unwrap();
+        assert_eq!(meta.n, 2048);
+        assert_eq!(meta.q_moduli, vec![97, 193]);
+        assert_eq!(meta.all_moduli(), vec![97, 193, 257]);
+    }
+
+    #[test]
+    fn literal_row_roundtrip() {
+        let rows = vec![vec![1u64, 2, 3], vec![4, 5, 6]];
+        let lit = mat_literal(&rows).unwrap();
+        let back = literal_to_rows(&lit, 2, 3).unwrap();
+        assert_eq!(rows, back);
+    }
+}

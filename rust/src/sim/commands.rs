@@ -1,0 +1,156 @@
+//! Table I: the FHEmem NMU command set, with per-command cycle costs and
+//! a literal command-stream simulator used to cross-check the closed-form
+//! cost model on small instances.
+
+use super::config::ArchConfig;
+
+/// One subarray-level NMU command (paper Table I / Fig. 7(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NmuCommand {
+    /// Load `size` bits from SA column address to NMU latches.
+    Ld { size_bits: u64 },
+    /// Store from NMU latch to SA column address.
+    St { size_bits: u64 },
+    /// Horizontal inter-NMU move within a subarray.
+    Hmov { size_bits: u64 },
+    /// Vertical move between subarrays.
+    Vmov { size_bits: u64 },
+    /// Shift-add pass: `shifts` addition steps (h for Montgomery moduli).
+    Add { shifts: u64 },
+    /// Permuted store of per-NMU 64-bit latches (automorphism).
+    Pst,
+    /// Row activate + precharge (not in Table I; DRAM timing).
+    ActPre,
+}
+
+impl NmuCommand {
+    /// Execution cycles (Table I "Cycles" column).
+    pub fn cycles(&self, cfg: &ArchConfig) -> u64 {
+        match *self {
+            NmuCommand::Ld { size_bits }
+            | NmuCommand::St { size_bits }
+            | NmuCommand::Hmov { size_bits }
+            | NmuCommand::Vmov { size_bits } => size_bits / cfg.link_bits(),
+            NmuCommand::Add { shifts } => shifts,
+            NmuCommand::Pst => 4,
+            NmuCommand::ActPre => cfg.act_pre_cycles(),
+        }
+    }
+
+    /// Issue cost over the 16-bit command/address bus (§III-D: 2 cycles
+    /// for 32-bit commands, 4 for 64-bit `nmu_pst`).
+    pub fn issue_cycles(&self) -> u64 {
+        match self {
+            NmuCommand::Pst => 4,
+            _ => 2,
+        }
+    }
+
+    pub fn energy_pj(&self, cfg: &ArchConfig) -> f64 {
+        match *self {
+            NmuCommand::Ld { size_bits } | NmuCommand::St { size_bits } => {
+                size_bits as f64 * cfg.e_pre_gsa_pj_per_bit()
+            }
+            NmuCommand::Hmov { size_bits } | NmuCommand::Vmov { size_bits } => {
+                size_bits as f64 * cfg.e_hdl_pj_per_bit() * 4.0
+            }
+            NmuCommand::Add { shifts } => {
+                shifts as f64 * cfg.e_add64_pj() * cfg.adders_per_subarray() as f64
+            }
+            NmuCommand::Pst => 64.0 * cfg.e_pre_gsa_pj_per_bit(),
+            NmuCommand::ActPre => cfg.e_row_act_pj() * cfg.mats_per_subarray() as f64,
+        }
+    }
+}
+
+/// Literal command-stream execution: total (cycles, energy) including
+/// issue overhead — the reference the closed-form model is checked
+/// against.
+pub fn run_stream(cfg: &ArchConfig, stream: &[NmuCommand]) -> (u64, f64) {
+    let mut cycles = 0u64;
+    let mut energy = 0.0f64;
+    for cmd in stream {
+        cycles += cmd.cycles(cfg).max(cmd.issue_cycles());
+        energy += cmd.energy_pj(cfg);
+    }
+    (cycles, energy)
+}
+
+/// Build the command stream for one row-wise vector multiply (Fig. 5):
+/// the stream behind `CostModel::row_op_cycles`.
+pub fn vector_mult_stream(cfg: &ArchConfig, shifts: u64) -> Vec<NmuCommand> {
+    let mut s = vec![
+        NmuCommand::ActPre,
+        NmuCommand::Ld {
+            size_bits: cfg.mat_row_bits(),
+        },
+        NmuCommand::ActPre,
+        NmuCommand::Ld {
+            size_bits: cfg.mat_row_bits(),
+        },
+    ];
+    let vals = cfg.values_per_mat_row();
+    let m = (cfg.adders_per_subarray() / cfg.mats_per_subarray()).max(1);
+    let blocks = (vals + m - 1) / m;
+    for _ in 0..blocks {
+        s.push(NmuCommand::Add { shifts });
+    }
+    s.push(NmuCommand::St {
+        size_bits: cfg.mat_row_bits(),
+    });
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::{CostModel, FheShape};
+
+    #[test]
+    fn table1_cycle_costs() {
+        let cfg = ArchConfig::new(1, 1024);
+        assert_eq!(
+            NmuCommand::Ld { size_bits: 512 }.cycles(&cfg),
+            32,
+            "size/16 per Table I"
+        );
+        assert_eq!(NmuCommand::Hmov { size_bits: 256 }.cycles(&cfg), 16);
+        assert_eq!(NmuCommand::Add { shifts: 7 }.cycles(&cfg), 7);
+        assert_eq!(NmuCommand::Pst.cycles(&cfg), 4);
+    }
+
+    #[test]
+    fn issue_costs_match_section_iii_d() {
+        assert_eq!(NmuCommand::Pst.issue_cycles(), 4);
+        assert_eq!(NmuCommand::Add { shifts: 64 }.issue_cycles(), 2);
+    }
+
+    #[test]
+    fn cost_model_matches_command_sim() {
+        // The closed-form row-op must track the literal stream within
+        // issue-overhead slack on every configuration.
+        for cfg in ArchConfig::design_space() {
+            let shape = FheShape::paper_deep(true);
+            let m = CostModel::new(&cfg, shape);
+            let stream = vector_mult_stream(&cfg, 3 * shape.mult_shifts);
+            let (stream_cycles, _) = run_stream(&cfg, &stream);
+            let rows = m.lay.rows_per_poly_per_mat as f64;
+            let closed = m.modmul_poly().computation.cycles / rows;
+            let ratio = closed / stream_cycles as f64;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{}: closed {closed} vs stream {stream_cycles}",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn stream_energy_positive_and_scales_with_shifts() {
+        let cfg = ArchConfig::default();
+        let (c3, e3) = run_stream(&cfg, &vector_mult_stream(&cfg, 3));
+        let (c64, e64) = run_stream(&cfg, &vector_mult_stream(&cfg, 64));
+        assert!(c64 > c3);
+        assert!(e64 > e3);
+    }
+}

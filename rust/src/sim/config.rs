@@ -1,0 +1,361 @@
+//! FHEmem architectural configuration (paper Table II + §V-A).
+//!
+//! Geometry: 2× 8-high HBM2E stacks (16 GB each), 32 pseudo-channels per
+//! stack, 8 banks per pseudo-channel, 64 MB banks built from 512×512-cell
+//! mats, 16 mats per subarray. The **aspect ratio** (AR) divides the mat
+//! rows: AR×k has 512/k rows per mat and k× as many subarrays per bank
+//! (128 at AR×1 → 1024 at AR×8), trading area for latency/energy/
+//! parallelism (§II-D1). The **adder width** is the total adder bits per
+//! subarray (1k–8k; e.g. 4k = 16 NMUs × 4 64-bit adders).
+
+/// One FHEmem hardware configuration point (the Fig. 12 design space).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchConfig {
+    /// Aspect-ratio multiplier: 1, 2, 4 or 8.
+    pub ar: u32,
+    /// Adder bits per subarray: 1024, 2048, 4096 or 8192.
+    pub adder_width: u32,
+    /// Number of HBM stacks (paper: 2 → 32 GB).
+    pub stacks: u32,
+}
+
+impl ArchConfig {
+    pub fn new(ar: u32, adder_width: u32) -> Self {
+        assert!([1, 2, 4, 8].contains(&ar), "AR must be 1/2/4/8");
+        assert!(
+            [1024, 2048, 4096, 8192].contains(&adder_width),
+            "adder width must be 1k/2k/4k/8k"
+        );
+        Self {
+            ar,
+            adder_width,
+            stacks: 2,
+        }
+    }
+
+    /// Short name like "ARx4-4k" (paper Fig. 12 labels).
+    pub fn name(&self) -> String {
+        format!("ARx{}-{}k", self.ar, self.adder_width / 1024)
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_lowercase();
+        let (ar_s, w_s) = s.strip_prefix("arx")?.split_once('-')?;
+        let ar: u32 = ar_s.parse().ok()?;
+        let w: u32 = w_s.strip_suffix('k')?.parse::<u32>().ok()? * 1024;
+        Some(Self::new(ar, w))
+    }
+
+    /// The nine points explored in Fig. 12 (AR×{1,2,4,8} × matched widths).
+    pub fn design_space() -> Vec<ArchConfig> {
+        let mut v = Vec::new();
+        for ar in [1u32, 2, 4, 8] {
+            for w in [1024u32, 2048, 4096, 8192] {
+                v.push(Self::new(ar, w));
+            }
+        }
+        v
+    }
+
+    // ----------------------------------------------------------------
+    // Geometry (Table II)
+    // ----------------------------------------------------------------
+
+    pub fn banks_per_pchannel(&self) -> u64 {
+        8
+    }
+
+    pub fn pchannels_per_stack(&self) -> u64 {
+        32
+    }
+
+    pub fn banks_per_stack(&self) -> u64 {
+        self.banks_per_pchannel() * self.pchannels_per_stack()
+    }
+
+    pub fn total_banks(&self) -> u64 {
+        self.banks_per_stack() * self.stacks as u64
+    }
+
+    /// Mats per subarray (a subarray row spans 16 mats → 1 kB row).
+    pub fn mats_per_subarray(&self) -> u64 {
+        16
+    }
+
+    /// Mat row size in bits (512 cells per mat row).
+    pub fn mat_row_bits(&self) -> u64 {
+        512
+    }
+
+    /// Rows per mat after AR division (512 at AR×1 → 64 at AR×8).
+    pub fn rows_per_mat(&self) -> u64 {
+        512 / self.ar as u64
+    }
+
+    /// Subarrays per bank: 128·AR (64 MB bank of 512×512-cell mats).
+    pub fn subarrays_per_bank(&self) -> u64 {
+        128 * self.ar as u64
+    }
+
+    pub fn total_subarrays(&self) -> u64 {
+        self.subarrays_per_bank() * self.total_banks()
+    }
+
+    /// 64-bit adders per subarray.
+    pub fn adders_per_subarray(&self) -> u64 {
+        (self.adder_width / 64) as u64
+    }
+
+    /// Total 64-bit adders in the system (paper §VI-A3: ARx4-4k → 16M).
+    pub fn total_adders(&self) -> u64 {
+        self.adders_per_subarray() * self.total_subarrays()
+    }
+
+    /// Values (64-bit words) per mat row.
+    pub fn values_per_mat_row(&self) -> u64 {
+        self.mat_row_bits() / 64
+    }
+
+    // ----------------------------------------------------------------
+    // Timing (Table II; AR scaling per §II-D1 / [28])
+    // ----------------------------------------------------------------
+
+    /// Logic/transfer clock (paper §VI-A3: 500 MHz additions).
+    pub fn clock_ghz(&self) -> f64 {
+        0.5
+    }
+
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz()
+    }
+
+    /// Activation+restore latency in ns. ARx4 (128 rows) has half the
+    /// cycle of ARx1 (512 rows) [10][28]; interpolate with a √-like
+    /// decay anchored at those two points.
+    pub fn t_ras_ns(&self) -> f64 {
+        let base = 29.0;
+        base * Self::ar_latency_factor(self.ar)
+    }
+
+    pub fn t_rp_ns(&self) -> f64 {
+        16.0 * Self::ar_latency_factor(self.ar)
+    }
+
+    pub fn t_rrd_ns(&self) -> f64 {
+        2.0
+    }
+
+    fn ar_latency_factor(ar: u32) -> f64 {
+        // anchors: AR×1 → 1.0, AR×4 → 0.5 (paper quote), AR×2/AR×8
+        // interpolated/extrapolated geometrically (×~0.7 per AR doubling).
+        match ar {
+            1 => 1.0,
+            2 => 0.71,
+            4 => 0.5,
+            8 => 0.36,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Row activate+precharge round trip in logic cycles.
+    pub fn act_pre_cycles(&self) -> u64 {
+        ((self.t_ras_ns() + self.t_rp_ns()) / self.cycle_ns()).ceil() as u64
+    }
+
+    // ----------------------------------------------------------------
+    // Energy (Table II, 10 nm, AR×1 anchors; AR scaling per §II-D1)
+    // ----------------------------------------------------------------
+
+    /// Row activation energy in pJ.
+    pub fn e_row_act_pj(&self) -> f64 {
+        413.0 * Self::ar_energy_factor(self.ar)
+    }
+
+    fn ar_energy_factor(ar: u32) -> f64 {
+        // AR×4 consumes 33% less activation energy than AR×1 (§II-D1).
+        match ar {
+            1 => 1.0,
+            2 => 0.82,
+            4 => 0.67,
+            8 => 0.55,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Pre-GSA (local, intra-mat/subarray) data movement energy, pJ/bit.
+    pub fn e_pre_gsa_pj_per_bit(&self) -> f64 {
+        0.69
+    }
+
+    /// Post-GSA (bank-level) data movement energy, pJ/bit.
+    pub fn e_post_gsa_pj_per_bit(&self) -> f64 {
+        0.53
+    }
+
+    /// Channel IO energy, pJ/bit.
+    pub fn e_io_pj_per_bit(&self) -> f64 {
+        0.77
+    }
+
+    /// 64-bit full-adder energy per add step, pJ (synthesized NMU logic,
+    /// 10 nm — calibrated so ARx4-4k multiplication energy sits slightly
+    /// above the 4.1 pJ/op ASIC multipliers of CraterLake, §II-D1).
+    pub fn e_add64_pj(&self) -> f64 {
+        0.35
+    }
+
+    /// Horizontal data-link energy, pJ/bit (Table III: 5.3 fJ/b avg ×
+    /// wire-length factor ≈ global DL class).
+    pub fn e_hdl_pj_per_bit(&self) -> f64 {
+        0.0053
+    }
+
+    /// Inter-bank chain link energy, pJ/bit (Table III: 0.53 pJ/b).
+    pub fn e_chain_pj_per_bit(&self) -> f64 {
+        0.53
+    }
+
+    // ----------------------------------------------------------------
+    // Interconnect widths (§III-B/C, §V-A)
+    // ----------------------------------------------------------------
+
+    /// MDL/HDL link width per mat column / subarray (16-bit).
+    pub fn link_bits(&self) -> u64 {
+        16
+    }
+
+    /// Inter-bank chain width (256-bit).
+    pub fn interbank_bits(&self) -> u64 {
+        256
+    }
+
+    /// Channel IO width (pseudo-channel, 64-bit @ DDR — effective GB/s).
+    pub fn channel_io_gbps(&self) -> f64 {
+        // HBM2E: 3.2 Gb/s/pin × 64 pins / 8 = 25.6 GB/s per pseudo-channel
+        25.6
+    }
+
+    /// Intra-stack crossbar bisection bandwidth (GB/s, §V-A).
+    pub fn stack_bisection_gbps(&self) -> f64 {
+        64.0
+    }
+
+    /// Stack-to-stack bandwidth (GB/s, §V-A).
+    pub fn interstack_gbps(&self) -> f64 {
+        256.0
+    }
+
+    // ----------------------------------------------------------------
+    // Derived headline metrics (§VI-A3 anchors, used as tests)
+    // ----------------------------------------------------------------
+
+    /// Effective 64-bit multiplication throughput in TB/s, accounting for
+    /// row activations, operand transfer and shift-add serialization
+    /// (paper: ARx4-4k ≈ 637.61 TB/s).
+    pub fn effective_mult_tbps(&self, shifts_per_mult: u64) -> f64 {
+        let adders = self.total_adders() as f64;
+        // Per multiplication: `shifts` add cycles; operand movement and
+        // activations amortized over a full row of values per mat.
+        let vals = self.values_per_mat_row() * self.mats_per_subarray(); // per subarray row
+        let m = self.adders_per_subarray();
+        let blocks = (vals + m - 1) / m;
+        let ld_st = 2 * (self.mat_row_bits() / self.link_bits()); // operand in + result out
+        let total_cycles = self.act_pre_cycles() * 2
+            + blocks * shifts_per_mult
+            + 2 * ld_st;
+        let mults = vals as f64;
+        let mult_per_cycle_per_subarray = mults / total_cycles as f64;
+        let bytes = mult_per_cycle_per_subarray * 8.0 * self.total_subarrays() as f64;
+        bytes * self.clock_ghz() * 1e9 / 1e12 * adders / adders // TB/s
+    }
+
+    /// Peak internal NTT bandwidth in TB/s (paper: 2048 TB/s at ARx4,
+    /// 32 GB, half the subarrays transferring via 256-bit links).
+    pub fn peak_ntt_internal_tbps(&self) -> f64 {
+        let active = self.total_subarrays() as f64 / 2.0;
+        let bits_per_cycle = self.link_bits() as f64 * self.mats_per_subarray() as f64;
+        active * bits_per_cycle / 8.0 * self.clock_ghz() * 1e9 / 1e12
+    }
+
+    /// Total memory capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.stacks as u64 * 16 * (1 << 30)
+    }
+}
+
+impl Default for ArchConfig {
+    /// The paper's lowest-EDAP configuration (ARx4-4k).
+    fn default() -> Self {
+        Self::new(4, 4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_table2() {
+        let c = ArchConfig::new(1, 1024);
+        assert_eq!(c.subarrays_per_bank(), 128);
+        assert_eq!(c.total_banks(), 512);
+        assert_eq!(c.capacity_bytes(), 32 << 30);
+        let c8 = ArchConfig::new(8, 8192);
+        assert_eq!(c8.subarrays_per_bank(), 1024);
+        assert_eq!(c8.rows_per_mat(), 64);
+    }
+
+    #[test]
+    fn arx4_4k_has_16m_adders() {
+        // §VI-A3: "ARx4-4k FHEmem has 16 million 64-bit adders".
+        let c = ArchConfig::new(4, 4096);
+        let adders = c.total_adders();
+        assert!(
+            (15_000_000..18_000_000).contains(&adders),
+            "adders = {adders}"
+        );
+    }
+
+    #[test]
+    fn effective_mult_throughput_near_paper() {
+        // §VI-A3: ARx4-4k effective 64-bit mult throughput ≈ 637.61 TB/s
+        // (with Montgomery-friendly shifts ≈ 3 rather than full 64).
+        let c = ArchConfig::new(4, 4096);
+        let t = c.effective_mult_tbps(3);
+        assert!(
+            (300.0..1100.0).contains(&t),
+            "effective mult throughput {t} TB/s far from paper's 637"
+        );
+    }
+
+    #[test]
+    fn peak_ntt_bandwidth_near_paper() {
+        // §VI-A3: 2048 TB/s peak internal NTT bandwidth at ARx4 / 32 GB.
+        let c = ArchConfig::new(4, 4096);
+        let bw = c.peak_ntt_internal_tbps();
+        assert!(
+            (1000.0..3000.0).contains(&bw),
+            "peak NTT bw {bw} TB/s far from paper's 2048"
+        );
+    }
+
+    #[test]
+    fn ar_scaling_monotone() {
+        let mut last_t = f64::MAX;
+        let mut last_e = f64::MAX;
+        for ar in [1u32, 2, 4, 8] {
+            let c = ArchConfig::new(ar, 4096);
+            assert!(c.t_ras_ns() < last_t);
+            assert!(c.e_row_act_pj() < last_e);
+            last_t = c.t_ras_ns();
+            last_e = c.e_row_act_pj();
+        }
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for c in ArchConfig::design_space() {
+            assert_eq!(ArchConfig::parse(&c.name()), Some(c));
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! Per-primitive cost models: NMU command streams (Table I) lowered to
+//! cycles and energy on an [`ArchConfig`].
+//!
+//! The paper's in-house simulator is trace-driven at DRAM-command
+//! granularity; at paper scale (2^16-coefficient polynomials × 30 limbs ×
+//! millions of HE-ops) that is billions of commands, so — like the paper's
+//! own evaluation — we lower each *polynomial-level* primitive to its
+//! closed-form command counts (derived from the Table I costs and the
+//! §IV data layout) and aggregate. `commands.rs` keeps the literal
+//! command-level model; `cost_model_matches_command_sim` cross-checks the
+//! two on small instances.
+
+use super::config::ArchConfig;
+
+/// Cycle + energy pair, accumulated per breakdown category (Fig. 13).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub cycles: f64,
+    pub energy_pj: f64,
+}
+
+impl Cost {
+    pub fn new(cycles: f64, energy_pj: f64) -> Self {
+        Self { cycles, energy_pj }
+    }
+    pub fn add(&mut self, o: Cost) {
+        self.cycles += o.cycles;
+        self.energy_pj += o.energy_pj;
+    }
+    pub fn scaled(self, f: f64) -> Cost {
+        Cost::new(self.cycles * f, self.energy_pj * f)
+    }
+}
+
+/// Fig. 13 breakdown categories.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub computation: Cost,
+    pub permutation: Cost,
+    pub read_write: Cost,
+    pub interbank: Cost,
+    pub channel: Cost,
+    pub stack: Cost,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> Cost {
+        let mut t = Cost::default();
+        for c in [
+            self.computation,
+            self.permutation,
+            self.read_write,
+            self.interbank,
+            self.channel,
+            self.stack,
+        ] {
+            t.add(c);
+        }
+        t
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.computation.add(o.computation);
+        self.permutation.add(o.permutation);
+        self.read_write.add(o.read_write);
+        self.interbank.add(o.interbank);
+        self.channel.add(o.channel);
+        self.stack.add(o.stack);
+    }
+
+    pub fn scaled(&self, f: f64) -> Breakdown {
+        Breakdown {
+            computation: self.computation.scaled(f),
+            permutation: self.permutation.scaled(f),
+            read_write: self.read_write.scaled(f),
+            interbank: self.interbank.scaled(f),
+            channel: self.channel.scaled(f),
+            stack: self.stack.scaled(f),
+        }
+    }
+}
+
+/// FHE parameter shape the cost model needs (decoupled from the
+/// functional `CkksParams` so paper-scale settings cost without building
+/// numerics).
+#[derive(Debug, Clone, Copy)]
+pub struct FheShape {
+    pub log_n: usize,
+    pub limbs: usize,
+    pub k_special: usize,
+    pub dnum: usize,
+    /// Shift-add steps per (constant) modular multiplication: the modulus
+    /// hamming weight h with Montgomery-friendly moduli, 64 without
+    /// (paper §IV-B / Fig. 15 Base0).
+    pub mult_shifts: u64,
+}
+
+impl FheShape {
+    pub fn n(&self) -> usize {
+        1 << self.log_n
+    }
+
+    pub fn paper_deep(montgomery: bool) -> Self {
+        Self {
+            log_n: 16,
+            limbs: 24,
+            k_special: 6,
+            dnum: 4,
+            mult_shifts: if montgomery { 3 } else { 64 },
+        }
+    }
+
+    pub fn paper_lola(levels: usize) -> Self {
+        Self {
+            log_n: 14,
+            limbs: levels,
+            k_special: 1,
+            dnum: 1,
+            mult_shifts: 3,
+        }
+    }
+}
+
+/// The §IV-A data layout: one RNS polynomial spread over a subarray group
+/// (16 subarrays = 16×16 mats).
+pub struct Layout {
+    pub coeffs_per_mat: u64,
+    pub rows_per_poly_per_mat: u64,
+    pub groups_per_bank: u64,
+    pub total_groups: u64,
+}
+
+pub fn layout(cfg: &ArchConfig, shape: &FheShape) -> Layout {
+    let mats = 256u64; // 16×16 per group
+    let coeffs_per_mat = (shape.n() as u64 + mats - 1) / mats;
+    let rows = (coeffs_per_mat * 64 + cfg.mat_row_bits() - 1) / cfg.mat_row_bits();
+    let subarrays_per_group = 16u64;
+    Layout {
+        coeffs_per_mat,
+        rows_per_poly_per_mat: rows,
+        groups_per_bank: cfg.subarrays_per_bank() / subarrays_per_group,
+        total_groups: cfg.total_subarrays() / subarrays_per_group,
+    }
+}
+
+/// Cost model over one subarray group processing one RNS polynomial
+/// (per-limb). Group-level costs scale across limbs/polys by the engine.
+pub struct CostModel<'a> {
+    pub cfg: &'a ArchConfig,
+    pub shape: FheShape,
+    pub lay: Layout,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(cfg: &'a ArchConfig, shape: FheShape) -> Self {
+        let lay = layout(cfg, &shape);
+        Self { cfg, shape, lay }
+    }
+
+    /// Row-worth of NMU arithmetic (Fig. 5): activate two operand rows,
+    /// stream M-value blocks through the adders, write back.
+    fn row_op_cycles(&self, shifts: u64) -> f64 {
+        let cfg = self.cfg;
+        let vals = cfg.values_per_mat_row();
+        let m = cfg.adders_per_subarray() / cfg.mats_per_subarray(); // adders per NMU
+        let m = m.max(1);
+        let blocks = (vals + m - 1) / m;
+        let ld = cfg.mat_row_bits() / cfg.link_bits(); // row → latches
+        let st = ld;
+        (2 * cfg.act_pre_cycles() + ld + st + blocks * shifts) as f64
+    }
+
+    fn row_op_energy(&self, shifts: u64) -> f64 {
+        let cfg = self.cfg;
+        let vals = cfg.values_per_mat_row() * cfg.mats_per_subarray();
+        let bits_moved = 2.0 * cfg.mat_row_bits() as f64 * cfg.mats_per_subarray() as f64;
+        2.0 * cfg.e_row_act_pj()
+            + bits_moved * cfg.e_pre_gsa_pj_per_bit()
+            + vals as f64 * shifts as f64 * cfg.e_add64_pj()
+    }
+
+    /// Pointwise modular multiplication of one residue polynomial
+    /// (vector of N coeffs across the group) — Montgomery: 2 constant
+    /// mults of `mult_shifts` adds + the data mult of ~`3·h` effective
+    /// adds (paper §IV-B: h additions instead of n).
+    pub fn modmul_poly(&self) -> Breakdown {
+        let rows = self.lay.rows_per_poly_per_mat;
+        let shifts = 3 * self.shape.mult_shifts; // mult + 2 Montgomery consts
+        let cycles = rows as f64 * self.row_op_cycles(shifts);
+        let energy = rows as f64 * self.row_op_energy(shifts);
+        Breakdown {
+            computation: Cost::new(cycles, energy),
+            ..Default::default()
+        }
+    }
+
+    /// Pointwise modular addition of one residue polynomial.
+    pub fn modadd_poly(&self) -> Breakdown {
+        let rows = self.lay.rows_per_poly_per_mat;
+        let cycles = rows as f64 * self.row_op_cycles(1);
+        let energy = rows as f64 * self.row_op_energy(1);
+        Breakdown {
+            computation: Cost::new(cycles, energy),
+            ..Default::default()
+        }
+    }
+
+    /// One (i)NTT of one residue polynomial (paper §IV-C): intra-mat
+    /// stages + horizontal inter-mat + vertical inter-mat stages with
+    /// segment-dependent transfer latency.
+    pub fn ntt_poly(&self) -> Breakdown {
+        let cfg = self.cfg;
+        let logn = self.shape.log_n as u64;
+        let log_cpm = (self.lay.coeffs_per_mat as f64).log2() as u64;
+        let intra_stages = log_cpm.min(logn);
+        let inter_stages = logn - intra_stages; // 8 for logN=16 (4 h + 4 v)
+        let h_stages = inter_stages / 2;
+        let v_stages = inter_stages - h_stages;
+
+        // Compute: each stage does N/2 butterflies/group = one twiddle
+        // mult + add/sub per pair → ~rows/2 row-ops of mult work + dynamic
+        // twiddle update (one extra mult per stage, §IV-A3).
+        let rows = self.lay.rows_per_poly_per_mat as f64;
+        let shifts = 3 * self.shape.mult_shifts;
+        let comp_per_stage = (rows / 2.0 + rows / 2.0) * self.row_op_cycles(shifts);
+        let comp_energy_per_stage = rows * self.row_op_energy(shifts);
+        let mut bd = Breakdown::default();
+        bd.computation = Cost::new(
+            comp_per_stage * logn as f64,
+            comp_energy_per_stage * logn as f64,
+        );
+
+        // Permutation: inter-mat stages move half the polynomial between
+        // mats over 16-bit HDL/MDL segments. Stage k of the h (v) pass
+        // has 2^k independent segments (switch-isolated, §III-B); fewer
+        // segments ⇒ serialized transfers ⇒ the paper's "slowest step
+        // drops bandwidth 16×".
+        let row_xfer = cfg.mat_row_bits() / cfg.link_bits(); // 32 cycles
+        let mut perm_cycles = 0.0;
+        for pass_stages in [h_stages, v_stages] {
+            for k in 0..pass_stages {
+                let segments = 1u64 << k.min(4);
+                let serial = (16 / segments).max(1);
+                perm_cycles += (rows / 2.0) * (row_xfer * serial) as f64;
+            }
+        }
+        let bits_moved =
+            (inter_stages as f64) * (self.shape.n() as f64 / 2.0) * 64.0;
+        bd.permutation = Cost::new(perm_cycles, bits_moved * cfg.e_hdl_pj_per_bit() * 4.0);
+        // Row activations for the moved data.
+        let acts = inter_stages as f64 * rows;
+        bd.read_write = Cost::new(
+            acts * cfg.act_pre_cycles() as f64,
+            acts * cfg.e_row_act_pj() * cfg.mats_per_subarray() as f64,
+        );
+        bd
+    }
+
+    /// Automorphism of one residue polynomial (§IV-E): in-NMU permuted
+    /// store (`nmu_pst`), one vertical and one horizontal inter-mat pass.
+    pub fn automorphism_poly(&self) -> Breakdown {
+        let cfg = self.cfg;
+        let rows = self.lay.rows_per_poly_per_mat as f64;
+        let row_xfer = (cfg.mat_row_bits() / cfg.link_bits()) as f64;
+        // Step 1: per-row permutation via nmu_pst: 4 cycles per 64b value.
+        let vals_per_row = cfg.values_per_mat_row() as f64;
+        let pst = rows * vals_per_row * 4.0;
+        // Steps 2–3: vertical then horizontal full-row moves.
+        let moves = 2.0 * rows * row_xfer;
+        let bits = 2.0 * self.shape.n() as f64 * 64.0;
+        Breakdown {
+            permutation: Cost::new(pst + moves, bits * cfg.e_hdl_pj_per_bit() * 4.0),
+            read_write: Cost::new(
+                2.0 * rows * cfg.act_pre_cycles() as f64,
+                2.0 * rows * cfg.e_row_act_pj() * cfg.mats_per_subarray() as f64,
+            ),
+            ..Default::default()
+        }
+    }
+
+    /// BConv from `l_in` to `l_out` residue polynomials (§IV-D): parallel
+    /// partial products, MDL adder-tree intra-bank reduction, inter-bank
+    /// all-to-all of partial products over the 256-bit chain network.
+    pub fn bconv(&self, l_in: usize, l_out: usize, use_chain: bool) -> Breakdown {
+        let cfg = self.cfg;
+        let mut bd = Breakdown::default();
+        // Partial products: l_in × l_out modmuls, parallel over groups —
+        // engine folds parallelism; here cost is per-(in,out) pair chain:
+        // one mult + tree-add depth log2(l_in).
+        let mults = (l_in * l_out) as f64;
+        let mm = self.modmul_poly();
+        bd.computation = Cost::new(
+            mm.computation.cycles * mults,
+            mm.computation.energy_pj * mults,
+        );
+        let adds = (l_in as f64).log2().ceil() * l_out as f64;
+        let ma = self.modadd_poly();
+        bd.computation.add(Cost::new(
+            ma.computation.cycles * adds,
+            ma.computation.energy_pj * adds,
+        ));
+        // Inter-bank movement: every output needs partial products from
+        // every bank holding an input limb: ~l_in·l_out poly transfers.
+        let poly_bits = self.shape.n() as f64 * 64.0;
+        let total_bits = poly_bits * mults;
+        if use_chain {
+            // Parallel chain: banks/2 links in a pseudo-channel carry
+            // transfers concurrently (§III-C), each 256 b/cycle — vs the
+            // single shared channel bus of the Base1 configuration.
+            let links = (cfg.banks_per_pchannel() / 2) as f64;
+            let cycles = total_bits / (cfg.interbank_bits() as f64 * links);
+            bd.interbank = Cost::new(cycles, total_bits * cfg.e_chain_pj_per_bit());
+        } else {
+            // Base1: all transfers through the shared channel IO.
+            let bytes = total_bits / 8.0;
+            let ns = bytes / (cfg.channel_io_gbps() * 1e9) * 1e9;
+            let cycles = ns / cfg.cycle_ns();
+            bd.channel = Cost::new(cycles, total_bits * cfg.e_io_pj_per_bit());
+        }
+        bd
+    }
+
+    /// Generalized key switching (§II-A; the dominant primitive): per
+    /// digit ModUp BConv + NTTs + inner products, then ModDown.
+    pub fn keyswitch(&self, use_chain: bool) -> Breakdown {
+        let l = self.shape.limbs;
+        let k = self.shape.k_special;
+        let dnum = self.shape.dnum.min(l).max(1);
+        let alpha = (l + dnum - 1) / dnum;
+        let mut bd = Breakdown::default();
+        // iNTT the input (l limbs).
+        let ntt = self.ntt_poly();
+        bd.add(&ntt.scaled(l as f64));
+        for _digit in 0..dnum {
+            // ModUp: alpha → (l - alpha + k) BConv.
+            bd.add(&self.bconv(alpha, l - alpha + k, use_chain));
+            // NTT of the extended digit (l + k limbs).
+            bd.add(&ntt.scaled((l + k) as f64));
+            // Inner product with evk: 2 polys × (l+k) limbs mult + acc.
+            let mm = self.modmul_poly();
+            let ma = self.modadd_poly();
+            bd.add(&mm.scaled(2.0 * (l + k) as f64));
+            bd.add(&ma.scaled(2.0 * (l + k) as f64));
+        }
+        // ModDown: iNTT(k) + BConv(k → l) + sub/mult on l limbs, ×2 polys.
+        bd.add(&ntt.scaled((2 * k) as f64));
+        bd.add(&self.bconv(k, l, use_chain).scaled(2.0));
+        let mm = self.modmul_poly();
+        bd.add(&mm.scaled(2.0 * l as f64));
+        // NTT back (2 polys × l limbs).
+        bd.add(&ntt.scaled(2.0 * l as f64));
+        bd
+    }
+
+    /// Key material loaded per key switch (evk digits), bytes — drives
+    /// the load-save pipeline's data-loading term (§IV-F3).
+    pub fn evk_bytes(&self) -> f64 {
+        let l = self.shape.limbs;
+        let k = self.shape.k_special;
+        let dnum = self.shape.dnum.min(l).max(1);
+        (2 * dnum * (l + k)) as f64 * self.shape.n() as f64 * 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(cfg: &ArchConfig) -> CostModel<'_> {
+        CostModel::new(cfg, FheShape::paper_deep(true))
+    }
+
+    #[test]
+    fn layout_matches_paper_section_iv_a() {
+        // logN=16 over 16×16 mats: 256 coefficients per mat, 32 rows
+        // of 512-bit holding 8×64b each (paper §IV-A1).
+        let cfg = ArchConfig::default();
+        let m = model(&cfg);
+        assert_eq!(m.lay.coeffs_per_mat, 256);
+        assert_eq!(m.lay.rows_per_poly_per_mat, 32);
+    }
+
+    #[test]
+    fn montgomery_moduli_speed_up_compute() {
+        // Fig. 15(1): h-weight moduli vs 64-shift generic ⇒ faster.
+        let cfg = ArchConfig::new(2, 2048);
+        let fast = CostModel::new(&cfg, FheShape::paper_deep(true));
+        let slow = CostModel::new(&cfg, FheShape::paper_deep(false));
+        let f = fast.modmul_poly().computation.cycles;
+        let s = slow.modmul_poly().computation.cycles;
+        assert!(s > 1.5 * f, "montgomery {f} vs generic {s}");
+    }
+
+    #[test]
+    fn interbank_chain_beats_channel_io() {
+        // Fig. 15(2): the chain network reduces BConv movement latency
+        // (paper: ~3.2× on movement).
+        let cfg = ArchConfig::default();
+        let m = model(&cfg);
+        let with = m.bconv(6, 24, true);
+        let without = m.bconv(6, 24, false);
+        let t_with = with.interbank.cycles;
+        let t_without = without.channel.cycles;
+        assert!(
+            t_without > 2.0 * t_with,
+            "chain {t_with} vs channel {t_without}"
+        );
+    }
+
+    #[test]
+    fn keyswitch_dominated_by_ntt_and_movement() {
+        let cfg = ArchConfig::default();
+        let m = model(&cfg);
+        let ks = m.keyswitch(true);
+        let total = ks.total().cycles;
+        assert!(total > 0.0);
+        // sanity: all categories populated
+        assert!(ks.computation.cycles > 0.0);
+        assert!(ks.permutation.cycles > 0.0);
+        assert!(ks.interbank.cycles > 0.0);
+    }
+
+    #[test]
+    fn higher_ar_lowers_primitive_latency() {
+        let shape = FheShape::paper_deep(true);
+        let mut last = f64::MAX;
+        for ar in [1u32, 2, 4, 8] {
+            let cfg = ArchConfig::new(ar, 4096);
+            let m = CostModel::new(&cfg, shape);
+            let c = m.ntt_poly().total().cycles;
+            assert!(c < last, "AR{ar}: {c} !< {last}");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn wider_adders_lower_compute_latency() {
+        let shape = FheShape::paper_deep(true);
+        let mut last = f64::MAX;
+        for w in [1024u32, 2048, 4096, 8192] {
+            let cfg = ArchConfig::new(4, w);
+            let m = CostModel::new(&cfg, shape);
+            let c = m.modmul_poly().computation.cycles;
+            assert!(c <= last);
+            last = c;
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Workload engine: FHE-op traces → latency / energy / power on an
+//! [`ArchConfig`], through the §IV mapping (subarray-group layout,
+//! bank-level pipeline stages, load-save rounds).
+//!
+//! Reported quantities follow §V-C: per-input time is the *bottleneck
+//! pipeline-stage latency* when the pipeline is full, times the number of
+//! load-save rounds, divided by the concurrent pipelines that fit in
+//! memory.
+
+use super::config::ArchConfig;
+use super::cost::{Breakdown, Cost, CostModel, FheShape};
+use crate::trace::{FheOp, Trace};
+
+/// Mapping/optimization switches (Fig. 15 ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Montgomery-friendly moduli (§IV-B). Off = Base0.
+    pub montgomery: bool,
+    /// Customized inter-bank chain network (§III-C). Off = Base1.
+    pub interbank_chain: bool,
+    /// Load-save pipeline mapping (§IV-F3). Off = Base2-style naive.
+    pub load_save: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            montgomery: true,
+            interbank_chain: true,
+            load_save: true,
+        }
+    }
+}
+
+/// Simulation output for one (config, trace, options) point.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub config: ArchConfig,
+    pub workload: &'static str,
+    /// Seconds per input with the pipeline full.
+    pub latency_s: f64,
+    /// Energy per input, joules.
+    pub energy_j: f64,
+    /// Average power during steady state, W.
+    pub power_w: f64,
+    pub area_mm2: f64,
+    pub breakdown: Breakdown,
+}
+
+impl SimResult {
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.latency_s
+    }
+    pub fn edap(&self) -> f64 {
+        self.edp() * self.area_mm2
+    }
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.latency_s
+    }
+}
+
+/// Per-op breakdown on one bank-partition (group-parallel over limbs).
+fn op_breakdown(model: &CostModel, cfg: &ArchConfig, op: FheOp, opts: &SimOptions) -> Breakdown {
+    let l = model.shape.limbs as f64;
+    let k = model.shape.k_special as f64;
+    // Limb-level parallelism within one allocation unit (bank): each
+    // subarray group holds one residue poly (§IV-A).
+    let groups = (cfg.subarrays_per_bank() / 16).max(1) as f64;
+    let pf = groups.min(l + k);
+    let chain = opts.interbank_chain;
+    let mut bd = match op {
+        FheOp::HAdd => model.modadd_poly().scaled(2.0 * l),
+        FheOp::PMul => {
+            let mut b = model.modmul_poly().scaled(2.0 * l);
+            b.add(&model.modmul_poly().scaled(l)); // rescale fused
+            b
+        }
+        FheOp::Rescale => model.modmul_poly().scaled(2.0 * l),
+        FheOp::HMul => {
+            let mut b = model.modmul_poly().scaled(4.0 * l); // tensor
+            b.add(&model.keyswitch(chain));
+            b.add(&model.modmul_poly().scaled(2.0 * l)); // rescale
+            b
+        }
+        FheOp::HRot => {
+            let mut b = model.automorphism_poly().scaled(2.0 * l);
+            b.add(&model.keyswitch(chain));
+            b
+        }
+        FheOp::Bootstrap => unreachable!("expand_bootstrap first"),
+    };
+    // Divide group-parallel categories by pf; interbank scales with the
+    // concurrent chain links in a channel (§III-C).
+    bd.computation = bd.computation.scaled(1.0 / pf);
+    bd.permutation = bd.permutation.scaled(1.0 / pf);
+    bd.read_write = bd.read_write.scaled(1.0 / pf);
+    bd
+}
+
+/// Simulate one workload trace on one configuration.
+pub fn simulate(cfg: &ArchConfig, trace: &Trace, opts: SimOptions) -> SimResult {
+    let trace = trace.expand_bootstrap();
+    let shape = FheShape {
+        log_n: trace.log_n,
+        limbs: trace.limbs,
+        k_special: if trace.log_n >= 16 { 6 } else { 1 },
+        dnum: if trace.log_n >= 16 { 4 } else { 1 },
+        mult_shifts: if opts.montgomery { 3 } else { 64 },
+    };
+    let model = CostModel::new(cfg, shape);
+
+    // ---- pipeline staging (§IV-F): ops round-robin over banks ----
+    let partitions = cfg.total_banks() as usize;
+    let stages = trace.ops.len().min(partitions).max(1);
+    let mut stage_bd: Vec<Breakdown> = vec![Breakdown::default(); stages];
+    let mut total_bd = Breakdown::default();
+    for (i, &op) in trace.ops.iter().enumerate() {
+        let bd = op_breakdown(&model, cfg, op, &opts);
+        stage_bd[i % stages].add(&bd);
+        total_bd.add(&bd);
+    }
+
+    // Inter-stage ciphertext transfer: one ct (2·L·N·8 bytes) per stage
+    // hop via channel/stack IO.
+    let ct_bytes = 2.0 * trace.limbs as f64 * (1u64 << trace.log_n) as f64 * 8.0;
+    let hop_ns = ct_bytes / (cfg.stack_bisection_gbps() * 1e9) * 1e9;
+    let hop_cycles = hop_ns / cfg.cycle_ns();
+    let hop_energy = ct_bytes * 8.0 * cfg.e_io_pj_per_bit();
+    for bd in stage_bd.iter_mut() {
+        bd.stack.add(Cost::new(hop_cycles, hop_energy));
+        total_bd.stack.add(Cost::new(hop_cycles, hop_energy));
+    }
+
+    // ---- constant loading (load-save pipeline, §IV-F3) ----
+    // Constants = plaintext weights + the distinct key-switching keys
+    // the trace touches (relin + rotation keys; capped at the distinct
+    // key estimate). Naive mapping reloads per input; load-save loads
+    // once per round and amortizes over the batch (Fig. 11).
+    let ks_ops = trace
+        .ops
+        .iter()
+        .filter(|o| matches!(o, FheOp::HMul | FheOp::HRot))
+        .count() as f64;
+    let distinct_keys = ks_ops.min(64.0);
+    let key_bytes = distinct_keys * model.evk_bytes();
+    let const_bits = (trace.const_bytes + key_bytes) * 8.0;
+    let io_bw_bits = cfg.interstack_gbps() * 8.0 * 1e9; // external feed
+    let load_cycles_full = const_bits / io_bw_bits * 1e9 / cfg.cycle_ns();
+    let (load_cycles, load_energy) = if opts.load_save {
+        (
+            load_cycles_full / trace.batch as f64,
+            const_bits * cfg.e_io_pj_per_bit() / trace.batch as f64,
+        )
+    } else {
+        // every stage re-loads its constants for every input
+        (load_cycles_full, const_bits * cfg.e_io_pj_per_bit())
+    };
+    total_bd.channel.add(Cost::new(load_cycles, load_energy));
+
+    // ---- bottleneck stage = per-input latency when pipeline is full ----
+    let bottleneck = stage_bd
+        .iter()
+        .map(|b| b.total().cycles)
+        .fold(0.0f64, f64::max)
+        + load_cycles;
+
+    // Multiple independent pipelines when memory allows (§V-C).
+    let pipeline_mem = ct_bytes * trace.ops.len().min(partitions) as f64 * 3.0
+        + trace.const_bytes;
+    let pipelines = ((cfg.capacity_bytes() as f64 * 0.6) / pipeline_mem)
+        .floor()
+        .max(1.0);
+
+    let latency_s = bottleneck * cfg.cycle_ns() * 1e-9 / pipelines;
+    let energy_j = total_bd.total().energy_pj * 1e-12;
+    let power_w = if latency_s > 0.0 {
+        // steady-state: energy of one input / time of one input, plus
+        // peripheral/static power.
+        energy_j / (bottleneck * cfg.cycle_ns() * 1e-9)
+            + super::area::peripheral_power_w(cfg)
+    } else {
+        0.0
+    };
+
+    SimResult {
+        config: *cfg,
+        workload: trace.name,
+        latency_s,
+        energy_j,
+        power_w,
+        area_mm2: super::area::total_area_mm2(cfg),
+        breakdown: total_bd,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workloads;
+
+    #[test]
+    fn higher_ar_is_faster() {
+        let t = workloads::helr();
+        let mut last = f64::MAX;
+        for ar in [1u32, 2, 4, 8] {
+            let r = simulate(&ArchConfig::new(ar, 4096), &t, SimOptions::default());
+            assert!(r.latency_s < last, "AR{ar}: {} !< {last}", r.latency_s);
+            last = r.latency_s;
+        }
+    }
+
+    #[test]
+    fn montgomery_ablation_helps_low_ar_most() {
+        // Fig. 15(1): ~1.68× on ARx2, shrinking at higher AR.
+        let t = workloads::helr();
+        let speedup = |ar: u32| {
+            let base = simulate(
+                &ArchConfig::new(ar, 2048),
+                &t,
+                SimOptions {
+                    montgomery: false,
+                    ..Default::default()
+                },
+            );
+            let opt = simulate(&ArchConfig::new(ar, 2048), &t, SimOptions::default());
+            base.latency_s / opt.latency_s
+        };
+        let s2 = speedup(2);
+        assert!(s2 > 1.2, "ARx2 montgomery speedup {s2}");
+    }
+
+    #[test]
+    fn interbank_chain_ablation_helps() {
+        // Fig. 15(2): 1.31–2.12× across ARs.
+        let t = workloads::bootstrapping();
+        let cfg = ArchConfig::new(4, 4096);
+        let base = simulate(
+            &cfg,
+            &t,
+            SimOptions {
+                interbank_chain: false,
+                ..Default::default()
+            },
+        );
+        let opt = simulate(&cfg, &t, SimOptions::default());
+        let s = base.latency_s / opt.latency_s;
+        assert!(s > 1.05, "chain speedup {s}");
+    }
+
+    #[test]
+    fn load_save_ablation_helps() {
+        // Fig. 15(3): 1.15–3.59×.
+        let t = workloads::helr();
+        let cfg = ArchConfig::new(8, 8192);
+        let base = simulate(
+            &cfg,
+            &t,
+            SimOptions {
+                load_save: false,
+                ..Default::default()
+            },
+        );
+        let opt = simulate(&cfg, &t, SimOptions::default());
+        let s = base.latency_s / opt.latency_s;
+        assert!(s > 1.1, "load-save speedup {s}");
+    }
+
+    #[test]
+    fn energy_and_power_positive_and_bounded() {
+        for t in workloads::all() {
+            let r = simulate(&ArchConfig::default(), &t, SimOptions::default());
+            assert!(r.latency_s > 0.0 && r.energy_j > 0.0);
+            assert!(
+                r.power_w > 1.0 && r.power_w < 2000.0,
+                "{}: {} W",
+                t.name,
+                r.power_w
+            );
+        }
+    }
+
+    #[test]
+    fn breakdown_totals_are_consistent() {
+        let t = workloads::resnet20();
+        let r = simulate(&ArchConfig::default(), &t, SimOptions::default());
+        let sum = r.breakdown.computation.cycles
+            + r.breakdown.permutation.cycles
+            + r.breakdown.read_write.cycles
+            + r.breakdown.interbank.cycles
+            + r.breakdown.channel.cycles
+            + r.breakdown.stack.cycles;
+        assert!((sum - r.breakdown.total().cycles).abs() < 1.0);
+    }
+}

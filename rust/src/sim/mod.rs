@@ -1,0 +1,13 @@
+//! The FHEmem hardware model (paper §III, §V-A, Tables I–III):
+//! configuration/geometry/timing/energy, the NMU command set, per-
+//! primitive cost models, the area/power model, and the workload engine.
+
+pub mod area;
+pub mod commands;
+pub mod config;
+pub mod cost;
+pub mod engine;
+
+pub use config::ArchConfig;
+pub use cost::{Breakdown, Cost, CostModel, FheShape};
+pub use engine::{simulate, SimOptions, SimResult};

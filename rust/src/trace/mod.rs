@@ -1,0 +1,112 @@
+//! FHE operation traces: the SSA-form op streams the mapping framework
+//! consumes (paper §IV-F1), plus generators for the paper's six
+//! evaluation workloads (§V-B).
+
+pub mod workloads;
+
+/// One high-level FHE operation (the granularity of §IV-F's pipeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FheOp {
+    /// Ciphertext × ciphertext with relinearization (includes KSO).
+    HMul,
+    /// Ciphertext × plaintext.
+    PMul,
+    HAdd,
+    /// Rotation: automorphism + key switch.
+    HRot,
+    /// Rescale (RNS divide-and-round).
+    Rescale,
+    /// Full bootstrapping (expanded by `expand_bootstrap`).
+    Bootstrap,
+}
+
+/// A workload trace: ops (SSA order, loops unrolled) plus metadata the
+/// engine needs for pipelining.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: &'static str,
+    pub ops: Vec<FheOp>,
+    /// Number of independent inputs streamed through the pipeline.
+    pub batch: usize,
+    /// Bytes of constant data (evk, plaintext weights) the pipeline must
+    /// load per stage-round (drives the load-save optimisation, §IV-F3).
+    pub const_bytes: f64,
+    /// log N the workload runs at.
+    pub log_n: usize,
+    pub limbs: usize,
+}
+
+impl Trace {
+    pub fn count(&self, op: FheOp) -> usize {
+        self.ops.iter().filter(|&&o| o == op).count()
+    }
+
+    /// Expand Bootstrap pseudo-ops into their primitive op sequence
+    /// (CoeffToSlot + EvalMod ×2 + SlotToCoeff as rotations/muls — the
+    /// same structure as `ckks::bootstrap`).
+    pub fn expand_bootstrap(&self) -> Trace {
+        let slots = (1usize << self.log_n) / 2;
+        let g = (slots as f64).sqrt().ceil() as usize;
+        let rot_per_transform = 2 * g; // BSGS babies + giants
+        let mut ops = Vec::new();
+        for &op in &self.ops {
+            if op == FheOp::Bootstrap {
+                // CoeffToSlot
+                for _ in 0..rot_per_transform {
+                    ops.push(FheOp::HRot);
+                }
+                for _ in 0..rot_per_transform {
+                    ops.push(FheOp::PMul);
+                }
+                ops.push(FheOp::Rescale);
+                // EvalMod ×2 branches: ~deg 31 Chebyshev + 3 doublings
+                for _ in 0..2 {
+                    for _ in 0..14 {
+                        ops.push(FheOp::HMul);
+                    }
+                    for _ in 0..31 {
+                        ops.push(FheOp::PMul);
+                    }
+                    for _ in 0..3 {
+                        ops.push(FheOp::HMul);
+                    }
+                }
+                // SlotToCoeff
+                for _ in 0..rot_per_transform {
+                    ops.push(FheOp::HRot);
+                }
+                for _ in 0..rot_per_transform {
+                    ops.push(FheOp::PMul);
+                }
+                ops.push(FheOp::Rescale);
+            } else {
+                ops.push(op);
+            }
+        }
+        Trace {
+            ops,
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_expansion_removes_pseudo_ops() {
+        let t = Trace {
+            name: "t",
+            ops: vec![FheOp::HMul, FheOp::Bootstrap],
+            batch: 1,
+            const_bytes: 0.0,
+            log_n: 16,
+            limbs: 24,
+        };
+        let e = t.expand_bootstrap();
+        assert_eq!(e.count(FheOp::Bootstrap), 0);
+        assert!(e.count(FheOp::HRot) > 100, "CtS/StC rotations missing");
+        assert!(e.count(FheOp::HMul) > 30, "EvalMod muls missing");
+    }
+}

@@ -1,0 +1,260 @@
+//! Trace generators for the paper's evaluation workloads (§V-B).
+//!
+//! Op counts follow each workload's published structure; weights/data are
+//! synthetic (trace shape is weight-independent — DESIGN.md
+//! "Substitutions").
+
+use super::{FheOp, Trace};
+
+/// HELR [19]: 30 iterations of homomorphic logistic regression,
+/// 1024 samples × 256 features per batch. Per iteration: encrypted
+/// dot-products (PMul + rotate-reduce), degree-3 sigmoid, weight update;
+/// bootstrapping every few iterations to restore depth.
+pub fn helr() -> Trace {
+    let mut ops = Vec::new();
+    let iters = 30;
+    let boots_every = 5; // depth budget at L=24, dnum=4
+    for it in 0..iters {
+        // dot product: feature PMul + log2(256) rotation reduce
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::Rescale);
+        for _ in 0..8 {
+            ops.push(FheOp::HRot);
+            ops.push(FheOp::HAdd);
+        }
+        // sigmoid ≈ deg-3 poly: 2 HMul + PMuls
+        ops.push(FheOp::HMul);
+        ops.push(FheOp::HMul);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+        // gradient: error × features, reduce over samples, update
+        ops.push(FheOp::HMul);
+        for _ in 0..8 {
+            ops.push(FheOp::HRot);
+            ops.push(FheOp::HAdd);
+        }
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+        if (it + 1) % boots_every == 0 {
+            ops.push(FheOp::Bootstrap);
+        }
+    }
+    Trace {
+        name: "helr",
+        ops,
+        batch: 16,
+        const_bytes: 256.0 * (1 << 16) as f64 * 8.0, // plaintext feature blocks
+        log_n: 16,
+        limbs: 24,
+    }
+}
+
+/// ResNet-20 [20]: CIFAR-10 inference. 20 conv layers (multi-channel im2col
+/// as rotation-heavy PMul accumulations), approximated ReLU (deg-7 ×2
+/// composition), average-pool + FC, with bootstrapping between blocks.
+pub fn resnet20() -> Trace {
+    let mut ops = Vec::new();
+    // per conv layer: ~C_out diagonal PMuls + rotations, here folded to
+    // the BSGS-packed counts of [20]: ~19 rotations + 9 PMuls per layer.
+    for layer in 0..20 {
+        for _ in 0..19 {
+            ops.push(FheOp::HRot);
+        }
+        for _ in 0..9 {
+            ops.push(FheOp::PMul);
+            ops.push(FheOp::HAdd);
+        }
+        ops.push(FheOp::Rescale);
+        // approx ReLU: two composed deg-7 evals ≈ 6 HMul + 8 PMul
+        for _ in 0..6 {
+            ops.push(FheOp::HMul);
+        }
+        for _ in 0..8 {
+            ops.push(FheOp::PMul);
+        }
+        if layer % 3 == 2 {
+            ops.push(FheOp::Bootstrap);
+        }
+    }
+    // avgpool + FC
+    for _ in 0..6 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::HAdd);
+    }
+    ops.push(FheOp::PMul);
+    Trace {
+        name: "resnet20",
+        ops,
+        batch: 4,
+        const_bytes: 3.0e8, // conv weight plaintexts
+        log_n: 16,
+        limbs: 24,
+    }
+}
+
+/// Sorting [41]: 2-way bitonic sort of 16,384 elements (as in SHARP).
+/// log²-depth compare-exchange network; each comparison is a deg-7
+/// approx-sign evaluation (HMuls) + rotations for lane alignment.
+pub fn sorting() -> Trace {
+    let n = 16_384usize;
+    let stages = {
+        let l = (n as f64).log2() as usize;
+        l * (l + 1) / 2 // bitonic depth = 14·15/2 = 105
+    };
+    let mut ops = Vec::new();
+    for s in 0..stages {
+        ops.push(FheOp::HRot); // partner alignment
+        // approximate comparison: deg-7 sign poly ≈ 5 HMul
+        for _ in 0..5 {
+            ops.push(FheOp::HMul);
+        }
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+        ops.push(FheOp::HAdd);
+        if s % 7 == 6 {
+            ops.push(FheOp::Bootstrap);
+        }
+    }
+    Trace {
+        name: "sorting",
+        ops,
+        batch: 2,
+        const_bytes: 1.0e7,
+        log_n: 16,
+        limbs: 24,
+    }
+}
+
+/// Single full bootstrapping (§V-B, Han–Ki minimum-key variant).
+pub fn bootstrapping() -> Trace {
+    Trace {
+        name: "bootstrapping",
+        ops: vec![FheOp::Bootstrap],
+        batch: 32,
+        const_bytes: 6.0e8, // rotation keys (minimum-key method)
+        log_n: 16,
+        limbs: 24,
+    }
+}
+
+/// LOLA-MNIST [21]: shallow network (1 conv + 2 FC), logN=14, no
+/// bootstrapping — CraterLake's shallow benchmark.
+pub fn lola_mnist() -> Trace {
+    let mut ops = Vec::new();
+    // conv as matrix mult: 5 rot + 5 pmul; square activation; FC ×2
+    for _ in 0..5 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    ops.push(FheOp::HMul); // square activation
+    for _ in 0..10 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    ops.push(FheOp::HMul);
+    for _ in 0..3 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    Trace {
+        name: "lola-mnist",
+        ops,
+        batch: 64,
+        const_bytes: 2.0e6,
+        log_n: 14,
+        limbs: 4,
+    }
+}
+
+/// LOLA-CIFAR [21]: the larger shallow network.
+pub fn lola_cifar() -> Trace {
+    let mut ops = Vec::new();
+    for _ in 0..16 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    ops.push(FheOp::HMul);
+    for _ in 0..32 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    ops.push(FheOp::HMul);
+    for _ in 0..8 {
+        ops.push(FheOp::HRot);
+        ops.push(FheOp::PMul);
+        ops.push(FheOp::HAdd);
+    }
+    Trace {
+        name: "lola-cifar",
+        ops,
+        batch: 32,
+        const_bytes: 2.0e7,
+        log_n: 14,
+        limbs: 6,
+    }
+}
+
+/// All six paper workloads.
+pub fn all() -> Vec<Trace> {
+    vec![
+        bootstrapping(),
+        helr(),
+        resnet20(),
+        sorting(),
+        lola_mnist(),
+        lola_cifar(),
+    ]
+}
+
+/// Deep workloads only (compared against SHARP in Fig. 12).
+pub fn deep() -> Vec<Trace> {
+    vec![bootstrapping(), helr(), resnet20(), sorting()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::FheOp;
+
+    #[test]
+    fn helr_runs_30_iterations_with_bootstraps() {
+        let t = helr();
+        assert_eq!(t.count(FheOp::Bootstrap), 6);
+        assert!(t.count(FheOp::HMul) >= 90); // ≥3 per iteration
+        assert_eq!(t.log_n, 16);
+    }
+
+    #[test]
+    fn resnet_is_rotation_heavy() {
+        let t = resnet20();
+        assert!(t.count(FheOp::HRot) > t.count(FheOp::HMul));
+        assert!(t.count(FheOp::Bootstrap) >= 5);
+    }
+
+    #[test]
+    fn sorting_depth_matches_bitonic() {
+        let t = sorting();
+        // 105 compare-exchange stages → ≥ 105 rotations
+        assert!(t.count(FheOp::HRot) >= 105);
+    }
+
+    #[test]
+    fn lola_has_no_bootstrapping() {
+        for t in [lola_mnist(), lola_cifar()] {
+            assert_eq!(t.count(FheOp::Bootstrap), 0);
+            assert_eq!(t.log_n, 14);
+        }
+    }
+
+    #[test]
+    fn all_six_workloads_present() {
+        let names: Vec<_> = all().iter().map(|t| t.name).collect();
+        assert_eq!(names.len(), 6);
+        assert!(names.contains(&"helr") && names.contains(&"lola-cifar"));
+    }
+}

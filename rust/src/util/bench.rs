@@ -1,0 +1,114 @@
+//! Minimal bench harness (offline substitute for `criterion`).
+//!
+//! Benches are declared with `harness = false` in `Cargo.toml` and call
+//! [`Bench::run`] / [`bench_fn`]. Timing uses median-of-samples with an
+//! automatic iteration count calibrated to a target per-sample time.
+
+use std::time::{Duration, Instant};
+
+/// A single measurement summary.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Measure `f`, returning per-iteration stats.
+///
+/// Calibrates the iteration count so each sample takes ≥ `target`,
+/// then takes `samples` samples and reports per-iteration durations.
+pub fn measure<F: FnMut()>(mut f: F, samples: usize, target: Duration) -> Stats {
+    // Warmup + calibration.
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed();
+        if el >= target || iters >= (1 << 30) {
+            break;
+        }
+        let scale = (target.as_secs_f64() / el.as_secs_f64().max(1e-9)).ceil();
+        iters = (iters as f64 * scale.clamp(2.0, 100.0)) as u64;
+    }
+    let mut durs: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        durs.push(t0.elapsed() / iters as u32);
+    }
+    durs.sort();
+    let mean = durs.iter().sum::<Duration>() / samples as u32;
+    Stats {
+        median: durs[samples / 2],
+        mean,
+        min: durs[0],
+        max: durs[samples - 1],
+        iters_per_sample: iters,
+    }
+}
+
+/// Named bench entry point used by the `benches/` binaries.
+pub fn bench_fn<F: FnMut()>(name: &str, f: F) -> Stats {
+    let stats = measure(f, 11, Duration::from_millis(20));
+    println!(
+        "{name:<48} median {:>12.3?}  (min {:?}, max {:?}, {} iters/sample)",
+        stats.median, stats.min, stats.max, stats.iters_per_sample
+    );
+    stats
+}
+
+/// Pretty duration for report tables.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let mut x = 0u64;
+        let s = measure(
+            || {
+                x = x.wrapping_add(std::hint::black_box(1));
+            },
+            5,
+            Duration::from_micros(200),
+        );
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal property-testing helper (offline substitute for `proptest`).
+//!
+//! A deterministic splitmix64 generator drives randomized checks; every
+//! failure reports the seed so the case can be replayed exactly.
+
+/// Deterministic splitmix64 PRNG — the seed source for property tests and
+/// for the crate's samplers (see [`crate::math::prng`]).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)` by rejection (bound > 0).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Rejection sampling to avoid modulo bias.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Run `cases` randomized checks of `property`, reporting the failing seed.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla_extension rpath in this image)
+/// use fhemem::util::check::{forall, SplitMix64};
+/// forall("add commutes", 64, |rng| {
+///     let (a, b) = (rng.next_u64(), rng.next_u64());
+///     assert_eq!(a.wrapping_add(b), b.wrapping_add(a));
+/// });
+/// ```
+pub fn forall<F: FnMut(&mut SplitMix64)>(name: &str, cases: u32, mut property: F) {
+    for case in 0..cases {
+        let seed = 0xF0E1_D2C3_B4A5_9687u64 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = SplitMix64::new(42);
+        for bound in [1u64, 2, 3, 17, 1 << 40] {
+            for _ in 0..200 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..1000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 4, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and only the crates vendored for
+//! the `xla` bridge are available, so the usual ecosystem helpers (clap,
+//! criterion, proptest, rand) are replaced by the minimal equivalents here.
+//! See DESIGN.md "Substitutions".
+
+pub mod bench;
+pub mod cli;
+pub mod check;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `log2` of a power of two.
+#[inline]
+pub fn log2_exact(x: u64) -> u32 {
+    debug_assert!(x.is_power_of_two(), "log2_exact({x}) of non-power-of-2");
+    x.trailing_zeros()
+}
+
+/// Reverse the low `bits` bits of `x` (bit-reversal permutation index).
+#[inline]
+pub fn bit_reverse(x: usize, bits: u32) -> usize {
+    if bits == 0 {
+        return 0;
+    }
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn log2_powers() {
+        for b in 0..63 {
+            assert_eq!(log2_exact(1 << b), b);
+        }
+    }
+
+    #[test]
+    fn bit_reverse_involution() {
+        for bits in 1..12u32 {
+            for x in 0..(1usize << bits) {
+                assert_eq!(bit_reverse(bit_reverse(x, bits), bits), x);
+            }
+        }
+    }
+
+    #[test]
+    fn bit_reverse_known() {
+        assert_eq!(bit_reverse(0b001, 3), 0b100);
+        assert_eq!(bit_reverse(0b011, 3), 0b110);
+        assert_eq!(bit_reverse(0b1, 1), 0b1);
+        assert_eq!(bit_reverse(0, 0), 0);
+    }
+}

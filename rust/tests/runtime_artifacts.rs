@@ -1,0 +1,211 @@
+//! Integration: the Rust CKKS math layer vs the AOT JAX/Pallas artifacts
+//! must agree *bit-exactly* on the artifact parameter set. This is the
+//! proof that L1/L2 (Python, build-time) and L3 (Rust, request path)
+//! compute the same scheme.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` — skipped
+//! (with a loud message) otherwise.
+
+use fhemem::math::modarith::mul_mod;
+use fhemem::math::ntt::NttTable;
+use fhemem::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
+use fhemem::util::check::SplitMix64;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifact load"))
+}
+
+fn rand_rows(rng: &mut SplitMix64, moduli: &[u64], n: usize) -> Vec<Vec<u64>> {
+    moduli
+        .iter()
+        .map(|&q| (0..n).map(|_| rng.below(q)).collect())
+        .collect()
+}
+
+#[test]
+fn hadd_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let moduli = rt.meta.all_moduli();
+    let n = rt.meta.n;
+    let mut rng = SplitMix64::new(42);
+    let b0 = rand_rows(&mut rng, &moduli, n);
+    let a0 = rand_rows(&mut rng, &moduli, n);
+    let b1 = rand_rows(&mut rng, &moduli, n);
+    let a1 = rand_rows(&mut rng, &moduli, n);
+    let out = rt
+        .execute(
+            "hadd",
+            &[
+                mat_literal(&b0).unwrap(),
+                mat_literal(&a0).unwrap(),
+                mat_literal(&b1).unwrap(),
+                mat_literal(&a1).unwrap(),
+                vec_literal(&moduli),
+            ],
+        )
+        .unwrap();
+    let got_b = literal_to_rows(&out[0], moduli.len(), n).unwrap();
+    let got_a = literal_to_rows(&out[1], moduli.len(), n).unwrap();
+    for (j, &q) in moduli.iter().enumerate() {
+        for c in 0..n {
+            assert_eq!(got_b[j][c], (b0[j][c] + b1[j][c]) % q);
+            assert_eq!(got_a[j][c], (a0[j][c] + a1[j][c]) % q);
+        }
+    }
+}
+
+#[test]
+fn hmul_tensor_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let moduli = rt.meta.all_moduli();
+    let n = rt.meta.n;
+    let mut rng = SplitMix64::new(43);
+    let b0 = rand_rows(&mut rng, &moduli, n);
+    let a0 = rand_rows(&mut rng, &moduli, n);
+    let b1 = rand_rows(&mut rng, &moduli, n);
+    let a1 = rand_rows(&mut rng, &moduli, n);
+    let out = rt
+        .execute(
+            "hmul_tensor",
+            &[
+                mat_literal(&b0).unwrap(),
+                mat_literal(&a0).unwrap(),
+                mat_literal(&b1).unwrap(),
+                mat_literal(&a1).unwrap(),
+                vec_literal(&moduli),
+            ],
+        )
+        .unwrap();
+    let d0 = literal_to_rows(&out[0], moduli.len(), n).unwrap();
+    let d1 = literal_to_rows(&out[1], moduli.len(), n).unwrap();
+    let d2 = literal_to_rows(&out[2], moduli.len(), n).unwrap();
+    for (j, &q) in moduli.iter().enumerate() {
+        for c in (0..n).step_by(7) {
+            assert_eq!(d0[j][c], mul_mod(b0[j][c], b1[j][c], q));
+            let want_d1 = (mul_mod(a0[j][c], b1[j][c], q) + mul_mod(a1[j][c], b0[j][c], q)) % q;
+            assert_eq!(d1[j][c], want_d1);
+            assert_eq!(d2[j][c], mul_mod(a0[j][c], a1[j][c], q));
+        }
+    }
+}
+
+#[test]
+fn ntt_roundtrip_matches_rust_tables() {
+    let Some(rt) = runtime() else { return };
+    let moduli = rt.meta.all_moduli();
+    let n = rt.meta.n;
+    let tables: Vec<NttTable> = moduli.iter().map(|&q| NttTable::new(q, n)).collect();
+    let psi_rev: Vec<Vec<u64>> = tables.iter().map(|t| t.psi_rev().to_vec()).collect();
+    let psi_inv_rev: Vec<Vec<u64>> = tables.iter().map(|t| t.psi_inv_rev().to_vec()).collect();
+    let n_inv: Vec<u64> = tables.iter().map(|t| t.n_inv()).collect();
+
+    let mut rng = SplitMix64::new(44);
+    let x = rand_rows(&mut rng, &moduli, n);
+
+    // Artifact forward must equal the Rust NTT exactly.
+    let out = rt
+        .execute(
+            "ntt_fwd",
+            &[
+                mat_literal(&x).unwrap(),
+                mat_literal(&psi_rev).unwrap(),
+                vec_literal(&moduli),
+            ],
+        )
+        .unwrap();
+    let fwd = literal_to_rows(&out[0], moduli.len(), n).unwrap();
+    for (j, table) in tables.iter().enumerate() {
+        let mut want = x[j].clone();
+        table.forward(&mut want);
+        assert_eq!(fwd[j], want, "limb {j} forward NTT mismatch");
+    }
+
+    // Artifact inverse must restore the input.
+    let out = rt
+        .execute(
+            "ntt_inv",
+            &[
+                mat_literal(&fwd).unwrap(),
+                mat_literal(&psi_inv_rev).unwrap(),
+                vec_literal(&n_inv),
+                vec_literal(&moduli),
+            ],
+        )
+        .unwrap();
+    let back = literal_to_rows(&out[0], moduli.len(), n).unwrap();
+    assert_eq!(back, x, "iNTT(NTT(x)) != x via artifacts");
+}
+
+#[test]
+fn automorphism_matches_rust_poly() {
+    use fhemem::math::poly::{Domain, RnsPoly};
+    use fhemem::math::primes::Modulus;
+    use fhemem::math::rns::RnsBasis;
+    use fhemem::runtime::vec_literal_i32;
+    use std::sync::Arc;
+
+    let Some(rt) = runtime() else { return };
+    let moduli = rt.meta.all_moduli();
+    let n = rt.meta.n;
+    let k = 5usize; // rotation galois element
+
+    // Gather map: out[i] = ±x[perm[i]] (inverse of the scatter the Rust
+    // automorphism uses).
+    let mut perm = vec![0i32; n];
+    let mut sign = vec![0u64; n];
+    for src in 0..n {
+        let tgt = (src * k) % (2 * n);
+        if tgt < n {
+            perm[tgt] = src as i32;
+            sign[tgt] = 0;
+        } else {
+            perm[tgt - n] = src as i32;
+            sign[tgt - n] = 1;
+        }
+    }
+
+    let mut rng = SplitMix64::new(45);
+    let x = rand_rows(&mut rng, &moduli, n);
+    let out = rt
+        .execute(
+            "automorphism",
+            &[
+                mat_literal(&x).unwrap(),
+                vec_literal_i32(&perm),
+                vec_literal(&sign),
+                vec_literal(&moduli),
+            ],
+        )
+        .unwrap();
+    let got = literal_to_rows(&out[0], moduli.len(), n).unwrap();
+
+    // Rust reference via RnsPoly::automorphism.
+    let mods: Vec<Modulus> = moduli
+        .iter()
+        .map(|&q| Modulus {
+            q,
+            hamming_weight: 0,
+            montgomery_friendly: false,
+        })
+        .collect();
+    let basis = Arc::new(RnsBasis::new(mods, n));
+    let mut poly = RnsPoly::zero(basis, moduli.len(), Domain::Coeff);
+    poly.data = x;
+    let want = poly.automorphism(k);
+    assert_eq!(got, want.data, "automorphism mismatch");
+}
+
+#[test]
+fn runtime_reports_entry_points() {
+    let Some(rt) = runtime() else { return };
+    for ep in fhemem::runtime::ENTRY_POINTS {
+        assert!(rt.has(ep), "missing artifact for {ep}");
+    }
+    assert!(!rt.platform().is_empty());
+}
