@@ -1,0 +1,20 @@
+"""Test bootstrap: import path + offline fallback for `hypothesis`.
+
+* Puts `python/` on sys.path so `from compile import ...` resolves no
+  matter where pytest is invoked from.
+* The image this repo is developed in is fully offline; when the real
+  `hypothesis` package is absent, a minimal deterministic shim (fixed
+  seeded draws per strategy) is installed under the same name so the
+  property tests still run. CI installs the real package.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+if importlib.util.find_spec("hypothesis") is None:
+    from _hypothesis_shim import install as _install_hypothesis_shim
+
+    _install_hypothesis_shim()

@@ -1,19 +1,160 @@
-//! Hot-path microbenches (§Perf): the Rust CKKS primitives and the
-//! simulator engine itself. Used for the performance pass — before/after
-//! numbers recorded in EXPERIMENTS.md §Perf.
+//! Hot-path microbenches (§Perf): the Rust CKKS primitives, the batched
+//! bank-pool execution engine, and the simulator engine itself.
+//!
+//! The headline measurement is the batched limb-parallel NTT at N = 8192
+//! (the axis FHEmem assigns to banks): serial vs bank-pool at 1/2/4/8
+//! threads, with a bit-identity cross-check between the serial and
+//! parallel paths. `--json PATH` writes the records to a JSON file
+//! (see BENCH_hotpath.json at the repo root for the tracked baseline):
+//!
+//! ```sh
+//! cargo bench --bench hotpath -- --json BENCH_hotpath.json
+//! ```
 
 use fhemem::ckks::{CkksContext, Evaluator, KeyChain};
 use fhemem::math::ntt::NttTable;
 use fhemem::math::primes::ntt_primes;
+use fhemem::parallel::BankPool;
 use fhemem::params::CkksParams;
 use fhemem::sim::{simulate, ArchConfig, SimOptions};
 use fhemem::trace::workloads;
 use fhemem::util::bench::bench_fn;
 use fhemem::util::check::SplitMix64;
+use fhemem::util::cli::Args;
 use std::sync::Arc;
 
+struct Record {
+    name: String,
+    threads: usize,
+    median_ns: f64,
+    speedup_vs_serial: f64,
+}
+
+/// Batched limb-parallel NTT at N=8192: batch × limbs independent rows,
+/// forward+inverse per iteration (roundtrip keeps the buffer valid).
+fn bench_batched_ntt(records: &mut Vec<Record>) -> bool {
+    let logn = 13usize;
+    let n = 1usize << logn;
+    let limbs = 8usize;
+    let batch = 8usize;
+    let tables: Vec<Arc<NttTable>> = ntt_primes(40, n, limbs)
+        .iter()
+        .map(|m| Arc::new(NttTable::new(m.q, n)))
+        .collect();
+    let mut rng = SplitMix64::new(1);
+    let rows: Vec<Vec<u64>> = (0..batch * limbs)
+        .map(|r| {
+            let q = tables[r % limbs].q;
+            (0..n).map(|_| rng.below(q)).collect()
+        })
+        .collect();
+
+    // Bit-identity: the parallel path must reproduce the serial path.
+    let serial_out = {
+        let mut buf = rows.clone();
+        for (r, row) in buf.iter_mut().enumerate() {
+            tables[r % limbs].forward(row);
+        }
+        buf
+    };
+    let par_out = {
+        let mut buf = rows.clone();
+        BankPool::new(0).par_rows(&mut buf, |r, row: &mut Vec<u64>| {
+            tables[r % limbs].forward(row)
+        });
+        buf
+    };
+    let bit_identical = serial_out == par_out;
+    println!(
+        "parallel-vs-serial NTT outputs bit-identical: {}",
+        if bit_identical { "yes" } else { "NO — BUG" }
+    );
+
+    let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut serial_ns = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let pool = BankPool::new(threads);
+        let mut buf = rows.clone();
+        let name =
+            format!("ntt fwd+inv batch={batch} limbs={limbs} n=2^{logn} threads={threads}");
+        let s = bench_fn(&name, || {
+            pool.par_rows(&mut buf, |r, row: &mut Vec<u64>| {
+                let t = &tables[r % limbs];
+                t.forward(row);
+                t.inverse(row);
+            });
+        });
+        let median_ns = s.median_ns();
+        if threads == 1 {
+            serial_ns = median_ns;
+        }
+        let speedup = if median_ns > 0.0 { serial_ns / median_ns } else { 0.0 };
+        println!("    -> {speedup:.2}x vs serial ({machine} hw threads available)");
+        records.push(Record {
+            name,
+            threads,
+            median_ns,
+            speedup_vs_serial: speedup,
+        });
+    }
+    bit_identical
+}
+
+fn bench_batched_ckks(records: &mut Vec<Record>) {
+    let ctx = CkksContext::new(CkksParams::func_default());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 1));
+    let ev = Evaluator::new(ctx.clone(), chain, 2);
+    let slots = ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.001 * (i % 97) as f64).collect();
+    let batch = 8usize;
+    let a: Vec<_> = (0..batch).map(|_| ev.encrypt_real(&z, ctx.l())).collect();
+    let b: Vec<_> = (0..batch).map(|_| ev.encrypt_real(&z, ctx.l())).collect();
+    let _ = ev.mul(&a[0], &b[0]); // warm the key cache
+    let pool_threads = fhemem::parallel::pool().threads();
+    let name = format!("ckks_hmul_batch={batch} logN=12 L=8 threads={pool_threads}");
+    let s = bench_fn(&name, || {
+        std::hint::black_box(ev.mul_batch(&a, &b));
+    });
+    records.push(Record {
+        name,
+        threads: pool_threads,
+        median_ns: s.median_ns(),
+        speedup_vs_serial: 0.0,
+    });
+}
+
+fn write_json(path: &str, records: &[Record], bit_identical: bool) {
+    let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"hotpath\",\n");
+    s.push_str(&format!("  \"machine_threads\": {machine},\n"));
+    s.push_str(&format!("  \"parallel_bit_identical_to_serial\": {bit_identical},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"threads\": {}, \"median_ns\": {:.1}, \
+             \"speedup_vs_serial\": {:.3}}}{}\n",
+            r.name,
+            r.threads,
+            r.median_ns,
+            r.speedup_vs_serial,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
-    // L3 substrate: NTT at artifact and functional sizes.
+    let args = Args::from_env();
+    fhemem::parallel::configure_threads(args.threads());
+    let mut records = Vec::new();
+
+    // L3 substrate: single-row NTT at artifact and functional sizes.
     for logn in [11usize, 13] {
         let n = 1 << logn;
         let q = ntt_primes(40, n, 1)[0].q;
@@ -29,6 +170,11 @@ fn main() {
         let butterflies = (n / 2 * logn) as f64;
         println!("    -> {:.1} M butterflies/s", butterflies / s.median.as_secs_f64() / 1e6);
     }
+
+    // The bank-pool engine: batched limb-parallel NTT (acceptance: ≥2x
+    // at N=8192 with ≥4 threads) + batched CKKS HMul.
+    let bit_identical = bench_batched_ntt(&mut records);
+    bench_batched_ckks(&mut records);
 
     // CKKS ops at func_default (logN=12, L=8, dnum=4).
     let ctx = CkksContext::new(CkksParams::func_default());
@@ -59,4 +205,8 @@ fn main() {
             SimOptions::default(),
         ));
     });
+
+    if let Some(path) = args.get("json") {
+        write_json(path, &records, bit_identical);
+    }
 }

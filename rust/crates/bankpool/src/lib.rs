@@ -1,0 +1,295 @@
+//! A dependency-free "bank pool": the software analogue of FHEmem's
+//! bank-level parallelism, used as the crate's rayon substitute (the build
+//! is fully offline — see the workspace manifest).
+//!
+//! FHEmem gets its throughput from thousands of near-mat units working on
+//! independent residue polynomials at once. On the CPU the same axes are
+//! exposed as index-parallel loops over RNS limbs and ciphertext batches.
+//! `BankPool` runs those loops across scoped worker threads ("banks"):
+//!
+//! * [`BankPool::par_index`] — dynamic work handoff over `0..n` via an
+//!   atomic cursor (load-balancing; the closure only receives indices).
+//! * [`BankPool::par_rows`] — static contiguous partition of a mutable
+//!   slice (uniform per-row cost, e.g. one NTT per RNS limb), no `unsafe`.
+//! * [`BankPool::par_map`] — parallel map collecting results in order.
+//!
+//! Workers are spawned per parallel region with `std::thread::scope`, one
+//! per bank, and the calling thread participates — so a region costs a few
+//! tens of microseconds, amortized by the caller-side work thresholds in
+//! `fhemem::parallel`. Every operation is deterministic: the work done for
+//! index `i` never depends on the thread count, so results are bit-identical
+//! from `threads = 1` to `threads = ncores`.
+
+use std::cell::Cell;
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    /// True while this thread is executing inside a parallel region.
+    /// Nested regions (e.g. a batch-level `par_map` whose items call
+    /// limb-level `par_rows`) run serially instead of oversubscribing the
+    /// machine with threads² workers — the outer fan-out already owns the
+    /// cores.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_region() -> bool {
+    IN_REGION.with(|c| c.get())
+}
+
+/// RAII marker: the current thread is a bank inside a parallel region.
+struct RegionGuard;
+
+impl RegionGuard {
+    fn enter() -> Self {
+        IN_REGION.with(|c| c.set(true));
+        RegionGuard
+    }
+}
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        IN_REGION.with(|c| c.set(false));
+    }
+}
+
+/// A configured pool of "banks" (worker threads). Cheap to construct; the
+/// threads themselves are scoped to each parallel region.
+#[derive(Debug, Clone)]
+pub struct BankPool {
+    threads: usize,
+}
+
+impl BankPool {
+    /// `threads = 0` selects the machine's available parallelism.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { threads }
+    }
+
+    /// A pool that never spawns: every region runs on the caller thread.
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, handing indices to banks through
+    /// an atomic cursor (dynamic load balancing). The caller thread works
+    /// too, so `threads - 1` workers are spawned.
+    pub fn par_index<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 || in_region() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let f = &f;
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(move || {
+                    let _bank = RegionGuard::enter();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(i);
+                    }
+                });
+            }
+            let _bank = RegionGuard::enter();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            }
+        });
+    }
+
+    /// Run `f(row_index, &mut row)` over every element of `rows`, statically
+    /// partitioned into contiguous chunks (one per bank). Best when rows
+    /// have uniform cost — exactly the RNS-limb case, where every row is an
+    /// independent `Z_q` transform.
+    pub fn par_rows<T, F>(&self, rows: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = rows.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 || in_region() {
+            for (i, row) in rows.iter_mut().enumerate() {
+                f(i, row);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(workers);
+        let f = &f;
+        std::thread::scope(|s| {
+            let mut chunks = rows.chunks_mut(chunk).enumerate();
+            let first = chunks.next();
+            for (ci, ch) in chunks {
+                let base = ci * chunk;
+                s.spawn(move || {
+                    let _bank = RegionGuard::enter();
+                    for (off, row) in ch.iter_mut().enumerate() {
+                        f(base + off, row);
+                    }
+                });
+            }
+            if let Some((_, ch)) = first {
+                let _bank = RegionGuard::enter();
+                for (off, row) in ch.iter_mut().enumerate() {
+                    f(off, row);
+                }
+            }
+        });
+    }
+
+    /// Parallel map over a shared slice, preserving order. Uses the dynamic
+    /// cursor of [`Self::par_index`], so uneven per-item cost (ciphertexts
+    /// at different levels) still balances across banks.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 || in_region() {
+            return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+        self.par_index(items.len(), |i| {
+            let r = f(i, &items[i]);
+            *slots[i].lock().unwrap() = Some(r);
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("par_map slot unfilled"))
+            .collect()
+    }
+}
+
+impl Default for BankPool {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_index_visits_every_index_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = BankPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+            pool.par_index(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn par_rows_matches_serial() {
+        let serial_out = {
+            let mut rows: Vec<Vec<u64>> = (0..13).map(|j| vec![j as u64; 37]).collect();
+            for (j, row) in rows.iter_mut().enumerate() {
+                for v in row.iter_mut() {
+                    *v = *v * 3 + j as u64;
+                }
+            }
+            rows
+        };
+        for threads in [1usize, 2, 5, 16] {
+            let pool = BankPool::new(threads);
+            let mut rows: Vec<Vec<u64>> = (0..13).map(|j| vec![j as u64; 37]).collect();
+            pool.par_rows(&mut rows, |j, row| {
+                for v in row.iter_mut() {
+                    *v = *v * 3 + j as u64;
+                }
+            });
+            assert_eq!(rows, serial_out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        for threads in [1usize, 3, 8] {
+            let pool = BankPool::new(threads);
+            let out = pool.par_map(&items, |i, &x| x * x + i as u64);
+            let want: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x * x + i as u64).collect();
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = BankPool::new(4);
+        pool.par_index(0, |_| panic!("no work expected"));
+        let mut empty: Vec<Vec<u64>> = Vec::new();
+        pool.par_rows(&mut empty, |_, _| panic!("no rows expected"));
+        let out: Vec<u64> = pool.par_map(&[] as &[u64], |_, &x| x);
+        assert!(out.is_empty());
+        let one = pool.par_map(&[41u64], |_, &x| x + 1);
+        assert_eq!(one, vec![42]);
+    }
+
+    #[test]
+    fn zero_threads_selects_machine_parallelism() {
+        let pool = BankPool::new(0);
+        assert!(pool.threads() >= 1);
+        assert_eq!(BankPool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn nested_regions_run_serially_and_correctly() {
+        let pool = BankPool::new(4);
+        let mut rows: Vec<Vec<u64>> = (0..8).map(|j| vec![j as u64; 64]).collect();
+        pool.par_rows(&mut rows, |j, row| {
+            // A nested region must degrade to serial (no threads² blowup)
+            // and still compute the right answer.
+            assert!(in_region());
+            let inner = BankPool::new(4);
+            let copy = row.to_vec();
+            let doubled = inner.par_map(&copy, |_, &v| v * 2 + j as u64);
+            row.copy_from_slice(&doubled);
+        });
+        for (j, row) in rows.iter().enumerate() {
+            assert!(row.iter().all(|&v| v == j as u64 * 3));
+        }
+    }
+
+    #[test]
+    fn caller_thread_participates() {
+        // With 1 spawned worker + the caller, total work still sums right.
+        let pool = BankPool::new(2);
+        let total = AtomicU64::new(0);
+        pool.par_index(1000, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+}

@@ -3,7 +3,7 @@
 //! and "Rotation").
 
 use super::complex::C64;
-use super::keys::{decrypt_poly, encrypt_poly, truncate_full, KeyChain, KeyTag};
+use super::keys::{decrypt_poly, encrypt_poly, KeyChain, KeyTag};
 use super::keyswitch::key_switch;
 use super::CkksContext;
 use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
@@ -341,6 +341,61 @@ impl Evaluator {
             step <<= 1;
         }
         acc
+    }
+
+    // ------------------------------------------------------------------
+    // batched execution (bank-pool parallel)
+    // ------------------------------------------------------------------
+    //
+    // Independent ciphertexts are FHEmem's bank axis: HELR processes a
+    // minibatch of encrypted samples, bootstrapping refreshes a queue of
+    // ciphertexts. Each `_batch` op fans the slice out across the global
+    // bank pool; per-item work is byte-identical to the serial op, so
+    // results do not depend on the thread count.
+
+    /// HAdd over aligned slices.
+    pub fn add_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+        assert_eq!(a.len(), b.len(), "batch length mismatch");
+        crate::parallel::pool().par_map(a, |i, ct| self.add(ct, &b[i]))
+    }
+
+    /// HSub over aligned slices.
+    pub fn sub_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+        assert_eq!(a.len(), b.len(), "batch length mismatch");
+        crate::parallel::pool().par_map(a, |i, ct| self.sub(ct, &b[i]))
+    }
+
+    /// HMul (tensor + relinearize + rescale) over aligned slices. The
+    /// relinearization keys for every level in the batch are materialized
+    /// up front so banks never duplicate key generation.
+    pub fn mul_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+        assert_eq!(a.len(), b.len(), "batch length mismatch");
+        let mut levels: Vec<usize> = a.iter().zip(b).map(|(x, y)| x.level.min(y.level)).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        for level in levels {
+            let _ = self.chain.eval_key(level, KeyTag::Relin);
+        }
+        crate::parallel::pool().par_map(a, |i, ct| self.mul(ct, &b[i]))
+    }
+
+    /// Rotation over a slice, one step per ciphertext (Galois keys
+    /// pre-materialized per distinct `(level, step)`).
+    pub fn rotate_batch(&self, a: &[Ciphertext], steps: &[i64]) -> Vec<Ciphertext> {
+        assert_eq!(a.len(), steps.len(), "batch length mismatch");
+        let slots = self.ctx.encoder.slots() as i64;
+        let mut keys: Vec<(usize, usize)> = a
+            .iter()
+            .zip(steps)
+            .filter(|(_, &s)| s.rem_euclid(slots) != 0)
+            .map(|(ct, &s)| (ct.level, RnsPoly::rotation_to_galois(s, self.ctx.n())))
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        for (level, k) in keys {
+            let _ = self.chain.eval_key(level, KeyTag::Galois(k));
+        }
+        crate::parallel::pool().par_map(a, |i, ct| self.rotate(ct, steps[i]))
     }
 }
 

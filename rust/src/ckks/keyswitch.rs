@@ -66,18 +66,20 @@ impl ExtPoly {
     }
 
     /// acc += other ⊙ self (pointwise, NTT domain), row-aligned.
-    /// Barrett multiply — the key-switch inner-product hot loop.
+    /// Barrett multiply — the key-switch inner-product hot loop, fanned
+    /// out limb-parallel on the bank pool.
     pub fn mul_acc_into(&self, ctx: &CkksContext, other: &ExtPoly, acc: &mut ExtPoly) {
         debug_assert_eq!(self.mods, other.mods);
         debug_assert_eq!(self.mods, acc.mods);
-        for r in 0..self.rows.len() {
-            let q = ctx.basis.q(self.mods[r]);
-            let br = ctx.basis.barrett[self.mods[r]];
-            for c in 0..self.rows[r].len() {
+        let mods = &self.mods;
+        crate::math::poly::par_rows(&mut acc.rows, |r, row| {
+            let q = ctx.basis.q(mods[r]);
+            let br = ctx.basis.barrett[mods[r]];
+            for (c, out) in row.iter_mut().enumerate() {
                 let prod = br.mul(self.rows[r][c], other.rows[r][c]);
-                acc.rows[r][c] = crate::math::modarith::add_mod(acc.rows[r][c], prod, q);
+                *out = crate::math::modarith::add_mod(*out, prod, q);
             }
-        }
+        });
     }
 }
 
@@ -299,6 +301,18 @@ pub fn key_switch(ctx: &CkksContext, d: &RnsPoly, evk: &EvalKey) -> (RnsPoly, Rn
     }
 
     (mod_down(ctx, acc0, evk), mod_down(ctx, acc1, evk))
+}
+
+/// Batched key switch under a shared evk: independent polys fan out
+/// across the bank pool (the ciphertext axis of FHEmem's bank
+/// parallelism). Per-item work is identical to [`key_switch`], so the
+/// output is bit-identical at any thread count.
+pub fn key_switch_batch(
+    ctx: &CkksContext,
+    ds: &[RnsPoly],
+    evk: &EvalKey,
+) -> Vec<(RnsPoly, RnsPoly)> {
+    crate::parallel::pool().par_map(ds, |_, d| key_switch(ctx, d, evk))
 }
 
 #[cfg(test)]

@@ -1,12 +1,14 @@
 //! L3 coordinator: the request-path driver that ties the functional CKKS
 //! layer, the PJRT artifact runtime and the FHEmem simulator together.
 //!
-//! Shape: a leader thread owns a request queue; worker threads execute
-//! homomorphic ops — pointwise kernels through the AOT XLA executables
-//! when artifacts are available (`Backend::Xla`), pure-Rust otherwise —
-//! while every executed op is also *costed* on the configured FHEmem
-//! model, so a run reports both real numerics and simulated
-//! latency/energy on the accelerator.
+//! Shape: a leader thread owns a request queue; bank-pool workers execute
+//! homomorphic ops — pointwise kernels through the AOT artifact runtime
+//! when artifacts are available (`Backend::Artifact`), pure-Rust
+//! otherwise — while every executed op is also *costed* on the configured
+//! FHEmem model, so a run reports both real numerics and simulated
+//! latency/energy on the accelerator. The `*_batch` entry points drive
+//! many independent ciphertexts concurrently across the bank pool — the
+//! software mirror of FHEmem assigning ciphertexts to banks.
 
 use crate::ckks::cipher::{Ciphertext, Evaluator};
 use crate::ckks::{CkksContext, KeyChain};
@@ -20,8 +22,9 @@ use std::sync::Arc;
 
 /// Which engine executes the pointwise hot path.
 pub enum Backend {
-    /// AOT XLA artifacts via PJRT (Python never runs).
-    Xla(Runtime),
+    /// AOT artifact runtime (native executor; PJRT in the vendored-xla
+    /// image). Python never runs.
+    Artifact(Box<Runtime>),
     /// Pure-Rust fallback (no artifacts built).
     Native,
 }
@@ -54,7 +57,7 @@ impl Coordinator {
         let eval = Evaluator::new(ctx.clone(), chain, 0xBEEF);
         let backend = artifact_dir
             .and_then(|d| Runtime::load(d).ok())
-            .map(Backend::Xla)
+            .map(|rt| Backend::Artifact(Box::new(rt)))
             .unwrap_or(Backend::Native);
         Self {
             ctx,
@@ -67,7 +70,7 @@ impl Coordinator {
 
     pub fn backend_name(&self) -> &'static str {
         match self.backend {
-            Backend::Xla(_) => "xla-pjrt",
+            Backend::Artifact(_) => "aot-artifact",
             Backend::Native => "native",
         }
     }
@@ -115,14 +118,14 @@ impl Coordinator {
             .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
     }
 
-    /// HAdd on the hot path — XLA artifact when available.
+    /// HAdd on the hot path — AOT artifact kernel when available.
     pub fn hadd(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         self.record(FheOp::HAdd);
-        if let Backend::Xla(rt) = &self.backend {
+        if let Backend::Artifact(rt) = &self.backend {
             if a.level == rt.meta.q_moduli.len() + rt.meta.p_moduli.len()
                 || a.level <= rt.meta.q_moduli.len()
             {
-                if let Some(out) = self.hadd_xla(rt, a, b) {
+                if let Some(out) = self.hadd_artifact(rt, a, b) {
                     return out;
                 }
             }
@@ -130,7 +133,7 @@ impl Coordinator {
         self.eval.add(a, b)
     }
 
-    fn hadd_xla(&self, rt: &Runtime, a: &Ciphertext, b: &Ciphertext) -> Option<Ciphertext> {
+    fn hadd_artifact(&self, rt: &Runtime, a: &Ciphertext, b: &Ciphertext) -> Option<Ciphertext> {
         if a.level != b.level || (a.scale / b.scale - 1.0).abs() > 1e-9 {
             return None;
         }
@@ -168,6 +171,35 @@ impl Coordinator {
     pub fn rotate(&self, a: &Ciphertext, step: i64) -> Ciphertext {
         self.record(FheOp::HRot);
         self.eval.rotate(a, step)
+    }
+
+    // ------------------------------------------------------------------
+    // batched request path (bank-pool parallel)
+    // ------------------------------------------------------------------
+
+    /// Batched HAdd: independent ciphertext pairs fan out across the
+    /// bank pool; every op is still costed on the FHEmem model.
+    pub fn hadd_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+        for _ in 0..a.len() {
+            self.record(FheOp::HAdd);
+        }
+        self.eval.add_batch(a, b)
+    }
+
+    /// Batched HMul (tensor + relinearize + rescale per pair).
+    pub fn hmul_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+        for _ in 0..a.len() {
+            self.record(FheOp::HMul);
+        }
+        self.eval.mul_batch(a, b)
+    }
+
+    /// Batched rotation, one step per ciphertext.
+    pub fn rotate_batch(&self, a: &[Ciphertext], steps: &[i64]) -> Vec<Ciphertext> {
+        for _ in 0..a.len() {
+            self.record(FheOp::HRot);
+        }
+        self.eval.rotate_batch(a, steps)
     }
 
     /// Simulated accelerator time for everything executed so far.

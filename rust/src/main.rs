@@ -11,6 +11,9 @@ use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
+    // Size the bank pool before any parallel region runs; `--threads 1`
+    // reproduces the fully serial numbers bit-for-bit.
+    fhemem::parallel::configure_threads(args.threads());
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("figures") => cmd_figures(&args),
@@ -20,7 +23,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: fhemem <simulate|figures|bandwidth|pim|demo> [--arch ARx4-4k] \
-                 [--workload helr] [--artifacts DIR]"
+                 [--workload helr] [--artifacts DIR] [--threads N]"
             );
             std::process::exit(2);
         }

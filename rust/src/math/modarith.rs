@@ -338,4 +338,71 @@ mod tests {
         // Sanity that the test constants agree.
         assert_eq!(Q, QP);
     }
+
+    /// Moduli at the top of each reducer's supported range. Barrett is
+    /// documented for q < 2^62; Shoup and Montgomery go to 2^63.
+    const NEAR_MAX_BARRETT: u64 = (1 << 62) - 57; // odd, just under 2^62
+    const NEAR_MAX_63: u64 = (1 << 63) - 25; // odd, just under 2^63
+
+    fn boundary_operands(q: u64) -> [u64; 3] {
+        [0, 1, q - 1]
+    }
+
+    #[test]
+    fn add_sub_neg_at_reduction_boundaries() {
+        for q in [2u64, 3, 97, NEAR_MAX_BARRETT, NEAR_MAX_63] {
+            for a in boundary_operands(q) {
+                for b in boundary_operands(q) {
+                    let s = add_mod(a, b, q);
+                    assert!(s < q);
+                    assert_eq!(s as u128, (a as u128 + b as u128) % q as u128);
+                    assert_eq!(sub_mod(s, b, q), a, "q={q} a={a} b={b}");
+                    assert_eq!(add_mod(a, neg_mod(a, q), q), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrett_at_reduction_boundaries() {
+        for q in [2u64, 3, 97, (1 << 40) - 87, NEAR_MAX_BARRETT] {
+            let br = Barrett::new(q);
+            for a in boundary_operands(q) {
+                for b in boundary_operands(q) {
+                    assert_eq!(br.mul(a, b), mul_mod(a, b, q), "q={q} a={a} b={b}");
+                }
+            }
+            // Largest reducible product: (q-1)^2.
+            let big = (q - 1) as u128 * (q - 1) as u128;
+            assert_eq!(br.reduce_u128(big) as u128, big % q as u128);
+            assert_eq!(br.reduce_u128(0), 0);
+        }
+    }
+
+    #[test]
+    fn montgomery_at_reduction_boundaries() {
+        for q in [3u64, 97, (1 << 40) - 87, NEAR_MAX_BARRETT, NEAR_MAX_63] {
+            let mont = Montgomery::new(q);
+            for a in boundary_operands(q) {
+                assert_eq!(mont.from_mont(mont.to_mont(a)), a, "q={q} a={a}");
+                for b in boundary_operands(q) {
+                    assert_eq!(mont.mul_plain(a, b), mul_mod(a, b, q), "q={q} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shoup_at_reduction_boundaries() {
+        // Shoup accepts any u64 second operand, including far above q.
+        for q in [2u64, 3, 97, (1 << 40) - 87, NEAR_MAX_63] {
+            for w in boundary_operands(q) {
+                let s = ShoupMul::new(w, q);
+                for t in [0u64, 1, q - 1, q, q + 1, u64::MAX] {
+                    let want = ((w as u128 * t as u128) % q as u128) as u64;
+                    assert_eq!(s.mul(t), want, "q={q} w={w} t={t}");
+                }
+            }
+        }
+    }
 }

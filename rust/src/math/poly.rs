@@ -95,22 +95,24 @@ impl RnsPoly {
 
     pub fn add_assign(&mut self, other: &Self) {
         self.check_compat(other);
-        for j in 0..self.limbs {
-            let q = self.basis.q(j);
-            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+        let basis = self.basis.clone();
+        par_rows(&mut self.data, |j, row| {
+            let q = basis.q(j);
+            for (a, &b) in row.iter_mut().zip(&other.data[j]) {
                 *a = add_mod(*a, b, q);
             }
-        }
+        });
     }
 
     pub fn sub_assign(&mut self, other: &Self) {
         self.check_compat(other);
-        for j in 0..self.limbs {
-            let q = self.basis.q(j);
-            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+        let basis = self.basis.clone();
+        par_rows(&mut self.data, |j, row| {
+            let q = basis.q(j);
+            for (a, &b) in row.iter_mut().zip(&other.data[j]) {
                 *a = sub_mod(*a, b, q);
             }
-        }
+        });
     }
 
     pub fn neg_assign(&mut self) {
@@ -126,12 +128,13 @@ impl RnsPoly {
     pub fn mul_assign(&mut self, other: &Self) {
         self.check_compat(other);
         assert_eq!(self.domain, Domain::Ntt, "mul requires NTT domain");
-        for j in 0..self.limbs {
-            let br = self.basis.barrett[j];
-            for (a, &b) in self.data[j].iter_mut().zip(&other.data[j]) {
+        let basis = self.basis.clone();
+        par_rows(&mut self.data, |j, row| {
+            let br = basis.barrett[j];
+            for (a, &b) in row.iter_mut().zip(&other.data[j]) {
                 *a = br.mul(*a, b);
             }
-        }
+        });
     }
 
     /// Multiply by a per-limb scalar.
@@ -217,44 +220,12 @@ impl RnsPoly {
     }
 }
 
-/// Apply `f(limb_index, row)` to every row, on scoped threads when the
-/// work is large enough to amortize spawning.
+/// Apply `f(limb_index, row)` to every row — on the global bank pool when
+/// the work is large enough to amortize the per-region spawn cost
+/// (threshold in [`crate::parallel`]; the earlier ad-hoc mutex pool lost
+/// ~10% at L=8/N=4096, so small transforms stay on the caller thread).
 pub fn par_rows<F: Fn(usize, &mut [u64]) + Sync>(rows: &mut [Vec<u64>], f: F) {
-    // Measured on this testbed (§Perf iteration 3): scoped-thread fan-out
-    // LOST ~10% at L=8/N=4096 (spawn cost > per-row work on few cores).
-    // Kept for large-parameter runs only.
-    let big = rows.len() >= 24 && rows.first().map(|r| r.len() >= 16384).unwrap_or(false);
-    if !big {
-        for (j, row) in rows.iter_mut().enumerate() {
-            f(j, row);
-        }
-        return;
-    }
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(rows.len());
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    // Hand out (index, row) work items across a scoped pool.
-    let items: Vec<(usize, &mut Vec<u64>)> = rows.iter_mut().enumerate().collect();
-    let items = std::sync::Mutex::new(items.into_iter().map(Some).collect::<Vec<_>>());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let item = {
-                    let mut g = items.lock().unwrap();
-                    if idx >= g.len() {
-                        break;
-                    }
-                    g[idx].take()
-                };
-                if let Some((j, row)) = item {
-                    f(j, row);
-                }
-            });
-        }
-    });
+    crate::parallel::par_rows(rows, f)
 }
 
 #[cfg(test)]

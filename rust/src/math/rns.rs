@@ -133,31 +133,30 @@ impl BConv {
     pub fn convert_poly(&self, input: &[Vec<u64>], n: usize) -> Vec<Vec<u64>> {
         let l = self.from_moduli.len();
         debug_assert_eq!(input.len(), l);
-        // Stage 1: y_j = [a_j * q̂_j^{-1}]_{q_j}, elementwise (Shoup).
-        let mut y = vec![vec![0u64; n]; l];
-        for j in 0..l {
+        // Stage 1: y_j = [a_j * q̂_j^{-1}]_{q_j}, elementwise (Shoup),
+        // limb-parallel on the bank pool.
+        let mut y: Vec<Vec<u64>> = input.to_vec();
+        crate::parallel::par_rows(&mut y, |j, row| {
             let s = self.qhat_inv[j];
-            for c in 0..n {
-                y[j][c] = s.mul(input[j][c]);
+            for v in row.iter_mut() {
+                *v = s.mul(*v);
             }
-        }
+        });
         // Stage 2: all-to-all reduction into each target modulus — the
         // data-movement pattern FHEmem's inter-bank chain exists for.
         // Division-free: Shoup multiply accepts the unreduced y values.
-        self.to_moduli
-            .iter()
-            .enumerate()
-            .map(|(i, &p)| {
-                let mut out = vec![0u64; n];
-                for j in 0..l {
-                    let w = &self.qhat_mod_p[i][j];
-                    for c in 0..n {
-                        out[c] = add_mod(out[c], w.mul(y[j][c]), p);
-                    }
+        // Target limbs are independent, so they fan out too.
+        let mut out = vec![vec![0u64; n]; self.to_moduli.len()];
+        crate::parallel::par_rows(&mut out, |i, row| {
+            let p = self.to_moduli[i];
+            for j in 0..l {
+                let w = &self.qhat_mod_p[i][j];
+                for (c, acc) in row.iter_mut().enumerate() {
+                    *acc = add_mod(*acc, w.mul(y[j][c]), p);
                 }
-                out
-            })
-            .collect()
+            }
+        });
+        out
     }
 }
 

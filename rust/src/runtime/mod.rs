@@ -1,15 +1,84 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
-//! execute them from the coordinator's request path. Python never runs
-//! here.
+//! Artifact runtime: load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute their entry points from the
+//! coordinator's request path. Python never runs here.
 //!
-//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! The original image executed the HLO-text artifacts through a vendored
+//! `xla_extension` PJRT client. That bridge is not available in the
+//! offline build (no crates.io / no PJRT shared object), so this module
+//! ships a **native executor**: the same entry points, same tensor
+//! calling convention (`[L, N]` u64 residue matrices + modulus vectors),
+//! implemented on the crate's math layer and fanned out limb-parallel on
+//! the bank pool. `artifacts/meta.txt` remains the source of truth for
+//! the artifact parameter set, and `rust/tests/runtime_artifacts.rs`
+//! cross-checks the executor against the CKKS layer bit-exactly.
 
-use anyhow::{anyhow, Context, Result};
+use crate::math::modarith::{add_mod, mul_mod, neg_mod, sub_mod};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Runtime error (offline substitute for `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type RtResult<T> = Result<T, RtError>;
+
+fn err(msg: impl Into<String>) -> RtError {
+    RtError(msg.into())
+}
+
+/// A dense tensor in the artifact calling convention: u64 residue data
+/// or i32 index data, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    U64 { dims: Vec<usize>, data: Vec<u64> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::U64 { dims, .. } => dims,
+            Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    fn as_u64(&self) -> RtResult<&[u64]> {
+        match self {
+            Tensor::U64 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(err("expected u64 tensor, got i32")),
+        }
+    }
+
+    fn as_i32(&self) -> RtResult<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::U64 { .. } => Err(err("expected i32 tensor, got u64")),
+        }
+    }
+
+    /// Interpret as an `[L, N]` matrix, returning `(l, n, rows)`.
+    fn as_mat(&self) -> RtResult<(usize, usize, Vec<Vec<u64>>)> {
+        let dims = self.dims();
+        if dims.len() != 2 {
+            return Err(err(format!("expected rank-2 tensor, got {dims:?}")));
+        }
+        let (l, n) = (dims[0], dims[1]);
+        let flat = self.as_u64()?;
+        if flat.len() != l * n {
+            return Err(err("tensor data/shape mismatch"));
+        }
+        Ok((l, n, flat.chunks(n).map(|c| c.to_vec()).collect()))
+    }
+}
 
 /// Parsed `artifacts/meta.txt` — the artifact parameter set the Python
 /// side generated (source of truth for the AOT path's moduli).
@@ -23,30 +92,37 @@ pub struct ArtifactMeta {
 }
 
 impl ArtifactMeta {
-    pub fn load(path: &Path) -> Result<Self> {
+    pub fn load(path: &Path) -> RtResult<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| err(format!("reading {}: {e}", path.display())))?;
         let mut kv = HashMap::new();
         for line in text.lines() {
             if let Some((k, v)) = line.split_once('=') {
                 kv.insert(k.trim().to_string(), v.trim().to_string());
             }
         }
-        let get = |k: &str| {
-            kv.get(k)
-                .ok_or_else(|| anyhow!("meta.txt missing key {k}"))
+        let get = |k: &str| kv.get(k).ok_or_else(|| err(format!("meta.txt missing key {k}")));
+        let parse_num = |k: &str| -> RtResult<u64> {
+            get(k)?
+                .parse::<u64>()
+                .map_err(|e| err(format!("meta.txt key {k}: {e}")))
         };
-        let parse_list = |s: &str| -> Result<Vec<u64>> {
-            s.split(',')
-                .map(|x| x.trim().parse::<u64>().map_err(|e| anyhow!("{e}")))
+        let parse_list = |k: &str| -> RtResult<Vec<u64>> {
+            get(k)?
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<u64>()
+                        .map_err(|e| err(format!("meta.txt key {k}: {e}")))
+                })
                 .collect()
         };
         Ok(Self {
-            log_n: get("logn")?.parse()?,
-            n: get("n")?.parse()?,
-            scale_bits: get("scale_bits")?.parse()?,
-            q_moduli: parse_list(get("q")?)?,
-            p_moduli: parse_list(get("p")?)?,
+            log_n: parse_num("logn")? as usize,
+            n: parse_num("n")? as usize,
+            scale_bits: parse_num("scale_bits")? as u32,
+            q_moduli: parse_list("q")?,
+            p_moduli: parse_list("p")?,
         })
     }
 
@@ -58,15 +134,8 @@ impl ArtifactMeta {
     }
 }
 
-/// A compiled artifact registry: one PJRT executable per entry point.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub meta: ArtifactMeta,
-    pub dir: PathBuf,
-}
-
-/// The entry points `aot.py` exports.
+/// The entry points `aot.py` exports (python/compile/model.py defines the
+/// reference semantics; the native executor mirrors them).
 pub const ENTRY_POINTS: &[&str] = &[
     "hadd",
     "hmul_tensor",
@@ -77,91 +146,284 @@ pub const ENTRY_POINTS: &[&str] = &[
     "rescale_step",
 ];
 
+/// A loaded artifact registry. The native executor serves every entry
+/// point; `hlo_artifacts` counts how many compiled `.hlo.txt` files were
+/// found alongside `meta.txt` (informational — the PJRT path that would
+/// consume them is gated out of the offline build).
+pub struct Runtime {
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+    pub hlo_artifacts: usize,
+}
+
 impl Runtime {
-    /// Load and compile every artifact in `dir` (done once at startup;
-    /// the request path only calls [`Runtime::execute`]).
-    pub fn load(dir: &Path) -> Result<Self> {
+    /// Load the artifact directory (requires `meta.txt`).
+    pub fn load(dir: &Path) -> RtResult<Self> {
         let meta = ArtifactMeta::load(&dir.join("meta.txt"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
-        let mut executables = HashMap::new();
-        for name in ENTRY_POINTS {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                continue;
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            executables.insert(name.to_string(), exe);
-        }
-        if executables.is_empty() {
-            return Err(anyhow!(
-                "no artifacts found in {} — run `make artifacts`",
-                dir.display()
-            ));
-        }
+        let hlo_artifacts = ENTRY_POINTS
+            .iter()
+            .filter(|name| dir.join(format!("{name}.hlo.txt")).exists())
+            .count();
         Ok(Self {
-            client,
-            executables,
             meta,
             dir: dir.to_path_buf(),
+            hlo_artifacts,
         })
     }
 
     pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        ENTRY_POINTS.contains(&name)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
     /// Execute an entry point; returns the flattened tuple outputs.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown entry point {name}"))?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+        match name {
+            "hadd" => kernel_hadd(inputs),
+            "hmul_tensor" => kernel_hmul_tensor(inputs),
+            "pmul" => kernel_pmul(inputs),
+            "ntt_fwd" => kernel_ntt(inputs, true),
+            "ntt_inv" => kernel_ntt(inputs, false),
+            "automorphism" => kernel_automorphism(inputs),
+            "rescale_step" => kernel_rescale_step(inputs),
+            _ => Err(err(format!("unknown entry point {name}"))),
+        }
     }
 }
 
-/// Build an `[L, N] u64` literal from residue rows.
-pub fn mat_literal(rows: &[Vec<u64>]) -> Result<xla::Literal> {
+// ---------------------------------------------------------------------
+// Native kernels (semantics: python/compile/model.py)
+// ---------------------------------------------------------------------
+
+fn arity(inputs: &[Tensor], want: usize, name: &str) -> RtResult<()> {
+    if inputs.len() != want {
+        return Err(err(format!("{name}: expected {want} inputs, got {}", inputs.len())));
+    }
+    Ok(())
+}
+
+/// Pointwise binary op over aligned `[L, N]` matrices, limb-parallel.
+fn pointwise2(
+    a: &[Vec<u64>],
+    b: &[Vec<u64>],
+    q: &[u64],
+    f: impl Fn(u64, u64, u64) -> u64 + Sync,
+) -> Vec<Vec<u64>> {
+    let mut out = a.to_vec();
+    crate::parallel::par_rows(&mut out, |j, row| {
+        let qj = q[j];
+        for (x, &y) in row.iter_mut().zip(&b[j]) {
+            *x = f(*x, y, qj);
+        }
+    });
+    out
+}
+
+fn mat_tensor(rows: Vec<Vec<u64>>) -> Tensor {
     let l = rows.len();
-    let n = rows[0].len();
-    let flat: Vec<u64> = rows.iter().flat_map(|r| r.iter().copied()).collect();
-    xla::Literal::vec1(&flat)
-        .reshape(&[l as i64, n as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
+    let n = rows.first().map(|r| r.len()).unwrap_or(0);
+    Tensor::U64 {
+        dims: vec![l, n],
+        data: rows.into_iter().flatten().collect(),
+    }
 }
 
-/// Build a `[K] u64` vector literal.
-pub fn vec_literal(v: &[u64]) -> xla::Literal {
-    xla::Literal::vec1(v)
+/// `hadd(b0, a0, b1, a1, q) -> (b0+b1, a0+a1)`.
+fn kernel_hadd(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+    arity(inputs, 5, "hadd")?;
+    let (_, _, b0) = inputs[0].as_mat()?;
+    let (_, _, a0) = inputs[1].as_mat()?;
+    let (_, _, b1) = inputs[2].as_mat()?;
+    let (_, _, a1) = inputs[3].as_mat()?;
+    let q = inputs[4].as_u64()?;
+    Ok(vec![
+        mat_tensor(pointwise2(&b0, &b1, q, add_mod)),
+        mat_tensor(pointwise2(&a0, &a1, q, add_mod)),
+    ])
 }
 
-/// Build a `[K] i32` vector literal.
-pub fn vec_literal_i32(v: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(v)
+/// `hmul_tensor(b0, a0, b1, a1, q) -> (b0·b1, a0·b1 + a1·b0, a0·a1)`.
+fn kernel_hmul_tensor(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+    arity(inputs, 5, "hmul_tensor")?;
+    let (_, _, b0) = inputs[0].as_mat()?;
+    let (_, _, a0) = inputs[1].as_mat()?;
+    let (_, _, b1) = inputs[2].as_mat()?;
+    let (_, _, a1) = inputs[3].as_mat()?;
+    let q = inputs[4].as_u64()?;
+    let d0 = pointwise2(&b0, &b1, q, mul_mod);
+    let t0 = pointwise2(&a0, &b1, q, mul_mod);
+    let t1 = pointwise2(&a1, &b0, q, mul_mod);
+    let d1 = pointwise2(&t0, &t1, q, add_mod);
+    let d2 = pointwise2(&a0, &a1, q, mul_mod);
+    Ok(vec![mat_tensor(d0), mat_tensor(d1), mat_tensor(d2)])
 }
 
-/// Extract an `[L, N]` u64 literal back into rows.
-pub fn literal_to_rows(lit: &xla::Literal, l: usize, n: usize) -> Result<Vec<Vec<u64>>> {
-    let flat: Vec<u64> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+/// `pmul(b, a, pt, q) -> (b·pt, a·pt)`.
+fn kernel_pmul(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+    arity(inputs, 4, "pmul")?;
+    let (_, _, b) = inputs[0].as_mat()?;
+    let (_, _, a) = inputs[1].as_mat()?;
+    let (_, _, pt) = inputs[2].as_mat()?;
+    let q = inputs[3].as_u64()?;
+    Ok(vec![
+        mat_tensor(pointwise2(&b, &pt, q, mul_mod)),
+        mat_tensor(pointwise2(&a, &pt, q, mul_mod)),
+    ])
+}
+
+/// Cooley–Tukey forward butterfly with an explicit twiddle table (the
+/// artifact convention: tables are runtime inputs, matching
+/// `NttTable::psi_rev` bit-for-bit).
+fn ntt_forward_with(row: &mut [u64], psi_rev: &[u64], q: u64) {
+    let n = row.len();
+    let mut t = n;
+    let mut m = 1usize;
+    while m < n {
+        t >>= 1;
+        for i in 0..m {
+            let w = psi_rev[m + i];
+            let (lo, hi) = row[2 * i * t..2 * i * t + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let u = *x;
+                let v = mul_mod(*y, w, q);
+                *x = add_mod(u, v, q);
+                *y = sub_mod(u, v, q);
+            }
+        }
+        m <<= 1;
+    }
+}
+
+/// Gentleman–Sande inverse butterfly with explicit tables.
+fn ntt_inverse_with(row: &mut [u64], psi_inv_rev: &[u64], n_inv: u64, q: u64) {
+    let n = row.len();
+    let mut t = 1usize;
+    let mut m = n;
+    while m > 1 {
+        let h = m >> 1;
+        let mut j1 = 0usize;
+        for i in 0..h {
+            let w = psi_inv_rev[h + i];
+            let (lo, hi) = row[j1..j1 + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let u = *x;
+                let v = *y;
+                *x = add_mod(u, v, q);
+                *y = mul_mod(sub_mod(u, v, q), w, q);
+            }
+            j1 += 2 * t;
+        }
+        t <<= 1;
+        m = h;
+    }
+    for x in row.iter_mut() {
+        *x = mul_mod(*x, n_inv, q);
+    }
+}
+
+/// `ntt_fwd(x, psi_rev, q)` / `ntt_inv(x, psi_inv_rev, n_inv, q)`.
+fn kernel_ntt(inputs: &[Tensor], forward: bool) -> RtResult<Vec<Tensor>> {
+    let name = if forward { "ntt_fwd" } else { "ntt_inv" };
+    arity(inputs, if forward { 3 } else { 4 }, name)?;
+    let (_, n, mut x) = inputs[0].as_mat()?;
+    let (_, tn, tables) = inputs[1].as_mat()?;
+    if tn != n {
+        return Err(err(format!("{name}: table width {tn} != N {n}")));
+    }
+    if forward {
+        let q = inputs[2].as_u64()?;
+        crate::parallel::par_rows(&mut x, |j, row| ntt_forward_with(row, &tables[j], q[j]));
+    } else {
+        let n_inv = inputs[2].as_u64()?;
+        let q = inputs[3].as_u64()?;
+        crate::parallel::par_rows(&mut x, |j, row| {
+            ntt_inverse_with(row, &tables[j], n_inv[j], q[j])
+        });
+    }
+    Ok(vec![mat_tensor(x)])
+}
+
+/// `automorphism(x, perm, sign, q)`: gather map,
+/// `out[i] = (-1)^{sign[i]} · x[perm[i]]`.
+fn kernel_automorphism(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+    arity(inputs, 4, "automorphism")?;
+    let (l, n, x) = inputs[0].as_mat()?;
+    let perm = inputs[1].as_i32()?;
+    let sign = inputs[2].as_u64()?;
+    let q = inputs[3].as_u64()?;
+    if perm.len() != n || sign.len() != n {
+        return Err(err("automorphism: perm/sign length != N"));
+    }
+    let mut out = vec![vec![0u64; n]; l];
+    crate::parallel::par_rows(&mut out, |j, row| {
+        let qj = q[j];
+        for i in 0..n {
+            let v = x[j][perm[i] as usize];
+            row[i] = if sign[i] == 1 { neg_mod(v, qj) } else { v };
+        }
+    });
+    Ok(vec![mat_tensor(out)])
+}
+
+/// `rescale_step(x, last_row, q, q_last_inv)`:
+/// `out_j = (x_j − [x_l]_j) · q_l⁻¹ mod q_j`.
+fn kernel_rescale_step(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+    arity(inputs, 4, "rescale_step")?;
+    let (_, _, mut x) = inputs[0].as_mat()?;
+    let last = inputs[1].as_u64()?;
+    let q = inputs[2].as_u64()?;
+    let q_last_inv = inputs[3].as_u64()?;
+    crate::parallel::par_rows(&mut x, |j, row| {
+        let qj = q[j];
+        let inv = q_last_inv[j];
+        for (v, &lc) in row.iter_mut().zip(last) {
+            *v = mul_mod(sub_mod(*v, lc % qj, qj), inv, qj);
+        }
+    });
+    Ok(vec![mat_tensor(x)])
+}
+
+// ---------------------------------------------------------------------
+// Tensor constructors (former PJRT literal helpers, names kept)
+// ---------------------------------------------------------------------
+
+/// Build an `[L, N]` u64 tensor from residue rows.
+pub fn mat_literal(rows: &[Vec<u64>]) -> RtResult<Tensor> {
+    let l = rows.len();
+    let n = rows.first().map(|r| r.len()).ok_or_else(|| err("empty matrix"))?;
+    if rows.iter().any(|r| r.len() != n) {
+        return Err(err("ragged matrix"));
+    }
+    Ok(Tensor::U64 {
+        dims: vec![l, n],
+        data: rows.iter().flat_map(|r| r.iter().copied()).collect(),
+    })
+}
+
+/// Build a `[K]` u64 vector tensor.
+pub fn vec_literal(v: &[u64]) -> Tensor {
+    Tensor::U64 {
+        dims: vec![v.len()],
+        data: v.to_vec(),
+    }
+}
+
+/// Build a `[K]` i32 vector tensor.
+pub fn vec_literal_i32(v: &[i32]) -> Tensor {
+    Tensor::I32 {
+        dims: vec![v.len()],
+        data: v.to_vec(),
+    }
+}
+
+/// Extract an `[L, N]` u64 tensor back into rows.
+pub fn literal_to_rows(t: &Tensor, l: usize, n: usize) -> RtResult<Vec<Vec<u64>>> {
+    let flat = t.as_u64()?;
     if flat.len() != l * n {
-        return Err(anyhow!("shape mismatch: {} != {l}x{n}", flat.len()));
+        return Err(err(format!("shape mismatch: {} != {l}x{n}", flat.len())));
     }
     Ok(flat.chunks(n).map(|c| c.to_vec()).collect())
 }
@@ -188,5 +450,94 @@ mod tests {
         let lit = mat_literal(&rows).unwrap();
         let back = literal_to_rows(&lit, 2, 3).unwrap();
         assert_eq!(rows, back);
+    }
+
+    /// One directory per test: the default test harness runs tests
+    /// concurrently, and a shared meta.txt would race truncate vs read.
+    fn tiny_runtime(tag: &str) -> Runtime {
+        let dir = std::env::temp_dir().join(format!("fhemem_rt_test_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.txt"),
+            "logn=3\nn=8\nscale_bits=25\nq=97,193\np=257\n",
+        )
+        .unwrap();
+        Runtime::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn native_executor_serves_all_entry_points() {
+        let rt = tiny_runtime("entry_points");
+        for ep in ENTRY_POINTS {
+            assert!(rt.has(ep), "missing {ep}");
+        }
+        assert!(!rt.platform().is_empty());
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn hadd_native_matches_direct() {
+        let rt = tiny_runtime("hadd");
+        let q = [97u64, 193];
+        let b0 = vec![vec![10u64, 96, 0, 1, 2, 3, 4, 5], vec![0u64; 8]];
+        let b1 = vec![vec![90u64, 1, 0, 96, 2, 3, 4, 5], vec![192u64; 8]];
+        let a0 = b1.clone();
+        let a1 = b0.clone();
+        let out = rt
+            .execute(
+                "hadd",
+                &[
+                    mat_literal(&b0).unwrap(),
+                    mat_literal(&a0).unwrap(),
+                    mat_literal(&b1).unwrap(),
+                    mat_literal(&a1).unwrap(),
+                    vec_literal(&q),
+                ],
+            )
+            .unwrap();
+        let got_b = literal_to_rows(&out[0], 2, 8).unwrap();
+        for j in 0..2 {
+            for c in 0..8 {
+                assert_eq!(got_b[j][c], (b0[j][c] + b1[j][c]) % q[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn ntt_native_matches_table_path() {
+        use crate::math::ntt::NttTable;
+        let rt = tiny_runtime("ntt");
+        let n = 64usize;
+        let q = crate::math::primes::ntt_primes(25, n, 1)[0].q;
+        let table = NttTable::new(q, n);
+        let mut rng = crate::util::check::SplitMix64::new(9);
+        let x: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        let out = rt
+            .execute(
+                "ntt_fwd",
+                &[
+                    mat_literal(&[x.clone()]).unwrap(),
+                    mat_literal(&[table.psi_rev().to_vec()]).unwrap(),
+                    vec_literal(&[q]),
+                ],
+            )
+            .unwrap();
+        let fwd = literal_to_rows(&out[0], 1, n).unwrap();
+        let mut want = x.clone();
+        table.forward(&mut want);
+        assert_eq!(fwd[0], want);
+        let out = rt
+            .execute(
+                "ntt_inv",
+                &[
+                    mat_literal(&fwd).unwrap(),
+                    mat_literal(&[table.psi_inv_rev().to_vec()]).unwrap(),
+                    vec_literal(&[table.n_inv()]),
+                    vec_literal(&[q]),
+                ],
+            )
+            .unwrap();
+        let back = literal_to_rows(&out[0], 1, n).unwrap();
+        assert_eq!(back[0], x);
     }
 }

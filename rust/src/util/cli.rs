@@ -70,6 +70,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--threads N`: bank-pool size for parallel execution (0 = auto,
+    /// 1 = fully serial — reproduces the single-threaded numbers).
+    pub fn threads(&self) -> usize {
+        self.get_usize("threads", 0)
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))

@@ -1,0 +1,134 @@
+//! Batched bank-pool execution: every `_batch` API must be bit-identical
+//! to its serial counterpart (the batch path reuses the per-item code, so
+//! thread count can never change results), and the coordinator batch path
+//! must decrypt correctly while costing every op on the FHEmem model.
+
+use fhemem::ckks::keyswitch::{key_switch, key_switch_batch};
+use fhemem::ckks::{CkksContext, Ciphertext, Evaluator, KeyChain, KeyTag};
+use fhemem::coordinator::Coordinator;
+use fhemem::math::poly::{Domain, RnsPoly};
+use fhemem::params::CkksParams;
+use fhemem::sim::ArchConfig;
+use fhemem::util::check::SplitMix64;
+use std::sync::Arc;
+
+fn evaluator() -> Evaluator {
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 4242));
+    Evaluator::new(ctx, chain, 99)
+}
+
+fn encrypt_batch(ev: &Evaluator, count: usize, level: usize, seed: u64) -> Vec<Ciphertext> {
+    let slots = ev.ctx.encoder.slots();
+    let mut rng = SplitMix64::new(seed);
+    (0..count)
+        .map(|_| {
+            let z: Vec<f64> = (0..slots).map(|_| rng.f64() - 0.5).collect();
+            ev.encrypt_real(&z, level)
+        })
+        .collect()
+}
+
+fn assert_ct_eq(a: &Ciphertext, b: &Ciphertext, what: &str) {
+    assert_eq!(a.level, b.level, "{what}: level");
+    assert_eq!(a.scale.to_bits(), b.scale.to_bits(), "{what}: scale");
+    assert_eq!(a.c0.data, b.c0.data, "{what}: c0");
+    assert_eq!(a.c1.data, b.c1.data, "{what}: c1");
+}
+
+#[test]
+fn add_and_mul_batch_bit_identical_to_serial() {
+    let ev = evaluator();
+    let a = encrypt_batch(&ev, 5, 3, 1);
+    let b = encrypt_batch(&ev, 5, 3, 2);
+
+    // Serial first (also warms the key cache the way a serial run would).
+    let serial_add: Vec<Ciphertext> = a.iter().zip(&b).map(|(x, y)| ev.add(x, y)).collect();
+    let serial_mul: Vec<Ciphertext> = a.iter().zip(&b).map(|(x, y)| ev.mul(x, y)).collect();
+
+    let batch_add = ev.add_batch(&a, &b);
+    let batch_mul = ev.mul_batch(&a, &b);
+    for i in 0..a.len() {
+        assert_ct_eq(&batch_add[i], &serial_add[i], "add");
+        assert_ct_eq(&batch_mul[i], &serial_mul[i], "mul");
+    }
+
+    let serial_sub: Vec<Ciphertext> = a.iter().zip(&b).map(|(x, y)| ev.sub(x, y)).collect();
+    let batch_sub = ev.sub_batch(&a, &b);
+    for i in 0..a.len() {
+        assert_ct_eq(&batch_sub[i], &serial_sub[i], "sub");
+    }
+}
+
+#[test]
+fn rotate_batch_bit_identical_to_serial() {
+    let ev = evaluator();
+    let cts = encrypt_batch(&ev, 4, 2, 3);
+    let steps = [1i64, -2, 7, 0];
+    let serial: Vec<Ciphertext> = cts
+        .iter()
+        .zip(&steps)
+        .map(|(ct, &s)| ev.rotate(ct, s))
+        .collect();
+    let batch = ev.rotate_batch(&cts, &steps);
+    for i in 0..cts.len() {
+        assert_ct_eq(&batch[i], &serial[i], "rotate");
+    }
+}
+
+#[test]
+fn key_switch_batch_matches_serial() {
+    let ev = evaluator();
+    let ctx = &ev.ctx;
+    let level = 3usize;
+    let evk = ev.chain.eval_key(level, KeyTag::Relin);
+    let mut rng = SplitMix64::new(17);
+    let ds: Vec<RnsPoly> = (0..4)
+        .map(|_| {
+            let mut d = RnsPoly::zero(ctx.basis.clone(), level, Domain::Ntt);
+            for j in 0..level {
+                let q = ctx.basis.q(j);
+                for c in d.data[j].iter_mut() {
+                    *c = rng.below(q);
+                }
+            }
+            d
+        })
+        .collect();
+    let serial: Vec<_> = ds.iter().map(|d| key_switch(ctx, d, &evk)).collect();
+    let batch = key_switch_batch(ctx, &ds, &evk);
+    for (i, ((s0, s1), (b0, b1))) in serial.iter().zip(&batch).enumerate() {
+        assert_eq!(s0.data, b0.data, "ks0 item {i}");
+        assert_eq!(s1.data, b1.data, "ks1 item {i}");
+    }
+}
+
+#[test]
+fn coordinator_batch_is_correct_and_costed() {
+    use std::sync::atomic::Ordering;
+    let coord = Coordinator::new(CkksParams::func_tiny(), ArchConfig::default(), None);
+    let slots = coord.ctx.encoder.slots();
+    let z1: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 11) as f64).collect();
+    let z2: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 5) as f64).collect();
+    let batch = 3usize;
+    let a: Vec<Ciphertext> = (0..batch).map(|_| coord.eval.encrypt_real(&z1, 3)).collect();
+    let b: Vec<Ciphertext> = (0..batch).map(|_| coord.eval.encrypt_real(&z2, 3)).collect();
+
+    let prods = coord.hmul_batch(&a, &b);
+    let sums = coord.hadd_batch(&a, &b);
+    let steps = vec![1i64; batch];
+    let rots = coord.rotate_batch(&a, &steps);
+    assert_eq!(prods.len(), batch);
+    for i in 0..batch {
+        let dp = coord.eval.decrypt(&prods[i]);
+        assert!((dp[1].re - z1[1] * z2[1]).abs() < 5e-3, "mul item {i}");
+        let ds = coord.eval.decrypt(&sums[i]);
+        assert!((ds[1].re - (z1[1] + z2[1])).abs() < 1e-3, "add item {i}");
+        let dr = coord.eval.decrypt(&rots[i]);
+        assert!((dr[0].re - z1[1]).abs() < 1e-3, "rot item {i}");
+    }
+    assert_eq!(coord.metrics.ops.load(Ordering::Relaxed), 3 * batch as u64);
+    assert_eq!(coord.metrics.hmuls.load(Ordering::Relaxed), batch as u64);
+    assert_eq!(coord.metrics.rotations.load(Ordering::Relaxed), batch as u64);
+    assert!(coord.simulated_seconds() > 0.0);
+}

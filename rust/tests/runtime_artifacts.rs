@@ -1,21 +1,35 @@
-//! Integration: the Rust CKKS math layer vs the AOT JAX/Pallas artifacts
-//! must agree *bit-exactly* on the artifact parameter set. This is the
-//! proof that L1/L2 (Python, build-time) and L3 (Rust, request path)
-//! compute the same scheme.
+//! Integration: the Rust CKKS math layer vs the AOT JAX/Pallas artifact
+//! runtime must agree *bit-exactly* on the artifact parameter set. This
+//! is the proof that L1/L2 (Python, build-time) and L3 (Rust, request
+//! path) compute the same scheme.
 //!
-//! Requires `make artifacts` to have populated `artifacts/` — skipped
-//! (with a loud message) otherwise.
+//! Requires `python -m compile.aot --out-dir ../artifacts` (from
+//! `python/`) to have populated `artifacts/` — skipped (with a loud
+//! message) otherwise.
 
 use fhemem::math::modarith::mul_mod;
 use fhemem::math::ntt::NttTable;
 use fhemem::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
 use fhemem::util::check::SplitMix64;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> PathBuf {
+    // The package manifest lives in rust/; aot.py writes to the repo-root
+    // artifacts/ by default. Accept rust/artifacts too.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let local = manifest.join("artifacts");
+    if local.join("meta.txt").exists() {
+        return local;
+    }
+    manifest.parent().map(|p| p.join("artifacts")).unwrap_or(local)
+}
 
 fn runtime() -> Option<Runtime> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = artifact_dir();
     if !dir.join("meta.txt").exists() {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        eprintln!(
+            "SKIP: artifacts/ not built (run `python -m compile.aot --out-dir ../artifacts`)"
+        );
         return None;
     }
     Some(Runtime::load(&dir).expect("artifact load"))
