@@ -1,0 +1,131 @@
+"""Golden kernel vectors: the cross-layer conformance contract.
+
+``python -m compile.golden`` (run from ``python/``) regenerates
+``golden/kernel_vectors.json`` at the repo root from the L1 reference
+kernels in :mod:`compile.kernels.ref`. The fixture pins, bit-exactly:
+
+* the twiddle-table convention (``psi_rev`` / ``psi_inv_rev`` / ``n_inv``
+  for the smallest generator ψ, matching ``rust::math::ntt::NttContext``),
+* forward NTT outputs (standard order in, bit-reversed out),
+* inverse NTT outputs (bit-reversed in, standard out, scaled by N⁻¹),
+* pointwise mulmod over the artifact modulus chain.
+
+``rust/tests/golden_kernels.rs`` asserts the Rust engine reproduces every
+vector; ``python/tests/test_golden.py`` regenerates the fixture in memory
+and diffs it against the checked-in file, so neither side can drift
+silently. Everything is deterministic: fixed seeds, Mersenne-Twister
+draws, exact python-int modular arithmetic in the reference kernels.
+"""
+
+import json
+import random
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from . import params
+from .kernels import ref
+
+# (tag, modulus bits, log2 N) — spans the artifact set (25/30-bit) through
+# the paper-scale 50/60-bit rescaling primes the lazy-reduction butterflies
+# must survive.
+NTT_CASES = [
+    ("artifact_25bit", 25, 3),
+    ("q0_30bit", 30, 5),
+    ("func_40bit", 40, 6),
+    ("paper_50bit", 50, 7),
+    ("paper_60bit", 60, 8),
+]
+
+MULMOD_N = 64
+
+
+def fixture_path() -> Path:
+    return Path(__file__).resolve().parents[2] / "golden" / "kernel_vectors.json"
+
+
+def _ntt_case(tag: str, bits: int, logn: int) -> dict:
+    n = 1 << logn
+    q = params.ntt_primes(bits, n, 1)[0]
+    psi_rev, psi_inv_rev, n_inv = params.ntt_tables(q, n)
+    rng = random.Random(0xF0E1_D2C3 ^ (bits * 1_000 + logn))
+    x = [rng.randrange(q) for _ in range(n)]
+    y_bitrev = [rng.randrange(q) for _ in range(n)]
+
+    fwd = ref.ntt_ref(
+        np.array([x], dtype=np.uint64),
+        np.array([psi_rev], dtype=np.uint64),
+        np.array([q], dtype=np.uint64),
+    )
+    inv = ref.intt_ref(
+        np.array([y_bitrev], dtype=np.uint64),
+        np.array([psi_inv_rev], dtype=np.uint64),
+        np.array([n_inv], dtype=np.uint64),
+        np.array([q], dtype=np.uint64),
+    )
+    return {
+        "tag": tag,
+        "q": q,
+        "n": n,
+        "psi_rev": psi_rev,
+        "psi_inv_rev": psi_inv_rev,
+        "n_inv": n_inv,
+        "x": x,
+        "forward": [int(v) for v in np.asarray(fwd)[0]],
+        "y_bitrev": y_bitrev,
+        "inverse": [int(v) for v in np.asarray(inv)[0]],
+    }
+
+
+def _mulmod_cases() -> list:
+    """Pointwise mulmod over the artifact chain (moduli < 2^31, so the
+    jnp uint64 product in modmul_ref is exact)."""
+    q_mods, p_mods = params.modulus_chain()
+    moduli = q_mods + p_mods
+    rng = random.Random(0xB4A5_9687)
+    xs = [[rng.randrange(q) for _ in range(MULMOD_N)] for q in moduli]
+    ys = [[rng.randrange(q) for _ in range(MULMOD_N)] for q in moduli]
+    prod = ref.modmul_ref(
+        np.array(xs, dtype=np.uint64),
+        np.array(ys, dtype=np.uint64),
+        np.array(moduli, dtype=np.uint64),
+    )
+    prod = np.asarray(prod)
+    return [
+        {
+            "q": q,
+            "x": xs[i],
+            "y": ys[i],
+            "product": [int(v) for v in prod[i]],
+        }
+        for i, q in enumerate(moduli)
+    ]
+
+
+def generate() -> dict:
+    return {
+        "version": 1,
+        "generator": "python/compile/golden.py (regenerate: cd python && python -m compile.golden)",
+        "ntt": [_ntt_case(*case) for case in NTT_CASES],
+        "mulmod": _mulmod_cases(),
+    }
+
+
+def write(path: Path | None = None) -> Path:
+    path = path or fixture_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        # ensure_ascii=False: the Rust-side minimal JSON reader passes
+        # UTF-8 through but does not implement \uXXXX escapes.
+        json.dump(generate(), f, indent=1, ensure_ascii=False)
+        f.write("\n")
+    return path
+
+
+if __name__ == "__main__":
+    out = write()
+    print(f"wrote {out}")

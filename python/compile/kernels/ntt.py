@@ -9,7 +9,7 @@ locality replaces mat locality, the VPU lanes replace the row-wide NMU
 adders, and the twiddle table arrives pre-ordered (ψ^bitrev(i)) exactly
 like FHEmem's in-mat twiddle layout (§IV-A3).
 
-Layout contract (identical to rust `NttTable` and `kernels.ref`):
+Layout contract (identical to rust `NttContext` and `kernels.ref`):
 forward = Cooley–Tukey, standard → bit-reversed; inverse =
 Gentleman–Sande, bit-reversed → standard, folding in N⁻¹.
 """

@@ -25,7 +25,7 @@ def modsub_ref(x, y, q):
 def ntt_ref(x, psi_rev, q):
     """Iterative Cooley–Tukey negacyclic NTT, one limb at a time.
 
-    Mirrors rust `NttTable::forward`: standard order in, bit-reversed out.
+    Mirrors rust `NttContext::forward`: standard order in, bit-reversed out.
     Scalar python-int loops — slow but independent of the kernel's
     vectorised reshape scheme.
     """

@@ -87,7 +87,7 @@ def bit_reverse(x: int, bits: int) -> int:
 
 
 def ntt_tables(q: int, n: int):
-    """(psi_rev, psi_inv_rev, n_inv) matching rust NttTable layout."""
+    """(psi_rev, psi_inv_rev, n_inv) matching rust NttContext layout."""
     logn = n.bit_length() - 1
     psi = primitive_2n_root(q, n)
     psi_inv = pow(psi, q - 2, q)

@@ -1,0 +1,72 @@
+"""Golden fixture freshness + self-consistency.
+
+The checked-in ``golden/kernel_vectors.json`` is the cross-layer
+conformance contract between the L1 reference kernels and the Rust NTT
+engine (``rust/tests/golden_kernels.rs``). These tests regenerate the
+fixture in memory and diff it against the file, so an edit to either the
+reference kernels or the table conventions cannot land without the
+fixture (and therefore the Rust conformance suite) noticing.
+"""
+
+import json
+
+import numpy as np
+
+from compile import golden, params
+from compile.kernels import ref
+
+
+def _checked_in():
+    path = golden.fixture_path()
+    assert path.exists(), f"{path} missing — run `python -m compile.golden`"
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_fixture_matches_regeneration():
+    regenerated = golden.generate()
+    assert regenerated == _checked_in(), (
+        "golden/kernel_vectors.json is stale — regenerate with "
+        "`cd python && python -m compile.golden` and commit the diff"
+    )
+
+
+def test_fixture_values_are_reduced():
+    d = _checked_in()
+    for case in d["ntt"]:
+        q = case["q"]
+        for key in ("psi_rev", "psi_inv_rev", "x", "forward", "y_bitrev", "inverse"):
+            assert all(0 <= v < q for v in case[key]), f"{case['tag']}.{key}"
+        assert 0 < case["n_inv"] < q
+        assert case["n"] == len(case["x"])
+        assert q % (2 * case["n"]) == 1, "modulus not NTT-friendly"
+    for case in d["mulmod"]:
+        q = case["q"]
+        for key in ("x", "y", "product"):
+            assert all(0 <= v < q for v in case[key])
+
+
+def test_fixture_ntt_roundtrip_closes():
+    # The forward and inverse vectors must be mutually consistent under
+    # the reference kernels themselves.
+    d = _checked_in()
+    for case in d["ntt"]:
+        q, n_inv = case["q"], case["n_inv"]
+        back = ref.intt_ref(
+            np.array([case["forward"]], dtype=np.uint64),
+            np.array([case["psi_inv_rev"]], dtype=np.uint64),
+            np.array([n_inv], dtype=np.uint64),
+            np.array([q], dtype=np.uint64),
+        )
+        assert [int(v) for v in np.asarray(back)[0]] == case["x"], case["tag"]
+
+
+def test_fixture_tables_match_params_generator():
+    # The exported tables must come from the shared ntt_tables generator
+    # (same smallest-generator root, same bit-reversed layout).
+    d = _checked_in()
+    for case in d["ntt"]:
+        psi_rev, psi_inv_rev, n_inv = params.ntt_tables(case["q"], case["n"])
+        assert case["psi_rev"] == psi_rev, case["tag"]
+        assert case["psi_inv_rev"] == psi_inv_rev, case["tag"]
+        assert case["n_inv"] == n_inv, case["tag"]

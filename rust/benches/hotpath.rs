@@ -12,7 +12,7 @@
 //! ```
 
 use fhemem::ckks::{CkksContext, Evaluator, KeyChain};
-use fhemem::math::ntt::NttTable;
+use fhemem::math::ntt::{naive_forward, naive_inverse, NttContext};
 use fhemem::math::primes::ntt_primes;
 use fhemem::parallel::BankPool;
 use fhemem::params::CkksParams;
@@ -37,9 +37,9 @@ fn bench_batched_ntt(records: &mut Vec<Record>) -> bool {
     let n = 1usize << logn;
     let limbs = 8usize;
     let batch = 8usize;
-    let tables: Vec<Arc<NttTable>> = ntt_primes(40, n, limbs)
+    let tables: Vec<Arc<NttContext>> = ntt_primes(40, n, limbs)
         .iter()
-        .map(|m| Arc::new(NttTable::new(m.q, n)))
+        .map(|m| NttContext::get(m.q, n))
         .collect();
     let mut rng = SplitMix64::new(1);
     let rows: Vec<Vec<u64>> = (0..batch * limbs)
@@ -123,13 +123,67 @@ fn bench_batched_ckks(records: &mut Vec<Record>) {
     });
 }
 
-fn write_json(path: &str, records: &[Record], bit_identical: bool) {
+/// Naive (per-call root regeneration + full-width reductions) vs the
+/// precomputed Shoup/Harvey engine, single row at N = 8192. The returned
+/// speedup is the acceptance number the CI gate checks (> 1.0 required).
+fn bench_ntt_engine_vs_naive(records: &mut Vec<Record>) -> f64 {
+    let logn = 13usize;
+    let n = 1usize << logn;
+    let q = ntt_primes(50, n, 1)[0].q;
+    let ctx = NttContext::get(q, n);
+    let mut rng = SplitMix64::new(7);
+    let data: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+
+    // Bit-identity first: the engine must reproduce the naive kernels.
+    let engine_out = {
+        let mut buf = data.clone();
+        ctx.forward(&mut buf);
+        buf
+    };
+    let naive_out = {
+        let mut buf = data.clone();
+        naive_forward(&mut buf, q);
+        buf
+    };
+    assert_eq!(engine_out, naive_out, "engine diverged from naive kernel");
+
+    let mut buf = data.clone();
+    let s_naive = bench_fn(&format!("ntt naive fwd+inv n=2^{logn}"), || {
+        naive_forward(&mut buf, q);
+        naive_inverse(&mut buf, q);
+        std::hint::black_box(&buf);
+    });
+    let mut buf = data.clone();
+    let s_pre = bench_fn(&format!("ntt precomputed fwd+inv n=2^{logn}"), || {
+        ctx.forward(&mut buf);
+        ctx.inverse(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    let speedup = if s_pre.median_ns() > 0.0 {
+        s_naive.median_ns() / s_pre.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> precomputed NTT {speedup:.2}x vs naive at N={n}");
+    records.push(Record {
+        name: format!("ntt precomputed-vs-naive n=2^{logn} (speedup field = vs naive)"),
+        threads: 1,
+        median_ns: s_pre.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    speedup
+}
+
+fn write_json(path: &str, records: &[Record], bit_identical: bool, ntt_speedup: f64) {
     let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"hotpath\",\n");
     s.push_str(&format!("  \"machine_threads\": {machine},\n"));
     s.push_str(&format!("  \"parallel_bit_identical_to_serial\": {bit_identical},\n"));
+    s.push_str(&format!(
+        "  \"ntt_precomputed_speedup_vs_naive_n8192\": {ntt_speedup:.3},\n"
+    ));
     s.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
@@ -158,7 +212,7 @@ fn main() {
     for logn in [11usize, 13] {
         let n = 1 << logn;
         let q = ntt_primes(40, n, 1)[0].q;
-        let t = NttTable::new(q, n);
+        let t = NttContext::get(q, n);
         let mut rng = SplitMix64::new(5);
         let data: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
         let mut buf = data.clone();
@@ -170,6 +224,10 @@ fn main() {
         let butterflies = (n / 2 * logn) as f64;
         println!("    -> {:.1} M butterflies/s", butterflies / s.median.as_secs_f64() / 1e6);
     }
+
+    // The NTT engine: precomputed Shoup/Harvey context vs the naive
+    // (regenerate-roots, full-reduction) baseline. CI fails if ≤ 1x.
+    let ntt_speedup = bench_ntt_engine_vs_naive(&mut records);
 
     // The bank-pool engine: batched limb-parallel NTT (acceptance: ≥2x
     // at N=8192 with ≥4 threads) + batched CKKS HMul.
@@ -207,6 +265,6 @@ fn main() {
     });
 
     if let Some(path) = args.get("json") {
-        write_json(path, &records, bit_identical);
+        write_json(path, &records, bit_identical, ntt_speedup);
     }
 }

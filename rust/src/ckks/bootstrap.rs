@@ -21,6 +21,13 @@
 //! rotation-heavy structure whose data movement FHEmem's HDL/MDL links
 //! accelerate; the trace generator in [`crate::trace`] mirrors these op
 //! counts.
+//!
+//! Bootstrapping is the deepest NTT consumer in the crate (ModRaise
+//! transforms the full basis, every BSGS rotation round-trips limbs
+//! through the NTT domain). All of it runs on the shared
+//! [`crate::math::ntt::NttContext`] tables the basis resolved from the
+//! process-wide cache at construction: the pipeline reads pre-resolved
+//! `Arc`s out of `ctx.basis.ntt` and never takes the context-cache lock.
 
 use super::cipher::{Ciphertext, Evaluator};
 use super::complex::C64;

@@ -49,7 +49,7 @@ impl ExtPoly {
         }
         let mods = self.mods.clone();
         crate::math::poly::par_rows(&mut self.rows, |r, row| {
-            ctx.basis.tables[mods[r]].forward(row)
+            ctx.basis.ntt[mods[r]].forward(row)
         });
         self.domain = Domain::Ntt;
     }
@@ -60,7 +60,7 @@ impl ExtPoly {
         }
         let mods = self.mods.clone();
         crate::math::poly::par_rows(&mut self.rows, |r, row| {
-            ctx.basis.tables[mods[r]].inverse(row)
+            ctx.basis.ntt[mods[r]].inverse(row)
         });
         self.domain = Domain::Coeff;
     }
@@ -154,7 +154,7 @@ impl EvalKey {
             let mut b = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
             for (r, &idx) in mods.iter().enumerate() {
                 let q = ctx.basis.q(idx);
-                let table = &ctx.basis.tables[idx];
+                let table = &ctx.basis.ntt[idx];
                 let mut e_row: Vec<u64> = e
                     .iter()
                     .map(|&v| crate::math::prng::signed_to_mod(v, q))

@@ -12,6 +12,6 @@ pub mod prng;
 pub mod rns;
 
 pub use modarith::{add_mod, inv_mod, mul_mod, neg_mod, pow_mod, sub_mod, Montgomery};
-pub use ntt::NttTable;
+pub use ntt::NttContext;
 pub use poly::{Domain, RnsPoly};
 pub use rns::RnsBasis;

@@ -185,6 +185,41 @@ impl Montgomery {
     }
 }
 
+/// Precompute the Shoup companion `⌊w·2^64 / q⌋` for a constant `w < q`.
+/// Pairs with [`mul_shoup`] / [`mul_shoup_lazy`]; the NTT engine stores one
+/// companion per twiddle so the butterfly hot loop never divides.
+#[inline(always)]
+pub fn shoup_precompute(w: u64, q: u64) -> u64 {
+    debug_assert!(w < q && q < (1 << 63));
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// Shoup multiplication with **lazy** reduction: `w·t mod q + k·q` for
+/// `k ∈ {0, 1}`, i.e. a result in `[0, 2q)`. One mulhi + one mullo and no
+/// conditional — the Harvey butterfly keeps values in `[0, 2q)`/`[0, 4q)`
+/// and corrects once at the end of the transform. Valid for any `t < 2^64`
+/// with `w < q < 2^63` and `w_shoup = ⌊w·2^64/q⌋`.
+#[inline(always)]
+pub fn mul_shoup_lazy(t: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((w_shoup as u128 * t as u128) >> 64) as u64;
+    // hi underestimates ⌊w·t/q⌋ by at most 1, so the wrapped difference
+    // is the true residue plus at most one extra q.
+    w.wrapping_mul(t).wrapping_sub(hi.wrapping_mul(q))
+}
+
+/// Shoup multiplication, fully reduced: `w·t mod q` in one mulhi + one
+/// mullo + one conditional subtract. This is the FHEmem NMU's
+/// constant-multiply fast path analogue on CPU.
+#[inline(always)]
+pub fn mul_shoup(t: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let r = mul_shoup_lazy(t, w, w_shoup, q);
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
 /// A precomputed Shoup multiplier: `w·t mod q` in one mulhi + one mullo,
 /// valid for any `t < 2^64` with `w < q < 2^63`. The workhorse of the
 /// BConv hot path (§Perf optimization 1).
@@ -200,20 +235,20 @@ impl ShoupMul {
         debug_assert!(w < q && q < (1 << 63));
         Self {
             w,
-            w_shoup: (((w as u128) << 64) / q as u128) as u64,
+            w_shoup: shoup_precompute(w, q),
             q,
         }
     }
 
     #[inline(always)]
     pub fn mul(&self, t: u64) -> u64 {
-        let hi = ((self.w_shoup as u128 * t as u128) >> 64) as u64;
-        let r = self.w.wrapping_mul(t).wrapping_sub(hi.wrapping_mul(self.q));
-        if r >= self.q {
-            r - self.q
-        } else {
-            r
-        }
+        mul_shoup(t, self.w, self.w_shoup, self.q)
+    }
+
+    /// Lazy variant: result in `[0, 2q)` (see [`mul_shoup_lazy`]).
+    #[inline(always)]
+    pub fn mul_lazy(&self, t: u64) -> u64 {
+        mul_shoup_lazy(t, self.w, self.w_shoup, self.q)
     }
 }
 
@@ -390,6 +425,25 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shoup_lazy_is_within_one_q() {
+        // mul_shoup_lazy must return w·t mod q + k·q with k ∈ {0, 1},
+        // for arbitrary u64 operands t (including t ≥ q).
+        forall("shoup lazy bound", 256, |rng| {
+            let q = rng.range(3, 1 << 62) | 1;
+            let w = rng.below(q);
+            let ws = shoup_precompute(w, q);
+            let t = rng.next_u64();
+            let r = mul_shoup_lazy(t, w, ws, q);
+            assert!(r < 2 * q, "lazy result {r} >= 2q (q={q})");
+            let want = ((w as u128 * t as u128) % q as u128) as u64;
+            assert!(r == want || r == want + q, "q={q} w={w} t={t}");
+            assert_eq!(mul_shoup(t, w, ws, q), want);
+            let s = ShoupMul::new(w, q);
+            assert_eq!(s.mul_lazy(t), r);
+        });
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Negacyclic number-theoretic transform over `Z_q[X]/(X^N + 1)`.
+//! Negacyclic number-theoretic transform over `Z_q[X]/(X^N + 1)` — the
+//! precomputed Shoup/Harvey engine behind every polynomial multiply in the
+//! crate.
 //!
 //! Forward: Cooley–Tukey decimation-in-time with the 2N-th root ψ folded
 //! into the twiddles (so no pre/post multiplication pass is needed).
@@ -9,25 +11,33 @@
 //! consumes bit-reversed and restores standard order. All pointwise ops in
 //! this crate treat the NTT domain as opaque, so the internal order never
 //! leaks.
+//!
+//! # The engine
+//!
+//! [`NttContext`] carries, per `(q, N)` pair:
+//!
+//! * bit-reversed twiddle tables ψ^bitrev(i) and ψ^{-bitrev(i)} with their
+//!   Shoup companions `⌊w·2^64/q⌋`, so every butterfly multiply is one
+//!   mulhi + one mullo and **no division**;
+//! * Harvey **lazy reduction** butterflies: intermediate values live in
+//!   `[0, 4q)` (forward) / `[0, 2q)` (inverse) and a single correction
+//!   pass at the end of the transform restores the fully-reduced `[0, q)`
+//!   representation. This needs `q < 2^62`, which every modulus family in
+//!   [`crate::math::primes`] satisfies (≤ 61 bits).
+//!
+//! Contexts are memoised process-wide in a cache keyed by `(q, N)`
+//! ([`NttContext::get`]): RNS bases, key-switching, bootstrapping and the
+//! bank-pool workers all share one read-only table set per modulus instead
+//! of regenerating roots. [`naive_forward`] / [`naive_inverse`] keep the
+//! pre-engine behaviour (per-call root generation + full-width reductions)
+//! alive as the benchmark baseline — nothing on a hot path calls them.
 
-use super::modarith::{add_mod, inv_mod, mul_mod, pow_mod, sub_mod};
+use super::modarith::{
+    add_mod, inv_mod, mul_mod, mul_shoup, mul_shoup_lazy, pow_mod, shoup_precompute, sub_mod,
+};
 use crate::util::log2_exact;
-
-/// Precomputed tables for one (q, N) pair.
-#[derive(Debug, Clone)]
-pub struct NttTable {
-    pub q: u64,
-    pub n: usize,
-    /// ψ^bitrev(i) for the forward transform (ψ = primitive 2N-th root).
-    psi_rev: Vec<u64>,
-    /// ψ^{-bitrev(i)} for the inverse transform.
-    psi_inv_rev: Vec<u64>,
-    /// N^{-1} mod q.
-    n_inv: u64,
-    /// Shoup precomputed quotients for the forward twiddles.
-    psi_rev_shoup: Vec<u64>,
-    psi_inv_rev_shoup: Vec<u64>,
-}
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Find a generator of the 2N-th roots of unity mod q (q ≡ 1 mod 2N).
 fn primitive_2n_root(q: u64, n: usize) -> u64 {
@@ -48,26 +58,96 @@ fn primitive_2n_root(q: u64, n: usize) -> u64 {
     unreachable!()
 }
 
-#[inline(always)]
-fn shoup(w: u64, q: u64) -> u64 {
-    (((w as u128) << 64) / q as u128) as u64
+/// Precomputed NTT engine for one `(q, N)` pair. Obtain shared instances
+/// through [`NttContext::get`]; construction is the only place roots are
+/// ever generated.
+#[derive(Debug)]
+pub struct NttContext {
+    pub q: u64,
+    pub n: usize,
+    /// 2q, the lazy-reduction correction constant.
+    two_q: u64,
+    /// ψ^bitrev(i) for the forward transform (ψ = primitive 2N-th root).
+    psi_rev: Vec<u64>,
+    /// Shoup companions ⌊ψ^bitrev(i)·2^64/q⌋.
+    psi_rev_shoup: Vec<u64>,
+    /// ψ^{-bitrev(i)} for the inverse transform.
+    psi_inv_rev: Vec<u64>,
+    psi_inv_rev_shoup: Vec<u64>,
+    /// N^{-1} mod q and its Shoup companion.
+    n_inv: u64,
+    n_inv_shoup: u64,
 }
 
-/// Shoup modular multiplication: `w * t mod q` where `w_shoup` is the
-/// precomputed quotient. One mulhi + one mullo — this is the FHEmem NMU's
-/// constant-multiply fast path analogue on CPU.
-#[inline(always)]
-fn mul_shoup(t: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
-    let hi = ((w_shoup as u128 * t as u128) >> 64) as u64;
-    let r = w.wrapping_mul(t).wrapping_sub(hi.wrapping_mul(q));
-    if r >= q {
-        r - q
-    } else {
-        r
+/// Process-wide context cache keyed by `(q, N)`.
+static CONTEXTS: OnceLock<Mutex<HashMap<(u64, usize), Arc<NttContext>>>> = OnceLock::new();
+
+impl NttContext {
+    /// Fetch (or build once) the shared context for `(q, n)`. Every basis,
+    /// key-switching key and bank-pool worker resolves its tables through
+    /// this cache, so twiddles are generated exactly once per modulus for
+    /// the life of the process.
+    pub fn get(q: u64, n: usize) -> Arc<NttContext> {
+        let cache = CONTEXTS.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        map.entry((q, n))
+            .or_insert_with(|| Arc::new(NttContext::build(q, n)))
+            .clone()
     }
-}
 
-impl NttTable {
+    /// Number of contexts currently cached (test/metrics helper).
+    pub fn cached_contexts() -> usize {
+        CONTEXTS
+            .get()
+            .map(|c| c.lock().unwrap().len())
+            .unwrap_or(0)
+    }
+
+    /// Build a context from scratch, bypassing the cache. Only the cache
+    /// itself and table-construction tests call this.
+    pub fn build(q: u64, n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        // Lazy reduction headroom: intermediates reach 4q, so 4q < 2^64.
+        assert!(q < (1 << 62), "q={q} too large for lazy reduction");
+        let bits = log2_exact(n as u64);
+        let psi = primitive_2n_root(q, n);
+        let psi_inv = inv_mod(psi, q);
+        let mut pows = vec![0u64; n];
+        let mut pows_inv = vec![0u64; n];
+        let mut p = 1u64;
+        let mut pi = 1u64;
+        for i in 0..n {
+            pows[i] = p;
+            pows_inv[i] = pi;
+            p = mul_mod(p, psi, q);
+            pi = mul_mod(pi, psi_inv, q);
+        }
+        let mut psi_rev = vec![0u64; n];
+        let mut psi_inv_rev = vec![0u64; n];
+        for i in 0..n {
+            let r = crate::util::bit_reverse(i, bits);
+            psi_rev[i] = pows[r];
+            psi_inv_rev[i] = pows_inv[r];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let psi_inv_rev_shoup = psi_inv_rev
+            .iter()
+            .map(|&w| shoup_precompute(w, q))
+            .collect();
+        let n_inv = inv_mod(n as u64, q);
+        Self {
+            q,
+            n,
+            two_q: 2 * q,
+            psi_rev,
+            psi_rev_shoup,
+            psi_inv_rev,
+            psi_inv_rev_shoup,
+            n_inv,
+            n_inv_shoup: shoup_precompute(n_inv, q),
+        }
+    }
+
     /// Twiddle table ψ^bitrev(i) (shared with the AOT artifacts, which
     /// take it as a runtime input).
     pub fn psi_rev(&self) -> &[u64] {
@@ -84,45 +164,17 @@ impl NttTable {
         self.n_inv
     }
 
-    pub fn new(q: u64, n: usize) -> Self {
-        assert!(n.is_power_of_two());
-        let bits = log2_exact(n as u64);
-        let psi = primitive_2n_root(q, n);
-        let psi_inv = inv_mod(psi, q);
-        let mut psi_rev = vec![0u64; n];
-        let mut psi_inv_rev = vec![0u64; n];
-        let mut p = 1u64;
-        let mut pi = 1u64;
-        let mut pows = vec![0u64; n];
-        let mut pows_inv = vec![0u64; n];
-        for i in 0..n {
-            pows[i] = p;
-            pows_inv[i] = pi;
-            p = mul_mod(p, psi, q);
-            pi = mul_mod(pi, psi_inv, q);
-        }
-        for i in 0..n {
-            let r = crate::util::bit_reverse(i, bits);
-            psi_rev[i] = pows[r];
-            psi_inv_rev[i] = pows_inv[r];
-        }
-        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, q)).collect();
-        let psi_inv_rev_shoup = psi_inv_rev.iter().map(|&w| shoup(w, q)).collect();
-        Self {
-            q,
-            n,
-            psi_rev,
-            psi_inv_rev,
-            n_inv: inv_mod(n as u64, q),
-            psi_rev_shoup,
-            psi_inv_rev_shoup,
-        }
-    }
-
     /// In-place forward negacyclic NTT (standard → bit-reversed order).
+    ///
+    /// Harvey lazy reduction: inputs may be anywhere in `[0, 2q)` (fully
+    /// reduced inputs are the common case); intermediates stay below 4q
+    /// with one conditional subtract per butterfly instead of two full
+    /// `mod q` reductions, and the final pass restores `[0, q)` exactly.
     pub fn forward(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
+        debug_assert!(a.iter().all(|&x| x < self.two_q));
         let q = self.q;
+        let two_q = self.two_q;
         let mut t = self.n;
         let mut m = 1usize;
         while m < self.n {
@@ -133,20 +185,43 @@ impl NttTable {
                 // split borrows so the butterfly is bounds-check free
                 let (lo, hi) = a[2 * i * t..2 * i * t + 2 * t].split_at_mut(t);
                 for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x;
-                    let v = mul_shoup(*y, w, ws, q);
-                    *x = add_mod(u, v, q);
-                    *y = sub_mod(u, v, q);
+                    // x ∈ [0, 4q) coming in; fold to [0, 2q) lazily.
+                    let mut u = *x;
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    // v ∈ [0, 2q) for any u64 operand — the Shoup trick
+                    // absorbs the unreduced y from the previous stage.
+                    let v = mul_shoup_lazy(*y, w, ws, q);
+                    *x = u + v; // < 4q
+                    *y = u + two_q - v; // < 4q
                 }
             }
             m <<= 1;
         }
+        // Single correction pass: [0, 4q) → [0, q).
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
     }
 
     /// In-place inverse negacyclic NTT (bit-reversed → standard order).
+    ///
+    /// Accepts inputs in `[0, 2q)`; the Gentleman–Sande butterflies keep
+    /// every intermediate in `[0, 2q)` and the final N⁻¹ scaling reduces
+    /// to `[0, q)` exactly.
     pub fn inverse(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
+        debug_assert!(a.iter().all(|&x| x < self.two_q));
         let q = self.q;
+        let two_q = self.two_q;
         let mut t = 1usize;
         let mut m = self.n;
         while m > 1 {
@@ -157,10 +232,15 @@ impl NttTable {
                 let ws = self.psi_inv_rev_shoup[h + i];
                 let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
                 for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x;
-                    let v = *y;
-                    *x = add_mod(u, v, q);
-                    *y = mul_shoup(sub_mod(u, v, q), w, ws, q);
+                    let u = *x; // < 2q
+                    let v = *y; // < 2q
+                    let mut s = u + v; // < 4q
+                    if s >= two_q {
+                        s -= two_q;
+                    }
+                    *x = s; // < 2q
+                    // u - v + 2q ∈ (0, 4q); lazy Shoup folds it back < 2q.
+                    *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
                 }
                 j1 += 2 * t;
             }
@@ -168,8 +248,9 @@ impl NttTable {
             m = h;
         }
         let n_inv = self.n_inv;
-        let ns = shoup(n_inv, q);
+        let ns = self.n_inv_shoup;
         for x in a.iter_mut() {
+            // Full Shoup reduction: output in [0, q).
             *x = mul_shoup(*x, n_inv, ns, q);
         }
     }
@@ -196,22 +277,97 @@ impl NttTable {
     }
 }
 
+/// The pre-engine forward NTT: regenerates the root powers on every call
+/// and reduces every butterfly product through the full-width `u128 %`
+/// path. Kept (deliberately unoptimised) as the baseline the hotpath
+/// bench measures [`NttContext::forward`] against; no production call
+/// site uses it.
+pub fn naive_forward(a: &mut [u64], q: u64) {
+    let n = a.len();
+    let bits = log2_exact(n as u64);
+    let psi = primitive_2n_root(q, n);
+    let mut pows = vec![0u64; n];
+    let mut p = 1u64;
+    for slot in pows.iter_mut() {
+        *slot = p;
+        p = mul_mod(p, psi, q);
+    }
+    let psi_rev: Vec<u64> = (0..n)
+        .map(|i| pows[crate::util::bit_reverse(i, bits)])
+        .collect();
+    let mut t = n;
+    let mut m = 1usize;
+    while m < n {
+        t >>= 1;
+        for i in 0..m {
+            let w = psi_rev[m + i];
+            let (lo, hi) = a[2 * i * t..2 * i * t + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let u = *x;
+                let v = mul_mod(*y, w, q);
+                *x = add_mod(u, v, q);
+                *y = sub_mod(u, v, q);
+            }
+        }
+        m <<= 1;
+    }
+}
+
+/// Pre-engine inverse NTT (see [`naive_forward`]).
+pub fn naive_inverse(a: &mut [u64], q: u64) {
+    let n = a.len();
+    let bits = log2_exact(n as u64);
+    let psi_inv = inv_mod(primitive_2n_root(q, n), q);
+    let mut pows = vec![0u64; n];
+    let mut p = 1u64;
+    for slot in pows.iter_mut() {
+        *slot = p;
+        p = mul_mod(p, psi_inv, q);
+    }
+    let psi_inv_rev: Vec<u64> = (0..n)
+        .map(|i| pows[crate::util::bit_reverse(i, bits)])
+        .collect();
+    let mut t = 1usize;
+    let mut m = n;
+    while m > 1 {
+        let h = m >> 1;
+        let mut j1 = 0usize;
+        for i in 0..h {
+            let w = psi_inv_rev[h + i];
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let u = *x;
+                let v = *y;
+                *x = add_mod(u, v, q);
+                *y = mul_mod(sub_mod(u, v, q), w, q);
+            }
+            j1 += 2 * t;
+        }
+        t <<= 1;
+        m = h;
+    }
+    let n_inv = inv_mod(n as u64, q);
+    for x in a.iter_mut() {
+        *x = mul_mod(*x, n_inv, q);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::math::primes::ntt_primes;
     use crate::util::check::forall;
 
-    fn table(logn: usize) -> NttTable {
+    fn context(logn: usize) -> Arc<NttContext> {
         let n = 1 << logn;
         let q = ntt_primes(40, n, 1)[0].q;
-        NttTable::new(q, n)
+        NttContext::get(q, n)
     }
 
     #[test]
     fn roundtrip_identity() {
         for logn in [3usize, 6, 10, 12] {
-            let t = table(logn);
+            let t = context(logn);
             forall("ntt roundtrip", 8, |rng| {
                 let orig: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
                 let mut a = orig.clone();
@@ -224,11 +380,11 @@ mod tests {
 
     #[test]
     fn convolution_matches_schoolbook() {
-        let t = table(6);
+        let t = context(6);
         forall("ntt convolution", 16, |rng| {
             let a: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
             let b: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
-            let expect = NttTable::negacyclic_mul_reference(&a, &b, t.q);
+            let expect = NttContext::negacyclic_mul_reference(&a, &b, t.q);
             let mut fa = a.clone();
             let mut fb = b.clone();
             t.forward(&mut fa);
@@ -245,7 +401,7 @@ mod tests {
 
     #[test]
     fn forward_is_linear() {
-        let t = table(8);
+        let t = context(8);
         forall("ntt linearity", 8, |rng| {
             let a: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
             let b: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
@@ -266,23 +422,54 @@ mod tests {
     }
 
     #[test]
+    fn lazy_engine_matches_naive_kernels() {
+        // The lazy-reduction engine must be bit-identical to the
+        // full-reduction baseline it replaced.
+        for logn in [4usize, 8, 11] {
+            let t = context(logn);
+            forall("lazy == naive", 4, |rng| {
+                let a: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+                let mut fast = a.clone();
+                let mut slow = a.clone();
+                t.forward(&mut fast);
+                naive_forward(&mut slow, t.q);
+                assert_eq!(fast, slow, "forward logn={logn}");
+                t.inverse(&mut fast);
+                naive_inverse(&mut slow, t.q);
+                assert_eq!(fast, slow, "inverse logn={logn}");
+            });
+        }
+    }
+
+    #[test]
+    fn context_cache_shares_instances() {
+        let n = 1 << 7;
+        let q = ntt_primes(30, n, 1)[0].q;
+        let a = NttContext::get(q, n);
+        let b = NttContext::get(q, n);
+        assert!(Arc::ptr_eq(&a, &b), "cache returned distinct contexts");
+        assert!(NttContext::cached_contexts() >= 1);
+        // Distinct (q, n) pairs get distinct contexts.
+        let c = NttContext::get(q, n / 2);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
     fn x_times_x_npow_minus_one_wraps_negatively() {
         // (X^{N-1}) * X = X^N = -1 in the negacyclic ring.
-        let t = table(4);
+        let t = context(4);
         let mut a = vec![0u64; t.n];
         let mut b = vec![0u64; t.n];
         a[t.n - 1] = 1;
         b[1] = 1;
-        let c = NttTable::negacyclic_mul_reference(&a, &b, t.q);
+        let c = NttContext::negacyclic_mul_reference(&a, &b, t.q);
         assert_eq!(c[0], t.q - 1);
         assert!(c[1..].iter().all(|&x| x == 0));
     }
 
     #[test]
     fn psi_has_order_2n() {
-        let t = table(8);
-        let psi = t.psi_rev[1]; // bitrev(1) of m=1 stage is ψ^{N/2}… use root directly:
-        let _ = psi;
+        let t = context(8);
         let root = primitive_2n_root(t.q, t.n);
         assert_eq!(pow_mod(root, t.n as u64, t.q), t.q - 1);
         assert_eq!(pow_mod(root, 2 * t.n as u64, t.q), 1);

@@ -73,7 +73,7 @@ impl RnsPoly {
             return;
         }
         let basis = self.basis.clone();
-        par_rows(&mut self.data, |j, row| basis.tables[j].forward(row));
+        par_rows(&mut self.data, |j, row| basis.ntt[j].forward(row));
         self.domain = Domain::Ntt;
     }
 
@@ -83,7 +83,7 @@ impl RnsPoly {
             return;
         }
         let basis = self.basis.clone();
-        par_rows(&mut self.data, |j, row| basis.tables[j].inverse(row));
+        par_rows(&mut self.data, |j, row| basis.ntt[j].inverse(row));
         self.domain = Domain::Coeff;
     }
 
@@ -278,7 +278,7 @@ mod tests {
 
     #[test]
     fn mul_matches_schoolbook_via_ntt() {
-        use crate::math::ntt::NttTable;
+        use crate::math::ntt::NttContext;
         let b = basis(5, 2);
         forall("poly mul", 8, |rng| {
             let a = random_poly(&b, 2, rng);
@@ -291,7 +291,7 @@ mod tests {
             fa.to_coeff();
             for j in 0..2 {
                 let expect =
-                    NttTable::negacyclic_mul_reference(&a.data[j], &c.data[j], b.q(j));
+                    NttContext::negacyclic_mul_reference(&a.data[j], &c.data[j], b.q(j));
                 assert_eq!(fa.data[j], expect, "limb {j}");
             }
         });

@@ -12,16 +12,22 @@
 //! noise, exactly as the paper's hardware does.
 
 use super::modarith::{add_mod, inv_mod, mul_mod, Barrett, ShoupMul};
-use super::ntt::NttTable;
+use super::ntt::NttContext;
 use super::primes::Modulus;
 use std::sync::Arc;
 
-/// An ordered RNS basis with per-modulus NTT tables and the precomputed
+/// An ordered RNS basis with per-modulus NTT contexts and the precomputed
 /// constants BConv needs for any prefix `q_0..q_{l}` of the basis.
+///
+/// The contexts come from the process-wide [`NttContext::get`] cache, so
+/// two bases over the same moduli (e.g. the CKKS context and a test
+/// fixture) share one twiddle table set instead of regenerating roots.
 #[derive(Debug, Clone)]
 pub struct RnsBasis {
     pub moduli: Vec<Modulus>,
-    pub tables: Vec<Arc<NttTable>>,
+    /// Shared per-modulus NTT engines (Shoup twiddles, Harvey lazy
+    /// butterflies) from the global `(q, N)` context cache.
+    pub ntt: Vec<Arc<NttContext>>,
     /// Per-modulus Barrett contexts — the division-free pointwise
     /// multiplier for variable×variable products (§Perf optimization 2).
     pub barrett: Vec<Barrett>,
@@ -30,12 +36,9 @@ pub struct RnsBasis {
 
 impl RnsBasis {
     pub fn new(moduli: Vec<Modulus>, n: usize) -> Self {
-        let tables = moduli
-            .iter()
-            .map(|m| Arc::new(NttTable::new(m.q, n)))
-            .collect();
+        let ntt = moduli.iter().map(|m| NttContext::get(m.q, n)).collect();
         let barrett = moduli.iter().map(|m| Barrett::new(m.q)).collect();
-        Self { moduli, tables, barrett, n }
+        Self { moduli, ntt, barrett, n }
     }
 
     pub fn len(&self) -> usize {

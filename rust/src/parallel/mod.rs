@@ -20,7 +20,7 @@
 
 pub use bankpool::BankPool;
 
-use crate::math::ntt::NttTable;
+use crate::math::ntt::NttContext;
 use std::sync::{Arc, OnceLock};
 
 static GLOBAL: OnceLock<BankPool> = OnceLock::new();
@@ -61,17 +61,20 @@ pub fn par_rows_on<F: Fn(usize, &mut [u64]) + Sync>(pool: &BankPool, rows: &mut 
     pool.par_rows(rows, |j, row: &mut Vec<u64>| f(j, row.as_mut_slice()));
 }
 
-/// Limb-parallel forward NTT: `rows[j]` is transformed with `tables[j]`.
-/// Ungated — callers hand over exactly the rows they want fanned out.
-pub fn ntt_forward_rows(pool: &BankPool, tables: &[Arc<NttTable>], rows: &mut [Vec<u64>]) {
-    debug_assert_eq!(tables.len(), rows.len());
-    pool.par_rows(rows, |j, row: &mut Vec<u64>| tables[j].forward(row));
+/// Limb-parallel forward NTT: `rows[j]` is transformed with `contexts[j]`.
+/// Ungated — callers hand over exactly the rows they want fanned out. The
+/// contexts are `Arc`s out of the global [`NttContext::get`] cache: built
+/// once, then shared read-only across every bank worker, so fan-out never
+/// touches (let alone regenerates) twiddle state.
+pub fn ntt_forward_rows(pool: &BankPool, contexts: &[Arc<NttContext>], rows: &mut [Vec<u64>]) {
+    debug_assert_eq!(contexts.len(), rows.len());
+    pool.par_rows(rows, |j, row: &mut Vec<u64>| contexts[j].forward(row));
 }
 
 /// Limb-parallel inverse NTT.
-pub fn ntt_inverse_rows(pool: &BankPool, tables: &[Arc<NttTable>], rows: &mut [Vec<u64>]) {
-    debug_assert_eq!(tables.len(), rows.len());
-    pool.par_rows(rows, |j, row: &mut Vec<u64>| tables[j].inverse(row));
+pub fn ntt_inverse_rows(pool: &BankPool, contexts: &[Arc<NttContext>], rows: &mut [Vec<u64>]) {
+    debug_assert_eq!(contexts.len(), rows.len());
+    pool.par_rows(rows, |j, row: &mut Vec<u64>| contexts[j].inverse(row));
 }
 
 #[cfg(test)]
@@ -84,11 +87,11 @@ mod tests {
         logn: usize,
         limbs: usize,
         seed: u64,
-    ) -> (Vec<Arc<NttTable>>, Vec<Vec<u64>>) {
+    ) -> (Vec<Arc<NttContext>>, Vec<Vec<u64>>) {
         let n = 1 << logn;
-        let tables: Vec<Arc<NttTable>> = ntt_primes(40, n, limbs)
+        let tables: Vec<Arc<NttContext>> = ntt_primes(40, n, limbs)
             .iter()
-            .map(|m| Arc::new(NttTable::new(m.q, n)))
+            .map(|m| NttContext::get(m.q, n))
             .collect();
         let mut rng = SplitMix64::new(seed);
         let rows = tables

@@ -276,7 +276,7 @@ fn kernel_pmul(inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
 
 /// Cooley–Tukey forward butterfly with an explicit twiddle table (the
 /// artifact convention: tables are runtime inputs, matching
-/// `NttTable::psi_rev` bit-for-bit).
+/// `NttContext::psi_rev` bit-for-bit).
 fn ntt_forward_with(row: &mut [u64], psi_rev: &[u64], q: u64) {
     let n = row.len();
     let mut t = n;
@@ -505,11 +505,11 @@ mod tests {
 
     #[test]
     fn ntt_native_matches_table_path() {
-        use crate::math::ntt::NttTable;
+        use crate::math::ntt::NttContext;
         let rt = tiny_runtime("ntt");
         let n = 64usize;
         let q = crate::math::primes::ntt_primes(25, n, 1)[0].q;
-        let table = NttTable::new(q, n);
+        let table = NttContext::get(q, n);
         let mut rng = crate::util::check::SplitMix64::new(9);
         let x: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
         let out = rt

@@ -1,0 +1,276 @@
+//! Minimal JSON reader (offline substitute for `serde_json`).
+//!
+//! Parses exactly the subset the checked-in fixtures use — objects,
+//! arrays, strings, booleans, `null` and **unsigned 64-bit integers**
+//! (golden kernel vectors are residues < 2^62, so floats and negative
+//! numbers are rejected rather than silently rounded).
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Object(Vec<(String, Json)>),
+    Array(Vec<Json>),
+    Num(u64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup that errors with the missing key's name.
+    pub fn field(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing field '{key}'"))
+    }
+
+    pub fn as_u64(&self) -> Result<u64, String> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Json], String> {
+        match self {
+            Json::Array(v) => Ok(v),
+            other => Err(format!("expected array, got {other:?}")),
+        }
+    }
+
+    /// Flatten an array of numbers into a `Vec<u64>`.
+    pub fn as_u64_vec(&self) -> Result<Vec<u64>, String> {
+        self.as_array()?.iter().map(|v| v.as_u64()).collect()
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!(
+            "expected '{}' at byte {} (found {:?})",
+            c as char,
+            *pos,
+            b.get(*pos).map(|&x| x as char)
+        ))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(&b'{') => parse_object(b, pos),
+        Some(&b'[') => parse_array(b, pos),
+        Some(&b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(&b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(&b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(&b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(&c) if c.is_ascii_digit() => parse_number(b, pos),
+        Some(&c) => Err(format!("unexpected byte {:?} at {}", c as char, *pos)),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {}", *pos))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len() && b[*pos].is_ascii_digit() {
+        *pos += 1;
+    }
+    if let Some(&c) = b.get(*pos) {
+        if matches!(c, b'.' | b'e' | b'E' | b'-' | b'+') {
+            return Err(format!("non-integer number at byte {start}"));
+        }
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).unwrap();
+    s.parse::<u64>()
+        .map(Json::Num)
+        .map_err(|e| format!("bad number '{s}': {e}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(&b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(&b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(&b'"') => out.push('"'),
+                    Some(&b'\\') => out.push('\\'),
+                    Some(&b'/') => out.push('/'),
+                    Some(&b'n') => out.push('\n'),
+                    Some(&b't') => out.push('\t'),
+                    other => return Err(format!("unsupported escape {other:?}")),
+                }
+                *pos += 1;
+            }
+            Some(&c) => {
+                // Multi-byte UTF-8 passes through whole: the fixture is
+                // ASCII, but don't corrupt (or over-read) other input.
+                let ch_len = utf8_len(c);
+                if *pos + ch_len > b.len() {
+                    return Err(format!("truncated UTF-8 sequence at byte {}", *pos));
+                }
+                let chunk = &b[*pos..*pos + ch_len];
+                out.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                *pos += ch_len;
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Object(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Object(fields));
+            }
+            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Array(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            other => return Err(format!("expected ',' or ']', got {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fixture_shapes() {
+        let doc = r#"
+        {
+          "version": 1,
+          "cases": [
+            {"q": 1152921504606830593, "n": 4, "x": [0, 1, 2, 3], "ok": true},
+            {"q": 97, "n": 2, "x": [], "note": "empty"}
+          ]
+        }"#;
+        let v = Json::parse(doc).unwrap();
+        let cases = v.field("cases").unwrap().as_array().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].field("q").unwrap().as_u64().unwrap(), 1152921504606830593);
+        assert_eq!(
+            cases[0].field("x").unwrap().as_u64_vec().unwrap(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(cases[1].field("note").unwrap().as_str().unwrap(), "empty");
+        assert_eq!(v.field("version").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_floats_and_garbage() {
+        assert!(Json::parse("{\"x\": 1.5}").is_err());
+        assert!(Json::parse("{\"x\": -3}").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2,]").is_err());
+        assert!(Json::parse("[1] extra").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::parse(r#"["a\"b", "c\\d", "e\nf"]"#).unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr[0].as_str().unwrap(), "a\"b");
+        assert_eq!(arr[1].as_str().unwrap(), "c\\d");
+        assert_eq!(arr[2].as_str().unwrap(), "e\nf");
+    }
+
+    #[test]
+    fn max_u64_roundtrip() {
+        let v = Json::parse("18446744073709551615").unwrap();
+        assert_eq!(v.as_u64().unwrap(), u64::MAX);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod cli;
 pub mod check;
+pub mod json;
 
 /// Integer ceiling division.
 #[inline]

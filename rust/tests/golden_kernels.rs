@@ -1,0 +1,136 @@
+//! Cross-layer golden-vector conformance: the Rust NTT engine and mulmod
+//! kernels must reproduce, bit-exactly, the vectors exported from the L1
+//! reference kernels (`python/compile/kernels/ref.py`) into
+//! `golden/kernel_vectors.json`.
+//!
+//! The fixture pins the full convention chain — root selection (smallest
+//! generator ψ), bit-reversed table layout, forward/inverse butterfly
+//! order, N⁻¹ scaling — so a silent divergence between the Python
+//! compile path and the Rust request path is impossible. Regenerate with
+//! `cd python && python -m compile.golden`; `python/tests/test_golden.py`
+//! fails if the checked-in fixture goes stale.
+
+use fhemem::math::modarith::{mul_mod, Barrett, Montgomery, ShoupMul};
+use fhemem::math::ntt::NttContext;
+use fhemem::util::json::Json;
+use std::path::PathBuf;
+
+fn fixture() -> Json {
+    let path: PathBuf = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("golden/kernel_vectors.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+#[test]
+fn fixture_is_wellformed() {
+    let f = fixture();
+    assert_eq!(f.field("version").unwrap().as_u64().unwrap(), 1);
+    assert!(!f.field("ntt").unwrap().as_array().unwrap().is_empty());
+    assert!(!f.field("mulmod").unwrap().as_array().unwrap().is_empty());
+}
+
+#[test]
+fn ntt_twiddle_tables_match_reference() {
+    // The engine's generated tables must equal the Python-exported ones:
+    // same primitive root, same bit-reversed layout, same N⁻¹.
+    let f = fixture();
+    for case in f.field("ntt").unwrap().as_array().unwrap() {
+        let tag = case.field("tag").unwrap().as_str().unwrap();
+        let q = case.field("q").unwrap().as_u64().unwrap();
+        let n = case.field("n").unwrap().as_u64().unwrap() as usize;
+        let ctx = NttContext::get(q, n);
+        assert_eq!(
+            ctx.psi_rev(),
+            case.field("psi_rev").unwrap().as_u64_vec().unwrap(),
+            "{tag}: psi_rev"
+        );
+        assert_eq!(
+            ctx.psi_inv_rev(),
+            case.field("psi_inv_rev").unwrap().as_u64_vec().unwrap(),
+            "{tag}: psi_inv_rev"
+        );
+        assert_eq!(
+            ctx.n_inv(),
+            case.field("n_inv").unwrap().as_u64().unwrap(),
+            "{tag}: n_inv"
+        );
+    }
+}
+
+#[test]
+fn forward_ntt_matches_reference_bit_exactly() {
+    let f = fixture();
+    for case in f.field("ntt").unwrap().as_array().unwrap() {
+        let tag = case.field("tag").unwrap().as_str().unwrap();
+        let q = case.field("q").unwrap().as_u64().unwrap();
+        let n = case.field("n").unwrap().as_u64().unwrap() as usize;
+        let ctx = NttContext::get(q, n);
+        let mut x = case.field("x").unwrap().as_u64_vec().unwrap();
+        ctx.forward(&mut x);
+        assert_eq!(
+            x,
+            case.field("forward").unwrap().as_u64_vec().unwrap(),
+            "{tag}: forward NTT diverged from ref.py"
+        );
+    }
+}
+
+#[test]
+fn inverse_ntt_matches_reference_bit_exactly() {
+    let f = fixture();
+    for case in f.field("ntt").unwrap().as_array().unwrap() {
+        let tag = case.field("tag").unwrap().as_str().unwrap();
+        let q = case.field("q").unwrap().as_u64().unwrap();
+        let n = case.field("n").unwrap().as_u64().unwrap() as usize;
+        let ctx = NttContext::get(q, n);
+        let mut y = case.field("y_bitrev").unwrap().as_u64_vec().unwrap();
+        ctx.inverse(&mut y);
+        assert_eq!(
+            y,
+            case.field("inverse").unwrap().as_u64_vec().unwrap(),
+            "{tag}: inverse NTT diverged from ref.py"
+        );
+    }
+}
+
+#[test]
+fn golden_roundtrip_closes() {
+    // inverse(forward(x)) must restore the fixture input exactly — checks
+    // the two vectors are mutually consistent, not just individually.
+    let f = fixture();
+    for case in f.field("ntt").unwrap().as_array().unwrap() {
+        let tag = case.field("tag").unwrap().as_str().unwrap();
+        let q = case.field("q").unwrap().as_u64().unwrap();
+        let n = case.field("n").unwrap().as_u64().unwrap() as usize;
+        let ctx = NttContext::get(q, n);
+        let x = case.field("x").unwrap().as_u64_vec().unwrap();
+        let mut buf = case.field("forward").unwrap().as_u64_vec().unwrap();
+        ctx.inverse(&mut buf);
+        assert_eq!(buf, x, "{tag}: iNTT(NTT(x)) != x");
+    }
+}
+
+#[test]
+fn mulmod_matches_reference_on_every_multiplier_path() {
+    // Every CPU multiplier path (u128 reference, Barrett, Montgomery,
+    // Shoup) must agree with the Python modmul_ref vectors.
+    let f = fixture();
+    for case in f.field("mulmod").unwrap().as_array().unwrap() {
+        let q = case.field("q").unwrap().as_u64().unwrap();
+        let xs = case.field("x").unwrap().as_u64_vec().unwrap();
+        let ys = case.field("y").unwrap().as_u64_vec().unwrap();
+        let ps = case.field("product").unwrap().as_u64_vec().unwrap();
+        let barrett = Barrett::new(q);
+        let mont = Montgomery::new(q);
+        for ((&x, &y), &p) in xs.iter().zip(&ys).zip(&ps) {
+            assert_eq!(mul_mod(x, y, q), p, "mul_mod q={q} x={x} y={y}");
+            assert_eq!(barrett.mul(x, y), p, "barrett q={q} x={x} y={y}");
+            assert_eq!(mont.mul_plain(x, y), p, "montgomery q={q} x={x} y={y}");
+            assert_eq!(ShoupMul::new(x, q).mul(y), p, "shoup q={q} x={x} y={y}");
+        }
+    }
+}

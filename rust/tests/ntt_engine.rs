@@ -1,0 +1,276 @@
+//! Property + edge-case suite for the precomputed Shoup/Harvey NTT engine
+//! (offline-policy substitute for a proptest suite; `util::check::forall`
+//! drives deterministic randomized cases with replayable seeds).
+//!
+//! Covers the tentpole invariants:
+//! * NTT∘INTT round-trip identity across sizes and modulus widths,
+//! * Shoup-vs-plain mulmod agreement across **every** `params.rs` prime
+//!   set (functional, artifact and paper families),
+//! * negacyclic convolution vs schoolbook at small N,
+//! * lazy reduction: butterflies fed `0 / 1 / q-1 / q / 2q-1` — including
+//!   the largest 60-bit primes `math::primes` can generate — must come
+//!   out fully reduced after the single final correction pass,
+//! * the process-wide context cache is the only twiddle source (shared
+//!   `Arc`s across bases, benches and workers).
+
+use fhemem::math::modarith::{mul_mod, ShoupMul};
+use fhemem::math::ntt::{naive_forward, naive_inverse, NttContext};
+use fhemem::math::primes::ntt_primes;
+use fhemem::math::rns::RnsBasis;
+use fhemem::params::CkksParams;
+use fhemem::util::check::{forall, SplitMix64};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// round-trip identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn roundtrip_identity_across_sizes_and_widths() {
+    for (bits, logn) in [(25u32, 4usize), (30, 6), (40, 10), (50, 8), (60, 9)] {
+        let n = 1 << logn;
+        let q = ntt_primes(bits, n, 1)[0].q;
+        let ctx = NttContext::get(q, n);
+        forall("ntt∘intt identity", 6, |rng| {
+            let orig: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let mut a = orig.clone();
+            ctx.forward(&mut a);
+            ctx.inverse(&mut a);
+            assert_eq!(a, orig, "bits={bits} logn={logn}");
+        });
+    }
+}
+
+#[test]
+fn engine_is_bit_identical_to_naive_baseline() {
+    // The lazy-reduction engine replaced the full-reduction kernels; the
+    // two must stay bit-for-bit interchangeable.
+    for (bits, logn) in [(30u32, 5usize), (50, 8), (60, 7)] {
+        let n = 1 << logn;
+        let q = ntt_primes(bits, n, 1)[0].q;
+        let ctx = NttContext::get(q, n);
+        forall("engine == naive", 4, |rng| {
+            let data: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let mut fast = data.clone();
+            let mut slow = data.clone();
+            ctx.forward(&mut fast);
+            naive_forward(&mut slow, q);
+            assert_eq!(fast, slow, "forward bits={bits}");
+            ctx.inverse(&mut fast);
+            naive_inverse(&mut slow, q);
+            assert_eq!(fast, slow, "inverse bits={bits}");
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shoup vs plain mulmod across every params.rs prime set
+// ---------------------------------------------------------------------
+
+#[test]
+fn shoup_agrees_with_plain_mulmod_on_all_param_prime_sets() {
+    let sets: Vec<CkksParams> = vec![
+        CkksParams::func_tiny(),
+        CkksParams::func_default(),
+        CkksParams::func_boot(),
+        CkksParams::artifact(),
+        CkksParams::paper_lola(4),
+        CkksParams::paper_deep(),
+    ];
+    for p in sets {
+        let (q_mods, p_mods) = p.generate_moduli();
+        for m in q_mods.iter().chain(p_mods.iter()) {
+            let q = m.q;
+            forall("shoup == plain", 32, |rng| {
+                let w = rng.below(q);
+                let s = ShoupMul::new(w, q);
+                // Shoup accepts any u64 second operand, including
+                // unreduced lazy values far above q.
+                for t in [rng.below(q), rng.next_u64(), q, 2 * q - 1] {
+                    assert_eq!(
+                        s.mul(t),
+                        mul_mod(w, t % q, q),
+                        "set={} q={q} w={w} t={t}",
+                        p.name
+                    );
+                    let lazy = s.mul_lazy(t);
+                    assert!(lazy < 2 * q, "lazy bound: set={} q={q}", p.name);
+                    assert_eq!(lazy % q, mul_mod(w, t % q, q));
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// negacyclic convolution vs schoolbook
+// ---------------------------------------------------------------------
+
+#[test]
+fn negacyclic_convolution_matches_schoolbook_small_n() {
+    for (bits, logn) in [(30u32, 3usize), (40, 4), (60, 5)] {
+        let n = 1 << logn;
+        let q = ntt_primes(bits, n, 1)[0].q;
+        let ctx = NttContext::get(q, n);
+        forall("negacyclic vs schoolbook", 8, |rng| {
+            let a: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let expect = NttContext::negacyclic_mul_reference(&a, &b, q);
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            ctx.forward(&mut fa);
+            ctx.forward(&mut fb);
+            let mut fc: Vec<u64> = fa
+                .iter()
+                .zip(&fb)
+                .map(|(&x, &y)| mul_mod(x, y, q))
+                .collect();
+            ctx.inverse(&mut fc);
+            assert_eq!(fc, expect, "bits={bits} logn={logn}");
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// lazy-reduction edge cases
+// ---------------------------------------------------------------------
+
+/// Deterministic boundary pattern cycling through the lazy-domain
+/// extremes `0, 1, q-1, q, 2q-1` (the last two only valid because the
+/// engine accepts inputs in `[0, 2q)`).
+fn boundary_pattern(n: usize, q: u64) -> Vec<u64> {
+    let vals = [0u64, 1, q - 1, q, 2 * q - 1];
+    (0..n).map(|i| vals[i % vals.len()]).collect()
+}
+
+#[test]
+fn lazy_butterflies_fully_reduce_boundary_inputs() {
+    // Largest 60-bit primes math::primes generates, plus small/medium
+    // widths: outputs must be < q after the final correction pass, and
+    // must equal the transform of the reduced inputs.
+    for (bits, logn) in [(25u32, 4usize), (40, 6), (60, 8), (60, 11)] {
+        let n = 1 << logn;
+        for m in ntt_primes(bits, n, 2) {
+            let q = m.q;
+            let ctx = NttContext::get(q, n);
+
+            let lazy_in = boundary_pattern(n, q);
+            let reduced_in: Vec<u64> = lazy_in.iter().map(|&v| v % q).collect();
+
+            let mut fwd_lazy = lazy_in.clone();
+            let mut fwd_reduced = reduced_in.clone();
+            ctx.forward(&mut fwd_lazy);
+            ctx.forward(&mut fwd_reduced);
+            assert!(
+                fwd_lazy.iter().all(|&v| v < q),
+                "forward output not fully reduced (q={q}, n={n})"
+            );
+            assert_eq!(fwd_lazy, fwd_reduced, "forward lazy != reduced (q={q})");
+
+            let mut inv_lazy = lazy_in.clone();
+            let mut inv_reduced = reduced_in.clone();
+            ctx.inverse(&mut inv_lazy);
+            ctx.inverse(&mut inv_reduced);
+            assert!(
+                inv_lazy.iter().all(|&v| v < q),
+                "inverse output not fully reduced (q={q}, n={n})"
+            );
+            assert_eq!(inv_lazy, inv_reduced, "inverse lazy != reduced (q={q})");
+        }
+    }
+}
+
+#[test]
+fn largest_60bit_primes_roundtrip_with_extreme_values() {
+    // All-(q-1) and all-(2q-1) vectors at the largest 60-bit primes: the
+    // worst case for intermediate growth (every butterfly sees maximal
+    // operands on the first stages).
+    let n = 1 << 10;
+    for m in ntt_primes(60, n, 3) {
+        let q = m.q;
+        assert!(q > (1 << 59), "expected a 60-bit prime, got {q}");
+        let ctx = NttContext::get(q, n);
+        for fill in [q - 1, 2 * q - 1] {
+            let mut a = vec![fill; n];
+            ctx.forward(&mut a);
+            assert!(a.iter().all(|&v| v < q), "q={q} fill={fill}");
+            ctx.inverse(&mut a);
+            assert!(a.iter().all(|&v| v == fill % q), "q={q} fill={fill}");
+        }
+    }
+}
+
+#[test]
+fn random_lazy_inputs_match_reduced_inputs() {
+    // Uniform inputs over the whole lazy domain [0, 2q) agree with the
+    // transform of their reduced residues — forward and inverse.
+    let n = 1 << 8;
+    let q = ntt_primes(60, n, 1)[0].q;
+    let ctx = NttContext::get(q, n);
+    forall("lazy domain uniform", 8, |rng| {
+        let lazy: Vec<u64> = (0..n).map(|_| rng.below(2 * q)).collect();
+        let reduced: Vec<u64> = lazy.iter().map(|&v| v % q).collect();
+        let mut a = lazy.clone();
+        let mut b = reduced.clone();
+        ctx.forward(&mut a);
+        ctx.forward(&mut b);
+        assert_eq!(a, b);
+        let mut a = lazy;
+        let mut b = reduced;
+        ctx.inverse(&mut a);
+        ctx.inverse(&mut b);
+        assert_eq!(a, b);
+    });
+}
+
+// ---------------------------------------------------------------------
+// the cache is the only twiddle source
+// ---------------------------------------------------------------------
+
+#[test]
+fn context_cache_is_shared_across_bases() {
+    // Two RNS bases over the same moduli must hold the *same* context
+    // allocations — tables are generated once per (q, N) process-wide.
+    let n = 1 << 9;
+    let moduli = ntt_primes(35, n, 3);
+    let b1 = RnsBasis::new(moduli.clone(), n);
+    let b2 = RnsBasis::new(moduli.clone(), n);
+    for j in 0..moduli.len() {
+        assert!(
+            Arc::ptr_eq(&b1.ntt[j], &b2.ntt[j]),
+            "basis limb {j} regenerated its twiddles"
+        );
+        assert!(Arc::ptr_eq(&b1.ntt[j], &NttContext::get(moduli[j].q, n)));
+    }
+    assert!(NttContext::cached_contexts() >= moduli.len());
+}
+
+#[test]
+fn shared_contexts_are_read_only_under_parallel_use() {
+    // Bank-pool fan-out over shared contexts must be bit-identical to
+    // serial execution (no hidden mutability in the tables).
+    use fhemem::parallel::{ntt_forward_rows, ntt_inverse_rows, BankPool};
+    let n = 1 << 10;
+    let limbs = 6usize;
+    let contexts: Vec<Arc<NttContext>> = ntt_primes(45, n, limbs)
+        .iter()
+        .map(|m| NttContext::get(m.q, n))
+        .collect();
+    let mut rng = SplitMix64::new(2024);
+    let rows: Vec<Vec<u64>> = contexts
+        .iter()
+        .map(|c| (0..n).map(|_| rng.below(c.q)).collect())
+        .collect();
+    let mut serial = rows.clone();
+    for (j, row) in serial.iter_mut().enumerate() {
+        contexts[j].forward(row);
+    }
+    for threads in [2usize, 4, 8] {
+        let pool = BankPool::new(threads);
+        let mut par = rows.clone();
+        ntt_forward_rows(&pool, &contexts, &mut par);
+        assert_eq!(par, serial, "threads={threads}");
+        ntt_inverse_rows(&pool, &contexts, &mut par);
+        assert_eq!(par, rows, "roundtrip threads={threads}");
+    }
+}

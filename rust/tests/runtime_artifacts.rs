@@ -8,7 +8,7 @@
 //! message) otherwise.
 
 use fhemem::math::modarith::mul_mod;
-use fhemem::math::ntt::NttTable;
+use fhemem::math::ntt::NttContext;
 use fhemem::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
 use fhemem::util::check::SplitMix64;
 use std::path::{Path, PathBuf};
@@ -114,7 +114,8 @@ fn ntt_roundtrip_matches_rust_tables() {
     let Some(rt) = runtime() else { return };
     let moduli = rt.meta.all_moduli();
     let n = rt.meta.n;
-    let tables: Vec<NttTable> = moduli.iter().map(|&q| NttTable::new(q, n)).collect();
+    let tables: Vec<std::sync::Arc<NttContext>> =
+        moduli.iter().map(|&q| NttContext::get(q, n)).collect();
     let psi_rev: Vec<Vec<u64>> = tables.iter().map(|t| t.psi_rev().to_vec()).collect();
     let psi_inv_rev: Vec<Vec<u64>> = tables.iter().map(|t| t.psi_inv_rev().to_vec()).collect();
     let n_inv: Vec<u64> = tables.iter().map(|t| t.n_inv()).collect();
