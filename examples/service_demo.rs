@@ -1,0 +1,98 @@
+//! Serving-layer demo: two tenants encrypt locally, evaluate remotely
+//! through the batching TCP front-end, and decrypt their own results.
+//!
+//! Standalone (spawns an in-process server on an ephemeral port):
+//!
+//! ```sh
+//! cargo run --release --example service_demo
+//! ```
+//!
+//! Against an already-running `fhemem serve` (the CI smoke job's mode):
+//!
+//! ```sh
+//! cargo run --release -- serve --port 7171 &
+//! cargo run --release --example service_demo -- --port 7171
+//! ```
+
+use fhemem::params::CkksParams;
+use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient};
+use fhemem::sim::ArchConfig;
+use fhemem::util::cli::Args;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    fhemem::parallel::configure_threads(args.threads());
+
+    // Either connect to an external server or bring one up in-process.
+    let (addr, local) = match args.get("port") {
+        Some(_) => {
+            let port = args.get_port("port", 7070);
+            (format!("127.0.0.1:{port}"), None)
+        }
+        None => {
+            let svc = FheService::new(
+                ArchConfig::default(),
+                SchedulerConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(50),
+                    max_queue: 64,
+                },
+            );
+            let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind ephemeral port");
+            println!("in-process server on {}", handle.addr);
+            (handle.addr.to_string(), Some((svc, handle)))
+        }
+    };
+
+    // Two tenants with independent key material.
+    let mut alice =
+        ServiceClient::connect(&addr, 1, CkksParams::func_tiny(), 0xA11CE).expect("register alice");
+    let mut bob =
+        ServiceClient::connect(&addr, 2, CkksParams::func_tiny(), 0xB0B).expect("register bob");
+
+    let slots = alice.ctx.encoder.slots();
+    let xs: Vec<f64> = (0..slots).map(|i| 0.1 * ((i % 7) as f64 - 3.0)).collect();
+    let ys: Vec<f64> = (0..slots).map(|i| 0.05 * ((i % 5) as f64)).collect();
+
+    // Fresh ciphertexts go out seed-compressed (~half the bytes).
+    let ax = alice.encrypt(&xs, 3);
+    let ay = alice.encrypt(&ys, 3);
+    let bx = bob.encrypt(&xs, 3);
+
+    // Concurrent requests from both tenants share batching windows.
+    let (prod, rot) = std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let prod = alice.mul(&ax, &ay).expect("alice hmul");
+            let rot = alice.rotate(&ax, 2).expect("alice hrot");
+            (prod, rot)
+        });
+        let bsum = bob.add(&bx, &bx).expect("bob hadd");
+        let dec = bob.decrypt(&bsum);
+        let worst = (0..slots)
+            .map(|i| (dec[i] - 2.0 * xs[i]).abs())
+            .fold(0.0f64, f64::max);
+        println!("bob   : hadd worst slot error {worst:.2e}");
+        assert!(worst < 1e-2, "bob's homomorphic sum diverged");
+        h.join().expect("alice thread")
+    });
+
+    let d_prod = alice.decrypt(&prod);
+    let d_rot = alice.decrypt(&rot);
+    let mut worst = 0.0f64;
+    for i in 0..slots {
+        worst = worst.max((d_prod[i] - xs[i] * ys[i]).abs());
+        worst = worst.max((d_rot[i] - xs[(i + 2) % slots]).abs());
+    }
+    println!("alice : hmul+hrot worst slot error {worst:.2e}");
+    assert!(worst < 1e-2, "alice's homomorphic results diverged");
+
+    let metrics = alice.metrics().expect("metrics");
+    println!("scheduler metrics:\n{metrics}");
+
+    if let Some((svc, handle)) = local {
+        handle.stop();
+        svc.shutdown();
+    }
+    println!("service_demo OK");
+}

@@ -72,6 +72,35 @@ impl Evaluator {
         self.encrypt(&zc, level)
     }
 
+    /// Encrypt with a seed-expanded uniform `a`, returning the seed so
+    /// the wire layer can ship `(c0, seed)` instead of two polynomials
+    /// (`service::wire` seed-compressed fresh ciphertexts). The returned
+    /// ciphertext is complete (`c1` already expanded) and behaves like
+    /// any other.
+    pub fn encrypt_seeded(&self, z: &[C64], level: usize) -> (Ciphertext, u64) {
+        let scale = self.ctx.scale();
+        let m = self.ctx.encoder.encode(&self.ctx.basis, level, z, scale);
+        let mut sampler = self.sampler.lock().unwrap();
+        let a_seed = sampler.rng().next_u64();
+        let (c0, c1) =
+            super::keys::encrypt_poly_seeded(&self.ctx, &self.chain.sk, &m, a_seed, &mut sampler);
+        (
+            Ciphertext {
+                c0,
+                c1,
+                level,
+                scale,
+            },
+            a_seed,
+        )
+    }
+
+    /// [`Self::encrypt_seeded`] over real slots.
+    pub fn encrypt_real_seeded(&self, z: &[f64], level: usize) -> (Ciphertext, u64) {
+        let zc: Vec<C64> = z.iter().map(|&x| C64::real(x)).collect();
+        self.encrypt_seeded(&zc, level)
+    }
+
     pub fn decrypt(&self, ct: &Ciphertext) -> Vec<C64> {
         let m = decrypt_poly(&self.ctx, &self.chain.sk, &ct.c0, &ct.c1);
         self.ctx.encoder.decode(&m, ct.scale)
@@ -257,11 +286,9 @@ impl Evaluator {
         // (d0, d1, d2) = (b0·b1, a0·b1 + a1·b0, a0·a1) in NTT domain.
         let mut d0 = a.c0.clone();
         d0.mul_assign(&b.c0);
-        let mut d1 = a.c0.clone();
-        d1.mul_assign(&b.c1);
-        let mut d1b = a.c1.clone();
-        d1b.mul_assign(&b.c0);
-        d1.add_assign(&d1b);
+        // Cross term via the lazy [0, 2q)-carried chain: one correction
+        // pass instead of per-op full reductions (bit-identical).
+        let mut d1 = RnsPoly::fused_mul_add(&[(&a.c0, &b.c1), (&a.c1, &b.c0)]);
         let mut d2 = a.c1.clone();
         d2.mul_assign(&b.c1);
         // Relinearize d2 under evk(s²→s).

@@ -4,7 +4,7 @@
 use super::keyswitch::{EvalKey, ExtPoly};
 use super::CkksContext;
 use crate::math::poly::{Domain, RnsPoly};
-use crate::math::prng::{signed_to_mod, Sampler};
+use crate::math::prng::Sampler;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -23,6 +23,15 @@ impl SecretKey {
         let n = ctx.n();
         let hamming = ctx.params.secret_hamming.or(Some(n / 2));
         let coeffs = sampler.ternary(n, hamming);
+        Self::from_coeffs(ctx, coeffs)
+    }
+
+    /// Rebuild the full key material from explicit ternary coefficients —
+    /// the wire-format decode path (`service::wire`). `s_full`/`s2_full`
+    /// are derived, so a round-tripped key is bit-identical to the
+    /// original.
+    pub fn from_coeffs(ctx: &Arc<CkksContext>, coeffs: Vec<i64>) -> Self {
+        assert_eq!(coeffs.len(), ctx.n(), "secret key length != N");
         let total = ctx.basis.len();
         let mut s_full = RnsPoly::from_signed(ctx.basis.clone(), total, &coeffs);
         s_full.to_ntt();
@@ -127,7 +136,6 @@ pub fn encrypt_poly(
     sampler: &mut Sampler,
 ) -> (RnsPoly, RnsPoly) {
     let limbs = m.limbs;
-    let n = ctx.n();
     // a uniform in NTT domain directly (uniform is NTT-invariant).
     let mut a = RnsPoly::zero(ctx.basis.clone(), limbs, Domain::Ntt);
     for j in 0..limbs {
@@ -136,6 +144,51 @@ pub fn encrypt_poly(
             *c = sampler.rng().below(q);
         }
     }
+    encrypt_with_a(ctx, sk, m, a, sampler)
+}
+
+/// Expand the uniform `a` polynomial of a fresh ciphertext from a PRNG
+/// seed — the seed-compressed wire format ships these 8 bytes instead of
+/// `limbs·N` coefficients, roughly halving fresh-ciphertext frames.
+/// Sampling order (limb-major, [`SplitMix64`]-rejection per coefficient)
+/// is normative: encoder and decoder must walk it identically.
+///
+/// [`SplitMix64`]: crate::util::check::SplitMix64
+pub fn expand_a(ctx: &Arc<CkksContext>, limbs: usize, seed: u64) -> RnsPoly {
+    let mut rng = crate::util::check::SplitMix64::new(seed);
+    let mut a = RnsPoly::zero(ctx.basis.clone(), limbs, Domain::Ntt);
+    for j in 0..limbs {
+        let q = ctx.basis.q(j);
+        for c in a.data[j].iter_mut() {
+            *c = rng.below(q);
+        }
+    }
+    a
+}
+
+/// [`encrypt_poly`] with `a` expanded from `a_seed` (see [`expand_a`]) —
+/// the encryptor half of seed-compressed fresh ciphertexts.
+pub fn encrypt_poly_seeded(
+    ctx: &Arc<CkksContext>,
+    sk: &SecretKey,
+    m: &RnsPoly,
+    a_seed: u64,
+    sampler: &mut Sampler,
+) -> (RnsPoly, RnsPoly) {
+    let a = expand_a(ctx, m.limbs, a_seed);
+    encrypt_with_a(ctx, sk, m, a, sampler)
+}
+
+/// Shared encryptor core: `b = -a·s + m + e` for a given `a`.
+fn encrypt_with_a(
+    ctx: &Arc<CkksContext>,
+    sk: &SecretKey,
+    m: &RnsPoly,
+    a: RnsPoly,
+    sampler: &mut Sampler,
+) -> (RnsPoly, RnsPoly) {
+    let limbs = m.limbs;
+    let n = ctx.n();
     let e = sampler.gaussian(n);
     let mut e_p = RnsPoly::from_signed(ctx.basis.clone(), limbs, &e);
     e_p.to_ntt();
@@ -238,6 +291,42 @@ mod tests {
                 assert!(d < 1 << 10, "noise {d} too large");
             }
         }
+    }
+
+    #[test]
+    fn seeded_encryption_expands_deterministically_and_decrypts() {
+        let ctx = ctx();
+        let mut sampler = Sampler::new(21);
+        let sk = SecretKey::generate(&ctx, &mut sampler);
+        let n = ctx.n();
+        let coeffs: Vec<i64> = (0..n).map(|i| ((i as i64 % 11) - 5) << 20).collect();
+        let m = RnsPoly::from_signed(ctx.basis.clone(), 3, &coeffs);
+        let seed = 0xA5EEDu64;
+        let (b, a) = encrypt_poly_seeded(&ctx, &sk, &m, seed, &mut sampler);
+        // The receiver's expansion reproduces `a` bit-exactly.
+        let a2 = expand_a(&ctx, 3, seed);
+        assert_eq!(a.data, a2.data);
+        assert_eq!(a.domain, Domain::Ntt);
+        // And the pair still decrypts with small noise.
+        let dec = decrypt_poly(&ctx, &sk, &b, &a2);
+        for j in 0..dec.limbs {
+            let q = ctx.basis.q(j);
+            for (got, want) in dec.data[j].iter().zip(&m.data[j]) {
+                let d = crate::math::modarith::sub_mod(*got, *want, q);
+                let d = d.min(q - d);
+                assert!(d < 1 << 10, "noise {d} too large");
+            }
+        }
+    }
+
+    #[test]
+    fn from_coeffs_matches_generate() {
+        let ctx = ctx();
+        let mut s = Sampler::new(17);
+        let sk = SecretKey::generate(&ctx, &mut s);
+        let rebuilt = SecretKey::from_coeffs(&ctx, sk.coeffs.clone());
+        assert_eq!(sk.s_full.data, rebuilt.s_full.data);
+        assert_eq!(sk.s2_full.data, rebuilt.s2_full.data);
     }
 
     #[test]

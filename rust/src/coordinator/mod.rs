@@ -11,7 +11,8 @@
 //! software mirror of FHEmem assigning ciphertexts to banks.
 
 use crate::ckks::cipher::{Ciphertext, Evaluator};
-use crate::ckks::{CkksContext, KeyChain};
+use crate::ckks::{CkksContext, KeyChain, KeyTag};
+use crate::math::poly::RnsPoly;
 use crate::params::CkksParams;
 use crate::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
 use crate::sim::{ArchConfig, Breakdown, CostModel, FheShape, SimOptions};
@@ -37,6 +38,84 @@ pub struct Metrics {
     pub rotations: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub sim_energy_pj: AtomicU64,
+}
+
+/// Which homomorphic op a [`MixedOp`] requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixedKind {
+    Add,
+    Sub,
+    Mul,
+    /// Slot rotation by the carried step.
+    Rotate(i64),
+}
+
+/// One tenant-attributed op inside a heterogeneous (cross-tenant) batch:
+/// the evaluator carries the tenant's context and key chain, so ops
+/// encrypted under different keys can share one bank-pool fan-out.
+pub struct MixedOp {
+    pub eval: Arc<Evaluator>,
+    pub kind: MixedKind,
+    pub a: Ciphertext,
+    /// Second operand for binary ops (`Add`/`Sub`/`Mul`).
+    pub b: Option<Ciphertext>,
+}
+
+impl MixedOp {
+    /// Level the op executes at (binary ops align to the lower operand).
+    pub fn level(&self) -> usize {
+        match &self.b {
+            Some(b) => self.a.level.min(b.level),
+            None => self.a.level,
+        }
+    }
+
+    /// The trace-IR op this request maps to (for metrics/costing).
+    pub fn fhe_op(&self) -> FheOp {
+        match self.kind {
+            MixedKind::Add | MixedKind::Sub => FheOp::HAdd,
+            MixedKind::Mul => FheOp::HMul,
+            MixedKind::Rotate(_) => FheOp::HRot,
+        }
+    }
+
+    /// Check the evaluator's preconditions up front, so known-invalid ops
+    /// (wire-valid but unexecutable) are refused with an error instead of
+    /// reaching the asserts inside the CKKS layer. The catch_unwind in
+    /// [`Coordinator::execute_mixed_batch_isolated`] stays as the backstop
+    /// for anything this misses.
+    pub fn validate(&self) -> Result<(), String> {
+        if matches!(self.kind, MixedKind::Add | MixedKind::Sub | MixedKind::Mul)
+            && self.b.is_none()
+        {
+            return Err("binary op missing second operand".to_string());
+        }
+        match self.kind {
+            MixedKind::Mul => {
+                // HMul rescales, which consumes a limb.
+                if self.level() < 2 {
+                    return Err(format!(
+                        "HMul needs level >= 2 to rescale, got {}",
+                        self.level()
+                    ));
+                }
+            }
+            MixedKind::Add | MixedKind::Sub => {
+                // Mirrors Evaluator::align's drift tolerance (NaN/inf
+                // ratios are rejected too, not just large drift).
+                let b = self.b.as_ref().expect("checked above");
+                let ratio = self.a.scale / b.scale;
+                if !ratio.is_finite() || (ratio - 1.0).abs() >= 6e-2 {
+                    return Err(format!(
+                        "scale mismatch beyond drift tolerance: {} vs {}",
+                        self.a.scale, b.scale
+                    ));
+                }
+            }
+            MixedKind::Rotate(_) => {}
+        }
+        Ok(())
+    }
 }
 
 /// The coordinator: functional evaluator + backend + cost model.
@@ -76,6 +155,13 @@ impl Coordinator {
     }
 
     fn record(&self, op: FheOp) {
+        self.record_for(op, &self.ctx.params, self.ctx.l());
+    }
+
+    /// [`Self::record`] against an explicit parameter set + limb count —
+    /// the multi-tenant batch path costs each op on its *own* tenant's
+    /// shape, which may differ from this coordinator's context.
+    fn record_for(&self, op: FheOp, params: &CkksParams, limbs: usize) {
         self.metrics.ops.fetch_add(1, Ordering::Relaxed);
         match op {
             FheOp::HMul => {
@@ -88,10 +174,10 @@ impl Coordinator {
         }
         // Cost the op on the configured FHEmem model.
         let shape = FheShape {
-            log_n: self.ctx.params.log_n,
-            limbs: self.ctx.l(),
-            k_special: self.ctx.k(),
-            dnum: self.ctx.params.dnum,
+            log_n: params.log_n,
+            limbs,
+            k_special: params.k_special,
+            dnum: params.dnum,
             mult_shifts: 3,
         };
         let model = CostModel::new(&self.arch, shape);
@@ -202,6 +288,83 @@ impl Coordinator {
         self.eval.rotate_batch(a, steps)
     }
 
+    /// Materialize the key material one mixed op needs (so racing banks
+    /// never duplicate key generation) and cost it on its own tenant's
+    /// parameter shape.
+    fn prepare_mixed_op(&self, op: &MixedOp) {
+        match op.kind {
+            MixedKind::Mul => {
+                let _ = op.eval.chain.eval_key(op.level(), KeyTag::Relin);
+            }
+            MixedKind::Rotate(step) => {
+                let slots = op.eval.ctx.encoder.slots() as i64;
+                if step.rem_euclid(slots) != 0 {
+                    let k = RnsPoly::rotation_to_galois(step, op.eval.ctx.n());
+                    let _ = op.eval.chain.eval_key(op.a.level, KeyTag::Galois(k));
+                }
+            }
+            MixedKind::Add | MixedKind::Sub => {}
+        }
+        self.record_for(op.fhe_op(), &op.eval.ctx.params, op.level());
+    }
+
+    fn run_mixed_op(&self, op: &MixedOp) -> Ciphertext {
+        let b = op.b.as_ref();
+        match op.kind {
+            MixedKind::Add => op.eval.add(&op.a, b.expect("Add needs two operands")),
+            MixedKind::Sub => op.eval.sub(&op.a, b.expect("Sub needs two operands")),
+            MixedKind::Mul => op.eval.mul(&op.a, b.expect("Mul needs two operands")),
+            MixedKind::Rotate(step) => op.eval.rotate(&op.a, step),
+        }
+    }
+
+    /// Execute a heterogeneous batch: ops from (possibly) different
+    /// tenants, each bound to its own evaluator/key chain, coalesced into
+    /// one bank-pool fan-out. This is the serving layer's entry point —
+    /// the software mirror of FHEmem filling its banks with independent
+    /// ciphertexts from many users. Per-item work is identical to the
+    /// serial ops, so results are bit-identical at any thread count.
+    /// Panics on invalid ops; the serving path uses
+    /// [`Self::execute_mixed_batch_isolated`] instead.
+    pub fn execute_mixed_batch(&self, ops: &[MixedOp]) -> Vec<Ciphertext> {
+        for op in ops {
+            self.prepare_mixed_op(op);
+        }
+        crate::parallel::pool().par_map(ops, |_, op| self.run_mixed_op(op))
+    }
+
+    /// [`Self::execute_mixed_batch`] with **per-op panic isolation**: a
+    /// wire-valid but evaluator-invalid op (e.g. HMul at level 1, which
+    /// cannot rescale, or an addition across drifted scales) fails only
+    /// its own slot — the other tenants coalesced into the batch still
+    /// get their results. This is what keeps one bad client from denying
+    /// service to everyone sharing a batching window.
+    pub fn execute_mixed_batch_isolated(
+        &self,
+        ops: &[MixedOp],
+    ) -> Vec<Result<Ciphertext, String>> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // Known-bad ops are refused by validation (no panic, no stderr
+        // noise); catch_unwind remains only as the backstop for the
+        // unexpected.
+        let prepared: Vec<Result<(), String>> = ops
+            .iter()
+            .map(|op| {
+                op.validate()?;
+                catch_unwind(AssertUnwindSafe(|| self.prepare_mixed_op(op)))
+                    .map_err(|_| "op rejected during key preparation".to_string())
+            })
+            .collect();
+        let prepared = &prepared;
+        crate::parallel::pool().par_map(ops, |i, op| {
+            if let Err(e) = &prepared[i] {
+                return Err(e.clone());
+            }
+            catch_unwind(AssertUnwindSafe(|| self.run_mixed_op(op)))
+                .map_err(|_| "op failed during execution".to_string())
+        })
+    }
+
     /// Simulated accelerator time for everything executed so far.
     pub fn simulated_seconds(&self) -> f64 {
         self.metrics.sim_cycles.load(Ordering::Relaxed) as f64 * self.arch.cycle_ns() * 1e-9
@@ -256,5 +419,57 @@ mod tests {
     fn backend_reports_native_without_artifacts() {
         let c = coord();
         assert_eq!(c.backend_name(), "native");
+    }
+
+    #[test]
+    fn mixed_batch_spans_two_key_chains() {
+        use crate::ckks::KeyChain;
+        let c = coord();
+        // Two independent "tenants": distinct contexts and key chains.
+        let mk_eval = |seed: u64| {
+            let ctx = CkksContext::new(CkksParams::func_tiny());
+            let chain = Arc::new(KeyChain::new(ctx.clone(), seed));
+            Arc::new(Evaluator::new(ctx, chain, seed ^ 0xE))
+        };
+        let t1 = mk_eval(101);
+        let t2 = mk_eval(202);
+        let slots = t1.ctx.encoder.slots();
+        let z1: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 9) as f64).collect();
+        let z2: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 5) as f64).collect();
+        let ops = vec![
+            MixedOp {
+                eval: t1.clone(),
+                kind: MixedKind::Mul,
+                a: t1.encrypt_real(&z1, 3),
+                b: Some(t1.encrypt_real(&z2, 3)),
+            },
+            MixedOp {
+                eval: t2.clone(),
+                kind: MixedKind::Rotate(1),
+                a: t2.encrypt_real(&z1, 3),
+                b: None,
+            },
+            MixedOp {
+                eval: t2.clone(),
+                kind: MixedKind::Add,
+                a: t2.encrypt_real(&z1, 3),
+                b: Some(t2.encrypt_real(&z2, 3)),
+            },
+        ];
+        let before = c.metrics.ops.load(Ordering::Relaxed);
+        let outs = c.execute_mixed_batch(&ops);
+        assert_eq!(outs.len(), 3);
+        // Each result decrypts under its own tenant's key.
+        let d0 = t1.decrypt(&outs[0]);
+        assert!((d0[2].re - z1[2] * z2[2]).abs() < 5e-3);
+        let d1 = t2.decrypt(&outs[1]);
+        assert!((d1[0].re - z1[1]).abs() < 1e-3);
+        let d2 = t2.decrypt(&outs[2]);
+        assert!((d2[3].re - (z1[3] + z2[3])).abs() < 1e-3);
+        // Every op was costed on the FHEmem model.
+        assert_eq!(c.metrics.ops.load(Ordering::Relaxed) - before, 3);
+        assert_eq!(c.metrics.hmuls.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.rotations.load(Ordering::Relaxed), 1);
+        assert!(c.metrics.sim_cycles.load(Ordering::Relaxed) > 0);
     }
 }

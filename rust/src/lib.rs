@@ -23,6 +23,8 @@
 //!   batch-parallel fan-out mirroring FHEmem's bank-level parallelism.
 //! * [`coordinator`] — the L3 driver tying functional execution and
 //!   simulation together.
+//! * [`service`] — `fhemem-serve`: the multi-tenant serving subsystem
+//!   (wire format, tenant keystore, batching scheduler, TCP front-end).
 
 // Style lints that fire on deliberate patterns in the from-scratch math
 // code (multi-array index loops, hardware-mirroring argument lists).
@@ -43,6 +45,7 @@ pub mod parallel;
 pub mod params;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod trace;
 pub mod util;

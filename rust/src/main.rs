@@ -20,14 +20,44 @@ fn main() {
         Some("bandwidth") => cmd_bandwidth(),
         Some("pim") => cmd_pim(),
         Some("demo") => cmd_demo(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: fhemem <simulate|figures|bandwidth|pim|demo> [--arch ARx4-4k] \
-                 [--workload helr] [--artifacts DIR] [--threads N]"
+                "usage: fhemem <simulate|figures|bandwidth|pim|demo|serve> [--arch ARx4-4k] \
+                 [--workload helr] [--artifacts DIR] [--threads N] \
+                 [--port 7070] [--max-batch 8] [--max-delay-ms 5] [--max-queue 64]"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// `fhemem serve`: the multi-tenant TCP serving front-end. Requests from
+/// all connected tenants coalesce into mixed batches on the bank pool;
+/// every batch is also costed on the configured FHEmem model.
+fn cmd_serve(args: &Args) {
+    use fhemem::service::{server, FheService, SchedulerConfig};
+    use std::time::Duration;
+    let arch = ArchConfig::parse(args.get_or("arch", "ARx4-4k")).expect("bad --arch");
+    let port = args.get_port("port", 7070);
+    let cfg = SchedulerConfig {
+        max_batch: args.get_usize("max-batch", 8),
+        max_delay: Duration::from_millis(args.get_u64("max-delay-ms", 5)),
+        max_queue: args.get_usize("max-queue", 64),
+    };
+    let svc = FheService::new(arch, cfg.clone());
+    let handle = server::spawn(("127.0.0.1", port), svc).expect("bind serve port");
+    println!(
+        "fhemem-serve listening on {} (arch {}, max-batch {}, max-delay {:?}, max-queue {}, \
+         bank pool {} threads)",
+        handle.addr,
+        arch.name(),
+        cfg.max_batch,
+        cfg.max_delay,
+        cfg.max_queue,
+        fhemem::parallel::pool().threads(),
+    );
+    handle.join();
 }
 
 fn cmd_simulate(args: &Args) {

@@ -109,6 +109,47 @@ impl Barrett {
     pub fn mul(&self, a: u64, b: u64) -> u64 {
         self.reduce_u128(a as u128 * b as u128)
     }
+
+    /// **Lazy** product: `a·b mod q + k·q` with `k ∈ {0, 1}`, i.e. a
+    /// result in `[0, 2q)`, for fully-reduced inputs `a, b < q`.
+    ///
+    /// The multiply-high quotient underestimates `⌊a·b/q⌋` by at most 3
+    /// (two dropped partial-product floors, the dropped low×low term and
+    /// the `ratio` truncation), so the wrapped difference sits in
+    /// `[0, 4q)` and a single conditional subtract of `2q` lands it in
+    /// `[0, 2q)` — replacing the fix-up loop of [`Self::mul`]. Pointwise
+    /// mul/add chains carry these `[0, 2q)` values and correct once at
+    /// the end (see `RnsPoly::fused_mul_add`). Requires `q < 2^62` so
+    /// `4q` fits in `u64` — the invariant [`Self::new`] already asserts.
+    #[inline(always)]
+    pub fn mul_lazy(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.q && b < self.q);
+        let x = a as u128 * b as u128;
+        let quot = ((self.ratio >> 64) * (x >> 64))
+            + (((self.ratio >> 64) * (x & 0xFFFF_FFFF_FFFF_FFFF)) >> 64)
+            + (((self.ratio & 0xFFFF_FFFF_FFFF_FFFF) * (x >> 64)) >> 64);
+        let mut r = (x - quot * self.q as u128) as u64;
+        let twoq = 2 * self.q;
+        if r >= twoq {
+            r -= twoq;
+        }
+        debug_assert!(r < twoq);
+        r
+    }
+}
+
+/// Lazy addition for `[0, 2q)`-carried chains: inputs in `[0, 2q)`, output
+/// in `[0, 2q)`, one conditional subtract (no full reduction). Requires
+/// `q < 2^62` so the intermediate sum `< 4q` fits in `u64`.
+#[inline(always)]
+pub fn add_mod_lazy(a: u64, b: u64, twoq: u64) -> u64 {
+    debug_assert!(a < twoq && b < twoq);
+    let s = a + b;
+    if s >= twoq {
+        s - twoq
+    } else {
+        s
+    }
 }
 
 /// Montgomery multiplication context (R = 2^64).
@@ -443,6 +484,43 @@ mod tests {
             assert_eq!(mul_shoup(t, w, ws, q), want);
             let s = ShoupMul::new(w, q);
             assert_eq!(s.mul_lazy(t), r);
+        });
+    }
+
+    #[test]
+    fn barrett_lazy_is_within_one_q() {
+        forall("barrett lazy bound", 256, |rng| {
+            let q = rng.range(3, 1 << 62) | 1;
+            let br = Barrett::new(q);
+            let a = rng.below(q);
+            let b = rng.below(q);
+            let r = br.mul_lazy(a, b);
+            let want = mul_mod(a, b, q);
+            assert!(r < 2 * q, "lazy result {r} >= 2q (q={q})");
+            assert!(r == want || r == want + q, "q={q} a={a} b={b}: {r} vs {want}");
+        });
+        // Boundary operands at the largest supported modulus.
+        let q = NEAR_MAX_BARRETT;
+        let br = Barrett::new(q);
+        for a in [0u64, 1, q - 1] {
+            for b in [0u64, 1, q - 1] {
+                let r = br.mul_lazy(a, b);
+                let want = mul_mod(a, b, q);
+                assert!(r == want || r == want + q, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_mod_lazy_stays_in_range_and_congruent() {
+        forall("add_mod_lazy", 256, |rng| {
+            let q = rng.range(3, 1 << 62) | 1;
+            let twoq = 2 * q;
+            let a = rng.below(twoq);
+            let b = rng.below(twoq);
+            let s = add_mod_lazy(a, b, twoq);
+            assert!(s < twoq);
+            assert_eq!(s % q, ((a as u128 + b as u128) % q as u128) as u64);
         });
     }
 

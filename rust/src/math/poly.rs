@@ -5,7 +5,7 @@
 //! layer computes with it, the mapping layer lays its residues out over
 //! FHEmem banks, and the runtime ships it to/from the XLA artifacts.
 
-use super::modarith::{add_mod, mul_mod, neg_mod, sub_mod};
+use super::modarith::{add_mod, add_mod_lazy, mul_mod, neg_mod, sub_mod};
 use super::rns::RnsBasis;
 use std::sync::Arc;
 
@@ -135,6 +135,46 @@ impl RnsPoly {
                 *a = br.mul(*a, b);
             }
         });
+    }
+
+    /// Fused pointwise multiply–accumulate chain in the NTT domain:
+    /// `Σ_i a_i ⊙ b_i` computed with **lazy reduction** — per-term
+    /// products come out of [`super::modarith::Barrett::mul_lazy`] in
+    /// `[0, 2q)`, the accumulator stays in `[0, 2q)` across the chain
+    /// (one conditional subtract per add instead of a full reduction),
+    /// and a single correction pass at the end restores `[0, q)`. The
+    /// ROADMAP's deferred-correction follow-up to the Harvey NTT engine:
+    /// the same `q < 2^62` invariant guards the `4q`-wide intermediates.
+    ///
+    /// Bit-identical to the eager `mul_assign` + `add_assign` chain —
+    /// both compute the exact residue, only the reduction schedule
+    /// differs. The HMul tensor cross-term `a0·b1 + a1·b0` is the hot
+    /// caller (see `ckks::cipher::Evaluator::mul_no_rescale`).
+    pub fn fused_mul_add(terms: &[(&RnsPoly, &RnsPoly)]) -> RnsPoly {
+        assert!(!terms.is_empty(), "fused_mul_add needs at least one term");
+        let first = terms[0].0;
+        assert_eq!(first.domain, Domain::Ntt, "fused_mul_add requires NTT domain");
+        for (x, y) in terms {
+            x.check_compat(y);
+            first.check_compat(x);
+        }
+        let basis = first.basis.clone();
+        let mut out = Self::zero(first.basis.clone(), first.limbs, Domain::Ntt);
+        par_rows(&mut out.data, |j, row| {
+            let q = basis.q(j);
+            debug_assert!(q < (1 << 62), "lazy chain needs q < 2^62");
+            let br = basis.barrett[j];
+            let twoq = 2 * q;
+            for (c, acc) in row.iter_mut().enumerate() {
+                let mut s = 0u64;
+                for (x, y) in terms {
+                    s = add_mod_lazy(s, br.mul_lazy(x.data[j][c], y.data[j][c]), twoq);
+                }
+                // One correction pass: [0, 2q) -> [0, q).
+                *acc = if s >= q { s - q } else { s };
+            }
+        });
+        out
     }
 
     /// Multiply by a per-limb scalar.
@@ -295,6 +335,58 @@ mod tests {
                 assert_eq!(fa.data[j], expect, "limb {j}");
             }
         });
+    }
+
+    #[test]
+    fn fused_mul_add_bit_identical_to_eager_chain() {
+        // The lazy [0, 2q)-carried chain must reproduce the eager
+        // mul_assign/add_assign path bit-for-bit, for 1..4-term chains.
+        let b = basis(6, 3);
+        forall("fused mul-add chain", 8, |rng| {
+            for nterms in 1..=4usize {
+                let pairs: Vec<(RnsPoly, RnsPoly)> = (0..nterms)
+                    .map(|_| {
+                        let mut x = random_poly(&b, 3, rng);
+                        let mut y = random_poly(&b, 3, rng);
+                        x.to_ntt();
+                        y.to_ntt();
+                        (x, y)
+                    })
+                    .collect();
+                let refs: Vec<(&RnsPoly, &RnsPoly)> =
+                    pairs.iter().map(|(x, y)| (x, y)).collect();
+                let fused = RnsPoly::fused_mul_add(&refs);
+                // Eager: reduce every product and every sum fully.
+                let mut eager = RnsPoly::zero(b.clone(), 3, Domain::Ntt);
+                for (x, y) in &pairs {
+                    let mut prod = x.clone();
+                    prod.mul_assign(y);
+                    eager.add_assign(&prod);
+                }
+                assert_eq!(fused.data, eager.data, "nterms={nterms}");
+                assert_eq!(fused.domain, Domain::Ntt);
+            }
+        });
+    }
+
+    #[test]
+    fn fused_mul_add_at_boundary_values() {
+        // All-(q-1) operands maximize every lazy intermediate.
+        let b = basis(5, 2);
+        let n = 1usize << 5;
+        let mut x = RnsPoly::zero(b.clone(), 2, Domain::Ntt);
+        for j in 0..2 {
+            let q = b.q(j);
+            x.data[j] = vec![q - 1; n];
+        }
+        let refs = [(&x, &x), (&x, &x), (&x, &x)];
+        let fused = RnsPoly::fused_mul_add(&refs);
+        for j in 0..2 {
+            let q = b.q(j);
+            let sq = mul_mod(q - 1, q - 1, q);
+            let want = add_mod(add_mod(sq, sq, q), sq, q);
+            assert!(fused.data[j].iter().all(|&v| v == want), "limb {j}");
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::math::rns::RnsBasis;
 use std::sync::Arc;
 
 /// A CKKS parameter set.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CkksParams {
     pub log_n: usize,
     /// Maximum multiplicative level (number of prime limbs = L + 1 is a
@@ -97,6 +97,22 @@ impl CkksParams {
         let (mut q, p) = self.generate_moduli();
         q.extend(p);
         Arc::new(RnsBasis::new(q, self.n()))
+    }
+
+    /// Look up a fixed preset by its `name` field — the registry the
+    /// serving wire format uses so a params frame can name its preset
+    /// and the decoder can rebuild (and cross-check) the exact set.
+    /// `paper-lola` is parameterized by level count and is resolved by
+    /// the wire decoder directly.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "paper-deep" => Some(Self::paper_deep()),
+            "func-default" => Some(Self::func_default()),
+            "func-tiny" => Some(Self::func_tiny()),
+            "func-boot" => Some(Self::func_boot()),
+            "artifact" => Some(Self::artifact()),
+            _ => None,
+        }
     }
 
     // ---------------------------------------------------------------
@@ -271,6 +287,23 @@ mod tests {
         for m in q.iter().chain(pp.iter()) {
             assert!(m.q < (1 << 31), "modulus {} too big for exact u64 products", m.q);
         }
+    }
+
+    #[test]
+    fn by_name_covers_fixed_presets() {
+        for p in [
+            CkksParams::paper_deep(),
+            CkksParams::func_default(),
+            CkksParams::func_tiny(),
+            CkksParams::func_boot(),
+            CkksParams::artifact(),
+        ] {
+            let back = CkksParams::by_name(p.name).expect(p.name);
+            assert_eq!(back.name, p.name);
+            assert_eq!(back.log_n, p.log_n);
+            assert_eq!(back.l_levels, p.l_levels);
+        }
+        assert!(CkksParams::by_name("no-such-preset").is_none());
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Service client: connects to the TCP front-end, registers a tenant,
+//! encrypts/decrypts locally, evaluates remotely.
+//!
+//! The client derives the *same* deterministic key chain as the server
+//! from `(params, key_seed)` (see [`super::keystore::Tenant`]), so
+//! plaintexts never cross the wire: fresh ciphertexts go out
+//! seed-compressed, evaluated ciphertexts come back full, and decryption
+//! happens on the client's copy of the secret key. Used by the e2e
+//! tests, `examples/service_demo.rs` and the hotpath bench's serving
+//! figure.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::ckks::cipher::{Ciphertext, Evaluator};
+use crate::ckks::CkksContext;
+use crate::params::CkksParams;
+use std::sync::Arc;
+
+use super::keystore::Tenant;
+use super::server::error_code;
+use super::wire::{
+    decode_ciphertext, decode_error, decode_metrics, encode_eval_request, encode_register,
+    read_frame_from, write_frame_to, FrameKind, WireCiphertext, WireOp,
+};
+use super::ServiceError;
+
+/// A connected, registered tenant client.
+pub struct ServiceClient {
+    stream: TcpStream,
+    pub tenant_id: u64,
+    /// Local twin of the server-side tenant (same params + key seed).
+    pub ctx: Arc<CkksContext>,
+    pub eval: Arc<Evaluator>,
+}
+
+impl ServiceClient {
+    /// Connect and register `(tenant_id, params, key_seed)`. Idempotent
+    /// against an already-registered identical tenant, so reconnects and
+    /// multiple connections per tenant both work.
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        tenant_id: u64,
+        params: CkksParams,
+        key_seed: u64,
+    ) -> Result<Self, ServiceError> {
+        let mut stream = TcpStream::connect(addr).map_err(ServiceError::Io)?;
+        stream.set_nodelay(true).map_err(ServiceError::Io)?;
+        write_frame_to(
+            &mut stream,
+            FrameKind::Register,
+            &encode_register(tenant_id, key_seed, &params),
+        )
+        .map_err(ServiceError::Io)?;
+        match read_response(&mut stream)? {
+            (FrameKind::Ack, _) => {}
+            (kind, _) => {
+                return Err(ServiceError::Protocol(format!(
+                    "expected Ack to Register, got {kind:?}"
+                )))
+            }
+        }
+        let local = Tenant::new(tenant_id, params, key_seed);
+        Ok(Self {
+            stream,
+            tenant_id,
+            ctx: local.ctx.clone(),
+            eval: local.eval.clone(),
+        })
+    }
+
+    /// Encrypt a fresh real-slot vector, seed-compressed for the wire.
+    pub fn encrypt(&self, z: &[f64], level: usize) -> WireCiphertext {
+        let (ct, a_seed) = self.eval.encrypt_real_seeded(z, level);
+        WireCiphertext::Seeded { ct, a_seed }
+    }
+
+    /// Decrypt a (server-evaluated) ciphertext locally.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<f64> {
+        self.eval.decrypt_real(ct)
+    }
+
+    /// Remote HAdd.
+    pub fn add(
+        &mut self,
+        a: &WireCiphertext,
+        b: &WireCiphertext,
+    ) -> Result<Ciphertext, ServiceError> {
+        self.eval_remote(WireOp::Add, 0, &[a, b])
+    }
+
+    /// Remote HSub.
+    pub fn sub(
+        &mut self,
+        a: &WireCiphertext,
+        b: &WireCiphertext,
+    ) -> Result<Ciphertext, ServiceError> {
+        self.eval_remote(WireOp::Sub, 0, &[a, b])
+    }
+
+    /// Remote HMul (tensor + relinearize + rescale server-side).
+    pub fn mul(
+        &mut self,
+        a: &WireCiphertext,
+        b: &WireCiphertext,
+    ) -> Result<Ciphertext, ServiceError> {
+        self.eval_remote(WireOp::Mul, 0, &[a, b])
+    }
+
+    /// Remote slot rotation.
+    pub fn rotate(&mut self, a: &WireCiphertext, step: i64) -> Result<Ciphertext, ServiceError> {
+        self.eval_remote(WireOp::Rotate, step, &[a])
+    }
+
+    /// Fetch the scheduler's metrics snapshot (JSON text).
+    pub fn metrics(&mut self) -> Result<String, ServiceError> {
+        write_frame_to(&mut self.stream, FrameKind::MetricsReq, &[]).map_err(ServiceError::Io)?;
+        match read_response(&mut self.stream)? {
+            (FrameKind::MetricsOk, payload) => {
+                decode_metrics(&payload).map_err(ServiceError::Wire)
+            }
+            (kind, _) => Err(ServiceError::Protocol(format!(
+                "expected MetricsOk, got {kind:?}"
+            ))),
+        }
+    }
+
+    fn eval_remote(
+        &mut self,
+        op: WireOp,
+        step: i64,
+        cts: &[&WireCiphertext],
+    ) -> Result<Ciphertext, ServiceError> {
+        let payload = encode_eval_request(self.tenant_id, op, step, cts);
+        write_frame_to(&mut self.stream, FrameKind::Eval, &payload).map_err(ServiceError::Io)?;
+        match read_response(&mut self.stream)? {
+            (FrameKind::EvalOk, payload) => {
+                decode_ciphertext(FrameKind::CtFull, &payload, &self.ctx)
+                    .map_err(ServiceError::Wire)
+            }
+            (kind, _) => Err(ServiceError::Protocol(format!(
+                "expected EvalOk, got {kind:?}"
+            ))),
+        }
+    }
+}
+
+/// Read one response frame, converting `Error` frames into the matching
+/// [`ServiceError`] variant.
+fn read_response(stream: &mut TcpStream) -> Result<(FrameKind, Vec<u8>), ServiceError> {
+    match read_frame_from(stream)? {
+        None => Err(ServiceError::Protocol(
+            "server closed the connection mid-request".into(),
+        )),
+        Some((FrameKind::Error, payload)) => {
+            let (code, detail, msg) = decode_error(&payload).map_err(ServiceError::Wire)?;
+            Err(match code {
+                error_code::UNKNOWN_TENANT => ServiceError::UnknownTenant(detail),
+                error_code::BACKPRESSURE => ServiceError::Backpressure,
+                error_code::WIRE => ServiceError::Protocol(format!("server wire error: {msg}")),
+                _ => ServiceError::Rejected(msg),
+            })
+        }
+        Some(frame) => Ok(frame),
+    }
+}

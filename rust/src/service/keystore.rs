@@ -1,0 +1,181 @@
+//! Tenant registry: tenant id → parameter context + key chain.
+//!
+//! Each tenant owns a full CKKS context and an [`Evaluator`] bound to a
+//! deterministic key chain (seeded — see `crate::math::prng` for why
+//! determinism, not cryptographic strength, is the goal of this
+//! reproduction). The client derives the *same* chain from the same
+//! seed, so it can encrypt and decrypt locally while the server only
+//! ever evaluates. Lookup is interior-mutability-safe: an `RwLock`
+//! around the map means concurrent connections share read access and
+//! registration takes the write lock briefly; the returned `Arc<Tenant>`
+//! outlives any re-registration.
+
+use crate::ckks::cipher::Evaluator;
+use crate::ckks::{CkksContext, KeyChain};
+use crate::params::CkksParams;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use super::ServiceError;
+
+/// One registered tenant: context + evaluator (with its key chain).
+pub struct Tenant {
+    pub id: u64,
+    pub key_seed: u64,
+    pub ctx: Arc<CkksContext>,
+    pub eval: Arc<Evaluator>,
+}
+
+impl Tenant {
+    /// Build a tenant's full key material from `(params, key_seed)`.
+    /// Deterministic: client and server construct bit-identical chains.
+    pub fn new(id: u64, params: CkksParams, key_seed: u64) -> Arc<Self> {
+        let ctx = CkksContext::new(params);
+        let chain = Arc::new(KeyChain::new(ctx.clone(), key_seed));
+        // The encryption-noise seed is derived, not shared state: the
+        // server never encrypts on a tenant's behalf.
+        let eval = Arc::new(Evaluator::new(ctx.clone(), chain, key_seed ^ 0x5EED_CAFE));
+        Arc::new(Self {
+            id,
+            key_seed,
+            ctx,
+            eval,
+        })
+    }
+}
+
+/// Concurrent tenant registry.
+#[derive(Default)]
+pub struct KeyStore {
+    tenants: RwLock<HashMap<u64, Arc<Tenant>>>,
+}
+
+impl KeyStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a tenant. Re-registering the same `(id, seed, params)` is
+    /// idempotent (reconnecting clients re-announce themselves); the same
+    /// id with *different* key material is an error — a tenant's keys
+    /// never silently rotate underneath queued work.
+    pub fn register(
+        &self,
+        id: u64,
+        params: CkksParams,
+        key_seed: u64,
+    ) -> Result<Arc<Tenant>, ServiceError> {
+        // Full-field identity, not just the preset name: paper_lola(3)
+        // and paper_lola(8) share a name but are different key material.
+        let params_identity = params.clone();
+        let same_identity = move |existing: &Tenant| {
+            existing.key_seed == key_seed && existing.ctx.params == params_identity
+        };
+        let conflict = || {
+            Err(ServiceError::Rejected(format!(
+                "tenant {id} already registered with different key material"
+            )))
+        };
+        if let Some(existing) = self.get(id) {
+            return if same_identity(&existing) {
+                Ok(existing)
+            } else {
+                conflict()
+            };
+        }
+        // Key generation happens outside the write lock; a racing
+        // duplicate registration resolves to whichever insert wins.
+        let tenant = Tenant::new(id, params, key_seed);
+        let mut map = self.tenants.write().unwrap();
+        match map.get(&id) {
+            Some(existing) if same_identity(existing) => Ok(existing.clone()),
+            Some(_) => conflict(),
+            None => {
+                map.insert(id, tenant.clone());
+                Ok(tenant)
+            }
+        }
+    }
+
+    /// Shared-lock lookup.
+    pub fn get(&self, id: u64) -> Option<Arc<Tenant>> {
+        self.tenants.read().unwrap().get(&id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_lookup_and_idempotency() {
+        let store = KeyStore::new();
+        assert!(store.is_empty());
+        let t = store
+            .register(7, CkksParams::func_tiny(), 0xABC)
+            .unwrap();
+        assert_eq!(t.id, 7);
+        assert_eq!(store.len(), 1);
+        // Same (id, seed, params): idempotent, same tenant instance.
+        let t2 = store
+            .register(7, CkksParams::func_tiny(), 0xABC)
+            .unwrap();
+        assert!(Arc::ptr_eq(&t, &t2));
+        // Same id, different seed: rejected.
+        assert!(store.register(7, CkksParams::func_tiny(), 0xDEF).is_err());
+        // Same id + seed but different params: also rejected — identity
+        // is the full parameter set, not the preset name.
+        assert!(store.register(7, CkksParams::artifact(), 0xABC).is_err());
+        // paper_lola(3) vs paper_lola(8) share a *name* but are
+        // different key material.
+        store.register(9, CkksParams::paper_lola(3), 0x9).unwrap();
+        assert!(store.register(9, CkksParams::paper_lola(8), 0x9).is_err());
+        // Unknown tenant: None.
+        assert!(store.get(8).is_none());
+    }
+
+    #[test]
+    fn client_and_server_chains_agree() {
+        // The whole multi-tenant design rests on this: same (params,
+        // seed) => bit-identical secret keys on both ends.
+        let server = Tenant::new(1, CkksParams::func_tiny(), 42);
+        let client = Tenant::new(1, CkksParams::func_tiny(), 42);
+        assert_eq!(
+            server.eval.chain.sk.coeffs,
+            client.eval.chain.sk.coeffs
+        );
+        let z: Vec<f64> = (0..server.ctx.encoder.slots())
+            .map(|i| 0.01 * (i % 13) as f64)
+            .collect();
+        let ct = client.eval.encrypt_real(&z, 2);
+        let dec = server.eval.decrypt_real(&ct);
+        assert!((dec[3] - z[3]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn concurrent_lookups_share_read_access() {
+        let store = Arc::new(KeyStore::new());
+        for id in 0..4u64 {
+            store.register(id, CkksParams::func_tiny(), 100 + id).unwrap();
+        }
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let store = store.clone();
+                s.spawn(move || {
+                    for id in 0..4u64 {
+                        let t = store.get(id).expect("registered tenant");
+                        assert_eq!(t.key_seed, 100 + id);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! `fhemem-serve`: the multi-tenant FHE serving subsystem.
+//!
+//! FHEmem's headline claim is end-to-end throughput from mapping many
+//! *independent* ciphertexts onto parallel banks (paper §IV). The layers
+//! below this one reproduce the kernels, the bank pool and the cost
+//! model — this subsystem feeds them traffic, the way MemFHE frames
+//! in-memory FHE as a full client→server pipeline:
+//!
+//! * [`wire`] — versioned, checksummed, length-prefixed binary format
+//!   for ciphertexts (with seed-compressed fresh ciphertexts), keys,
+//!   params and the request protocol; strict decoding throughout.
+//! * [`keystore`] — tenant registry: id → context + key chain, with
+//!   concurrent lookup.
+//! * [`scheduler`] — admission-controlled batching: requests from all
+//!   tenants coalesce into mixed batches for
+//!   [`Coordinator::execute_mixed_batch`], with wall-clock *and*
+//!   simulated-FHEmem-cycle metrics per batch.
+//! * [`server`] / [`client`] — a `std::net` TCP front-end speaking the
+//!   wire format, and the client used by tests, the demo example and
+//!   the bench.
+//!
+//! Zero external dependencies, per the workspace's offline policy.
+
+pub mod client;
+pub mod keystore;
+pub mod scheduler;
+pub mod server;
+pub mod wire;
+
+pub use client::ServiceClient;
+pub use keystore::{KeyStore, Tenant};
+pub use scheduler::{BatchScheduler, SchedulerConfig};
+pub use wire::{WireCiphertext, WireError, WireOp};
+
+use crate::ckks::cipher::Ciphertext;
+use crate::coordinator::{Coordinator, MixedKind, MixedOp};
+use crate::params::CkksParams;
+use crate::sim::ArchConfig;
+use std::sync::Arc;
+
+/// Anything the serving path can fail with.
+#[derive(Debug)]
+pub enum ServiceError {
+    /// Strict-decode failure (see [`WireError`]).
+    Wire(WireError),
+    /// Tenant id not present in the keystore.
+    UnknownTenant(u64),
+    /// Admission control: the request queue is full.
+    Backpressure,
+    /// The service refused or failed the request.
+    Rejected(String),
+    /// Transport failure.
+    Io(std::io::Error),
+    /// Peer sent a frame that is valid wire but wrong protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Wire(e) => write!(f, "wire: {e}"),
+            ServiceError::UnknownTenant(id) => write!(f, "unknown tenant {id}"),
+            ServiceError::Backpressure => write!(f, "backpressure: queue full"),
+            ServiceError::Rejected(msg) => write!(f, "rejected: {msg}"),
+            ServiceError::Io(e) => write!(f, "io: {e}"),
+            ServiceError::Protocol(msg) => write!(f, "protocol: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<WireError> for ServiceError {
+    fn from(e: WireError) -> Self {
+        ServiceError::Wire(e)
+    }
+}
+
+/// The assembled service: keystore + batching scheduler + coordinator.
+/// [`server::spawn`] puts a TCP front-end in front of it; tests and the
+/// bench drive it in-process.
+pub struct FheService {
+    pub store: KeyStore,
+    pub sched: Arc<BatchScheduler>,
+    pub coord: Arc<Coordinator>,
+}
+
+impl FheService {
+    /// Assemble a service. The coordinator's own parameter set only
+    /// seeds its cost-model defaults — execution always runs on each
+    /// tenant's evaluator.
+    pub fn new(arch: ArchConfig, cfg: SchedulerConfig) -> Arc<Self> {
+        let coord = Arc::new(Coordinator::new(CkksParams::func_tiny(), arch, None));
+        let sched = BatchScheduler::start(coord.clone(), cfg);
+        Arc::new(Self {
+            store: KeyStore::new(),
+            sched,
+            coord,
+        })
+    }
+
+    /// Register (or idempotently re-register) a tenant.
+    pub fn register(
+        &self,
+        tenant_id: u64,
+        params: CkksParams,
+        key_seed: u64,
+    ) -> Result<Arc<Tenant>, ServiceError> {
+        self.store.register(tenant_id, params, key_seed)
+    }
+
+    /// Evaluate one already-decoded op for `tenant` through the batching
+    /// scheduler (blocks until the containing batch completes).
+    pub fn eval_decoded(
+        &self,
+        tenant: &Arc<Tenant>,
+        op: WireOp,
+        step: i64,
+        mut cts: Vec<Ciphertext>,
+    ) -> Result<Ciphertext, ServiceError> {
+        if cts.len() != op.arity() {
+            return Err(ServiceError::Protocol(format!(
+                "op {op:?} expects {} operands, got {}",
+                op.arity(),
+                cts.len()
+            )));
+        }
+        let b = if op.arity() == 2 { cts.pop() } else { None };
+        let a = cts.pop().expect("arity checked above");
+        let kind = match op {
+            WireOp::Add => MixedKind::Add,
+            WireOp::Sub => MixedKind::Sub,
+            WireOp::Mul => MixedKind::Mul,
+            WireOp::Rotate => MixedKind::Rotate(step),
+        };
+        self.sched.execute_blocking(MixedOp {
+            eval: tenant.eval.clone(),
+            kind,
+            a,
+            b,
+        })
+    }
+
+    /// Convenience for in-process callers (bench, tests): look the
+    /// tenant up and evaluate.
+    pub fn eval(
+        &self,
+        tenant_id: u64,
+        op: WireOp,
+        step: i64,
+        cts: Vec<Ciphertext>,
+    ) -> Result<Ciphertext, ServiceError> {
+        let tenant = self
+            .store
+            .get(tenant_id)
+            .ok_or(ServiceError::UnknownTenant(tenant_id))?;
+        self.eval_decoded(&tenant, op, step, cts)
+    }
+
+    /// Scheduler metrics snapshot as pretty JSON.
+    pub fn metrics_json(&self) -> String {
+        self.sched.metrics_json()
+    }
+
+    /// Drain the scheduler and stop its worker.
+    pub fn shutdown(&self) {
+        self.sched.shutdown();
+    }
+}

@@ -1,0 +1,443 @@
+//! Admission-controlled batching scheduler: the serving layer's core.
+//!
+//! Single-ciphertext requests from any number of tenants land in one
+//! queue; a worker thread coalesces them into mixed batches and hands
+//! each batch to [`Coordinator::execute_mixed_batch`], which fans it out
+//! across the bank pool — the software mirror of FHEmem filling banks
+//! with independent ciphertexts (paper §IV). Batch formation follows the
+//! classic tradeoff: flush when [`SchedulerConfig::max_batch`] requests
+//! are waiting, or when the oldest request has waited
+//! [`SchedulerConfig::max_delay`]. Admission control caps the queue at
+//! [`SchedulerConfig::max_queue`]; beyond it, submissions fail fast with
+//! backpressure instead of growing latency unboundedly.
+//!
+//! Every batch records both **wall-clock** time (what the CPU host
+//! actually took) and **simulated FHEmem cycles** (what the batch costs
+//! on the configured accelerator model), so the metrics snapshot carries
+//! the paper's two axes side by side.
+
+use crate::ckks::cipher::Ciphertext;
+use crate::coordinator::{Coordinator, MixedOp};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::ServiceError;
+
+/// Batch-formation and admission-control knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush a partial batch once its oldest request has waited this long.
+    pub max_delay: Duration,
+    /// Admission control: reject submissions beyond this queue depth.
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            max_queue: 64,
+        }
+    }
+}
+
+/// Monotonic counters the snapshot is computed from.
+#[derive(Debug, Default)]
+pub struct SchedulerMetrics {
+    pub batches: AtomicU64,
+    pub ops_executed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub wall_ns_total: AtomicU64,
+    pub sim_cycles_total: AtomicU64,
+    pub largest_batch: AtomicU64,
+}
+
+impl SchedulerMetrics {
+    /// Point-in-time snapshot as a JSON document (the `util::json`
+    /// writer — the same one the hotpath bench emits with).
+    pub fn snapshot_json(&self) -> Json {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let ops = self.ops_executed.load(Ordering::Relaxed);
+        let wall_ns = self.wall_ns_total.load(Ordering::Relaxed);
+        let throughput = if wall_ns > 0 {
+            ops as f64 / (wall_ns as f64 * 1e-9)
+        } else {
+            0.0
+        };
+        let avg_fill = if batches > 0 {
+            ops as f64 / batches as f64
+        } else {
+            0.0
+        };
+        Json::obj([
+            ("batches", Json::Num(batches)),
+            ("ops_executed", Json::Num(ops)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed))),
+            ("failed", Json::Num(self.failed.load(Ordering::Relaxed))),
+            ("wall_ns_total", Json::Num(wall_ns)),
+            (
+                "sim_cycles_total",
+                Json::Num(self.sim_cycles_total.load(Ordering::Relaxed)),
+            ),
+            (
+                "largest_batch",
+                Json::Num(self.largest_batch.load(Ordering::Relaxed)),
+            ),
+            ("avg_batch_fill", Json::Float(avg_fill)),
+            ("throughput_ops_per_s", Json::Float(throughput)),
+        ])
+    }
+}
+
+type OpResult = Result<Ciphertext, ServiceError>;
+
+struct Pending {
+    op: MixedOp,
+    tx: mpsc::Sender<OpResult>,
+    enqueued: Instant,
+}
+
+/// The batching scheduler. Construct with [`BatchScheduler::start`];
+/// call [`BatchScheduler::shutdown`] to drain and join the worker.
+pub struct BatchScheduler {
+    coord: Arc<Coordinator>,
+    cfg: SchedulerConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    notify: Condvar,
+    stop: AtomicBool,
+    pub metrics: SchedulerMetrics,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    /// Spawn the batching worker over `coord`'s bank pool + cost model.
+    pub fn start(coord: Arc<Coordinator>, cfg: SchedulerConfig) -> Arc<Self> {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        let sched = Arc::new(Self {
+            coord,
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            stop: AtomicBool::new(false),
+            metrics: SchedulerMetrics::default(),
+            worker: Mutex::new(None),
+        });
+        let clone = sched.clone();
+        let handle = std::thread::Builder::new()
+            .name("fhemem-sched".into())
+            .spawn(move || clone.worker_loop())
+            .expect("spawn scheduler worker");
+        *sched.worker.lock().unwrap() = Some(handle);
+        sched
+    }
+
+    /// Submit one op. Returns the receiver the result will arrive on, or
+    /// fails fast with [`ServiceError::Backpressure`] when the queue is
+    /// at capacity (admission control).
+    pub fn submit(&self, op: MixedOp) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.lock().unwrap();
+            // Stop must be checked under the queue lock: shutdown() sets
+            // the flag and then drains under this same lock, so an op can
+            // never slip in between drain and process exit and leave its
+            // receiver blocked forever.
+            if self.stop.load(Ordering::Acquire) {
+                return Err(ServiceError::Rejected("scheduler is shut down".into()));
+            }
+            if q.len() >= self.cfg.max_queue {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::Backpressure);
+            }
+            q.push_back(Pending {
+                op,
+                tx,
+                enqueued: Instant::now(),
+            });
+        }
+        self.notify.notify_all();
+        Ok(rx)
+    }
+
+    /// Submit and block until the batch containing this op completes.
+    pub fn execute_blocking(&self, op: MixedOp) -> OpResult {
+        let rx = self.submit(op)?;
+        rx.recv()
+            .unwrap_or_else(|_| Err(ServiceError::Rejected("scheduler dropped the op".into())))
+    }
+
+    /// Current queue depth (tests/metrics).
+    pub fn queued(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn metrics_json(&self) -> String {
+        self.metrics.snapshot_json().write_pretty()
+    }
+
+    /// Stop accepting work, drain what's queued, join the worker.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.notify.notify_all();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        // Anything that slipped in after the worker exited gets a clean
+        // rejection instead of a forever-blocked receiver.
+        let leftovers: Vec<Pending> = self.queue.lock().unwrap().drain(..).collect();
+        for p in leftovers {
+            let _ = p
+                .tx
+                .send(Err(ServiceError::Rejected("scheduler is shut down".into())));
+        }
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let batch = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    let stopping = self.stop.load(Ordering::Acquire);
+                    if q.is_empty() {
+                        if stopping {
+                            return;
+                        }
+                        let (guard, _) = self
+                            .notify
+                            .wait_timeout(q, Duration::from_millis(50))
+                            .unwrap();
+                        q = guard;
+                        continue;
+                    }
+                    if q.len() >= self.cfg.max_batch || stopping {
+                        break;
+                    }
+                    let waited = q.front().map(|p| p.enqueued.elapsed()).unwrap_or_default();
+                    if waited >= self.cfg.max_delay {
+                        break;
+                    }
+                    let remaining = self.cfg.max_delay - waited;
+                    let (guard, _) = self.notify.wait_timeout(q, remaining).unwrap();
+                    q = guard;
+                }
+                let take = q.len().min(self.cfg.max_batch);
+                q.drain(..take).collect::<Vec<_>>()
+            };
+            if !batch.is_empty() {
+                self.run_batch(batch);
+            }
+        }
+    }
+
+    fn run_batch(&self, batch: Vec<Pending>) {
+        let n = batch.len() as u64;
+        let mut ops = Vec::with_capacity(batch.len());
+        let mut txs = Vec::with_capacity(batch.len());
+        for p in batch {
+            ops.push(p.op);
+            txs.push(p.tx);
+        }
+        let cycles_before = self.coord.metrics.sim_cycles.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        // Per-op panic isolation: a wire-valid but evaluator-invalid op
+        // (level too low to rescale, drifted scales) fails only its own
+        // slot — neither the worker nor the other tenants coalesced into
+        // this batch are taken down with it.
+        let outs = self.coord.execute_mixed_batch_isolated(&ops);
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        let cycles = self
+            .coord
+            .metrics
+            .sim_cycles
+            .load(Ordering::Relaxed)
+            .saturating_sub(cycles_before);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.wall_ns_total.fetch_add(wall_ns, Ordering::Relaxed);
+        self.metrics
+            .sim_cycles_total
+            .fetch_add(cycles, Ordering::Relaxed);
+        self.metrics.largest_batch.fetch_max(n, Ordering::Relaxed);
+        for (tx, out) in txs.into_iter().zip(outs) {
+            match out {
+                Ok(ct) => {
+                    self.metrics.ops_executed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Ok(ct));
+                }
+                Err(msg) => {
+                    self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Err(ServiceError::Rejected(msg)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MixedKind;
+    use crate::params::CkksParams;
+    use crate::service::keystore::Tenant;
+    use crate::sim::ArchConfig;
+
+    fn coord() -> Arc<Coordinator> {
+        Arc::new(Coordinator::new(
+            CkksParams::func_tiny(),
+            ArchConfig::default(),
+            None,
+        ))
+    }
+
+    #[test]
+    fn coalesces_cross_tenant_ops_into_one_batch() {
+        let sched = BatchScheduler::start(
+            coord(),
+            SchedulerConfig {
+                max_batch: 4,
+                max_delay: Duration::from_secs(5),
+                max_queue: 16,
+            },
+        );
+        let t1 = Tenant::new(1, CkksParams::func_tiny(), 11);
+        let t2 = Tenant::new(2, CkksParams::func_tiny(), 22);
+        let slots = t1.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 7) as f64).collect();
+        // Four ops from two tenants, submitted from four threads; the
+        // worker must coalesce them into exactly one mixed batch.
+        let rxs: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = [&t1, &t2, &t1, &t2]
+                .into_iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let sched = &sched;
+                    let z = &z;
+                    s.spawn(move || {
+                        let a = t.eval.encrypt_real(z, 3);
+                        let (kind, b) = if i % 2 == 0 {
+                            (MixedKind::Mul, Some(t.eval.encrypt_real(z, 3)))
+                        } else {
+                            (MixedKind::Rotate(1), None)
+                        };
+                        sched
+                            .submit(MixedOp {
+                                eval: t.eval.clone(),
+                                kind,
+                                a,
+                                b,
+                            })
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for rx in rxs {
+            let ct = rx.recv().unwrap().unwrap();
+            assert!(ct.level >= 2);
+        }
+        assert_eq!(sched.metrics.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.metrics.ops_executed.load(Ordering::Relaxed), 4);
+        assert_eq!(sched.metrics.largest_batch.load(Ordering::Relaxed), 4);
+        assert!(sched.metrics.sim_cycles_total.load(Ordering::Relaxed) > 0);
+        assert!(sched.metrics.wall_ns_total.load(Ordering::Relaxed) > 0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn zero_capacity_queue_backpressures() {
+        let sched = BatchScheduler::start(
+            coord(),
+            SchedulerConfig {
+                max_batch: 2,
+                max_delay: Duration::from_millis(1),
+                max_queue: 0,
+            },
+        );
+        let t = Tenant::new(1, CkksParams::func_tiny(), 5);
+        let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
+        let a = t.eval.encrypt_real(&z, 2);
+        let err = sched
+            .submit(MixedOp {
+                eval: t.eval.clone(),
+                kind: MixedKind::Rotate(1),
+                a,
+                b: None,
+            })
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Backpressure));
+        assert_eq!(sched.metrics.rejected.load(Ordering::Relaxed), 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn bad_op_fails_alone_without_poisoning_its_batch() {
+        let sched = BatchScheduler::start(
+            coord(),
+            SchedulerConfig {
+                // Submissions are back-to-back, so 300 ms comfortably
+                // coalesces them (and keeps the final partial-batch flush
+                // from stalling the test for seconds).
+                max_batch: 2,
+                max_delay: Duration::from_millis(300),
+                max_queue: 4,
+            },
+        );
+        let t = Tenant::new(1, CkksParams::func_tiny(), 5);
+        let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
+        let a = t.eval.encrypt_real(&z, 3);
+        // Mismatched scales make the CKKS alignment assert inside the
+        // evaluator: that op must fail alone — the innocent op coalesced
+        // into the SAME batch still gets its result, and the worker
+        // survives.
+        let mut bad_b = t.eval.encrypt_real(&z, 3);
+        bad_b.scale *= 64.0;
+        let rx_bad = sched
+            .submit(MixedOp {
+                eval: t.eval.clone(),
+                kind: MixedKind::Add,
+                a: a.clone(),
+                b: Some(bad_b),
+            })
+            .unwrap();
+        let rx_good = sched
+            .submit(MixedOp {
+                eval: t.eval.clone(),
+                kind: MixedKind::Rotate(1),
+                a: a.clone(),
+                b: None,
+            })
+            .unwrap();
+        assert!(rx_bad.recv().unwrap().is_err());
+        assert!(rx_good.recv().unwrap().is_ok());
+        assert_eq!(sched.metrics.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.metrics.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.metrics.ops_executed.load(Ordering::Relaxed), 1);
+        // The worker survived: another op still executes.
+        let ok = sched.execute_blocking(MixedOp {
+            eval: t.eval.clone(),
+            kind: MixedKind::Rotate(2),
+            a,
+            b: None,
+        });
+        assert!(ok.is_ok());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_is_valid_json() {
+        let sched = BatchScheduler::start(coord(), SchedulerConfig::default());
+        let json = sched.metrics_json();
+        let doc = Json::parse(&json).expect("snapshot parses");
+        assert_eq!(doc.field("batches").unwrap().as_u64().unwrap(), 0);
+        assert!(doc.get("throughput_ops_per_s").is_some());
+        sched.shutdown();
+    }
+}

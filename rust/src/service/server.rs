@@ -1,0 +1,201 @@
+//! `std::net` TCP front-end speaking the wire format.
+//!
+//! One accept loop (non-blocking + stop flag so it can be shut down
+//! without an extra wake-up connection), one handler thread per
+//! connection. A connection carries any number of frames; each request
+//! frame gets exactly one response frame:
+//!
+//! | request | response |
+//! |---|---|
+//! | [`FrameKind::Register`] | [`FrameKind::Ack`] or [`FrameKind::Error`] |
+//! | [`FrameKind::Eval`] | [`FrameKind::EvalOk`] or [`FrameKind::Error`] |
+//! | [`FrameKind::MetricsReq`] | [`FrameKind::MetricsOk`] |
+//!
+//! Evaluation blocks the connection thread while the scheduler batches
+//! it with whatever other tenants have queued — which is exactly how the
+//! batching window fills up under concurrent load.
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::{
+    self, decode_ciphertext, decode_eval_request, decode_register, encode_ciphertext,
+    encode_error, encode_metrics, read_frame_from, FrameKind,
+};
+use super::{FheService, ServiceError};
+
+/// Error codes carried by [`FrameKind::Error`] frames.
+pub mod error_code {
+    pub const WIRE: u16 = 1;
+    pub const UNKNOWN_TENANT: u16 = 2;
+    pub const BACKPRESSURE: u16 = 3;
+    pub const REJECTED: u16 = 4;
+    pub const PROTOCOL: u16 = 5;
+}
+
+/// A running server: address + stop handle + accept-thread join handle.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal the accept loop to exit and join it. In-flight connection
+    /// handlers finish their current frame and exit on peer close.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept loop (the `serve` subcommand's foreground
+    /// mode — runs until the process is killed).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
+/// `svc` on a background accept thread.
+pub fn spawn<A: ToSocketAddrs>(addr: A, svc: Arc<FheService>) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = stop.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("fhemem-accept".into())
+        .spawn(move || accept_loop(listener, svc, stop_flag))?;
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+    })
+}
+
+fn accept_loop(listener: TcpListener, svc: Arc<FheService>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let svc = svc.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("fhemem-conn-{peer}"))
+                    .spawn(move || {
+                        // The accepted socket must be blocking regardless
+                        // of the listener's mode.
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_nodelay(true);
+                        handle_conn(stream, svc);
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Transient per-connection failures (ECONNABORTED from a
+            // client RST before accept, momentary fd exhaustion, EINTR)
+            // must not kill the whole server — back off and keep
+            // accepting. Only the stop flag ends the loop.
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn send(stream: &mut TcpStream, kind: FrameKind, payload: &[u8]) -> std::io::Result<()> {
+    wire::write_frame_to(stream, kind, payload)
+}
+
+fn send_service_error(stream: &mut TcpStream, err: &ServiceError) -> std::io::Result<()> {
+    let (code, detail, msg) = match err {
+        ServiceError::Wire(w) => (error_code::WIRE, 0, w.to_string()),
+        ServiceError::UnknownTenant(id) => (
+            error_code::UNKNOWN_TENANT,
+            *id,
+            format!("unknown tenant {id}"),
+        ),
+        ServiceError::Backpressure => (
+            error_code::BACKPRESSURE,
+            0,
+            "queue full, retry later".to_string(),
+        ),
+        ServiceError::Rejected(msg) => (error_code::REJECTED, 0, msg.clone()),
+        ServiceError::Io(e) => (error_code::PROTOCOL, 0, e.to_string()),
+        ServiceError::Protocol(msg) => (error_code::PROTOCOL, 0, msg.clone()),
+    };
+    send(stream, FrameKind::Error, &encode_error(code, detail, &msg))
+}
+
+fn handle_conn(mut stream: TcpStream, svc: Arc<FheService>) {
+    loop {
+        let (kind, payload) = match read_frame_from(&mut stream) {
+            Ok(Some(frame)) => frame,
+            // Clean close between frames.
+            Ok(None) => return,
+            // Framing is broken (bad magic/checksum/short read): there is
+            // no trustworthy boundary to resynchronize on — close.
+            Err(_) => return,
+        };
+        if let Err(err) = handle_frame(kind, &payload, &svc, &mut stream) {
+            // An Io error means a response write already failed — bytes
+            // of a torn frame may be on the wire, so appending an Error
+            // frame would desynchronize the client. Close instead.
+            // Application errors (decode/eval/registration) happen before
+            // any response bytes and are safely reportable.
+            if matches!(err, ServiceError::Io(_)) {
+                return;
+            }
+            if send_service_error(&mut stream, &err).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Process one request frame; `Ok(())` means a response was written.
+fn handle_frame(
+    kind: FrameKind,
+    payload: &[u8],
+    svc: &Arc<FheService>,
+    stream: &mut TcpStream,
+) -> Result<(), ServiceError> {
+    match kind {
+        FrameKind::Register => {
+            let msg = decode_register(payload).map_err(ServiceError::Wire)?;
+            svc.register(msg.tenant_id, msg.params, msg.key_seed)?;
+            send(stream, FrameKind::Ack, &[]).map_err(ServiceError::Io)
+        }
+        FrameKind::Eval => {
+            let req = decode_eval_request(payload).map_err(ServiceError::Wire)?;
+            let tenant = svc
+                .store
+                .get(req.tenant_id)
+                .ok_or(ServiceError::UnknownTenant(req.tenant_id))?;
+            let mut cts = Vec::with_capacity(req.cts.len());
+            for &(ct_kind, block) in &req.cts {
+                cts.push(
+                    decode_ciphertext(ct_kind, block, &tenant.ctx)
+                        .map_err(ServiceError::Wire)?,
+                );
+            }
+            let out = svc.eval_decoded(&tenant, req.op, req.step, cts)?;
+            send(stream, FrameKind::EvalOk, &encode_ciphertext(&out)).map_err(ServiceError::Io)
+        }
+        FrameKind::MetricsReq => {
+            let json = svc.metrics_json();
+            send(stream, FrameKind::MetricsOk, &encode_metrics(&json)).map_err(ServiceError::Io)
+        }
+        other => Err(ServiceError::Protocol(format!(
+            "frame kind {other:?} is not a request"
+        ))),
+    }
+}
+
+// Re-export for callers that match on response kinds.
+pub use wire::FrameKind as ResponseKind;

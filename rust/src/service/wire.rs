@@ -1,0 +1,940 @@
+//! Versioned, length-prefixed binary wire format for the serving layer:
+//! ciphertexts (full and seed-compressed), secret keys, parameter sets
+//! and the request/response protocol frames the TCP front-end speaks.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0 | 4 | magic `"FHW1"` (trailing byte = format version) |
+//! | 4 | 1 | frame kind ([`FrameKind`]) |
+//! | 5 | 1 | flags (reserved, must be 0) |
+//! | 6 | 4 | payload length `L` (u32) |
+//! | 10 | L | payload |
+//! | 10+L | 8 | FNV-1a 64 checksum of the payload |
+//!
+//! Decoding is **strict**: bad magic, unknown kind, nonzero flags, short
+//! buffers, checksum mismatches and trailing bytes are all hard errors
+//! ([`WireError`]), and every ciphertext residue is bounds-checked
+//! against its modulus — a corrupted frame can never become a
+//! half-valid polynomial.
+//!
+//! ## Seed-compressed fresh ciphertexts
+//!
+//! A fresh CKKS ciphertext is `(b, a)` where `a` is uniform. The
+//! [`FrameKind::CtSeeded`] encoding ships `b` plus the 8-byte PRNG seed
+//! that [`crate::ckks::keys::expand_a`] expands back into `a` — roughly
+//! halving fresh-ciphertext frames (evaluated ciphertexts lose the
+//! structure and go [`FrameKind::CtFull`]).
+
+use crate::ckks::cipher::Ciphertext;
+use crate::ckks::keys::{expand_a, SecretKey};
+use crate::ckks::CkksContext;
+use crate::math::poly::{Domain, RnsPoly};
+use crate::params::CkksParams;
+use std::sync::Arc;
+
+/// Frame magic; the trailing byte doubles as the format version.
+pub const WIRE_MAGIC: [u8; 4] = *b"FHW1";
+
+/// Refuse to allocate for payloads beyond this (garbage length fields).
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 28;
+
+/// Frame header bytes before the payload (magic + kind + flags + len).
+pub const FRAME_HEADER_LEN: usize = 10;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// A named parameter-set descriptor.
+    Params = 1,
+    /// Ciphertext, both polynomials inline.
+    CtFull = 2,
+    /// Fresh ciphertext, `c1` replaced by its PRNG seed.
+    CtSeeded = 3,
+    /// Ternary secret key coefficients.
+    SecretKey = 4,
+    /// Protocol: register a tenant (id, key seed, params).
+    Register = 16,
+    /// Protocol: evaluate one op on 1–2 ciphertexts.
+    Eval = 17,
+    /// Protocol: successful evaluation result (a `CtFull` payload).
+    EvalOk = 18,
+    /// Protocol: request the scheduler metrics snapshot.
+    MetricsReq = 19,
+    /// Protocol: metrics snapshot (JSON string payload).
+    MetricsOk = 20,
+    /// Protocol: error (code + message).
+    Error = 21,
+    /// Protocol: bare acknowledgement.
+    Ack = 22,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => FrameKind::Params,
+            2 => FrameKind::CtFull,
+            3 => FrameKind::CtSeeded,
+            4 => FrameKind::SecretKey,
+            16 => FrameKind::Register,
+            17 => FrameKind::Eval,
+            18 => FrameKind::EvalOk,
+            19 => FrameKind::MetricsReq,
+            20 => FrameKind::MetricsOk,
+            21 => FrameKind::Error,
+            22 => FrameKind::Ack,
+            _ => return None,
+        })
+    }
+}
+
+/// Strict-decode failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Buffer ended before `need` bytes were available.
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    UnknownKind(u8),
+    ChecksumMismatch { want: u64, got: u64 },
+    /// Bytes left over after a complete decode.
+    TrailingBytes(usize),
+    /// Declared payload length exceeds [`MAX_FRAME_PAYLOAD`].
+    Oversized(usize),
+    /// Structurally valid frame with semantically invalid content.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic {m:?}"),
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::ChecksumMismatch { want, got } => {
+                write!(f, "checksum mismatch: want {want:#018x}, got {got:#018x}")
+            }
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after frame"),
+            WireError::Oversized(n) => write!(f, "payload length {n} exceeds cap"),
+            WireError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn malformed<T>(msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError::Malformed(msg.into()))
+}
+
+/// FNV-1a 64-bit — the frame payload checksum.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ----------------------------------------------------------------------
+// primitive writer / reader
+// ----------------------------------------------------------------------
+
+/// Little-endian payload builder.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed (u16) UTF-8 string.
+    pub fn str_(&mut self, s: &str) {
+        assert!(s.len() <= u16::MAX as usize, "string too long for wire");
+        self.u16(s.len() as u16);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed (u32) nested block.
+    pub fn block(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Strict little-endian payload reader: every getter bounds-checks, and
+/// [`WireReader::finish`] rejects trailing bytes.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, WireError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str_(&mut self) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        match std::str::from_utf8(bytes) {
+            Ok(s) => Ok(s.to_string()),
+            Err(e) => malformed(format!("invalid UTF-8 string: {e}")),
+        }
+    }
+
+    pub fn block(&mut self) -> Result<&'a [u8], WireError> {
+        let len = self.u32()? as usize;
+        if len > MAX_FRAME_PAYLOAD {
+            return Err(WireError::Oversized(len));
+        }
+        self.take(len)
+    }
+
+    /// Assert the payload is fully consumed.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::TrailingBytes(self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------------
+// framing
+// ----------------------------------------------------------------------
+
+/// Wrap a payload in a checksummed frame.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "payload exceeds cap");
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len() + 8);
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.push(kind as u8);
+    out.push(0); // flags
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out
+}
+
+/// Validate the fixed 10-byte header shared by the buffer and stream
+/// decoders: magic, kind, flags, length cap. Returns (kind, payload len).
+fn validate_header(header: &[u8]) -> Result<(FrameKind, usize), WireError> {
+    debug_assert_eq!(header.len(), FRAME_HEADER_LEN);
+    let magic: [u8; 4] = header[0..4].try_into().unwrap();
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let kind = FrameKind::from_u8(header[4]).ok_or(WireError::UnknownKind(header[4]))?;
+    if header[5] != 0 {
+        return malformed(format!("reserved flags byte is {}", header[5]));
+    }
+    let len = u32::from_le_bytes(header[6..10].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    Ok((kind, len))
+}
+
+fn verify_checksum(payload: &[u8], want: u64) -> Result<(), WireError> {
+    let got = fnv1a64(payload);
+    if want != got {
+        return Err(WireError::ChecksumMismatch { want, got });
+    }
+    Ok(())
+}
+
+/// Strictly decode a complete frame from `buf` (no trailing bytes).
+pub fn decode_frame(buf: &[u8]) -> Result<(FrameKind, &[u8]), WireError> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return Err(WireError::Truncated {
+            need: FRAME_HEADER_LEN,
+            have: buf.len(),
+        });
+    }
+    let (kind, len) = validate_header(&buf[..FRAME_HEADER_LEN])?;
+    let total = FRAME_HEADER_LEN + len + 8;
+    if buf.len() < total {
+        return Err(WireError::Truncated {
+            need: total,
+            have: buf.len(),
+        });
+    }
+    if buf.len() > total {
+        return Err(WireError::TrailingBytes(buf.len() - total));
+    }
+    let payload = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len];
+    let want = u64::from_le_bytes(buf[total - 8..total].try_into().unwrap());
+    verify_checksum(payload, want)?;
+    Ok((kind, payload))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame_to<W: std::io::Write>(
+    w: &mut W,
+    kind: FrameKind,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    w.write_all(&encode_frame(kind, payload))?;
+    w.flush()
+}
+
+/// Read one frame from a stream. `Ok(None)` means the peer closed the
+/// connection cleanly *between* frames; mid-frame EOF is an error.
+pub fn read_frame_from<R: std::io::Read>(
+    r: &mut R,
+) -> Result<Option<(FrameKind, Vec<u8>)>, super::ServiceError> {
+    use super::ServiceError;
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    // First byte separately: EOF here is a clean close.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ServiceError::Io(e)),
+        }
+    }
+    header[0] = first[0];
+    r.read_exact(&mut header[1..]).map_err(ServiceError::Io)?;
+    let (kind, len) = validate_header(&header).map_err(ServiceError::Wire)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(ServiceError::Io)?;
+    let mut check = [0u8; 8];
+    r.read_exact(&mut check).map_err(ServiceError::Io)?;
+    verify_checksum(&payload, u64::from_le_bytes(check)).map_err(ServiceError::Wire)?;
+    Ok(Some((kind, payload)))
+}
+
+// ----------------------------------------------------------------------
+// ciphertexts
+// ----------------------------------------------------------------------
+
+/// A ciphertext ready for the wire: full, or seed-compressed fresh.
+#[derive(Debug, Clone)]
+pub enum WireCiphertext {
+    Full(Ciphertext),
+    Seeded { ct: Ciphertext, a_seed: u64 },
+}
+
+impl WireCiphertext {
+    pub fn ct(&self) -> &Ciphertext {
+        match self {
+            WireCiphertext::Full(ct) => ct,
+            WireCiphertext::Seeded { ct, .. } => ct,
+        }
+    }
+
+    pub fn kind(&self) -> FrameKind {
+        match self {
+            WireCiphertext::Full(_) => FrameKind::CtFull,
+            WireCiphertext::Seeded { .. } => FrameKind::CtSeeded,
+        }
+    }
+
+    /// Encode the payload (frame separately via [`encode_frame`]).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            WireCiphertext::Full(ct) => encode_ciphertext(ct),
+            WireCiphertext::Seeded { ct, a_seed } => encode_ciphertext_seeded(ct, *a_seed),
+        }
+    }
+}
+
+fn write_poly_rows(w: &mut WireWriter, p: &RnsPoly) {
+    for row in &p.data {
+        for &v in row {
+            w.u64(v);
+        }
+    }
+}
+
+fn ct_header(w: &mut WireWriter, ct: &Ciphertext) {
+    let basis = &ct.c0.basis;
+    w.u8(basis.n.trailing_zeros() as u8); // log_n
+    w.u8(match ct.c0.domain {
+        Domain::Ntt => 1,
+        Domain::Coeff => 0,
+    });
+    w.u16(ct.level as u16);
+    w.f64(ct.scale);
+    for j in 0..ct.level {
+        w.u64(basis.q(j));
+    }
+}
+
+/// Payload for [`FrameKind::CtFull`].
+pub fn encode_ciphertext(ct: &Ciphertext) -> Vec<u8> {
+    let n = ct.c0.n();
+    let mut w = WireWriter::with_capacity(16 + ct.level * 8 + 2 * ct.level * n * 8);
+    ct_header(&mut w, ct);
+    write_poly_rows(&mut w, &ct.c0);
+    write_poly_rows(&mut w, &ct.c1);
+    w.into_bytes()
+}
+
+/// Payload for [`FrameKind::CtSeeded`]: `c0` plus the 8-byte `a` seed.
+pub fn encode_ciphertext_seeded(ct: &Ciphertext, a_seed: u64) -> Vec<u8> {
+    let n = ct.c0.n();
+    let mut w = WireWriter::with_capacity(24 + ct.level * 8 + ct.level * n * 8);
+    ct_header(&mut w, ct);
+    write_poly_rows(&mut w, &ct.c0);
+    w.u64(a_seed);
+    w.into_bytes()
+}
+
+fn read_poly_rows(
+    r: &mut WireReader,
+    ctx: &Arc<CkksContext>,
+    limbs: usize,
+) -> Result<RnsPoly, WireError> {
+    let n = ctx.n();
+    let mut p = RnsPoly::zero(ctx.basis.clone(), limbs, Domain::Ntt);
+    for j in 0..limbs {
+        let q = ctx.basis.q(j);
+        let raw = r.take(n * 8)?;
+        for (c, chunk) in raw.chunks_exact(8).enumerate() {
+            let v = u64::from_le_bytes(chunk.try_into().unwrap());
+            if v >= q {
+                return malformed(format!("residue {v} >= modulus {q} (limb {j}, coeff {c})"));
+            }
+            p.data[j][c] = v;
+        }
+    }
+    Ok(p)
+}
+
+fn read_ct_header(
+    r: &mut WireReader,
+    ctx: &Arc<CkksContext>,
+) -> Result<(usize, f64), WireError> {
+    let log_n = r.u8()? as usize;
+    if log_n != ctx.params.log_n {
+        return malformed(format!(
+            "log_n mismatch: frame {log_n}, context {}",
+            ctx.params.log_n
+        ));
+    }
+    let domain = r.u8()?;
+    if domain != 1 {
+        return malformed(format!("unsupported domain tag {domain} (expect NTT=1)"));
+    }
+    let limbs = r.u16()? as usize;
+    if limbs == 0 || limbs > ctx.l() {
+        return malformed(format!("limb count {limbs} outside 1..={}", ctx.l()));
+    }
+    let scale = r.f64()?;
+    if !scale.is_finite() || scale <= 0.0 {
+        return malformed(format!("invalid scale {scale}"));
+    }
+    for j in 0..limbs {
+        let q = r.u64()?;
+        if q != ctx.basis.q(j) {
+            return malformed(format!(
+                "modulus mismatch at limb {j}: frame {q}, basis {}",
+                ctx.basis.q(j)
+            ));
+        }
+    }
+    Ok((limbs, scale))
+}
+
+/// Strictly decode a [`FrameKind::CtFull`] or [`FrameKind::CtSeeded`]
+/// payload against a tenant's context (seeded frames re-expand `a`).
+pub fn decode_ciphertext(
+    kind: FrameKind,
+    payload: &[u8],
+    ctx: &Arc<CkksContext>,
+) -> Result<Ciphertext, WireError> {
+    let mut r = WireReader::new(payload);
+    let (limbs, scale) = read_ct_header(&mut r, ctx)?;
+    let c0 = read_poly_rows(&mut r, ctx, limbs)?;
+    let c1 = match kind {
+        FrameKind::CtFull => read_poly_rows(&mut r, ctx, limbs)?,
+        FrameKind::CtSeeded => {
+            let seed = r.u64()?;
+            expand_a(ctx, limbs, seed)
+        }
+        other => return malformed(format!("frame kind {other:?} is not a ciphertext")),
+    };
+    r.finish()?;
+    Ok(Ciphertext {
+        c0,
+        c1,
+        level: limbs,
+        scale,
+    })
+}
+
+// ----------------------------------------------------------------------
+// secret keys
+// ----------------------------------------------------------------------
+
+/// Payload for [`FrameKind::SecretKey`]: `log_n` + ternary coefficients.
+pub fn encode_secret_key(sk: &SecretKey) -> Vec<u8> {
+    let n = sk.coeffs.len();
+    let mut w = WireWriter::with_capacity(2 + n);
+    w.u8(n.trailing_zeros() as u8);
+    for &c in &sk.coeffs {
+        w.u8(c as i8 as u8);
+    }
+    w.into_bytes()
+}
+
+/// Strictly decode a secret key against a context (rebuilds the derived
+/// NTT-domain `s` / `s²` material — see [`SecretKey::from_coeffs`]).
+pub fn decode_secret_key(
+    payload: &[u8],
+    ctx: &Arc<CkksContext>,
+) -> Result<SecretKey, WireError> {
+    let mut r = WireReader::new(payload);
+    let log_n = r.u8()? as usize;
+    if log_n != ctx.params.log_n {
+        return malformed(format!(
+            "log_n mismatch: frame {log_n}, context {}",
+            ctx.params.log_n
+        ));
+    }
+    let n = ctx.n();
+    let raw = r.take(n)?;
+    r.finish()?;
+    let mut coeffs = Vec::with_capacity(n);
+    for (i, &b) in raw.iter().enumerate() {
+        let v = b as i8 as i64;
+        if !(-1..=1).contains(&v) {
+            return malformed(format!("secret coefficient {v} at {i} is not ternary"));
+        }
+        coeffs.push(v);
+    }
+    Ok(SecretKey::from_coeffs(ctx, coeffs))
+}
+
+// ----------------------------------------------------------------------
+// parameter sets
+// ----------------------------------------------------------------------
+
+/// Payload for [`FrameKind::Params`]: preset name + every field, so the
+/// decoder can rebuild the preset *and* cross-check nothing drifted.
+pub fn encode_params(p: &CkksParams) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.str_(p.name);
+    w.u8(p.log_n as u8);
+    w.u16(p.l_levels as u16);
+    w.u16(p.k_special as u16);
+    w.u16(p.dnum as u16);
+    w.u32(p.log_scale);
+    w.u32(p.q0_bits);
+    w.u32(p.q_bits);
+    w.u32(p.p_bits);
+    w.u8(p.montgomery_friendly as u8);
+    w.u64(p.secret_hamming.map(|h| h as u64).unwrap_or(u64::MAX));
+    w.into_bytes()
+}
+
+/// Strictly decode a parameter set: the named preset must exist and every
+/// encoded field must match it exactly.
+pub fn decode_params(payload: &[u8]) -> Result<CkksParams, WireError> {
+    let mut r = WireReader::new(payload);
+    let name = r.str_()?;
+    let log_n = r.u8()? as usize;
+    let l_levels = r.u16()? as usize;
+    let k_special = r.u16()? as usize;
+    let dnum = r.u16()? as usize;
+    let log_scale = r.u32()?;
+    let q0_bits = r.u32()?;
+    let q_bits = r.u32()?;
+    let p_bits = r.u32()?;
+    let montgomery = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => return malformed(format!("montgomery flag {other} not 0/1")),
+    };
+    let hamming = match r.u64()? {
+        u64::MAX => None,
+        h => Some(h as usize),
+    };
+    r.finish()?;
+    let preset = if name == "paper-lola" {
+        // The only level-parameterized preset: bound it so a forged frame
+        // can't request an absurd limb count (the drift check below would
+        // otherwise compare the wire against a preset built FROM the wire).
+        if !(1..=8).contains(&l_levels) {
+            return malformed(format!("paper-lola level count {l_levels} outside 1..=8"));
+        }
+        CkksParams::paper_lola(l_levels)
+    } else {
+        match CkksParams::by_name(&name) {
+            Some(p) => p,
+            None => return malformed(format!("unknown parameter preset '{name}'")),
+        }
+    };
+    let same = preset.log_n == log_n
+        && preset.l_levels == l_levels
+        && preset.k_special == k_special
+        && preset.dnum == dnum
+        && preset.log_scale == log_scale
+        && preset.q0_bits == q0_bits
+        && preset.q_bits == q_bits
+        && preset.p_bits == p_bits
+        && preset.montgomery_friendly == montgomery
+        && preset.secret_hamming == hamming;
+    if !same {
+        return malformed(format!("params drift from preset '{name}'"));
+    }
+    Ok(preset)
+}
+
+// ----------------------------------------------------------------------
+// protocol messages
+// ----------------------------------------------------------------------
+
+/// Homomorphic op selector on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireOp {
+    Add = 0,
+    Sub = 1,
+    Mul = 2,
+    Rotate = 3,
+}
+
+impl WireOp {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => WireOp::Add,
+            1 => WireOp::Sub,
+            2 => WireOp::Mul,
+            3 => WireOp::Rotate,
+            _ => return None,
+        })
+    }
+
+    /// Ciphertext operand count.
+    pub fn arity(&self) -> usize {
+        match self {
+            WireOp::Add | WireOp::Sub | WireOp::Mul => 2,
+            WireOp::Rotate => 1,
+        }
+    }
+}
+
+/// Decoded [`FrameKind::Register`] payload.
+#[derive(Debug, Clone)]
+pub struct RegisterMsg {
+    pub tenant_id: u64,
+    pub key_seed: u64,
+    pub params: CkksParams,
+}
+
+pub fn encode_register(tenant_id: u64, key_seed: u64, params: &CkksParams) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u64(tenant_id);
+    w.u64(key_seed);
+    w.block(&encode_params(params));
+    w.into_bytes()
+}
+
+pub fn decode_register(payload: &[u8]) -> Result<RegisterMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let tenant_id = r.u64()?;
+    let key_seed = r.u64()?;
+    let params = decode_params(r.block()?)?;
+    r.finish()?;
+    Ok(RegisterMsg {
+        tenant_id,
+        key_seed,
+        params,
+    })
+}
+
+/// Decoded [`FrameKind::Eval`] payload header: the ciphertext blocks stay
+/// raw until the tenant (hence context) is known.
+#[derive(Debug)]
+pub struct EvalRequest<'a> {
+    pub tenant_id: u64,
+    pub op: WireOp,
+    pub step: i64,
+    /// Raw ciphertext blocks: (encoding kind, payload).
+    pub cts: Vec<(FrameKind, &'a [u8])>,
+}
+
+pub fn encode_eval_request(
+    tenant_id: u64,
+    op: WireOp,
+    step: i64,
+    cts: &[&WireCiphertext],
+) -> Vec<u8> {
+    assert_eq!(cts.len(), op.arity(), "operand count != op arity");
+    let mut w = WireWriter::new();
+    w.u64(tenant_id);
+    w.u8(op as u8);
+    w.i64(step);
+    w.u8(cts.len() as u8);
+    for ct in cts {
+        w.u8(ct.kind() as u8);
+        w.block(&ct.encode());
+    }
+    w.into_bytes()
+}
+
+pub fn decode_eval_request(payload: &[u8]) -> Result<EvalRequest<'_>, WireError> {
+    let mut r = WireReader::new(payload);
+    let tenant_id = r.u64()?;
+    let op_raw = r.u8()?;
+    let op = match WireOp::from_u8(op_raw) {
+        Some(op) => op,
+        None => return malformed(format!("unknown op code {op_raw}")),
+    };
+    let step = r.i64()?;
+    let count = r.u8()? as usize;
+    if count != op.arity() {
+        return malformed(format!(
+            "op {op:?} expects {} ciphertexts, frame has {count}",
+            op.arity()
+        ));
+    }
+    let mut cts = Vec::with_capacity(count);
+    for _ in 0..count {
+        let kind_raw = r.u8()?;
+        let kind = match FrameKind::from_u8(kind_raw) {
+            Some(FrameKind::CtFull) => FrameKind::CtFull,
+            Some(FrameKind::CtSeeded) => FrameKind::CtSeeded,
+            _ => return malformed(format!("operand kind {kind_raw} is not a ciphertext")),
+        };
+        cts.push((kind, r.block()?));
+    }
+    r.finish()?;
+    Ok(EvalRequest {
+        tenant_id,
+        op,
+        step,
+        cts,
+    })
+}
+
+/// [`FrameKind::Error`] payload: numeric code + structured detail (e.g.
+/// the offending tenant id for `UNKNOWN_TENANT` — clients must never
+/// have to parse the human-readable message) + message.
+pub fn encode_error(code: u16, detail: u64, msg: &str) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u16(code);
+    w.u64(detail);
+    w.str_(msg);
+    w.into_bytes()
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<(u16, u64, String), WireError> {
+    let mut r = WireReader::new(payload);
+    let code = r.u16()?;
+    let detail = r.u64()?;
+    let msg = r.str_()?;
+    r.finish()?;
+    Ok((code, detail, msg))
+}
+
+/// [`FrameKind::MetricsOk`] payload: a JSON string.
+pub fn encode_metrics(json: &str) -> Vec<u8> {
+    json.as_bytes().to_vec()
+}
+
+pub fn decode_metrics(payload: &[u8]) -> Result<String, WireError> {
+    match std::str::from_utf8(payload) {
+        Ok(s) => Ok(s.to_string()),
+        Err(e) => malformed(format!("metrics payload not UTF-8: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::SplitMix64;
+
+    #[test]
+    fn frame_roundtrip_and_checksum() {
+        let payload = b"hello fhemem serving layer";
+        let frame = encode_frame(FrameKind::Ack, payload);
+        let (kind, back) = decode_frame(&frame).unwrap();
+        assert_eq!(kind, FrameKind::Ack);
+        assert_eq!(back, payload);
+
+        // Flip one payload bit: checksum must catch it.
+        let mut bad = frame.clone();
+        bad[FRAME_HEADER_LEN + 3] ^= 0x40;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(WireError::ChecksumMismatch { .. })
+        ));
+
+        // Truncations at every prefix length fail without panicking.
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut={cut}");
+        }
+
+        // Trailing bytes are rejected.
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(matches!(
+            decode_frame(&long),
+            Err(WireError::TrailingBytes(1))
+        ));
+
+        // Bad magic / unknown kind / nonzero flags.
+        let mut magic = frame.clone();
+        magic[0] = b'X';
+        assert!(matches!(decode_frame(&magic), Err(WireError::BadMagic(_))));
+        let mut kindb = frame.clone();
+        kindb[4] = 99;
+        assert!(matches!(
+            decode_frame(&kindb),
+            Err(WireError::UnknownKind(99))
+        ));
+        let mut flags = frame;
+        flags[5] = 7;
+        assert!(matches!(decode_frame(&flags), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Reference values pin the checksum across refactors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn reader_is_strict() {
+        let mut w = WireWriter::new();
+        w.u8(7);
+        w.u32(42);
+        w.str_("hi");
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 42);
+        assert_eq!(r.str_().unwrap(), "hi");
+        r.finish().unwrap();
+        // Over-read errors instead of panicking.
+        let mut r2 = WireReader::new(&buf);
+        assert!(r2.take(buf.len() + 1).is_err());
+        // Unconsumed bytes are an error.
+        let r3 = WireReader::new(&buf);
+        assert!(matches!(r3.finish(), Err(WireError::TrailingBytes(_))));
+    }
+
+    #[test]
+    fn wire_op_arity_and_codes() {
+        for op in [WireOp::Add, WireOp::Sub, WireOp::Mul, WireOp::Rotate] {
+            assert_eq!(WireOp::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(WireOp::from_u8(9), None);
+        assert_eq!(WireOp::Mul.arity(), 2);
+        assert_eq!(WireOp::Rotate.arity(), 1);
+    }
+
+    #[test]
+    fn error_and_metrics_payloads_roundtrip() {
+        let (code, detail, msg) = decode_error(&encode_error(2, 99, "unknown tenant")).unwrap();
+        assert_eq!((code, detail, msg.as_str()), (2, 99, "unknown tenant"));
+        let json = "{\"batches\": 2}";
+        assert_eq!(decode_metrics(&encode_metrics(json)).unwrap(), json);
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        // Strict decode must fail cleanly on arbitrary bytes.
+        let mut rng = SplitMix64::new(99);
+        for len in [0usize, 1, 9, 10, 64, 257] {
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_frame(&buf);
+            let _ = decode_params(&buf);
+            let _ = decode_register(&buf);
+            let _ = decode_eval_request(&buf);
+            let _ = decode_error(&buf);
+        }
+    }
+}

@@ -76,6 +76,16 @@ impl Args {
         self.get_usize("threads", 0)
     }
 
+    /// `--port N`: TCP port for the serving front-end (u16-checked).
+    pub fn get_port(&self, name: &str, default: u16) -> u16 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a port (0-65535), got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
@@ -106,6 +116,14 @@ mod tests {
         assert_eq!(a.get_usize("n", 0), 4096);
         assert_eq!(a.get_usize("missing", 7), 7);
         assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn parses_port() {
+        let a = parse("serve --port 7171 --max-batch 8");
+        assert_eq!(a.get_port("port", 7070), 7171);
+        assert_eq!(a.get_port("missing-port", 7070), 7070);
+        assert_eq!(a.get_usize("max-batch", 1), 8);
     }
 
     #[test]

@@ -1,9 +1,17 @@
-//! Minimal JSON reader (offline substitute for `serde_json`).
+//! Minimal JSON reader **and writer** (offline substitute for
+//! `serde_json`).
 //!
-//! Parses exactly the subset the checked-in fixtures use — objects,
-//! arrays, strings, booleans, `null` and **unsigned 64-bit integers**
-//! (golden kernel vectors are residues < 2^62, so floats and negative
-//! numbers are rejected rather than silently rounded).
+//! Parses the subset the checked-in fixtures and service metrics use —
+//! objects, arrays, strings, booleans, `null`, **unsigned 64-bit
+//! integers** and (since the serving layer) floats. Integers without a
+//! fraction/exponent/sign stay exact as [`Json::Num`]; anything
+//! fractional, signed or exponent-bearing becomes [`Json::Float`], so
+//! golden kernel residues can never be silently rounded — `as_u64` on a
+//! float is an error, not a lossy cast.
+//!
+//! The writer ([`Json::write`] / [`Json::write_pretty`]) emits the same
+//! subset; it backs the scheduler's metrics snapshot and the hotpath
+//! bench's `--json` output (previously hand-rolled string pushes).
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -11,6 +19,7 @@ pub enum Json {
     Object(Vec<(String, Json)>),
     Array(Vec<Json>),
     Num(u64),
+    Float(f64),
     Str(String),
     Bool(bool),
     Null,
@@ -67,6 +76,127 @@ impl Json {
     pub fn as_u64_vec(&self) -> Result<Vec<u64>, String> {
         self.as_array()?.iter().map(|v| v.as_u64()).collect()
     }
+
+    /// Numeric value as f64 (accepts both integer and float nodes).
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(v) => Ok(*v as f64),
+            Json::Float(v) => Ok(*v),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // construction + writing
+    // ------------------------------------------------------------------
+
+    /// Object builder: `Json::obj([("k", Json::Num(1))])`.
+    pub fn obj<const N: usize>(fields: [(&str, Json); N]) -> Json {
+        Json::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize compactly (single line, no spaces beyond `": "`).
+    pub fn write(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, None, 0);
+        out
+    }
+
+    /// Serialize with 2-space indentation (the tracked-file format).
+    pub fn write_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, Some(2), 0);
+        let mut with_nl = out;
+        with_nl.push('\n');
+        with_nl
+    }
+
+    fn write_into(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let pad = |out: &mut String, d: usize| {
+            if let Some(w) = indent {
+                out.push('\n');
+                for _ in 0..w * d {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => out.push_str(&v.to_string()),
+            Json::Float(v) => {
+                // JSON has no NaN/Inf; map them to null rather than emit
+                // an unparseable token.
+                if v.is_finite() {
+                    let s = format!("{v}");
+                    out.push_str(&s);
+                    // `Display` prints integral floats without a dot;
+                    // keep the node a float on re-parse.
+                    if !(s.contains('.') || s.contains('e') || s.contains('E')) {
+                        out.push_str(".0");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_string(out, s),
+            Json::Array(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                        if indent.is_none() {
+                            out.push(' ');
+                        }
+                    }
+                    pad(out, depth + 1);
+                    v.write_into(out, indent, depth + 1);
+                }
+                pad(out, depth);
+                out.push(']');
+            }
+            Json::Object(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                        if indent.is_none() {
+                            out.push(' ');
+                        }
+                    }
+                    pad(out, depth + 1);
+                    write_string(out, k);
+                    out.push_str(": ");
+                    v.write_into(out, indent, depth + 1);
+                }
+                pad(out, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Write a JSON string literal with the escapes the reader understands.
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 fn skip_ws(b: &[u8], pos: &mut usize) {
@@ -100,6 +230,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         Some(&b't') => parse_lit(b, pos, "true", Json::Bool(true)),
         Some(&b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
         Some(&b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(&b'-') => parse_number(b, pos),
         Some(&c) if c.is_ascii_digit() => parse_number(b, pos),
         Some(&c) => Err(format!("unexpected byte {:?} at {}", c as char, *pos)),
     }
@@ -116,18 +247,43 @@ fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, Stri
 
 fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
     let start = *pos;
+    let negative = b.get(*pos) == Some(&b'-');
+    if negative {
+        *pos += 1;
+    }
     while *pos < b.len() && b[*pos].is_ascii_digit() {
         *pos += 1;
     }
-    if let Some(&c) = b.get(*pos) {
-        if matches!(c, b'.' | b'e' | b'E' | b'-' | b'+') {
-            return Err(format!("non-integer number at byte {start}"));
+    // Fraction / exponent mark the value as a float node; plain unsigned
+    // integers stay exact as `Num` (golden residues must never round).
+    let mut is_float = negative;
+    if b.get(*pos) == Some(&b'.') {
+        is_float = true;
+        *pos += 1;
+        while *pos < b.len() && b[*pos].is_ascii_digit() {
+            *pos += 1;
+        }
+    }
+    if matches!(b.get(*pos), Some(&b'e') | Some(&b'E')) {
+        is_float = true;
+        *pos += 1;
+        if matches!(b.get(*pos), Some(&b'+') | Some(&b'-')) {
+            *pos += 1;
+        }
+        while *pos < b.len() && b[*pos].is_ascii_digit() {
+            *pos += 1;
         }
     }
     let s = std::str::from_utf8(&b[start..*pos]).unwrap();
-    s.parse::<u64>()
-        .map(Json::Num)
-        .map_err(|e| format!("bad number '{s}': {e}"))
+    if is_float {
+        s.parse::<f64>()
+            .map(Json::Float)
+            .map_err(|e| format!("bad number '{s}': {e}"))
+    } else {
+        s.parse::<u64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number '{s}': {e}"))
+    }
 }
 
 fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
@@ -251,12 +407,63 @@ mod tests {
     }
 
     #[test]
-    fn rejects_floats_and_garbage() {
-        assert!(Json::parse("{\"x\": 1.5}").is_err());
-        assert!(Json::parse("{\"x\": -3}").is_err());
+    fn floats_parse_but_never_masquerade_as_integers() {
+        // Floats/negatives become Float nodes; `as_u64` on them errors,
+        // so golden residue vectors can still never silently round.
+        let v = Json::parse("{\"x\": 1.5, \"y\": -3, \"z\": 2e3}").unwrap();
+        assert_eq!(v.field("x").unwrap(), &Json::Float(1.5));
+        assert!(v.field("x").unwrap().as_u64().is_err());
+        assert_eq!(v.field("y").unwrap().as_f64().unwrap(), -3.0);
+        assert_eq!(v.field("z").unwrap().as_f64().unwrap(), 2000.0);
+        assert_eq!(Json::parse("7").unwrap(), Json::Num(7));
+    }
+
+    #[test]
+    fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1, 2,]").is_err());
         assert!(Json::parse("[1] extra").is_err());
+        assert!(Json::parse("-").is_err());
+        assert!(Json::parse("1.5.5").is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let doc = Json::obj([
+            ("bench", Json::Str("hotpath".into())),
+            ("ok", Json::Bool(true)),
+            ("count", Json::Num(42)),
+            ("speedup", Json::Float(2.125)),
+            ("whole", Json::Float(3.0)),
+            ("nan", Json::Float(f64::NAN)),
+            (
+                "rows",
+                Json::Array(vec![Json::Num(1), Json::Num(2), Json::Null]),
+            ),
+            ("empty", Json::Array(vec![])),
+        ]);
+        for text in [doc.write(), doc.write_pretty()] {
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.field("bench").unwrap().as_str().unwrap(), "hotpath");
+            assert_eq!(back.field("count").unwrap().as_u64().unwrap(), 42);
+            assert_eq!(back.field("speedup").unwrap().as_f64().unwrap(), 2.125);
+            // Integral floats keep their ".0" so they stay float nodes.
+            assert_eq!(back.field("whole").unwrap(), &Json::Float(3.0));
+            // Non-finite floats degrade to null, not invalid tokens.
+            assert_eq!(back.field("nan").unwrap(), &Json::Null);
+            assert_eq!(
+                back.field("rows").unwrap().as_array().unwrap().len(),
+                3
+            );
+            assert_eq!(back.field("empty").unwrap(), &Json::Array(vec![]));
+        }
+    }
+
+    #[test]
+    fn writer_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd".into());
+        let back = Json::parse(&v.write()).unwrap();
+        assert_eq!(back.as_str().unwrap(), "a\"b\\c\nd");
     }
 
     #[test]

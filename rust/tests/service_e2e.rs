@@ -1,0 +1,143 @@
+//! End-to-end serving test: wire-encoded ciphertexts from two tenants
+//! travel over TCP, get admitted and coalesced into ONE mixed batch on
+//! the bank pool, and decrypt bit-correct against the plain computation
+//! — with the scheduler reporting both wall-clock and simulated-FHEmem
+//! metrics for the batch.
+
+use fhemem::params::CkksParams;
+use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient, ServiceError};
+use fhemem::sim::ArchConfig;
+use fhemem::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spawn_service(cfg: SchedulerConfig) -> (Arc<FheService>, server::ServerHandle) {
+    let svc = FheService::new(ArchConfig::default(), cfg);
+    let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind loopback");
+    (svc, handle)
+}
+
+#[test]
+fn two_tenants_coalesce_into_one_batch_and_decrypt_correctly() {
+    // max_batch = 4 and a generous delay window: the batch fires the
+    // moment the 4th request lands, so all four ops — two tenants, mixed
+    // HMul/HRot — must share exactly one coordinator batch.
+    let (svc, handle) = spawn_service(SchedulerConfig {
+        max_batch: 4,
+        max_delay: Duration::from_secs(10),
+        max_queue: 16,
+    });
+    let addr = handle.addr;
+
+    let xs: Vec<f64>;
+    let ys: Vec<f64>;
+    {
+        let probe = ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 0xA11CE).unwrap();
+        let slots = probe.ctx.encoder.slots();
+        xs = (0..slots).map(|i| 0.1 * ((i % 7) as f64 - 3.0)).collect();
+        ys = (0..slots).map(|i| 0.05 * ((i % 5) as f64)).collect();
+    }
+
+    // Four concurrent connections: tenant 1 twice, tenant 2 twice (the
+    // registry treats identical re-registration as idempotent). Each
+    // issues one blocking op; only the full window releases them.
+    let results: Vec<(u64, bool, Vec<f64>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = [(1u64, 0xA11CEu64, true), (1, 0xA11CE, false),
+            (2, 0xB0B, true), (2, 0xB0B, false)]
+            .into_iter()
+            .map(|(tid, seed, is_mul)| {
+                let xs = &xs;
+                let ys = &ys;
+                s.spawn(move || {
+                    let mut client =
+                        ServiceClient::connect(addr, tid, CkksParams::func_tiny(), seed)
+                            .expect("connect+register");
+                    let cx = client.encrypt(xs, 3);
+                    let out = if is_mul {
+                        let cy = client.encrypt(ys, 3);
+                        client.mul(&cx, &cy).expect("remote hmul")
+                    } else {
+                        client.rotate(&cx, 2).expect("remote hrot")
+                    };
+                    (tid, is_mul, client.decrypt(&out))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Every result decrypts to the plain-data computation.
+    for (tid, is_mul, dec) in &results {
+        let slots = xs.len();
+        for i in 0..slots {
+            let want = if *is_mul {
+                xs[i] * ys[i]
+            } else {
+                xs[(i + 2) % slots]
+            };
+            assert!(
+                (dec[i] - want).abs() < 1e-2,
+                "tenant {tid} mul={is_mul} slot {i}: {} vs {want}",
+                dec[i]
+            );
+        }
+    }
+
+    // The scheduler saw one batch of four, and reported both clocks.
+    let mut client = ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 0xA11CE).unwrap();
+    let metrics = Json::parse(&client.metrics().unwrap()).expect("metrics JSON parses");
+    assert_eq!(metrics.field("batches").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(metrics.field("ops_executed").unwrap().as_u64().unwrap(), 4);
+    assert_eq!(metrics.field("largest_batch").unwrap().as_u64().unwrap(), 4);
+    assert!(metrics.field("wall_ns_total").unwrap().as_u64().unwrap() > 0);
+    assert!(metrics.field("sim_cycles_total").unwrap().as_u64().unwrap() > 0);
+    assert!(metrics.field("throughput_ops_per_s").unwrap().as_f64().unwrap() > 0.0);
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_tenant_and_key_conflicts_are_refused() {
+    let (svc, handle) = spawn_service(SchedulerConfig::default());
+    let addr = handle.addr;
+
+    let mut alice = ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 111).unwrap();
+    let ct = alice.encrypt(&vec![0.1; alice.ctx.encoder.slots()], 2);
+
+    // Evaluating as an unregistered tenant fails with UnknownTenant.
+    alice.tenant_id = 99;
+    let err = alice.rotate(&ct, 1).unwrap_err();
+    assert!(matches!(err, ServiceError::UnknownTenant(99)), "{err}");
+    alice.tenant_id = 1;
+
+    // Re-registering tenant 1 with different key material is refused.
+    let err = match ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 222) {
+        Ok(_) => panic!("conflicting key material must be refused"),
+        Err(e) => e,
+    };
+    assert!(matches!(err, ServiceError::Rejected(_)), "{err}");
+
+    // The original identity still works end to end.
+    let out = alice.rotate(&ct, 1).expect("original tenant still serves");
+    assert_eq!(out.level, 2);
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn zero_capacity_queue_backpressures_over_tcp() {
+    let (svc, handle) = spawn_service(SchedulerConfig {
+        max_batch: 4,
+        max_delay: Duration::from_millis(1),
+        max_queue: 0,
+    });
+    let mut client =
+        ServiceClient::connect(handle.addr, 5, CkksParams::func_tiny(), 55).unwrap();
+    let ct = client.encrypt(&vec![0.2; client.ctx.encoder.slots()], 2);
+    let err = client.rotate(&ct, 1).unwrap_err();
+    assert!(matches!(err, ServiceError::Backpressure), "{err}");
+    handle.stop();
+    svc.shutdown();
+}

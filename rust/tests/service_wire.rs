@@ -1,0 +1,195 @@
+//! Wire-format conformance: round-trip bit-exactness for ciphertexts,
+//! keys and params across every `params.rs` prime set, plus strict
+//! rejection of truncated/corrupted frames.
+
+use fhemem::ckks::cipher::Ciphertext;
+use fhemem::ckks::keys::SecretKey;
+use fhemem::ckks::CkksContext;
+use fhemem::math::poly::{Domain, RnsPoly};
+use fhemem::math::prng::Sampler;
+use fhemem::params::CkksParams;
+use fhemem::service::wire::{
+    decode_ciphertext, decode_frame, decode_params, decode_secret_key, encode_ciphertext,
+    encode_ciphertext_seeded, encode_frame, encode_params, encode_secret_key, FrameKind,
+    WireError,
+};
+use fhemem::util::check::SplitMix64;
+use std::sync::Arc;
+
+/// Every parameter family in params.rs (paper sets included — their
+/// prime chains are exactly what the wire format must carry).
+fn all_param_sets() -> Vec<CkksParams> {
+    vec![
+        CkksParams::func_tiny(),
+        CkksParams::func_default(),
+        CkksParams::func_boot(),
+        CkksParams::artifact(),
+        CkksParams::paper_lola(4),
+        CkksParams::paper_deep(),
+    ]
+}
+
+/// A ciphertext with uniform random residues (no encryption — this is a
+/// serialization test, and it must also cover the paper-scale sets where
+/// key generation would dominate the suite's runtime).
+fn random_ct(ctx: &Arc<CkksContext>, limbs: usize, seed: u64) -> Ciphertext {
+    let mut rng = SplitMix64::new(seed);
+    let mut poly = |limbs: usize| {
+        let mut p = RnsPoly::zero(ctx.basis.clone(), limbs, Domain::Ntt);
+        for j in 0..limbs {
+            let q = ctx.basis.q(j);
+            for c in p.data[j].iter_mut() {
+                *c = rng.below(q);
+            }
+        }
+        p
+    };
+    Ciphertext {
+        c0: poly(limbs),
+        c1: poly(limbs),
+        level: limbs,
+        scale: (ctx.params.log_scale as f64).exp2(),
+    }
+}
+
+#[test]
+fn ciphertext_roundtrip_across_all_prime_sets() {
+    for params in all_param_sets() {
+        let name = params.name;
+        let ctx = CkksContext::new(params);
+        for limbs in [1usize, ctx.l()] {
+            let ct = random_ct(&ctx, limbs, 42 + limbs as u64);
+            let frame = encode_frame(FrameKind::CtFull, &encode_ciphertext(&ct));
+            let (kind, payload) = decode_frame(&frame).unwrap();
+            assert_eq!(kind, FrameKind::CtFull);
+            let back = decode_ciphertext(kind, payload, &ctx)
+                .unwrap_or_else(|e| panic!("{name} limbs={limbs}: {e}"));
+            assert_eq!(back.c0.data, ct.c0.data, "{name} c0");
+            assert_eq!(back.c1.data, ct.c1.data, "{name} c1");
+            assert_eq!(back.level, ct.level);
+            assert_eq!(back.scale, ct.scale);
+            assert_eq!(back.c0.domain, Domain::Ntt);
+        }
+    }
+}
+
+#[test]
+fn secret_key_roundtrip_across_all_prime_sets() {
+    for params in all_param_sets() {
+        let name = params.name;
+        let ctx = CkksContext::new(params);
+        let mut sampler = Sampler::new(7);
+        let sk = SecretKey::generate(&ctx, &mut sampler);
+        let frame = encode_frame(FrameKind::SecretKey, &encode_secret_key(&sk));
+        let (kind, payload) = decode_frame(&frame).unwrap();
+        assert_eq!(kind, FrameKind::SecretKey);
+        let back = decode_secret_key(payload, &ctx).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(back.coeffs, sk.coeffs, "{name} coeffs");
+        // Derived NTT-domain material rebuilds bit-identically.
+        assert_eq!(back.s_full.data, sk.s_full.data, "{name} s_full");
+        assert_eq!(back.s2_full.data, sk.s2_full.data, "{name} s2_full");
+    }
+}
+
+#[test]
+fn params_roundtrip_all_presets() {
+    for params in all_param_sets() {
+        let payload = encode_params(&params);
+        let back = decode_params(&payload).unwrap_or_else(|e| panic!("{}: {e}", params.name));
+        assert_eq!(back.name, params.name);
+        assert_eq!(back.log_n, params.log_n);
+        assert_eq!(back.l_levels, params.l_levels);
+        assert_eq!(back.k_special, params.k_special);
+        assert_eq!(back.dnum, params.dnum);
+        assert_eq!(back.secret_hamming, params.secret_hamming);
+    }
+    // Drifted fields are rejected, not silently reinterpreted.
+    let mut payload = encode_params(&CkksParams::func_tiny());
+    let n = payload.len();
+    payload[n - 9] ^= 1; // montgomery flag / hamming boundary byte
+    assert!(decode_params(&payload).is_err());
+}
+
+#[test]
+fn seeded_ciphertext_halves_fresh_frames_and_expands_bit_exactly() {
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(fhemem::ckks::KeyChain::new(ctx.clone(), 99));
+    let eval = fhemem::ckks::Evaluator::new(ctx.clone(), chain, 55);
+    let slots = ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 17) as f64).collect();
+    let (ct, a_seed) = eval.encrypt_real_seeded(&z, 3);
+
+    let full = encode_ciphertext(&ct);
+    let seeded = encode_ciphertext_seeded(&ct, a_seed);
+    // c1 (limbs × N × 8 bytes) collapses to an 8-byte seed.
+    assert!(
+        (seeded.len() as f64) < 0.6 * full.len() as f64,
+        "seeded {} vs full {}",
+        seeded.len(),
+        full.len()
+    );
+
+    let back = decode_ciphertext(FrameKind::CtSeeded, &seeded, &ctx).unwrap();
+    assert_eq!(back.c0.data, ct.c0.data);
+    assert_eq!(back.c1.data, ct.c1.data, "expanded `a` must be bit-exact");
+    // And it still decrypts to the plaintext.
+    let dec = eval.decrypt_real(&back);
+    for i in 0..slots {
+        assert!((dec[i] - z[i]).abs() < 1e-3, "slot {i}");
+    }
+}
+
+#[test]
+fn corrupted_and_truncated_ciphertext_frames_are_rejected() {
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let ct = random_ct(&ctx, 2, 5);
+    let payload = encode_ciphertext(&ct);
+    let frame = encode_frame(FrameKind::CtFull, &payload);
+
+    // Truncation anywhere in the frame fails cleanly.
+    for cut in [0usize, 5, 9, 10, frame.len() / 2, frame.len() - 1] {
+        assert!(decode_frame(&frame[..cut]).is_err(), "cut={cut}");
+    }
+
+    // Any payload bit-flip trips the checksum before content decoding.
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..16 {
+        let mut bad = frame.clone();
+        let idx = 10 + rng.below((frame.len() - 18) as u64) as usize;
+        bad[idx] ^= 1 << rng.below(8);
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(WireError::ChecksumMismatch { .. })
+        ));
+    }
+
+    // A structurally valid frame whose residue exceeds its modulus is
+    // rejected by the strict decoder (rebuild checksum to get past it).
+    let mut evil = payload.clone();
+    let hdr = 1 + 1 + 2 + 8 + 2 * 8; // log_n, domain, limbs, scale, moduli
+    evil[hdr..hdr + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    let evil_frame = encode_frame(FrameKind::CtFull, &evil);
+    let (kind, p) = decode_frame(&evil_frame).unwrap();
+    assert!(matches!(
+        decode_ciphertext(kind, p, &ctx),
+        Err(WireError::Malformed(_))
+    ));
+
+    // Wrong context (different log_n) is a mismatch, not a panic.
+    let other = CkksContext::new(CkksParams::artifact());
+    assert!(matches!(
+        decode_ciphertext(FrameKind::CtFull, &payload, &other),
+        Err(WireError::Malformed(_))
+    ));
+
+    // Truncated payload inside a valid frame (drop c1's last row).
+    let short = &payload[..payload.len() - 8];
+    assert!(decode_ciphertext(FrameKind::CtFull, short, &ctx).is_err());
+    // Trailing garbage after a complete ciphertext.
+    let mut long = payload.clone();
+    long.extend_from_slice(&[0u8; 4]);
+    assert!(matches!(
+        decode_ciphertext(FrameKind::CtFull, &long, &ctx),
+        Err(WireError::TrailingBytes(4))
+    ));
+}
