@@ -37,6 +37,7 @@ fn main() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(50),
                     max_queue: 64,
+                    max_tenant_inflight: 0,
                 },
             );
             let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind ephemeral port");

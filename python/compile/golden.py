@@ -41,7 +41,55 @@ NTT_CASES = [
     ("paper_60bit", 60, 8),
 ]
 
+# Large-N cases for the four-step NTT (paper-scale transforms). Full
+# vectors at 2^15/2^16 would add ~20 MB of JSON, so these cases pin the
+# transforms by FNV-1a-64 checksum over the little-endian u64 stream,
+# plus a handful of spot samples for debuggability. Inputs are derived
+# from a SplitMix64 stream (the exact algorithm of
+# rust/src/util/check.rs::SplitMix64, mirrored in `_SplitMix64` below),
+# so both sides regenerate identical vectors from the recorded seed.
+NTT_LARGE_CASES = [
+    ("fourstep_50bit_n32768", 50, 15),
+    ("fourstep_60bit_n65536", 60, 16),
+]
+
+LARGE_SPOT_SAMPLES = 8
+
 MULMOD_N = 64
+
+_MASK64 = (1 << 64) - 1
+
+
+class _SplitMix64:
+    """Bit-exact mirror of rust `util::check::SplitMix64`."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+        return z ^ (z >> 31)
+
+    def below(self, bound: int) -> int:
+        zone = _MASK64 - (_MASK64 % bound)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % bound
+
+
+def fnv1a64_words(words) -> int:
+    """FNV-1a 64 over the little-endian byte stream of u64 words — the
+    same function as rust `service::wire::fnv1a64`."""
+    h = 0xCBF29CE484222325
+    for w in words:
+        for b in int(w).to_bytes(8, "little"):
+            h ^= b
+            h = (h * 0x100000001B3) & _MASK64
+    return h
 
 
 def fixture_path() -> Path:
@@ -81,6 +129,55 @@ def _ntt_case(tag: str, bits: int, logn: int) -> dict:
     }
 
 
+def _ntt_large_case(tag: str, bits: int, logn: int) -> dict:
+    n = 1 << logn
+    q = params.ntt_primes(bits, n, 1)[0]
+    psi_rev, psi_inv_rev, n_inv = params.ntt_tables(q, n)
+    seed = 0xF0E1_D2C3 ^ (bits * 1_000 + logn)
+    rng = _SplitMix64(seed)
+    x = [rng.below(q) for _ in range(n)]
+    y_bitrev = [rng.below(q) for _ in range(n)]
+
+    fwd = [
+        int(v)
+        for v in np.asarray(
+            ref.ntt_ref(
+                np.array([x], dtype=np.uint64),
+                np.array([psi_rev], dtype=np.uint64),
+                np.array([q], dtype=np.uint64),
+            )
+        )[0]
+    ]
+    inv = [
+        int(v)
+        for v in np.asarray(
+            ref.intt_ref(
+                np.array([y_bitrev], dtype=np.uint64),
+                np.array([psi_inv_rev], dtype=np.uint64),
+                np.array([n_inv], dtype=np.uint64),
+                np.array([q], dtype=np.uint64),
+            )
+        )[0]
+    ]
+
+    stride = n // LARGE_SPOT_SAMPLES
+    spots = [i * stride + i for i in range(LARGE_SPOT_SAMPLES)]
+    return {
+        "tag": tag,
+        "q": q,
+        "n": n,
+        "seed": seed,
+        "n_inv": n_inv,
+        "psi_rev_fnv": fnv1a64_words(psi_rev),
+        "psi_inv_rev_fnv": fnv1a64_words(psi_inv_rev),
+        "forward_fnv": fnv1a64_words(fwd),
+        "inverse_fnv": fnv1a64_words(inv),
+        "spot_indices": spots,
+        "forward_spots": [fwd[i] for i in spots],
+        "inverse_spots": [inv[i] for i in spots],
+    }
+
+
 def _mulmod_cases() -> list:
     """Pointwise mulmod over the artifact chain (moduli < 2^31, so the
     jnp uint64 product in modmul_ref is exact)."""
@@ -111,6 +208,7 @@ def generate() -> dict:
         "version": 1,
         "generator": "python/compile/golden.py (regenerate: cd python && python -m compile.golden)",
         "ntt": [_ntt_case(*case) for case in NTT_CASES],
+        "ntt_large": [_ntt_large_case(*case) for case in NTT_LARGE_CASES],
         "mulmod": _mulmod_cases(),
     }
 

@@ -12,6 +12,7 @@
 //! ```
 
 use fhemem::ckks::{Ciphertext, CkksContext, Evaluator, KeyChain};
+use fhemem::mapping::LayoutPlan;
 use fhemem::math::ntt::{naive_forward, naive_inverse, NttContext};
 use fhemem::math::primes::ntt_primes;
 use fhemem::parallel::BankPool;
@@ -175,6 +176,105 @@ fn bench_ntt_engine_vs_naive(records: &mut Vec<Record>) -> f64 {
     speedup
 }
 
+/// Four-step (bank-tiled) vs radix-2 NTT at N = 2^15, single row — the
+/// paper-scale transform the ROADMAP's four-step item targeted. The
+/// returned speedup is CI-gated (> 1.0 required): the tiled schedule's
+/// one-pass-per-row cache behaviour must actually beat the radix-2
+/// kernel's log N full-array sweeps at this size.
+fn bench_fourstep_vs_radix2(records: &mut Vec<Record>) -> f64 {
+    let logn = 15usize;
+    let n = 1usize << logn;
+    let q = ntt_primes(50, n, 1)[0].q;
+    let ctx = NttContext::get(q, n);
+    let plan = LayoutPlan::get(n);
+    let mut rng = SplitMix64::new(11);
+    let data: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+
+    // Bit-identity first: the tiled four-step must reproduce radix-2.
+    let mut radix_out = data.clone();
+    ctx.forward(&mut radix_out);
+    let mut tiles: Vec<Vec<u64>> = data.chunks(plan.tile_elems).map(|c| c.to_vec()).collect();
+    ctx.forward_tiled(&mut tiles, &plan);
+    let glued: Vec<u64> = tiles.iter().flatten().copied().collect();
+    assert_eq!(glued, radix_out, "four-step diverged from radix-2");
+
+    let mut buf = data.clone();
+    let s_radix = bench_fn(&format!("ntt radix2 fwd+inv n=2^{logn}"), || {
+        ctx.forward(&mut buf);
+        ctx.inverse(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    let mut tiles: Vec<Vec<u64>> = data.chunks(plan.tile_elems).map(|c| c.to_vec()).collect();
+    let s_four = bench_fn(
+        &format!(
+            "ntt fourstep tiled fwd+inv n=2^{logn} (n1={} banks={})",
+            plan.n1, plan.banks
+        ),
+        || {
+            ctx.forward_tiled(&mut tiles, &plan);
+            ctx.inverse_tiled(&mut tiles, &plan);
+            std::hint::black_box(&tiles);
+        },
+    );
+    let speedup = if s_four.median_ns() > 0.0 {
+        s_radix.median_ns() / s_four.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> four-step NTT {speedup:.2}x vs radix-2 at N={n}");
+    records.push(Record {
+        name: format!("ntt fourstep-vs-radix2 n=2^{logn} (speedup field = vs radix-2)"),
+        threads: 1,
+        median_ns: s_four.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    speedup
+}
+
+/// Tiled vs flat HMul at logN=15 (func_wide): the whole multiplicative
+/// hot path — tensor, fused cross term, 3-digit key switch, rescale —
+/// on bank tiles (four-step NTTs throughout) against the flat radix-2
+/// evaluator. Operands are pre-tiled, mirroring the serving path that
+/// converts once at the batch edge. Recorded as
+/// `tiled_hmul_speedup_vs_flat_n32768` in the JSON artifact.
+fn bench_tiled_hmul_vs_flat(records: &mut Vec<Record>) -> f64 {
+    let ctx = CkksContext::new(CkksParams::func_wide());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 3));
+    let ev = Evaluator::new(ctx.clone(), chain, 4);
+    let slots = ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.001 * (i % 89) as f64).collect();
+    let a = ev.encrypt_real(&z, ctx.l());
+    let b = ev.encrypt_real(&z, ctx.l());
+    // Warm the key cache and cross-check bit-identity before timing.
+    let flat_out = ev.mul(&a, &b);
+    let (at, bt) = (a.to_tiled(), b.to_tiled());
+    let tiled_out = ev.mul_tiled(&at, &bt);
+    assert_eq!(
+        tiled_out.to_flat().c0.data, flat_out.c0.data,
+        "tiled HMul diverged from flat"
+    );
+
+    let s_flat = bench_fn("ckks_hmul flat logN=15 L=3", || {
+        std::hint::black_box(ev.mul(&a, &b));
+    });
+    let s_tiled = bench_fn("ckks_hmul tiled logN=15 L=3", || {
+        std::hint::black_box(ev.mul_tiled(&at, &bt));
+    });
+    let speedup = if s_tiled.median_ns() > 0.0 {
+        s_flat.median_ns() / s_tiled.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> tiled HMul {speedup:.2}x vs flat at logN=15");
+    records.push(Record {
+        name: "ckks_hmul tiled-vs-flat logN=15 (speedup field = vs flat)".to_string(),
+        threads: fhemem::parallel::pool().threads(),
+        median_ns: s_tiled.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    speedup
+}
+
 /// The serving layer end to end (minus TCP): two tenants' ops flow
 /// through keystore lookup + the admission-controlled batching scheduler
 /// + mixed-batch bank-pool execution. The returned ops/s figure is the
@@ -192,6 +292,7 @@ fn bench_service_throughput(records: &mut Vec<Record>) -> f64 {
             max_batch: 4,
             max_delay: Duration::from_millis(2),
             max_queue: 256,
+            max_tenant_inflight: 0,
         },
     );
     svc.register(1, CkksParams::func_tiny(), 0xA11CE).unwrap();
@@ -256,6 +357,8 @@ fn write_json(
     records: &[Record],
     bit_identical: bool,
     ntt_speedup: f64,
+    fourstep_speedup: f64,
+    tiled_hmul_speedup: f64,
     service_ops_per_s: f64,
 ) {
     let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
@@ -279,6 +382,14 @@ fn write_json(
         (
             "ntt_precomputed_speedup_vs_naive_n8192",
             Json::Float(ntt_speedup),
+        ),
+        (
+            "ntt_fourstep_speedup_vs_radix2_n32768",
+            Json::Float(fourstep_speedup),
+        ),
+        (
+            "tiled_hmul_speedup_vs_flat_n32768",
+            Json::Float(tiled_hmul_speedup),
         ),
         (
             "service_batch_throughput_ops_per_s",
@@ -317,6 +428,11 @@ fn main() {
     // The NTT engine: precomputed Shoup/Harvey context vs the naive
     // (regenerate-roots, full-reduction) baseline. CI fails if ≤ 1x.
     let ntt_speedup = bench_ntt_engine_vs_naive(&mut records);
+
+    // The four-step bank-tiled NTT vs the radix-2 kernel at N=2^15
+    // (CI-gated > 1.0) and the tiled HMul hot path vs flat at logN=15.
+    let fourstep_speedup = bench_fourstep_vs_radix2(&mut records);
+    let tiled_hmul_speedup = bench_tiled_hmul_vs_flat(&mut records);
 
     // The bank-pool engine: batched limb-parallel NTT (acceptance: ≥2x
     // at N=8192 with ≥4 threads) + batched CKKS HMul.
@@ -358,6 +474,14 @@ fn main() {
     });
 
     if let Some(path) = args.get("json") {
-        write_json(path, &records, bit_identical, ntt_speedup, service_ops_per_s);
+        write_json(
+            path,
+            &records,
+            bit_identical,
+            ntt_speedup,
+            fourstep_speedup,
+            tiled_hmul_speedup,
+            service_ops_per_s,
+        );
     }
 }

@@ -4,11 +4,12 @@
 
 use super::complex::C64;
 use super::keys::{decrypt_poly, encrypt_poly, KeyChain, KeyTag};
-use super::keyswitch::key_switch;
+use super::keyswitch::{key_switch, key_switch_tiled};
 use super::CkksContext;
 use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
 use crate::math::poly::{Domain, RnsPoly};
 use crate::math::prng::Sampler;
+use crate::math::tiled::TiledRnsPoly;
 use std::sync::Arc;
 
 /// A CKKS ciphertext: `(c0, c1)` with `c0 + c1·s ≈ m`, kept in NTT domain
@@ -26,6 +27,45 @@ pub struct Ciphertext {
 impl Ciphertext {
     pub fn limbs(&self) -> usize {
         self.level
+    }
+
+    /// Tile both components (pure memcpy; bit-exact). The serving hot
+    /// path converts once at the batch edge and stays tiled throughout.
+    pub fn to_tiled(&self) -> TiledCiphertext {
+        TiledCiphertext {
+            c0: TiledRnsPoly::from_flat(&self.c0),
+            c1: TiledRnsPoly::from_flat(&self.c1),
+            level: self.level,
+            scale: self.scale,
+        }
+    }
+}
+
+/// A CKKS ciphertext on the bank-tiled hot path: both components carried
+/// as [`TiledRnsPoly`], so every kernel (four-step NTT, pointwise ops,
+/// key switching) runs on [`crate::mapping::LayoutPlan`] bank tiles.
+/// Bit-identical to the flat [`Ciphertext`] ops by construction.
+#[derive(Debug, Clone)]
+pub struct TiledCiphertext {
+    pub c0: TiledRnsPoly,
+    pub c1: TiledRnsPoly,
+    pub level: usize,
+    pub scale: f64,
+}
+
+impl TiledCiphertext {
+    pub fn limbs(&self) -> usize {
+        self.level
+    }
+
+    /// Reassemble the flat form (pure memcpy; bit-exact).
+    pub fn to_flat(&self) -> Ciphertext {
+        Ciphertext {
+            c0: self.c0.to_flat(),
+            c1: self.c1.to_flat(),
+            level: self.level,
+            scale: self.scale,
+        }
     }
 }
 
@@ -404,6 +444,161 @@ impl Evaluator {
             let _ = self.chain.eval_key(level, KeyTag::Relin);
         }
         crate::parallel::pool().par_map(a, |i, ct| self.mul(ct, &b[i]))
+    }
+
+    // ------------------------------------------------------------------
+    // tiled execution (the bank-tiled hot path)
+    // ------------------------------------------------------------------
+    //
+    // Mirrors of add/sub/mul/rotate/rescale over [`TiledCiphertext`]:
+    // the representation the batched serving path runs on end-to-end
+    // (`coordinator::execute_mixed_batch` converts at the batch edges).
+    // Each op is bit-identical to its flat counterpart — the four-step
+    // NTT reproduces the radix-2 kernels exactly and every other kernel
+    // is per-coefficient — which `rust/tests/tiled_kernels.rs` asserts.
+
+    /// Drop limbs of a tiled ciphertext down to `level` (exact).
+    pub fn level_down_tiled(&self, ct: &TiledCiphertext, level: usize) -> TiledCiphertext {
+        assert!(level <= ct.level);
+        TiledCiphertext {
+            c0: ct.c0.truncate_limbs(level),
+            c1: ct.c1.truncate_limbs(level),
+            level,
+            scale: ct.scale,
+        }
+    }
+
+    /// Rescale by the last modulus on tiles (four-step iNTT → per-bank
+    /// exact division → four-step NTT).
+    pub fn rescale_tiled(&self, ct: &TiledCiphertext) -> TiledCiphertext {
+        assert!(ct.level >= 2, "cannot rescale at level 1");
+        let ql = self.ctx.basis.q(ct.level - 1);
+        let div = |p: &TiledRnsPoly| {
+            let mut p = p.clone();
+            p.to_coeff();
+            let mut out = p.rescale_by_last();
+            out.to_ntt();
+            out
+        };
+        TiledCiphertext {
+            c0: div(&ct.c0),
+            c1: div(&ct.c1),
+            level: ct.level - 1,
+            scale: ct.scale / ql as f64,
+        }
+    }
+
+    fn align_level_tiled(
+        &self,
+        a: &TiledCiphertext,
+        b: &TiledCiphertext,
+    ) -> (TiledCiphertext, TiledCiphertext) {
+        let level = a.level.min(b.level);
+        (
+            self.level_down_tiled(a, level),
+            self.level_down_tiled(b, level),
+        )
+    }
+
+    /// Level + scale alignment — same drift tolerance as [`Self::align`].
+    fn align_tiled(
+        &self,
+        a: &TiledCiphertext,
+        b: &TiledCiphertext,
+    ) -> (TiledCiphertext, TiledCiphertext) {
+        let (a, b) = self.align_level_tiled(a, b);
+        let ratio = a.scale / b.scale;
+        assert!(
+            (ratio - 1.0).abs() < 6e-2,
+            "scale mismatch beyond drift tolerance: {} vs {}",
+            a.scale,
+            b.scale
+        );
+        (a, b)
+    }
+
+    /// HAdd on tiles.
+    pub fn add_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
+        let (mut a, b) = self.align_tiled(a, b);
+        a.c0.add_assign(&b.c0);
+        a.c1.add_assign(&b.c1);
+        a
+    }
+
+    /// HSub on tiles.
+    pub fn sub_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
+        let (mut a, b) = self.align_tiled(a, b);
+        a.c0.sub_assign(&b.c0);
+        a.c1.sub_assign(&b.c1);
+        a
+    }
+
+    /// Tensor + relinearize on tiles, no rescale (mirror of
+    /// [`Self::mul_no_rescale`]).
+    pub fn mul_no_rescale_tiled(
+        &self,
+        a: &TiledCiphertext,
+        b: &TiledCiphertext,
+    ) -> TiledCiphertext {
+        let (a, b) = self.align_level_tiled(a, b);
+        let level = a.level;
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&b.c0);
+        let mut d1 = TiledRnsPoly::fused_mul_add(&[(&a.c0, &b.c1), (&a.c1, &b.c0)]);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&b.c1);
+        let evk = self.chain.eval_key(level, KeyTag::Relin);
+        let (ks0, ks1) = key_switch_tiled(&self.ctx, &d2, &evk);
+        d0.add_assign(&ks0);
+        d1.add_assign(&ks1);
+        TiledCiphertext {
+            c0: d0,
+            c1: d1,
+            level,
+            scale: a.scale * b.scale,
+        }
+    }
+
+    /// HMul on tiles: tensor + relinearize + rescale.
+    pub fn mul_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
+        self.rescale_tiled(&self.mul_no_rescale_tiled(a, b))
+    }
+
+    /// Homomorphic slot rotation on tiles.
+    pub fn rotate_tiled(&self, a: &TiledCiphertext, step: i64) -> TiledCiphertext {
+        if step.rem_euclid(self.ctx.encoder.slots() as i64) == 0 {
+            return a.clone();
+        }
+        let k = RnsPoly::rotation_to_galois(step, self.ctx.n());
+        self.apply_galois_tiled(a, k)
+    }
+
+    /// Homomorphic complex conjugation on tiles.
+    pub fn conjugate_tiled(&self, a: &TiledCiphertext) -> TiledCiphertext {
+        self.apply_galois_tiled(a, RnsPoly::conjugation_galois(self.ctx.n()))
+    }
+
+    fn apply_galois_tiled(&self, a: &TiledCiphertext, k: usize) -> TiledCiphertext {
+        let level = a.level;
+        let mut b = a.c0.clone();
+        b.to_coeff();
+        let rb = b.automorphism(k);
+        let mut c1 = a.c1.clone();
+        c1.to_coeff();
+        let ra = c1.automorphism(k);
+        let evk = self.chain.eval_key(level, KeyTag::Galois(k));
+        let mut ra_ntt = ra;
+        ra_ntt.to_ntt();
+        let (ks0, ks1) = key_switch_tiled(&self.ctx, &ra_ntt, &evk);
+        let mut c0 = rb;
+        c0.to_ntt();
+        c0.add_assign(&ks0);
+        TiledCiphertext {
+            c0,
+            c1: ks1,
+            level,
+            scale: a.scale,
+        }
     }
 
     /// Rotation over a slice, one step per ciphertext (Galois keys

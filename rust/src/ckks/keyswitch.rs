@@ -16,10 +16,12 @@
 
 use super::keys::{evk_message_scalars, SecretKey};
 use super::CkksContext;
-use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
+use crate::mapping::layout::LayoutPlan;
+use crate::math::modarith::{add_mod, inv_mod, mul_mod, sub_mod};
 use crate::math::poly::{Domain, RnsPoly};
 use crate::math::prng::Sampler;
 use crate::math::rns::BConv;
+use crate::math::tiled::TiledRnsPoly;
 use std::sync::Arc;
 
 /// A polynomial over an explicit (non-prefix) set of basis moduli —
@@ -301,6 +303,153 @@ pub fn key_switch(ctx: &CkksContext, d: &RnsPoly, evk: &EvalKey) -> (RnsPoly, Rn
     }
 
     (mod_down(ctx, acc0, evk), mod_down(ctx, acc1, evk))
+}
+
+// ---------------------------------------------------------------------
+// Tiled key switching (the bank-tiled hot path)
+// ---------------------------------------------------------------------
+
+/// Inner product of tiled ext rows with a flat-row gadget polynomial,
+/// accumulated into `acc` (all in NTT domain). A flat row's tile `b` is
+/// its contiguous `[b·te, (b+1)·te)` slice, so the evaluation keys never
+/// need re-tiling. Arithmetic mirrors [`ExtPoly::mul_acc_into`] exactly.
+fn mul_acc_tiles(
+    ctx: &CkksContext,
+    mods: &[usize],
+    banks: usize,
+    te: usize,
+    ext: &[Vec<u64>],
+    gadget: &ExtPoly,
+    acc: &mut [Vec<u64>],
+) {
+    crate::parallel::par_tiles(acc, |idx, tile| {
+        let r = idx / banks;
+        let b = idx % banks;
+        let q = ctx.basis.q(mods[r]);
+        let br = ctx.basis.barrett[mods[r]];
+        let g = &gadget.rows[r][b * te..(b + 1) * te];
+        let e = &ext[idx];
+        for (c, out) in tile.iter_mut().enumerate() {
+            *out = add_mod(*out, br.mul(e[c], g[c]), q);
+        }
+    });
+}
+
+/// ModDown on tiled ext accumulators: four-step iNTT per row group,
+/// per-bank BConv of the P-part, subtract-and-divide, four-step NTT
+/// back. Bit-identical to [`mod_down`] (BConv is per-coefficient, so
+/// converting bank tiles independently changes nothing).
+fn mod_down_tiled(
+    ctx: &CkksContext,
+    mut ext: Vec<Vec<u64>>,
+    mods: &[usize],
+    plan: &Arc<LayoutPlan>,
+    evk: &EvalKey,
+) -> TiledRnsPoly {
+    let level = evk.level;
+    let banks = plan.banks;
+    let te = plan.tile_elems;
+    let k = ctx.k();
+    crate::parallel::par_tile_groups(&mut ext, banks, |r, group| {
+        ctx.basis.ntt[mods[r]].inverse_tiled(group, plan)
+    });
+    let bank_ids: Vec<usize> = (0..banks).collect();
+    let per_bank: Vec<Vec<Vec<u64>>> = crate::parallel::pool().par_map(&bank_ids, |_, &b| {
+        let p_tiles: Vec<Vec<u64>> = (0..k)
+            .map(|i| ext[(level + i) * banks + b].clone())
+            .collect();
+        let conv = evk.mod_down.convert_poly(&p_tiles, te);
+        (0..level)
+            .map(|j| {
+                let q = ctx.basis.q(j);
+                let pinv = evk.p_inv[j];
+                let src = &ext[j * banks + b];
+                (0..te)
+                    .map(|c| mul_mod(sub_mod(src[c], conv[j][c], q), pinv, q))
+                    .collect()
+            })
+            .collect()
+    });
+    let mut out = TiledRnsPoly::zero(ctx.basis.clone(), level, Domain::Coeff);
+    for (b, rows) in per_bank.into_iter().enumerate() {
+        for (j, tile) in rows.into_iter().enumerate() {
+            out.tiles[j * banks + b] = tile;
+        }
+    }
+    out.to_ntt();
+    out
+}
+
+/// [`key_switch`] on the bank-tiled representation: digit scaling and
+/// ModUp fan out per bank, the extended-basis transforms run the
+/// four-step NTT on tile groups, and the evk inner product accumulates
+/// per tile. Bit-identical to the flat path (asserted in
+/// `rust/tests/tiled_kernels.rs`) — the four-step transform reproduces
+/// the radix-2 kernels exactly and everything else is per-coefficient.
+pub fn key_switch_tiled(
+    ctx: &CkksContext,
+    d: &TiledRnsPoly,
+    evk: &EvalKey,
+) -> (TiledRnsPoly, TiledRnsPoly) {
+    let level = evk.level;
+    assert_eq!(d.limbs, level, "digit decomposition level mismatch");
+    let plan = d.plan.clone();
+    let banks = plan.banks;
+    let te = plan.tile_elems;
+    let mut d_coeff = d.clone();
+    d_coeff.to_coeff();
+    let mods = ext_mods(ctx, level);
+    let rows = mods.len();
+
+    let mut acc0: Vec<Vec<u64>> = vec![vec![0u64; te]; rows * banks];
+    let mut acc1 = acc0.clone();
+
+    let bank_ids: Vec<usize> = (0..banks).collect();
+    for digit in &evk.digits {
+        let (lo, hi) = digit.range;
+        // Per-bank: scale the digit residues by the gadget inverse
+        // factor, ModUp-convert, and assemble this bank's ext tiles in
+        // row order (banks are independent through every step here).
+        let per_bank: Vec<Vec<Vec<u64>>> = crate::parallel::pool().par_map(&bank_ids, |_, &b| {
+            let scaled: Vec<Vec<u64>> = (lo..hi)
+                .map(|j| {
+                    let q = ctx.basis.q(j);
+                    let s = digit.digit_scal[j - lo];
+                    d_coeff.tiles[j * banks + b]
+                        .iter()
+                        .map(|&v| mul_mod(v, s, q))
+                        .collect()
+                })
+                .collect();
+            let converted = digit.mod_up.convert_poly(&scaled, te);
+            let mut ext_rows: Vec<Vec<u64>> = vec![Vec::new(); rows];
+            for (j, row) in (lo..hi).zip(scaled) {
+                ext_rows[j] = row;
+            }
+            for (&r, row) in digit.other_rows.iter().zip(converted) {
+                ext_rows[r] = row;
+            }
+            ext_rows
+        });
+        let mut ext: Vec<Vec<u64>> = vec![Vec::new(); rows * banks];
+        for (b, rows_of_bank) in per_bank.into_iter().enumerate() {
+            for (r, row) in rows_of_bank.into_iter().enumerate() {
+                ext[r * banks + b] = row;
+            }
+        }
+        // Extended basis → NTT domain, one four-step per ext row group.
+        crate::parallel::par_tile_groups(&mut ext, banks, |r, group| {
+            ctx.basis.ntt[mods[r]].forward_tiled(group, &plan)
+        });
+        // Inner product with the gadget ciphertext.
+        mul_acc_tiles(ctx, &mods, banks, te, &ext, &digit.b, &mut acc0);
+        mul_acc_tiles(ctx, &mods, banks, te, &ext, &digit.a, &mut acc1);
+    }
+
+    (
+        mod_down_tiled(ctx, acc0, &mods, &plan, evk),
+        mod_down_tiled(ctx, acc1, &mods, &plan, evk),
+    )
 }
 
 /// Batched key switch under a shared evk: independent polys fan out

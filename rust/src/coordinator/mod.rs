@@ -172,7 +172,10 @@ impl Coordinator {
             }
             _ => {}
         }
-        // Cost the op on the configured FHEmem model.
+        // Cost the op on the configured FHEmem model. The model derives
+        // NTT/mul/keyswitch cycles from the same `mapping::LayoutPlan`
+        // (per-ring, process-wide cache) whose bank tiles the op just
+        // executed on, so simulated traffic tracks the actual layout.
         let shape = FheShape {
             log_n: params.log_n,
             limbs,
@@ -308,14 +311,29 @@ impl Coordinator {
         self.record_for(op.fhe_op(), &op.eval.ctx.params, op.level());
     }
 
+    /// Execute one mixed op on the **bank-tiled hot path**: operands are
+    /// tiled once at the batch edge (a memcpy — tiles are contiguous
+    /// chunks of the flat vectors), every kernel in between (four-step
+    /// NTT, pointwise tensor, tiled key switch, rescale) runs on
+    /// `LayoutPlan` bank tiles, and the result is flattened for the
+    /// response. Bit-identical to the flat evaluator ops, so serving
+    /// results do not depend on the representation.
     fn run_mixed_op(&self, op: &MixedOp) -> Ciphertext {
         let b = op.b.as_ref();
-        match op.kind {
-            MixedKind::Add => op.eval.add(&op.a, b.expect("Add needs two operands")),
-            MixedKind::Sub => op.eval.sub(&op.a, b.expect("Sub needs two operands")),
-            MixedKind::Mul => op.eval.mul(&op.a, b.expect("Mul needs two operands")),
-            MixedKind::Rotate(step) => op.eval.rotate(&op.a, step),
-        }
+        let a_t = op.a.to_tiled();
+        let out = match op.kind {
+            MixedKind::Add => op
+                .eval
+                .add_tiled(&a_t, &b.expect("Add needs two operands").to_tiled()),
+            MixedKind::Sub => op
+                .eval
+                .sub_tiled(&a_t, &b.expect("Sub needs two operands").to_tiled()),
+            MixedKind::Mul => op
+                .eval
+                .mul_tiled(&a_t, &b.expect("Mul needs two operands").to_tiled()),
+            MixedKind::Rotate(step) => op.eval.rotate_tiled(&a_t, step),
+        };
+        out.to_flat()
     }
 
     /// Execute a heterogeneous batch: ops from (possibly) different
@@ -419,6 +437,50 @@ mod tests {
     fn backend_reports_native_without_artifacts() {
         let c = coord();
         assert_eq!(c.backend_name(), "native");
+    }
+
+    #[test]
+    fn mixed_batch_tiled_path_bit_identical_to_flat_ops() {
+        use crate::ckks::KeyChain;
+        let c = coord();
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 77));
+        let ev = Arc::new(Evaluator::new(ctx, chain, 78));
+        let slots = ev.ctx.encoder.slots();
+        let z1: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 11) as f64).collect();
+        let z2: Vec<f64> = (0..slots).map(|i| 0.03 * (i % 6) as f64).collect();
+        let a = ev.encrypt_real(&z1, 3);
+        let b = ev.encrypt_real(&z2, 3);
+        let ops = vec![
+            MixedOp {
+                eval: ev.clone(),
+                kind: MixedKind::Add,
+                a: a.clone(),
+                b: Some(b.clone()),
+            },
+            MixedOp {
+                eval: ev.clone(),
+                kind: MixedKind::Mul,
+                a: a.clone(),
+                b: Some(b.clone()),
+            },
+            MixedOp {
+                eval: ev.clone(),
+                kind: MixedKind::Rotate(1),
+                a: a.clone(),
+                b: None,
+            },
+        ];
+        let outs = c.execute_mixed_batch(&ops);
+        // The batch executed on bank tiles; the flat evaluator is the
+        // conformance baseline — residues must match bit-for-bit.
+        let want = [ev.add(&a, &b), ev.mul(&a, &b), ev.rotate(&a, 1)];
+        for (got, want) in outs.iter().zip(&want) {
+            assert_eq!(got.c0.data, want.c0.data);
+            assert_eq!(got.c1.data, want.c1.data);
+            assert_eq!(got.level, want.level);
+            assert!((got.scale - want.scale).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -44,6 +44,8 @@ fn cmd_serve(args: &Args) {
         max_batch: args.get_usize("max-batch", 8),
         max_delay: Duration::from_millis(args.get_u64("max-delay-ms", 5)),
         max_queue: args.get_usize("max-queue", 64),
+        // 0 = uncapped; set to bound one tenant's share of a batch.
+        max_tenant_inflight: args.get_usize("max-tenant-inflight", 0),
     };
     let svc = FheService::new(arch, cfg.clone());
     let handle = server::spawn(("127.0.0.1", port), svc).expect("bind serve port");

@@ -6,6 +6,162 @@
 //! Coefficient i ↔ (mat_row, mat_col, row, col) must be a bijection, and
 //! the automorphism σ_k must map whole mats to whole mats — both are
 //! property-tested.
+//!
+//! # The layout plan
+//!
+//! [`LayoutPlan`] is the *hot-path* counterpart to the descriptive
+//! [`GroupLayout`]: computed once per ring size (and therefore once per
+//! `CkksParams`), it fixes the bank-tiled representation that
+//! `math::tiled::TiledRnsPoly`, the four-step NTT in `math::ntt`, the
+//! bank-pool fan-out in `parallel` and the `sim::cost` cycle model all
+//! consume. A residue polynomial is viewed as an `n1 × n2` row-major
+//! matrix (`N = n1·n2`, the four-step split) and physically stored as
+//! `banks` tiles of `rows_per_tile` consecutive matrix rows each — one
+//! tile per FHEmem bank. Because tiles are *contiguous chunks* of the
+//! flat coefficient vector, flat ↔ tiled conversion is a pure memcpy and
+//! bit-exact by construction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The bank-tiled layout of one residue polynomial, shared by the math,
+/// parallel, ckks, sim and coordinator layers.
+///
+/// Geometry invariants (asserted at construction, tested below):
+///
+/// * `n == n1 * n2` with `n1 <= n2` (balanced four-step split; the row
+///   transform works on the longer contiguous axis);
+/// * `banks` divides `n1`, so every tile holds whole matrix rows;
+/// * tile `b` holds matrix rows `[b·rows_per_tile, (b+1)·rows_per_tile)`
+///   — i.e. the contiguous flat range `[b·tile_elems, (b+1)·tile_elems)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutPlan {
+    /// Ring size N.
+    pub n: usize,
+    /// Column-transform size (matrix rows). 1 for degenerate tiny rings.
+    pub n1: usize,
+    /// Row-transform size (matrix row width, contiguous in memory).
+    pub n2: usize,
+    /// Bank tiles per residue polynomial.
+    pub banks: usize,
+    /// Matrix rows per tile (`n1 / banks`).
+    pub rows_per_tile: usize,
+    /// Elements per tile (`rows_per_tile * n2`).
+    pub tile_elems: usize,
+}
+
+/// Process-wide plan cache keyed by ring size.
+static PLANS: OnceLock<Mutex<HashMap<usize, Arc<LayoutPlan>>>> = OnceLock::new();
+
+/// Rings below this size are not worth splitting: the plan degenerates to
+/// a single tile and the four-step NTT falls back to the radix-2 kernel.
+pub const MIN_FOURSTEP_N: usize = 16;
+
+/// Bank tiles per polynomial (one subarray group = 16 subarrays, §IV-A),
+/// capped by the number of matrix rows for small rings.
+pub const BANKS_PER_POLY: usize = 16;
+
+impl LayoutPlan {
+    /// Fetch (or build once) the shared plan for ring size `n`. One plan
+    /// per `CkksParams` ring: every layer resolves its tile geometry here.
+    pub fn get(n: usize) -> Arc<LayoutPlan> {
+        let cache = PLANS.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        map.entry(n)
+            .or_insert_with(|| Arc::new(LayoutPlan::build(n)))
+            .clone()
+    }
+
+    /// The plan for a parameter set's ring (computed once per
+    /// `CkksParams`, memoised process-wide).
+    pub fn for_params(params: &crate::params::CkksParams) -> Arc<LayoutPlan> {
+        Self::get(params.n())
+    }
+
+    /// Build a plan from scratch, bypassing the cache (tests only).
+    pub fn build(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "ring size {n} not a power of two");
+        if n < MIN_FOURSTEP_N {
+            // Degenerate: one tile, no split.
+            return Self {
+                n,
+                n1: 1,
+                n2: n,
+                banks: 1,
+                rows_per_tile: 1,
+                tile_elems: n,
+            };
+        }
+        let log_n = crate::util::log2_exact(n as u64);
+        // Balanced split with n1 <= n2: the per-row transform runs over
+        // the longer contiguous axis, the column pass over whole rows.
+        let n1 = 1usize << (log_n / 2);
+        let n2 = n / n1;
+        let banks = n1.min(BANKS_PER_POLY);
+        let rows_per_tile = n1 / banks;
+        Self {
+            n,
+            n1,
+            n2,
+            banks,
+            rows_per_tile,
+            tile_elems: rows_per_tile * n2,
+        }
+    }
+
+    /// True when the plan carries a real four-step split.
+    pub fn is_split(&self) -> bool {
+        self.n1 > 1 && self.n2 > 1
+    }
+
+    /// Column-pass stages of the four-step NTT (`log2 n1`).
+    pub fn column_stages(&self) -> u32 {
+        crate::util::log2_exact(self.n1 as u64)
+    }
+
+    /// Row-pass stages (`log2 n2`).
+    pub fn row_stages(&self) -> u32 {
+        crate::util::log2_exact(self.n2 as u64)
+    }
+
+    /// Column-pass stages whose butterfly partner lives in a *different*
+    /// bank tile (`log2 banks`) — the stages that move data between banks
+    /// (the four-step's transpose, realised as tile-crossing row pairs).
+    pub fn cross_tile_stages(&self) -> u32 {
+        crate::util::log2_exact(self.banks as u64)
+    }
+
+    /// Matrix rows transferred between banks over one forward or inverse
+    /// four-step NTT: every cross-tile stage pairs each of the `n1`
+    /// rows with a row in another tile, i.e. `n1/2` row transfers per
+    /// stage. This is the inter-bank transpose traffic `sim::cost`
+    /// charges.
+    pub fn transpose_rows_moved(&self) -> u64 {
+        self.cross_tile_stages() as u64 * (self.n1 as u64 / 2)
+    }
+
+    /// Inter-bank transpose traffic in bits (64-bit coefficients).
+    pub fn transpose_bits_moved(&self) -> u64 {
+        self.transpose_rows_moved() * self.n2 as u64 * 64
+    }
+
+    /// Bank tiles a full `limbs`-limb polynomial occupies.
+    pub fn tiles_per_poly(&self, limbs: usize) -> usize {
+        self.banks * limbs
+    }
+
+    /// Tile index holding flat coefficient `i`.
+    pub fn tile_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        i / self.tile_elems
+    }
+
+    /// Offset of flat coefficient `i` inside its tile.
+    pub fn offset_in_tile(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        i % self.tile_elems
+    }
+}
 
 /// Placement of one coefficient inside a subarray group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +290,63 @@ mod tests {
                 assert_eq!(dst, Some(map[src_mat]));
             }
         });
+    }
+
+    #[test]
+    fn layout_plan_geometry_invariants() {
+        for log_n in [4usize, 5, 10, 11, 12, 14, 15, 16] {
+            let p = LayoutPlan::build(1 << log_n);
+            assert_eq!(p.n1 * p.n2, p.n, "logN={log_n}");
+            assert!(p.n1 <= p.n2, "balanced split logN={log_n}");
+            assert_eq!(p.n1 % p.banks, 0, "banks divide n1, logN={log_n}");
+            assert_eq!(p.rows_per_tile * p.banks, p.n1);
+            assert_eq!(p.tile_elems * p.banks, p.n);
+            assert_eq!(
+                p.column_stages() + p.row_stages(),
+                log_n as u32,
+                "stages partition logN"
+            );
+            assert!(p.cross_tile_stages() <= p.column_stages());
+            // Tiles are contiguous flat chunks.
+            for i in [0usize, 1, p.n / 2, p.n - 1] {
+                assert_eq!(
+                    p.tile_of(i) * p.tile_elems + p.offset_in_tile(i),
+                    i,
+                    "contiguity at {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layout_plan_paper_scale_split() {
+        // logN=16 (paper deep): 256×256 split over 16 bank tiles of 16
+        // rows each; 4 of the 8 column stages cross tiles.
+        let p = LayoutPlan::build(1 << 16);
+        assert_eq!((p.n1, p.n2), (256, 256));
+        assert_eq!(p.banks, 16);
+        assert_eq!(p.rows_per_tile, 16);
+        assert_eq!(p.cross_tile_stages(), 4);
+        assert_eq!(p.transpose_rows_moved(), 4 * 128);
+    }
+
+    #[test]
+    fn layout_plan_degenerates_below_min() {
+        let p = LayoutPlan::build(8);
+        assert!(!p.is_split());
+        assert_eq!(p.banks, 1);
+        assert_eq!(p.tile_elems, 8);
+    }
+
+    #[test]
+    fn layout_plan_cache_shares_instances() {
+        let a = LayoutPlan::get(1 << 12);
+        let b = LayoutPlan::get(1 << 12);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        let c = LayoutPlan::get(1 << 13);
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
+        let d = LayoutPlan::for_params(&crate::params::CkksParams::func_tiny());
+        assert_eq!(d.n, 1 << 10);
     }
 
     #[test]

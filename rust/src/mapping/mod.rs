@@ -4,5 +4,5 @@
 pub mod layout;
 pub mod pipeline;
 
-pub use layout::GroupLayout;
+pub use layout::{GroupLayout, LayoutPlan};
 pub use pipeline::{LoadSavePipeline, Stage};

@@ -10,8 +10,10 @@ pub mod poly;
 pub mod primes;
 pub mod prng;
 pub mod rns;
+pub mod tiled;
 
 pub use modarith::{add_mod, inv_mod, mul_mod, neg_mod, pow_mod, sub_mod, Montgomery};
 pub use ntt::NttContext;
 pub use poly::{Domain, RnsPoly};
 pub use rns::RnsBasis;
+pub use tiled::TiledRnsPoly;

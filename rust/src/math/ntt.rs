@@ -35,6 +35,7 @@
 use super::modarith::{
     add_mod, inv_mod, mul_mod, mul_shoup, mul_shoup_lazy, pow_mod, shoup_precompute, sub_mod,
 };
+use crate::mapping::layout::LayoutPlan;
 use crate::util::log2_exact;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -200,16 +201,7 @@ impl NttContext {
             m <<= 1;
         }
         // Single correction pass: [0, 4q) → [0, q).
-        for x in a.iter_mut() {
-            let mut v = *x;
-            if v >= two_q {
-                v -= two_q;
-            }
-            if v >= q {
-                v -= q;
-            }
-            *x = v;
-        }
+        self.correct_forward(a);
     }
 
     /// In-place inverse negacyclic NTT (bit-reversed → standard order).
@@ -247,11 +239,324 @@ impl NttContext {
             t <<= 1;
             m = h;
         }
+        // Full Shoup reduction by N⁻¹: output in [0, q).
+        self.scale_inverse(a);
+    }
+
+    // ------------------------------------------------------------------
+    // Four-step NTT (cache-friendly N = n1·n2 split, bit-identical to
+    // the radix-2 kernels above)
+    // ------------------------------------------------------------------
+    //
+    // The polynomial is viewed as an n1 × n2 row-major matrix. The first
+    // log2(n1) Cooley–Tukey stages only ever pair elements that share a
+    // column (stride ≥ n2), with one twiddle per row pair — so they run
+    // as a **column pass**: full-row vector butterflies streaming two
+    // contiguous n2-element rows at a time. The remaining log2(n2)
+    // stages stay entirely inside a row, with row r drawing its twiddles
+    // from the slice ψ^bitrev[(n1+r)·m2 + i2] of the *same* table — the
+    // classic four-step twist factors, already folded into the merged
+    // negacyclic table exactly like ψ itself. Each row then finishes all
+    // its stages while resident in L1 (the **row pass**) instead of the
+    // radix-2 schedule's one-full-array-sweep-per-stage.
+    //
+    // Every butterfly executes with the same operands and twiddles as in
+    // `forward`/`inverse`; only the order across *independent* index
+    // pairs changes, so the outputs (and every lazy-reduction
+    // intermediate) are bit-identical to the radix-2 kernels. The tiled
+    // variants run the same schedule over `mapping::LayoutPlan` bank
+    // tiles; cross-tile row pairs are exactly the inter-bank transpose
+    // traffic the `sim::cost` model charges.
+
+    /// Forward column-pass butterfly across a whole row pair: one
+    /// twiddle, `n2` lazy CT butterflies.
+    #[inline]
+    fn fwd_cross_rows(&self, u_row: &mut [u64], v_row: &mut [u64], w: u64, ws: u64) {
+        let q = self.q;
+        let two_q = self.two_q;
+        for (x, y) in u_row.iter_mut().zip(v_row.iter_mut()) {
+            let mut u = *x;
+            if u >= two_q {
+                u -= two_q;
+            }
+            let v = mul_shoup_lazy(*y, w, ws, q);
+            *x = u + v;
+            *y = u + two_q - v;
+        }
+    }
+
+    /// Inverse column-pass butterfly across a whole row pair (GS).
+    #[inline]
+    fn inv_cross_rows(&self, u_row: &mut [u64], v_row: &mut [u64], w: u64, ws: u64) {
+        let q = self.q;
+        let two_q = self.two_q;
+        for (x, y) in u_row.iter_mut().zip(v_row.iter_mut()) {
+            let u = *x;
+            let v = *y;
+            let mut s = u + v;
+            if s >= two_q {
+                s -= two_q;
+            }
+            *x = s;
+            *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
+        }
+    }
+
+    /// Row pass of the forward four-step: the last log2(n2) CT stages of
+    /// matrix row `r`, entirely within the contiguous row. Global stage
+    /// `m = n1·m2` block `i = r·m2 + i2`, so the twiddle index is
+    /// `(n1 + r)·m2 + i2`.
+    fn fwd_row_transform(&self, row: &mut [u64], r: usize, n1: usize) {
+        let n2 = row.len();
+        let q = self.q;
+        let two_q = self.two_q;
+        let mut t = n2;
+        let mut m2 = 1usize;
+        while m2 < n2 {
+            t >>= 1;
+            let base_tw = (n1 + r) * m2;
+            for i2 in 0..m2 {
+                let w = self.psi_rev[base_tw + i2];
+                let ws = self.psi_rev_shoup[base_tw + i2];
+                let (lo, hi) = row[2 * i2 * t..2 * i2 * t + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let mut u = *x;
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    let v = mul_shoup_lazy(*y, w, ws, q);
+                    *x = u + v;
+                    *y = u + two_q - v;
+                }
+            }
+            m2 <<= 1;
+        }
+    }
+
+    /// Row pass of the inverse four-step: the first log2(n2) GS stages of
+    /// matrix row `r` (global stage `h = n1·h2`, twiddle index
+    /// `(n1 + r)·h2 + i2`).
+    fn inv_row_transform(&self, row: &mut [u64], r: usize, n1: usize) {
+        let n2 = row.len();
+        let q = self.q;
+        let two_q = self.two_q;
+        let mut t = 1usize;
+        let mut m2 = n2;
+        while m2 > 1 {
+            let h2 = m2 >> 1;
+            let base_tw = (n1 + r) * h2;
+            let mut j1 = 0usize;
+            for i2 in 0..h2 {
+                let w = self.psi_inv_rev[base_tw + i2];
+                let ws = self.psi_inv_rev_shoup[base_tw + i2];
+                let (lo, hi) = row[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    let mut s = u + v;
+                    if s >= two_q {
+                        s -= two_q;
+                    }
+                    *x = s;
+                    *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m2 = h2;
+        }
+    }
+
+    /// Final forward correction: `[0, 4q) → [0, q)` (same pass as
+    /// [`Self::forward`]).
+    #[inline]
+    fn correct_forward(&self, a: &mut [u64]) {
+        let q = self.q;
+        let two_q = self.two_q;
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    /// Final inverse scaling by N⁻¹ (full Shoup reduction to `[0, q)`).
+    #[inline]
+    fn scale_inverse(&self, a: &mut [u64]) {
         let n_inv = self.n_inv;
         let ns = self.n_inv_shoup;
+        let q = self.q;
         for x in a.iter_mut() {
-            // Full Shoup reduction: output in [0, q).
             *x = mul_shoup(*x, n_inv, ns, q);
+        }
+    }
+
+    /// In-place forward four-step NTT over a flat buffer viewed as an
+    /// `n1 × (N/n1)` row-major matrix. Bit-identical to
+    /// [`Self::forward`]; `n1 <= 1` (degenerate plan) falls back to it.
+    pub fn forward_fourstep(&self, a: &mut [u64], n1: usize) {
+        debug_assert_eq!(a.len(), self.n);
+        let n2 = self.n / n1.max(1);
+        if n1 <= 1 || n2 <= 1 {
+            return self.forward(a);
+        }
+        debug_assert_eq!(n1 * n2, self.n);
+        // Column pass: first log2(n1) stages as whole-row butterflies.
+        let mut t = n1;
+        let mut m = 1usize;
+        while m < n1 {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let ws = self.psi_rev_shoup[m + i];
+                let base = 2 * i * t;
+                let block = &mut a[base * n2..(base + 2 * t) * n2];
+                let (lo, hi) = block.split_at_mut(t * n2);
+                for (u_row, v_row) in lo.chunks_mut(n2).zip(hi.chunks_mut(n2)) {
+                    self.fwd_cross_rows(u_row, v_row, w, ws);
+                }
+            }
+            m <<= 1;
+        }
+        // Row pass: each row finishes its remaining stages in cache.
+        for (r, row) in a.chunks_mut(n2).enumerate() {
+            self.fwd_row_transform(row, r, n1);
+        }
+        self.correct_forward(a);
+    }
+
+    /// In-place inverse four-step NTT (flat buffer). Bit-identical to
+    /// [`Self::inverse`].
+    pub fn inverse_fourstep(&self, a: &mut [u64], n1: usize) {
+        debug_assert_eq!(a.len(), self.n);
+        let n2 = self.n / n1.max(1);
+        if n1 <= 1 || n2 <= 1 {
+            return self.inverse(a);
+        }
+        debug_assert_eq!(n1 * n2, self.n);
+        // Row pass first (the inverse runs the schedule backwards).
+        for (r, row) in a.chunks_mut(n2).enumerate() {
+            self.inv_row_transform(row, r, n1);
+        }
+        // Column pass: last log2(n1) GS stages as whole-row butterflies.
+        let mut t_rows = 1usize;
+        let mut m = n1;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let w = self.psi_inv_rev[h + i];
+                let ws = self.psi_inv_rev_shoup[h + i];
+                let base = 2 * t_rows * i;
+                let block = &mut a[base * n2..(base + 2 * t_rows) * n2];
+                let (lo, hi) = block.split_at_mut(t_rows * n2);
+                for (u_row, v_row) in lo.chunks_mut(n2).zip(hi.chunks_mut(n2)) {
+                    self.inv_cross_rows(u_row, v_row, w, ws);
+                }
+            }
+            t_rows <<= 1;
+            m = h;
+        }
+        self.scale_inverse(a);
+    }
+
+    /// Mutable access to matrix rows `u < v` across the tile list.
+    #[inline]
+    fn tile_row_pair<'a>(
+        tiles: &'a mut [Vec<u64>],
+        rows_per_tile: usize,
+        n2: usize,
+        u: usize,
+        v: usize,
+    ) -> (&'a mut [u64], &'a mut [u64]) {
+        debug_assert!(u < v);
+        let (tu, ou) = (u / rows_per_tile, (u % rows_per_tile) * n2);
+        let (tv, ov) = (v / rows_per_tile, (v % rows_per_tile) * n2);
+        if tu == tv {
+            let (lo, hi) = tiles[tu].split_at_mut(ov);
+            (&mut lo[ou..ou + n2], &mut hi[..n2])
+        } else {
+            let (lo, hi) = tiles.split_at_mut(tv);
+            (&mut lo[tu][ou..ou + n2], &mut hi[0][ov..ov + n2])
+        }
+    }
+
+    /// Forward four-step NTT over one residue polynomial stored as
+    /// [`LayoutPlan`] bank tiles (`tiles.len() == plan.banks`, each tile
+    /// `plan.tile_elems` long). Bit-identical to [`Self::forward`] on the
+    /// concatenated tiles. Cross-tile row pairs in the column pass are
+    /// the inter-bank transpose the cost model charges.
+    pub fn forward_tiled(&self, tiles: &mut [Vec<u64>], plan: &LayoutPlan) {
+        debug_assert_eq!(plan.n, self.n);
+        debug_assert_eq!(tiles.len(), plan.banks);
+        if !plan.is_split() {
+            return self.forward(&mut tiles[0]);
+        }
+        let (n1, n2, rpt) = (plan.n1, plan.n2, plan.rows_per_tile);
+        // Column pass.
+        let mut t = n1;
+        let mut m = 1usize;
+        while m < n1 {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let ws = self.psi_rev_shoup[m + i];
+                let base = 2 * i * t;
+                for r in 0..t {
+                    let (u_row, v_row) =
+                        Self::tile_row_pair(tiles, rpt, n2, base + r, base + t + r);
+                    self.fwd_cross_rows(u_row, v_row, w, ws);
+                }
+            }
+            m <<= 1;
+        }
+        // Row pass + correction, tile-local.
+        for (b, tile) in tiles.iter_mut().enumerate() {
+            for (rr, row) in tile.chunks_mut(n2).enumerate() {
+                self.fwd_row_transform(row, b * rpt + rr, n1);
+            }
+            self.correct_forward(tile);
+        }
+    }
+
+    /// Inverse four-step NTT over bank tiles (see [`Self::forward_tiled`]).
+    pub fn inverse_tiled(&self, tiles: &mut [Vec<u64>], plan: &LayoutPlan) {
+        debug_assert_eq!(plan.n, self.n);
+        debug_assert_eq!(tiles.len(), plan.banks);
+        if !plan.is_split() {
+            return self.inverse(&mut tiles[0]);
+        }
+        let (n1, n2, rpt) = (plan.n1, plan.n2, plan.rows_per_tile);
+        // Row pass, tile-local.
+        for (b, tile) in tiles.iter_mut().enumerate() {
+            for (rr, row) in tile.chunks_mut(n2).enumerate() {
+                self.inv_row_transform(row, b * rpt + rr, n1);
+            }
+        }
+        // Column pass.
+        let mut t_rows = 1usize;
+        let mut m = n1;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let w = self.psi_inv_rev[h + i];
+                let ws = self.psi_inv_rev_shoup[h + i];
+                let base = 2 * t_rows * i;
+                for r in 0..t_rows {
+                    let (u_row, v_row) =
+                        Self::tile_row_pair(tiles, rpt, n2, base + r, base + t_rows + r);
+                    self.inv_cross_rows(u_row, v_row, w, ws);
+                }
+            }
+            t_rows <<= 1;
+            m = h;
+        }
+        for tile in tiles.iter_mut() {
+            self.scale_inverse(tile);
         }
     }
 
@@ -439,6 +744,70 @@ mod tests {
                 assert_eq!(fast, slow, "inverse logn={logn}");
             });
         }
+    }
+
+    #[test]
+    fn fourstep_flat_bit_identical_to_radix2() {
+        // The reordered four-step schedule must reproduce the radix-2
+        // kernels bit-for-bit, for every split the plan can produce —
+        // including lazy [0, 2q) inputs.
+        for logn in [4usize, 5, 8, 11, 13] {
+            let t = context(logn);
+            let plan = LayoutPlan::build(t.n);
+            forall("fourstep == radix2 (flat)", 4, |rng| {
+                let data: Vec<u64> = (0..t.n).map(|_| rng.below(2 * t.q)).collect();
+                let mut four = data.clone();
+                let mut two = data.clone();
+                t.forward_fourstep(&mut four, plan.n1);
+                t.forward(&mut two);
+                assert_eq!(four, two, "forward logn={logn} n1={}", plan.n1);
+                t.inverse_fourstep(&mut four, plan.n1);
+                t.inverse(&mut two);
+                assert_eq!(four, two, "inverse logn={logn} n1={}", plan.n1);
+            });
+        }
+    }
+
+    #[test]
+    fn fourstep_tiled_bit_identical_to_radix2() {
+        for logn in [4usize, 6, 10, 12] {
+            let t = context(logn);
+            let plan = LayoutPlan::build(t.n);
+            forall("fourstep == radix2 (tiled)", 4, |rng| {
+                let data: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+                let mut tiles: Vec<Vec<u64>> = data
+                    .chunks(plan.tile_elems)
+                    .map(|c| c.to_vec())
+                    .collect();
+                let mut flat = data.clone();
+                t.forward_tiled(&mut tiles, &plan);
+                t.forward(&mut flat);
+                let glued: Vec<u64> = tiles.iter().flatten().copied().collect();
+                assert_eq!(glued, flat, "forward logn={logn}");
+                t.inverse_tiled(&mut tiles, &plan);
+                t.inverse(&mut flat);
+                let glued: Vec<u64> = tiles.iter().flatten().copied().collect();
+                assert_eq!(glued, flat, "inverse logn={logn}");
+                assert_eq!(glued, data, "roundtrip logn={logn}");
+            });
+        }
+    }
+
+    #[test]
+    fn fourstep_arbitrary_n1_splits_agree() {
+        // Any power-of-two n1 (not just the plan's balanced split) must
+        // reproduce radix-2 — the split is a schedule, not a semantic.
+        let t = context(8);
+        forall("fourstep any split", 3, |rng| {
+            let data: Vec<u64> = (0..t.n).map(|_| rng.below(t.q)).collect();
+            let mut want = data.clone();
+            t.forward(&mut want);
+            for log_n1 in 0..=8usize {
+                let mut got = data.clone();
+                t.forward_fourstep(&mut got, 1 << log_n1);
+                assert_eq!(got, want, "n1=2^{log_n1}");
+            }
+        });
     }
 
     #[test]

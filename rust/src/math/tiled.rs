@@ -1,0 +1,490 @@
+//! Bank-tiled RNS polynomial: the canonical hot-path representation.
+//!
+//! [`TiledRnsPoly`] stores each residue polynomial as the
+//! [`LayoutPlan`]'s bank tiles instead of one flat vector per limb —
+//! the software mirror of FHEmem spreading a polynomial's rows over a
+//! subarray group (§IV-A). Because every tile is a *contiguous chunk* of
+//! the flat coefficient vector (tile `b` = flat range
+//! `[b·tile_elems, (b+1)·tile_elems)`), conversion to and from
+//! [`RnsPoly`] is a pure memcpy and bit-exact by construction, and a
+//! flat row can always be reinterpreted as its tiles (the key-switching
+//! keys stay flat for exactly this reason).
+//!
+//! What the tiling buys:
+//!
+//! * **Four-step NTT** — `to_ntt`/`to_coeff` run the cache-friendly
+//!   column-pass/row-pass schedule of `math::ntt` directly on the tiles,
+//!   bit-identical to the radix-2 kernels the flat [`RnsPoly`] keeps as
+//!   the conformance baseline.
+//! * **Bank-granular fan-out** — pointwise kernels parallelize over
+//!   `limbs × banks` tiles ([`crate::parallel::par_tiles`]) instead of
+//!   `limbs` flat rows, matching the granularity FHEmem assigns to
+//!   banks.
+//! * **Plan-driven costing** — the same [`LayoutPlan`] the data lives in
+//!   is what `sim::cost` charges cycles from, so simulated traffic and
+//!   executed layout can no longer drift apart.
+//!
+//! Every kernel here is **bit-identical** to its flat counterpart in
+//! [`RnsPoly`]; `rust/tests/tiled_kernels.rs` asserts this end to end
+//! (add/mul/keyswitch and full ciphertext ops).
+
+use super::modarith::{add_mod, add_mod_lazy, mul_mod, neg_mod, sub_mod};
+use super::poly::{Domain, RnsPoly};
+use super::rns::RnsBasis;
+use crate::mapping::layout::LayoutPlan;
+use std::sync::Arc;
+
+/// A polynomial in `R_{q_0 · … · q_{L-1}}` stored as bank tiles,
+/// limb-major: tile `b` of limb `j` sits at `tiles[j * plan.banks + b]`.
+#[derive(Debug, Clone)]
+pub struct TiledRnsPoly {
+    pub basis: Arc<RnsBasis>,
+    pub plan: Arc<LayoutPlan>,
+    /// Number of active moduli (the "level + 1" prefix of the basis).
+    pub limbs: usize,
+    pub domain: Domain,
+    /// `limbs * plan.banks` tiles of `plan.tile_elems` words each.
+    pub tiles: Vec<Vec<u64>>,
+}
+
+impl TiledRnsPoly {
+    pub fn zero(basis: Arc<RnsBasis>, limbs: usize, domain: Domain) -> Self {
+        let plan = LayoutPlan::get(basis.n);
+        let tiles = vec![vec![0u64; plan.tile_elems]; limbs * plan.banks];
+        Self {
+            basis,
+            plan,
+            limbs,
+            domain,
+            tiles,
+        }
+    }
+
+    /// Tile the flat representation (pure memcpy; bit-exact).
+    pub fn from_flat(p: &RnsPoly) -> Self {
+        let plan = LayoutPlan::get(p.basis.n);
+        let mut tiles = Vec::with_capacity(p.limbs * plan.banks);
+        for row in &p.data {
+            debug_assert_eq!(row.len(), plan.n);
+            for chunk in row.chunks(plan.tile_elems) {
+                tiles.push(chunk.to_vec());
+            }
+        }
+        Self {
+            basis: p.basis.clone(),
+            plan,
+            limbs: p.limbs,
+            domain: p.domain,
+            tiles,
+        }
+    }
+
+    /// Reassemble the flat representation (pure memcpy; bit-exact).
+    pub fn to_flat(&self) -> RnsPoly {
+        let banks = self.plan.banks;
+        let data: Vec<Vec<u64>> = (0..self.limbs)
+            .map(|j| {
+                let mut row = Vec::with_capacity(self.plan.n);
+                for b in 0..banks {
+                    row.extend_from_slice(&self.tiles[j * banks + b]);
+                }
+                row
+            })
+            .collect();
+        RnsPoly {
+            basis: self.basis.clone(),
+            limbs: self.limbs,
+            domain: self.domain,
+            data,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.basis.n
+    }
+
+    /// This limb's bank-tile group.
+    pub fn limb_tiles(&self, j: usize) -> &[Vec<u64>] {
+        let banks = self.plan.banks;
+        &self.tiles[j * banks..(j + 1) * banks]
+    }
+
+    fn check_compat(&self, other: &Self) {
+        assert_eq!(self.limbs, other.limbs, "limb mismatch");
+        assert_eq!(self.domain, other.domain, "domain mismatch");
+        assert!(Arc::ptr_eq(&self.basis, &other.basis), "basis mismatch");
+    }
+
+    /// Switch to NTT domain in place via the four-step transform on
+    /// tiles (no-op if already there). Limbs fan out as tile groups.
+    pub fn to_ntt(&mut self) {
+        if self.domain == Domain::Ntt {
+            return;
+        }
+        let basis = self.basis.clone();
+        let plan = self.plan.clone();
+        crate::parallel::par_tile_groups(&mut self.tiles, plan.banks, |j, group| {
+            basis.ntt[j].forward_tiled(group, &plan)
+        });
+        self.domain = Domain::Ntt;
+    }
+
+    /// Switch to coefficient domain in place (four-step inverse).
+    pub fn to_coeff(&mut self) {
+        if self.domain == Domain::Coeff {
+            return;
+        }
+        let basis = self.basis.clone();
+        let plan = self.plan.clone();
+        crate::parallel::par_tile_groups(&mut self.tiles, plan.banks, |j, group| {
+            basis.ntt[j].inverse_tiled(group, &plan)
+        });
+        self.domain = Domain::Coeff;
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        let basis = self.basis.clone();
+        let banks = self.plan.banks;
+        crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
+            for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
+                *a = add_mod(*a, b, q);
+            }
+        });
+    }
+
+    pub fn sub_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        let basis = self.basis.clone();
+        let banks = self.plan.banks;
+        crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
+            for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
+                *a = sub_mod(*a, b, q);
+            }
+        });
+    }
+
+    pub fn neg_assign(&mut self) {
+        let banks = self.plan.banks;
+        for (idx, tile) in self.tiles.iter_mut().enumerate() {
+            let q = self.basis.q(idx / banks);
+            for a in tile.iter_mut() {
+                *a = neg_mod(*a, q);
+            }
+        }
+    }
+
+    /// Pointwise (NTT-domain) multiplication — Barrett, per-tile fan-out.
+    pub fn mul_assign(&mut self, other: &Self) {
+        self.check_compat(other);
+        assert_eq!(self.domain, Domain::Ntt, "mul requires NTT domain");
+        let basis = self.basis.clone();
+        let banks = self.plan.banks;
+        crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let br = basis.barrett[idx / banks];
+            for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
+                *a = br.mul(*a, b);
+            }
+        });
+    }
+
+    /// Fused pointwise multiply–accumulate chain in the NTT domain —
+    /// the tiled mirror of [`RnsPoly::fused_mul_add`] (same lazy
+    /// `[0, 2q)`-carried schedule, bit-identical), fanned out per tile.
+    pub fn fused_mul_add(terms: &[(&TiledRnsPoly, &TiledRnsPoly)]) -> TiledRnsPoly {
+        assert!(!terms.is_empty(), "fused_mul_add needs at least one term");
+        let first = terms[0].0;
+        assert_eq!(first.domain, Domain::Ntt, "fused_mul_add requires NTT domain");
+        for (x, y) in terms {
+            x.check_compat(y);
+            first.check_compat(x);
+        }
+        let basis = first.basis.clone();
+        let banks = first.plan.banks;
+        let mut out = Self::zero(first.basis.clone(), first.limbs, Domain::Ntt);
+        crate::parallel::par_tiles(&mut out.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
+            debug_assert!(q < (1 << 62), "lazy chain needs q < 2^62");
+            let br = basis.barrett[idx / banks];
+            let twoq = 2 * q;
+            for (c, acc) in tile.iter_mut().enumerate() {
+                let mut s = 0u64;
+                for (x, y) in terms {
+                    s = add_mod_lazy(s, br.mul_lazy(x.tiles[idx][c], y.tiles[idx][c]), twoq);
+                }
+                *acc = if s >= q { s - q } else { s };
+            }
+        });
+        out
+    }
+
+    /// Multiply by a per-limb scalar.
+    pub fn mul_scalar_per_limb(&mut self, scalars: &[u64]) {
+        assert_eq!(scalars.len(), self.limbs);
+        let basis = self.basis.clone();
+        let banks = self.plan.banks;
+        crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
+            let s = scalars[idx / banks] % q;
+            for a in tile.iter_mut() {
+                *a = mul_mod(*a, s, q);
+            }
+        });
+    }
+
+    /// Drop the last limb (rescale's tail step): truncates one tile
+    /// group.
+    pub fn drop_last_limb(&mut self) {
+        assert!(self.limbs > 1);
+        self.tiles.truncate((self.limbs - 1) * self.plan.banks);
+        self.limbs -= 1;
+    }
+
+    /// Keep only the first `limbs` limbs (level alignment).
+    pub fn truncate_limbs(&self, limbs: usize) -> Self {
+        assert!(limbs <= self.limbs);
+        Self {
+            basis: self.basis.clone(),
+            plan: self.plan.clone(),
+            limbs,
+            domain: self.domain,
+            tiles: self.tiles[..limbs * self.plan.banks].to_vec(),
+        }
+    }
+
+    /// Exact rescale step on tiles (coefficient domain): returns
+    /// `(self - [last])·q_last^{-1}` over the first `limbs-1` limbs —
+    /// bit-identical to the flat path in `ckks::cipher::Evaluator::
+    /// rescale`. Banks fan out independently: output tile `(j, b)` needs
+    /// only input tiles `(j, b)` and `(last, b)`.
+    pub fn rescale_by_last(&self) -> Self {
+        assert_eq!(self.domain, Domain::Coeff, "rescale in coeff domain");
+        assert!(self.limbs > 1);
+        let l = self.limbs;
+        let banks = self.plan.banks;
+        let ql = self.basis.q(l - 1);
+        let qinv: Vec<u64> = (0..l - 1)
+            .map(|j| {
+                let q = self.basis.q(j);
+                super::modarith::inv_mod(ql % q, q)
+            })
+            .collect();
+        let basis = self.basis.clone();
+        let mut out = Self::zero(self.basis.clone(), l - 1, Domain::Coeff);
+        let last_tiles = &self.tiles[(l - 1) * banks..l * banks];
+        crate::parallel::par_tiles(&mut out.tiles, |idx, tile| {
+            let j = idx / banks;
+            let b = idx % banks;
+            let q = basis.q(j);
+            let inv = qinv[j];
+            let src = &self.tiles[idx];
+            let last = &last_tiles[b];
+            for c in 0..tile.len() {
+                let diff = sub_mod(src[c], last[c] % q, q);
+                tile[c] = mul_mod(diff, inv, q);
+            }
+        });
+        out
+    }
+
+    /// Galois automorphism X → X^k (k odd) in coefficient domain,
+    /// scattering directly between bank tiles (§IV-E: the permutation
+    /// crosses every tile; destinations are computed per source tile).
+    pub fn automorphism(&self, k: usize) -> Self {
+        assert_eq!(self.domain, Domain::Coeff, "automorphism in coeff domain");
+        let n = self.n();
+        assert!(k % 2 == 1 && k < 2 * n);
+        let banks = self.plan.banks;
+        let te = self.plan.tile_elems;
+        let mut out = Self::zero(self.basis.clone(), self.limbs, Domain::Coeff);
+        // Limbs are independent; the scatter itself stays serial within a
+        // limb because destination tiles interleave arbitrarily.
+        crate::parallel::par_tile_groups(&mut out.tiles, banks, |j, group| {
+            let q = self.basis.q(j);
+            for b in 0..banks {
+                let src = &self.tiles[j * banks + b];
+                for (off, &v) in src.iter().enumerate() {
+                    let i = b * te + off;
+                    let target = (i * k) % (2 * n);
+                    let (pos, flip) = if target < n {
+                        (target, false)
+                    } else {
+                        (target - n, true)
+                    };
+                    group[pos / te][pos % te] = if flip { neg_mod(v, q) } else { v };
+                }
+            }
+        });
+        out
+    }
+
+    /// L∞ distance to another tiled poly in centered representation
+    /// (test helper, mirrors [`RnsPoly::max_centered_diff`]).
+    pub fn max_centered_diff(&self, other: &Self) -> u64 {
+        self.check_compat(other);
+        let banks = self.plan.banks;
+        let mut worst = 0u64;
+        for (idx, tile) in self.tiles.iter().enumerate() {
+            let q = self.basis.q(idx / banks);
+            for (a, b) in tile.iter().zip(&other.tiles[idx]) {
+                let d = sub_mod(*a, *b, q);
+                let d = d.min(q - d);
+                worst = worst.max(d);
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::ntt_primes;
+    use crate::util::check::forall;
+
+    fn basis(logn: usize, limbs: usize) -> Arc<RnsBasis> {
+        let n = 1 << logn;
+        Arc::new(RnsBasis::new(ntt_primes(40, n, limbs), n))
+    }
+
+    fn random_poly(
+        b: &Arc<RnsBasis>,
+        limbs: usize,
+        rng: &mut crate::util::check::SplitMix64,
+    ) -> RnsPoly {
+        let mut p = RnsPoly::zero(b.clone(), limbs, Domain::Coeff);
+        for j in 0..limbs {
+            let q = b.q(j);
+            for c in p.data[j].iter_mut() {
+                *c = rng.below(q);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn flat_tiled_roundtrip_is_identity() {
+        for logn in [3usize, 6, 10] {
+            let b = basis(logn, 3);
+            forall("tiled roundtrip", 4, |rng| {
+                let p = random_poly(&b, 3, rng);
+                let t = TiledRnsPoly::from_flat(&p);
+                assert_eq!(t.tiles.len(), t.plan.tiles_per_poly(3));
+                let back = t.to_flat();
+                assert_eq!(back.data, p.data);
+                assert_eq!(back.domain, p.domain);
+                assert_eq!(back.limbs, p.limbs);
+            });
+        }
+    }
+
+    #[test]
+    fn tiled_ntt_bit_identical_to_flat() {
+        let b = basis(9, 4);
+        forall("tiled ntt == flat", 4, |rng| {
+            let p = random_poly(&b, 4, rng);
+            let mut flat = p.clone();
+            let mut tiled = TiledRnsPoly::from_flat(&p);
+            flat.to_ntt();
+            tiled.to_ntt();
+            assert_eq!(tiled.to_flat().data, flat.data);
+            flat.to_coeff();
+            tiled.to_coeff();
+            assert_eq!(tiled.to_flat().data, flat.data);
+            assert_eq!(tiled.to_flat().data, p.data);
+        });
+    }
+
+    #[test]
+    fn tiled_pointwise_ops_bit_identical_to_flat() {
+        let b = basis(7, 3);
+        forall("tiled pointwise == flat", 6, |rng| {
+            let x = random_poly(&b, 3, rng);
+            let y = random_poly(&b, 3, rng);
+            // add / sub / neg in coeff domain
+            let mut f = x.clone();
+            f.add_assign(&y);
+            let mut t = TiledRnsPoly::from_flat(&x);
+            t.add_assign(&TiledRnsPoly::from_flat(&y));
+            assert_eq!(t.to_flat().data, f.data, "add");
+            f.sub_assign(&y);
+            t.sub_assign(&TiledRnsPoly::from_flat(&y));
+            assert_eq!(t.to_flat().data, f.data, "sub");
+            f.neg_assign();
+            t.neg_assign();
+            assert_eq!(t.to_flat().data, f.data, "neg");
+            // mul in NTT domain
+            let mut fx = x.clone();
+            let mut fy = y.clone();
+            fx.to_ntt();
+            fy.to_ntt();
+            let mut tx = TiledRnsPoly::from_flat(&x);
+            let mut ty = TiledRnsPoly::from_flat(&y);
+            tx.to_ntt();
+            ty.to_ntt();
+            fx.mul_assign(&fy);
+            tx.mul_assign(&ty);
+            assert_eq!(tx.to_flat().data, fx.data, "mul");
+            // scalar
+            let s = rng.below(1 << 30);
+            let scalars: Vec<u64> = (0..3).map(|j| s % b.q(j)).collect();
+            fx.mul_scalar_per_limb(&scalars);
+            tx.mul_scalar_per_limb(&scalars);
+            assert_eq!(tx.to_flat().data, fx.data, "scalar");
+        });
+    }
+
+    #[test]
+    fn tiled_fused_mul_add_bit_identical_to_flat() {
+        let b = basis(6, 3);
+        forall("tiled fused == flat fused", 4, |rng| {
+            let pairs: Vec<(RnsPoly, RnsPoly)> = (0..3)
+                .map(|_| {
+                    let mut x = random_poly(&b, 3, rng);
+                    let mut y = random_poly(&b, 3, rng);
+                    x.to_ntt();
+                    y.to_ntt();
+                    (x, y)
+                })
+                .collect();
+            let refs: Vec<(&RnsPoly, &RnsPoly)> = pairs.iter().map(|(x, y)| (x, y)).collect();
+            let flat = RnsPoly::fused_mul_add(&refs);
+            let tpairs: Vec<(TiledRnsPoly, TiledRnsPoly)> = pairs
+                .iter()
+                .map(|(x, y)| (TiledRnsPoly::from_flat(x), TiledRnsPoly::from_flat(y)))
+                .collect();
+            let trefs: Vec<(&TiledRnsPoly, &TiledRnsPoly)> =
+                tpairs.iter().map(|(x, y)| (x, y)).collect();
+            let tiled = TiledRnsPoly::fused_mul_add(&trefs);
+            assert_eq!(tiled.to_flat().data, flat.data);
+        });
+    }
+
+    #[test]
+    fn tiled_automorphism_bit_identical_to_flat() {
+        let b = basis(6, 2);
+        let n = 1usize << 6;
+        forall("tiled automorphism == flat", 6, |rng| {
+            let k = (rng.below(n as u64) as usize * 2 + 1) % (2 * n);
+            let p = random_poly(&b, 2, rng);
+            let flat = p.automorphism(k);
+            let tiled = TiledRnsPoly::from_flat(&p).automorphism(k);
+            assert_eq!(tiled.to_flat().data, flat.data, "k={k}");
+        });
+    }
+
+    #[test]
+    fn drop_and_truncate_match_flat_shapes() {
+        let b = basis(5, 4);
+        let mut rng = crate::util::check::SplitMix64::new(3);
+        let p = random_poly(&b, 4, &mut rng);
+        let mut t = TiledRnsPoly::from_flat(&p);
+        t.drop_last_limb();
+        assert_eq!(t.limbs, 3);
+        assert_eq!(t.to_flat().data, p.data[..3].to_vec());
+        let t2 = t.truncate_limbs(2);
+        assert_eq!(t2.to_flat().data, p.data[..2].to_vec());
+    }
+}

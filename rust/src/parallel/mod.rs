@@ -61,6 +61,38 @@ pub fn par_rows_on<F: Fn(usize, &mut [u64]) + Sync>(pool: &BankPool, rows: &mut 
     pool.par_rows(rows, |j, row: &mut Vec<u64>| f(j, row.as_mut_slice()));
 }
 
+/// Apply `f(tile_index, tile)` to every bank tile — the tile axis:
+/// `limbs × banks` work items per polynomial instead of `limbs`, so the
+/// pool fans out at the granularity FHEmem assigns to banks rather than
+/// re-slicing flat per-limb vectors. Same gating as [`par_rows`] (tiles
+/// are rows of a finer partition).
+pub fn par_tiles<F: Fn(usize, &mut [u64]) + Sync>(tiles: &mut [Vec<u64>], f: F) {
+    par_rows(tiles, f)
+}
+
+/// Apply `f(group_index, group)` to consecutive `group_size` chunks of
+/// `tiles` — one group per RNS limb (`group_size = plan.banks`). The NTT
+/// needs all of a limb's tiles together (the four-step column pass
+/// crosses banks), so the fan-out unit here is the limb's tile group.
+pub fn par_tile_groups<F: Fn(usize, &mut [Vec<u64>]) + Sync>(
+    tiles: &mut [Vec<u64>],
+    group_size: usize,
+    f: F,
+) {
+    debug_assert!(group_size > 0 && tiles.len() % group_size == 0);
+    let elems: usize = tiles.iter().map(|t| t.len()).sum();
+    let groups = tiles.len() / group_size;
+    let pool = pool();
+    if pool.threads() <= 1 || groups < 2 || elems < PAR_MIN_ELEMS {
+        for (j, group) in tiles.chunks_mut(group_size).enumerate() {
+            f(j, group);
+        }
+        return;
+    }
+    let mut slots: Vec<&mut [Vec<u64>]> = tiles.chunks_mut(group_size).collect();
+    pool.par_rows(&mut slots, |j, group: &mut &mut [Vec<u64>]| f(j, group));
+}
+
 /// Limb-parallel forward NTT: `rows[j]` is transformed with `contexts[j]`.
 /// Ungated — callers hand over exactly the rows they want fanned out. The
 /// contexts are `Arc`s out of the global [`NttContext::get`] cache: built
@@ -135,6 +167,35 @@ mod tests {
             }
             assert_eq!(gated, serial, "logn={logn} limbs={limbs}");
         }
+    }
+
+    #[test]
+    fn tile_groups_match_serial_execution() {
+        // Groups of 4 tiles per "limb": the grouped fan-out must equal
+        // serial chunked iteration bit-for-bit.
+        let group = 4usize;
+        let limbs = 6usize;
+        let mut rng = SplitMix64::new(9);
+        let tiles: Vec<Vec<u64>> = (0..limbs * group)
+            .map(|_| (0..512).map(|_| rng.next_u64()).collect())
+            .collect();
+        let mut serial = tiles.clone();
+        for (j, g) in serial.chunks_mut(group).enumerate() {
+            for tile in g.iter_mut() {
+                for v in tile.iter_mut() {
+                    *v = v.wrapping_mul(3).wrapping_add(j as u64);
+                }
+            }
+        }
+        let mut par = tiles.clone();
+        par_tile_groups(&mut par, group, |j, g| {
+            for tile in g.iter_mut() {
+                for v in tile.iter_mut() {
+                    *v = v.wrapping_mul(3).wrapping_add(j as u64);
+                }
+            }
+        });
+        assert_eq!(par, serial);
     }
 
     #[test]

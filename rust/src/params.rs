@@ -110,6 +110,7 @@ impl CkksParams {
             "func-default" => Some(Self::func_default()),
             "func-tiny" => Some(Self::func_tiny()),
             "func-boot" => Some(Self::func_boot()),
+            "func-wide" => Some(Self::func_wide()),
             "artifact" => Some(Self::artifact()),
             _ => None,
         }
@@ -221,6 +222,27 @@ impl CkksParams {
         }
     }
 
+    /// Wide-ring functional set: logN=15, the smallest ring where the
+    /// four-step NTT's cache advantage is CI-gated, with a shallow chain
+    /// (α = 1 digits under a single wide special limb) so keygen stays
+    /// affordable. Drives the `tiled_hmul_speedup_vs_flat_n32768` and
+    /// `ntt_fourstep_speedup_vs_radix2_n32768` hotpath benches.
+    pub fn func_wide() -> Self {
+        Self {
+            log_n: 15,
+            l_levels: 3,
+            k_special: 1,
+            dnum: 3,
+            log_scale: 26,
+            q0_bits: 35,
+            q_bits: 26,
+            p_bits: 40,
+            montgomery_friendly: true,
+            secret_hamming: None,
+            name: "func-wide",
+        }
+    }
+
     /// Artifact set: all moduli < 2^31 so products are exact in uint64
     /// on the JAX/Pallas side. Must match python/compile/params.py.
     pub fn artifact() -> Self {
@@ -296,6 +318,7 @@ mod tests {
             CkksParams::func_default(),
             CkksParams::func_tiny(),
             CkksParams::func_boot(),
+            CkksParams::func_wide(),
             CkksParams::artifact(),
         ] {
             let back = CkksParams::by_name(p.name).expect(p.name);

@@ -15,11 +15,23 @@
 //! actually took) and **simulated FHEmem cycles** (what the batch costs
 //! on the configured accelerator model), so the metrics snapshot carries
 //! the paper's two axes side by side.
+//!
+//! **Per-tenant fairness**: the queue is segmented per tenant and the
+//! batch window drains **round-robin across tenants**, with an optional
+//! per-tenant in-flight cap ([`SchedulerConfig::max_tenant_inflight`]) —
+//! at most that many of one tenant's ops ride in a single coalesced
+//! batch (batches execute one at a time, so the per-batch share *is* the
+//! in-flight share). A chatty tenant therefore cannot monopolize a
+//! batch: its overflow waits while other tenants' requests interleave,
+//! and the count-based flush trigger only counts *eligible* ops, so a
+//! burst from one tenant does not fire a batch that the cap would then
+//! leave mostly empty. Ops deferred by the cap are reported as
+//! `fairness_deferrals` in the metrics snapshot.
 
 use crate::ckks::cipher::Ciphertext;
 use crate::coordinator::{Coordinator, MixedOp};
 use crate::util::json::Json;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -29,12 +41,16 @@ use super::ServiceError;
 /// Batch-formation and admission-control knobs.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
-    /// Flush as soon as this many requests are queued.
+    /// Flush as soon as this many *eligible* requests are queued
+    /// (eligible = counted after the per-tenant cap).
     pub max_batch: usize,
     /// Flush a partial batch once its oldest request has waited this long.
     pub max_delay: Duration,
     /// Admission control: reject submissions beyond this queue depth.
     pub max_queue: usize,
+    /// Per-tenant in-flight cap: at most this many ops from one tenant
+    /// per coalesced batch. `0` = uncapped (pure round-robin interleave).
+    pub max_tenant_inflight: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -43,6 +59,7 @@ impl Default for SchedulerConfig {
             max_batch: 8,
             max_delay: Duration::from_millis(5),
             max_queue: 64,
+            max_tenant_inflight: 0,
         }
     }
 }
@@ -57,6 +74,11 @@ pub struct SchedulerMetrics {
     pub wall_ns_total: AtomicU64,
     pub sim_cycles_total: AtomicU64,
     pub largest_batch: AtomicU64,
+    /// Ops left queued because their tenant sat at the per-tenant
+    /// in-flight cap while the formed batch still had room — the cap,
+    /// not `max_batch` truncation, held them back (fairness at work,
+    /// not an error; always 0 when uncapped).
+    pub fairness_deferrals: AtomicU64,
 }
 
 impl SchedulerMetrics {
@@ -90,6 +112,10 @@ impl SchedulerMetrics {
                 "largest_batch",
                 Json::Num(self.largest_batch.load(Ordering::Relaxed)),
             ),
+            (
+                "fairness_deferrals",
+                Json::Num(self.fairness_deferrals.load(Ordering::Relaxed)),
+            ),
             ("avg_batch_fill", Json::Float(avg_fill)),
             ("throughput_ops_per_s", Json::Float(throughput)),
         ])
@@ -102,6 +128,116 @@ struct Pending {
     op: MixedOp,
     tx: mpsc::Sender<OpResult>,
     enqueued: Instant,
+    /// Tenant identity: each tenant owns exactly one `Arc<Evaluator>`
+    /// (see `service::keystore`), so the evaluator pointer is a stable
+    /// per-tenant key without widening the submit API.
+    tenant: usize,
+}
+
+/// Per-tenant segmented queue drained round-robin across tenants.
+/// Within a tenant, strict FIFO; across tenants, the rotation order is
+/// first-arrival and tenants that contributed to a batch go to the back.
+#[derive(Default)]
+struct FairQueue {
+    /// Tenant rotation order (only tenants with queued ops appear).
+    order: VecDeque<usize>,
+    by_tenant: HashMap<usize, VecDeque<Pending>>,
+    len: usize,
+}
+
+impl FairQueue {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, p: Pending) {
+        let entry = self.by_tenant.entry(p.tenant).or_default();
+        if entry.is_empty() && !self.order.contains(&p.tenant) {
+            self.order.push_back(p.tenant);
+        }
+        entry.push_back(p);
+        self.len += 1;
+    }
+
+    /// How many queued ops could ride in one batch under `cap` (the
+    /// count the flush trigger compares against `max_batch`, so a burst
+    /// from one tenant never fires a batch the cap would leave empty).
+    fn eligible(&self, cap: usize) -> usize {
+        self.by_tenant.values().map(|q| q.len().min(cap)).sum()
+    }
+
+    /// Wait time of the oldest queued op across all tenants.
+    fn oldest_wait(&self) -> Duration {
+        self.by_tenant
+            .values()
+            .filter_map(|q| q.front().map(|p| p.enqueued.elapsed()))
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// Drain up to `max_batch` ops round-robin across tenants, at most
+    /// `cap` per tenant. Returns the batch and how many ops were held
+    /// back by the cap while the batch still had room (the fairness
+    /// deferral count).
+    fn form_batch(&mut self, max_batch: usize, cap: usize) -> (Vec<Pending>, u64) {
+        let mut batch = Vec::new();
+        let mut taken: HashMap<usize, usize> = HashMap::new();
+        'outer: loop {
+            let mut progressed = false;
+            let rotation = self.order.len();
+            for _ in 0..rotation {
+                if batch.len() >= max_batch {
+                    break 'outer;
+                }
+                let t = match self.order.pop_front() {
+                    Some(t) => t,
+                    None => break 'outer,
+                };
+                let tq = self.by_tenant.get_mut(&t).expect("tenant in order has a queue");
+                let cnt = taken.entry(t).or_insert(0);
+                if *cnt < cap {
+                    if let Some(p) = tq.pop_front() {
+                        batch.push(p);
+                        self.len -= 1;
+                        *cnt += 1;
+                        progressed = true;
+                    }
+                }
+                if tq.is_empty() {
+                    self.by_tenant.remove(&t);
+                } else {
+                    self.order.push_back(t);
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        // Fairness deferrals: ops still queued because their tenant sat
+        // at the cap *while the batch had room left* — i.e. the cap, not
+        // `max_batch` truncation, is what kept them out. A full batch
+        // reports none (uncapped round-robin would have cut them too),
+        // and uncapped runs never report any (`cap` is usize::MAX).
+        let mut deferred = 0u64;
+        if batch.len() < max_batch {
+            for (t, tq) in &self.by_tenant {
+                if taken.get(t).copied().unwrap_or(0) >= cap {
+                    deferred += tq.len() as u64;
+                }
+            }
+        }
+        (batch, deferred)
+    }
+
+    fn drain_all(&mut self) -> Vec<Pending> {
+        self.order.clear();
+        self.len = 0;
+        self.by_tenant.drain().flat_map(|(_, q)| q).collect()
+    }
 }
 
 /// The batching scheduler. Construct with [`BatchScheduler::start`];
@@ -109,7 +245,7 @@ struct Pending {
 pub struct BatchScheduler {
     coord: Arc<Coordinator>,
     cfg: SchedulerConfig,
-    queue: Mutex<VecDeque<Pending>>,
+    queue: Mutex<FairQueue>,
     notify: Condvar,
     stop: AtomicBool,
     pub metrics: SchedulerMetrics,
@@ -117,13 +253,22 @@ pub struct BatchScheduler {
 }
 
 impl BatchScheduler {
+    /// Effective per-tenant cap (`0` = uncapped).
+    fn tenant_cap(&self) -> usize {
+        if self.cfg.max_tenant_inflight == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_tenant_inflight
+        }
+    }
+
     /// Spawn the batching worker over `coord`'s bank pool + cost model.
     pub fn start(coord: Arc<Coordinator>, cfg: SchedulerConfig) -> Arc<Self> {
         assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
         let sched = Arc::new(Self {
             coord,
             cfg,
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(FairQueue::default()),
             notify: Condvar::new(),
             stop: AtomicBool::new(false),
             metrics: SchedulerMetrics::default(),
@@ -156,10 +301,12 @@ impl BatchScheduler {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(ServiceError::Backpressure);
             }
-            q.push_back(Pending {
+            let tenant = Arc::as_ptr(&op.eval) as usize;
+            q.push(Pending {
                 op,
                 tx,
                 enqueued: Instant::now(),
+                tenant,
             });
         }
         self.notify.notify_all();
@@ -179,7 +326,14 @@ impl BatchScheduler {
     }
 
     pub fn metrics_json(&self) -> String {
-        self.metrics.snapshot_json().write_pretty()
+        let mut doc = self.metrics.snapshot_json();
+        // Point-in-time queue depth rides along with the counters (lets
+        // remote clients observe admission state, e.g. the fairness e2e
+        // test waiting for a flood to be fully queued).
+        if let Json::Object(fields) = &mut doc {
+            fields.push(("queued".to_string(), Json::Num(self.queued() as u64)));
+        }
+        doc.write_pretty()
     }
 
     /// Stop accepting work, drain what's queued, join the worker.
@@ -192,7 +346,7 @@ impl BatchScheduler {
         }
         // Anything that slipped in after the worker exited gets a clean
         // rejection instead of a forever-blocked receiver.
-        let leftovers: Vec<Pending> = self.queue.lock().unwrap().drain(..).collect();
+        let leftovers: Vec<Pending> = self.queue.lock().unwrap().drain_all();
         for p in leftovers {
             let _ = p
                 .tx
@@ -201,6 +355,7 @@ impl BatchScheduler {
     }
 
     fn worker_loop(self: Arc<Self>) {
+        let cap = self.tenant_cap();
         loop {
             let batch = {
                 let mut q = self.queue.lock().unwrap();
@@ -217,10 +372,14 @@ impl BatchScheduler {
                         q = guard;
                         continue;
                     }
-                    if q.len() >= self.cfg.max_batch || stopping {
+                    // Count-triggered flush counts *eligible* ops: a
+                    // burst from one tenant beyond its cap keeps waiting
+                    // for other tenants (or the delay timer) instead of
+                    // firing a batch the cap would leave mostly empty.
+                    if q.eligible(cap) >= self.cfg.max_batch || stopping {
                         break;
                     }
-                    let waited = q.front().map(|p| p.enqueued.elapsed()).unwrap_or_default();
+                    let waited = q.oldest_wait();
                     if waited >= self.cfg.max_delay {
                         break;
                     }
@@ -228,8 +387,13 @@ impl BatchScheduler {
                     let (guard, _) = self.notify.wait_timeout(q, remaining).unwrap();
                     q = guard;
                 }
-                let take = q.len().min(self.cfg.max_batch);
-                q.drain(..take).collect::<Vec<_>>()
+                let (batch, deferred) = q.form_batch(self.cfg.max_batch, cap);
+                if deferred > 0 {
+                    self.metrics
+                        .fairness_deferrals
+                        .fetch_add(deferred, Ordering::Relaxed);
+                }
+                batch
             };
             if !batch.is_empty() {
                 self.run_batch(batch);
@@ -304,6 +468,7 @@ mod tests {
                 max_batch: 4,
                 max_delay: Duration::from_secs(5),
                 max_queue: 16,
+                max_tenant_inflight: 0,
             },
         );
         let t1 = Tenant::new(1, CkksParams::func_tiny(), 11);
@@ -359,6 +524,7 @@ mod tests {
                 max_batch: 2,
                 max_delay: Duration::from_millis(1),
                 max_queue: 0,
+                max_tenant_inflight: 0,
             },
         );
         let t = Tenant::new(1, CkksParams::func_tiny(), 5);
@@ -388,6 +554,7 @@ mod tests {
                 max_batch: 2,
                 max_delay: Duration::from_millis(300),
                 max_queue: 4,
+                max_tenant_inflight: 0,
             },
         );
         let t = Tenant::new(1, CkksParams::func_tiny(), 5);
@@ -428,6 +595,143 @@ mod tests {
             b: None,
         });
         assert!(ok.is_ok());
+        sched.shutdown();
+    }
+
+    fn pending_for(t: &Tenant, step: i64) -> Pending {
+        let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            op: MixedOp {
+                eval: t.eval.clone(),
+                kind: MixedKind::Rotate(step),
+                a: t.eval.encrypt_real(&z, 2),
+                b: None,
+            },
+            tx,
+            enqueued: Instant::now(),
+            tenant: Arc::as_ptr(&t.eval) as usize,
+        }
+    }
+
+    #[test]
+    fn fair_queue_interleaves_tenants_and_enforces_cap() {
+        let t1 = Tenant::new(1, CkksParams::func_tiny(), 7);
+        let t2 = Tenant::new(2, CkksParams::func_tiny(), 8);
+        let k1 = Arc::as_ptr(&t1.eval) as usize;
+        let k2 = Arc::as_ptr(&t2.eval) as usize;
+        let mut q = FairQueue::default();
+        // Chatty tenant 1 floods four ops before tenant 2's two arrive.
+        for step in 0..4 {
+            q.push(pending_for(&t1, step));
+        }
+        for step in 10..12 {
+            q.push(pending_for(&t2, step));
+        }
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.eligible(2), 4, "cap-limited eligible count");
+        assert_eq!(q.eligible(usize::MAX), 6);
+
+        // Window of 6 with a cap of 2: the batch stops at 4 with room
+        // left, so t1's overflow is a genuine cap deferral.
+        let (batch, deferred) = q.form_batch(6, 2);
+        // Round-robin: t1, t2, t1, t2 — the chatty tenant holds exactly
+        // its cap's share of the window, its overflow is deferred.
+        let tenants: Vec<usize> = batch.iter().map(|p| p.tenant).collect();
+        assert_eq!(tenants, vec![k1, k2, k1, k2], "interleaving");
+        assert_eq!(deferred, 2, "t1's overflow counted as deferred");
+        // FIFO within each tenant.
+        let steps: Vec<i64> = batch
+            .iter()
+            .map(|p| match p.op.kind {
+                MixedKind::Rotate(s) => s,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(steps, vec![0, 10, 1, 11]);
+        assert_eq!(q.len(), 2);
+
+        // Next window drains the deferred ops; nothing left to defer.
+        let (batch2, deferred2) = q.form_batch(6, 2);
+        assert_eq!(batch2.len(), 2);
+        assert!(batch2.iter().all(|p| p.tenant == k1));
+        assert_eq!(deferred2, 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_queue_uncapped_still_round_robins() {
+        let t1 = Tenant::new(1, CkksParams::func_tiny(), 9);
+        let t2 = Tenant::new(2, CkksParams::func_tiny(), 10);
+        let k2 = Arc::as_ptr(&t2.eval) as usize;
+        let mut q = FairQueue::default();
+        for step in 0..3 {
+            q.push(pending_for(&t1, step));
+        }
+        q.push(pending_for(&t2, 20));
+        // Uncapped: all four ride, but t2's single op is interleaved at
+        // position 1, not parked behind the flood.
+        let (batch, deferred) = q.form_batch(8, usize::MAX);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(deferred, 0);
+        assert_eq!(batch[1].tenant, k2, "round-robin position");
+    }
+
+    #[test]
+    fn chatty_tenant_cannot_monopolize_a_batch_end_to_end() {
+        // Through the real scheduler: tenant 1 floods the queue, tenant
+        // 2 submits two ops; with a window of 6 and a cap of 2 the
+        // delay-timer flush forms a 2+2 batch with room to spare — the
+        // cap (not max_batch) is what defers tenant 1's overflow, and
+        // the metric must say so.
+        let sched = BatchScheduler::start(
+            coord(),
+            SchedulerConfig {
+                max_batch: 6,
+                max_delay: Duration::from_millis(400),
+                max_queue: 16,
+                max_tenant_inflight: 2,
+            },
+        );
+        let t1 = Tenant::new(1, CkksParams::func_tiny(), 31);
+        let t2 = Tenant::new(2, CkksParams::func_tiny(), 32);
+        let z: Vec<f64> = (0..t1.ctx.encoder.slots())
+            .map(|i| 0.01 * (i % 5) as f64)
+            .collect();
+        let submit = |t: &Tenant, step: i64| {
+            sched
+                .submit(MixedOp {
+                    eval: t.eval.clone(),
+                    kind: MixedKind::Rotate(step),
+                    a: t.eval.encrypt_real(&z, 2),
+                    b: None,
+                })
+                .unwrap()
+        };
+        // Flood first: 4 ops from tenant 1. Eligible = min(4, 2) = 2 <
+        // max_batch, so no count-triggered flush can fire yet.
+        let rx1: Vec<_> = (0..4).map(|s| submit(&t1, s)).collect();
+        while sched.queued() < 4 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Tenant 2's ops arrive; eligible (4) stays below the window
+        // (6), so the delay timer flushes a partial batch interleaved
+        // 2 + 2 — with room left, proving the cap did the deferring.
+        let rx2: Vec<_> = (10..12).map(|s| submit(&t2, s)).collect();
+        for rx in rx2 {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        for rx in rx1 {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(sched.metrics.ops_executed.load(Ordering::Relaxed), 6);
+        assert_eq!(sched.metrics.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(sched.metrics.largest_batch.load(Ordering::Relaxed), 4);
+        assert_eq!(
+            sched.metrics.fairness_deferrals.load(Ordering::Relaxed),
+            2,
+            "t1's overflow deferred out of the first window"
+        );
         sched.shutdown();
     }
 

@@ -11,6 +11,8 @@
 //! two on small instances.
 
 use super::config::ArchConfig;
+use crate::mapping::layout::LayoutPlan;
+use std::sync::Arc;
 
 /// Cycle + energy pair, accumulated per breakdown category (Fig. 13).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -122,7 +124,9 @@ impl FheShape {
 }
 
 /// The §IV-A data layout: one RNS polynomial spread over a subarray group
-/// (16 subarrays = 16×16 mats).
+/// (16 subarrays = 16×16 mats). Derived from the same [`LayoutPlan`] the
+/// executable hot path stores its tiles in, so the mat geometry the model
+/// charges and the tile geometry the data actually has cannot drift.
 pub struct Layout {
     pub coeffs_per_mat: u64,
     pub rows_per_poly_per_mat: u64,
@@ -131,8 +135,14 @@ pub struct Layout {
 }
 
 pub fn layout(cfg: &ArchConfig, shape: &FheShape) -> Layout {
+    layout_from_plan(cfg, &LayoutPlan::get(shape.n()))
+}
+
+/// Mat-level geometry from the bank-tile plan: the plan's `n` spread
+/// over a 16×16 mat group, tile rows packed into 512-bit mat rows.
+pub fn layout_from_plan(cfg: &ArchConfig, plan: &LayoutPlan) -> Layout {
     let mats = 256u64; // 16×16 per group
-    let coeffs_per_mat = (shape.n() as u64 + mats - 1) / mats;
+    let coeffs_per_mat = (plan.n as u64 + mats - 1) / mats;
     let rows = (coeffs_per_mat * 64 + cfg.mat_row_bits() - 1) / cfg.mat_row_bits();
     let subarrays_per_group = 16u64;
     Layout {
@@ -145,16 +155,32 @@ pub fn layout(cfg: &ArchConfig, shape: &FheShape) -> Layout {
 
 /// Cost model over one subarray group processing one RNS polynomial
 /// (per-limb). Group-level costs scale across limbs/polys by the engine.
+///
+/// NTT/mul/keyswitch cycle counts are **derived from the
+/// [`LayoutPlan`]** — the same object whose tiles the hot path computes
+/// on: the four-step split fixes the stage partition (row pass intra-mat,
+/// column pass inter-mat) and the plan's cross-tile stages fix the
+/// inter-bank transpose traffic, replacing the previous hardcoded
+/// stage-count arithmetic.
 pub struct CostModel<'a> {
     pub cfg: &'a ArchConfig,
     pub shape: FheShape,
     pub lay: Layout,
+    /// The bank-tile plan for this shape's ring (shared with the
+    /// executable layers via the process-wide plan cache).
+    pub plan: Arc<LayoutPlan>,
 }
 
 impl<'a> CostModel<'a> {
     pub fn new(cfg: &'a ArchConfig, shape: FheShape) -> Self {
-        let lay = layout(cfg, &shape);
-        Self { cfg, shape, lay }
+        let plan = LayoutPlan::get(shape.n());
+        let lay = layout_from_plan(cfg, &plan);
+        Self {
+            cfg,
+            shape,
+            lay,
+            plan,
+        }
     }
 
     /// Row-worth of NMU arithmetic (Fig. 5): activate two operand rows,
@@ -205,17 +231,18 @@ impl<'a> CostModel<'a> {
         }
     }
 
-    /// One (i)NTT of one residue polynomial (paper §IV-C): intra-mat
-    /// stages + horizontal inter-mat + vertical inter-mat stages with
-    /// segment-dependent transfer latency.
+    /// One (i)NTT of one residue polynomial, costed from the
+    /// [`LayoutPlan`]'s four-step split (§IV-C): the row pass
+    /// (`plan.row_stages()`) is intra-mat; the column pass
+    /// (`plan.column_stages()`) moves whole rows, and the
+    /// `plan.cross_tile_stages()` of it that pair rows across bank tiles
+    /// are inter-bank transposes over the segmented HDL/MDL links.
     pub fn ntt_poly(&self) -> Breakdown {
         let cfg = self.cfg;
-        let logn = self.shape.log_n as u64;
-        let log_cpm = (self.lay.coeffs_per_mat as f64).log2() as u64;
-        let intra_stages = log_cpm.min(logn);
-        let inter_stages = logn - intra_stages; // 8 for logN=16 (4 h + 4 v)
-        let h_stages = inter_stages / 2;
-        let v_stages = inter_stages - h_stages;
+        let plan = &self.plan;
+        // Total butterfly stages = the plan's stage partition (row pass +
+        // column pass = log2 N exactly; tested in mapping::layout).
+        let total_stages = (plan.column_stages() + plan.row_stages()) as u64;
 
         // Compute: each stage does N/2 butterflies/group = one twiddle
         // mult + add/sub per pair → ~rows/2 row-ops of mult work + dynamic
@@ -226,29 +253,33 @@ impl<'a> CostModel<'a> {
         let comp_energy_per_stage = rows * self.row_op_energy(shifts);
         let mut bd = Breakdown::default();
         bd.computation = Cost::new(
-            comp_per_stage * logn as f64,
-            comp_energy_per_stage * logn as f64,
+            comp_per_stage * total_stages as f64,
+            comp_energy_per_stage * total_stages as f64,
         );
 
-        // Permutation: inter-mat stages move half the polynomial between
-        // mats over 16-bit HDL/MDL segments. Stage k of the h (v) pass
-        // has 2^k independent segments (switch-isolated, §III-B); fewer
-        // segments ⇒ serialized transfers ⇒ the paper's "slowest step
-        // drops bandwidth 16×".
+        // Permutation: the column pass moves half the rows each stage.
+        // Cross-tile stages are inter-bank transfers over 16-bit HDL/MDL
+        // segments; stage k has 2^k independent switch-isolated segments
+        // (§III-B) — fewer segments ⇒ serialized transfers ⇒ the paper's
+        // "slowest step drops bandwidth 16×". The remaining column
+        // stages stay inside a tile (plain row moves, no serialization);
+        // the row pass never moves data between mats.
         let row_xfer = cfg.mat_row_bits() / cfg.link_bits(); // 32 cycles
         let mut perm_cycles = 0.0;
-        for pass_stages in [h_stages, v_stages] {
-            for k in 0..pass_stages {
-                let segments = 1u64 << k.min(4);
-                let serial = (16 / segments).max(1);
-                perm_cycles += (rows / 2.0) * (row_xfer * serial) as f64;
-            }
+        for k in 0..plan.cross_tile_stages() {
+            let segments = 1u64 << k.min(4);
+            let serial = (16 / segments).max(1);
+            perm_cycles += (rows / 2.0) * (row_xfer * serial) as f64;
         }
-        let bits_moved =
-            (inter_stages as f64) * (self.shape.n() as f64 / 2.0) * 64.0;
+        let in_tile_moves = (plan.column_stages() - plan.cross_tile_stages()) as f64;
+        perm_cycles += in_tile_moves * (rows / 2.0) * row_xfer as f64;
+        // Inter-bank transpose traffic straight off the plan, plus the
+        // in-tile row moves at the same per-bit link energy.
+        let bits_moved = plan.transpose_bits_moved() as f64
+            + in_tile_moves * (self.shape.n() as f64 / 2.0) * 64.0;
         bd.permutation = Cost::new(perm_cycles, bits_moved * cfg.e_hdl_pj_per_bit() * 4.0);
-        // Row activations for the moved data.
-        let acts = inter_stages as f64 * rows;
+        // Row activations for the moved data (whole column pass).
+        let acts = plan.column_stages() as f64 * rows;
         bd.read_write = Cost::new(
             acts * cfg.act_pre_cycles() as f64,
             acts * cfg.e_row_act_pj() * cfg.mats_per_subarray() as f64,
@@ -301,7 +332,9 @@ impl<'a> CostModel<'a> {
         ));
         // Inter-bank movement: every output needs partial products from
         // every bank holding an input limb: ~l_in·l_out poly transfers.
-        let poly_bits = self.shape.n() as f64 * 64.0;
+        // One polynomial = the plan's full tile set (banks × tile_elems
+        // words), so the moved bits come straight from the layout.
+        let poly_bits = (self.plan.banks * self.plan.tile_elems) as f64 * 64.0;
         let total_bits = poly_bits * mults;
         if use_chain {
             // Parallel chain: banks/2 links in a pseudo-channel carry
@@ -378,6 +411,30 @@ mod tests {
         let m = model(&cfg);
         assert_eq!(m.lay.coeffs_per_mat, 256);
         assert_eq!(m.lay.rows_per_poly_per_mat, 32);
+    }
+
+    #[test]
+    fn ntt_cost_is_derived_from_the_layout_plan() {
+        // The model's stage partition and transpose traffic must be the
+        // plan's, not hardcoded: logN=16 → 8 column + 8 row stages, 4 of
+        // the column stages crossing the 16 bank tiles.
+        let cfg = ArchConfig::default();
+        let m = model(&cfg);
+        assert_eq!(m.plan.n, 1 << 16);
+        assert_eq!(m.plan.column_stages() + m.plan.row_stages(), 16);
+        assert_eq!(m.plan.cross_tile_stages(), 4);
+        assert_eq!(
+            m.plan.transpose_bits_moved(),
+            4 * (1u64 << 15) * 64,
+            "inter-bank transpose traffic off the plan"
+        );
+        let bd = m.ntt_poly();
+        assert!(bd.computation.cycles > 0.0);
+        assert!(bd.permutation.cycles > 0.0);
+        // A ring with fewer cross-tile stages must charge less
+        // permutation (same cfg, smaller N ⇒ fewer/cheaper transposes).
+        let small = CostModel::new(&cfg, FheShape::paper_lola(4));
+        assert!(small.ntt_poly().permutation.cycles < bd.permutation.cycles);
     }
 
     #[test]

@@ -26,6 +26,7 @@ fn two_tenants_coalesce_into_one_batch_and_decrypt_correctly() {
         max_batch: 4,
         max_delay: Duration::from_secs(10),
         max_queue: 16,
+        max_tenant_inflight: 0,
     });
     let addr = handle.addr;
 
@@ -98,6 +99,108 @@ fn two_tenants_coalesce_into_one_batch_and_decrypt_correctly() {
 }
 
 #[test]
+fn chatty_tenant_is_interleaved_not_monopolizing_batches() {
+    // Per-tenant fairness over TCP: tenant 1 floods four ops before
+    // tenant 2's two arrive. With a window of 6 and a per-tenant
+    // in-flight cap of 2, eligible ops (2+2) never reach the window, so
+    // the delay timer flushes a partial 2 + 2 interleaved batch with
+    // room to spare — tenant 1's overflow is deferred by the *cap*, and
+    // the fairness metric must report exactly that.
+    let (svc, handle) = spawn_service(SchedulerConfig {
+        max_batch: 6,
+        max_delay: Duration::from_millis(700),
+        max_queue: 16,
+        max_tenant_inflight: 2,
+    });
+    let addr = handle.addr;
+
+    let t1_results: Vec<Vec<f64>>;
+    let t2_results: Vec<Vec<f64>>;
+    {
+        let mut probe = ServiceClient::connect(addr, 9, CkksParams::func_tiny(), 0x9).unwrap();
+        let slots = probe.ctx.encoder.slots();
+        let zs: Vec<f64> = (0..slots).map(|i| 0.02 * ((i % 9) as f64)).collect();
+        let (tx1, rx1) = std::sync::mpsc::channel::<Vec<f64>>();
+        let (tx2, rx2) = std::sync::mpsc::channel::<Vec<f64>>();
+        std::thread::scope(|s| {
+            // The flood: four blocking ops from tenant 1.
+            for _ in 0..4 {
+                let zs = &zs;
+                let tx1 = tx1.clone();
+                s.spawn(move || {
+                    let mut c =
+                        ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 0xA11CE)
+                            .unwrap();
+                    let ct = c.encrypt(zs, 2);
+                    let out = c.rotate(&ct, 1).expect("t1 rotate");
+                    tx1.send(c.decrypt(&out)).unwrap();
+                });
+            }
+            // Wait until the whole flood is queued (eligible = 2 < 6, so
+            // nothing can flush before the delay window elapses).
+            loop {
+                let m = Json::parse(&probe.metrics().unwrap()).unwrap();
+                if m.field("queued").unwrap().as_u64().unwrap() >= 4 {
+                    break;
+                }
+                assert_eq!(
+                    m.field("batches").unwrap().as_u64().unwrap(),
+                    0,
+                    "flood must not flush alone before the delay window"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Tenant 2 arrives; the delay timer fires the 2+2 batch
+            // (eligible stays at 4, below the window of 6).
+            for _ in 0..2 {
+                let zs = &zs;
+                let tx2 = tx2.clone();
+                s.spawn(move || {
+                    let mut c = ServiceClient::connect(addr, 2, CkksParams::func_tiny(), 0xB0B)
+                        .unwrap();
+                    let ct = c.encrypt(zs, 2);
+                    let out = c.rotate(&ct, 2).expect("t2 rotate");
+                    tx2.send(c.decrypt(&out)).unwrap();
+                });
+            }
+        });
+        drop((tx1, tx2));
+        t1_results = rx1.iter().collect();
+        t2_results = rx2.iter().collect();
+
+        // Results are correct for both tenants.
+        for dec in &t1_results {
+            for i in 0..slots {
+                assert!((dec[i] - zs[(i + 1) % slots]).abs() < 1e-2);
+            }
+        }
+        for dec in &t2_results {
+            for i in 0..slots {
+                assert!((dec[i] - zs[(i + 2) % slots]).abs() < 1e-2);
+            }
+        }
+        assert_eq!(t1_results.len(), 4);
+        assert_eq!(t2_results.len(), 2);
+
+        // The interleaving: first window = 2 + 2 with room to spare
+        // (window is 6) — tenant 1 never got more than its cap into it,
+        // and its two extra ops were deferred to a second window.
+        let m = Json::parse(&probe.metrics().unwrap()).unwrap();
+        assert_eq!(m.field("ops_executed").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(m.field("batches").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(m.field("largest_batch").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(
+            m.field("fairness_deferrals").unwrap().as_u64().unwrap(),
+            2,
+            "the chatty tenant's overflow was deferred, not batched"
+        );
+    }
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
 fn unknown_tenant_and_key_conflicts_are_refused() {
     let (svc, handle) = spawn_service(SchedulerConfig::default());
     let addr = handle.addr;
@@ -132,6 +235,7 @@ fn zero_capacity_queue_backpressures_over_tcp() {
         max_batch: 4,
         max_delay: Duration::from_millis(1),
         max_queue: 0,
+        max_tenant_inflight: 0,
     });
     let mut client =
         ServiceClient::connect(handle.addr, 5, CkksParams::func_tiny(), 55).unwrap();
