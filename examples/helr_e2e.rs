@@ -1,10 +1,16 @@
 //! End-to-end driver (DESIGN.md "End-to-end validation"): homomorphic
-//! logistic-regression training in the HELR shape — encrypted features ×
-//! encrypted weights, rotation-sum dot products, polynomial sigmoid,
-//! encrypted gradient update — on synthetic data, with the decrypted loss
-//! logged per iteration, while the coordinator simultaneously costs the
-//! same trace on FHEmem ARx4-4k and reports it against the SHARP /
-//! CraterLake analytic baselines.
+//! logistic-regression training in the HELR shape — encrypted weights ×
+//! plaintext features, a hoisted rotation-sum dot product, polynomial
+//! sigmoid, encrypted gradient — on synthetic data, with the decrypted
+//! loss logged per iteration.
+//!
+//! This is also the flagship consumer of `fhemem-compile`: every
+//! iteration is built twice — once hand-written against the evaluator,
+//! once as a `program::Builder` graph compiled through CSE + rotation
+//! hoisting + auto-rescale and executed tiled through the coordinator —
+//! and the two gradients must agree **bit for bit**. The coordinator
+//! simultaneously costs the compiled run on FHEmem ARx4-4k, reported
+//! against the SHARP / CraterLake analytic baselines.
 //!
 //! ```sh
 //! cargo run --release --example helr_e2e
@@ -12,22 +18,25 @@
 
 use fhemem::baselines::asic;
 use fhemem::ckks::linear::{chebyshev_fit, eval_chebyshev};
+use fhemem::ckks::{CkksContext, Evaluator, KeyChain};
 use fhemem::coordinator::Coordinator;
 use fhemem::params::CkksParams;
+use fhemem::program::{compile, Builder, PassOptions};
 use fhemem::sim::{simulate, ArchConfig, SimOptions};
 use fhemem::trace::workloads;
 use fhemem::util::check::SplitMix64;
-use std::path::Path;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 fn main() {
-    let coord = Coordinator::new(
-        CkksParams::func_default(),
-        ArchConfig::default(),
-        Some(Path::new("artifacts")),
-    );
+    let coord = Coordinator::new(CkksParams::func_default(), ArchConfig::default(), None);
     println!("backend: {}", coord.backend_name());
-    let ev = &coord.eval;
-    let slots = coord.ctx.encoder.slots();
+    // The workload's own key material (shared by the hand-written path
+    // and the compiled program, so outputs are comparable bit-for-bit).
+    let ctx = CkksContext::new(CkksParams::func_default());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 0x4E15));
+    let ev = Arc::new(Evaluator::new(ctx.clone(), chain, 0x4E16));
+    let slots = ev.ctx.encoder.slots();
 
     // ---- synthetic binary-classification data, packed across slots ----
     let features = 16usize;
@@ -50,11 +59,49 @@ fn main() {
         }
     }
 
-    // encrypted weights (replicated per sample block), plaintext features
     let mut w_plain = vec![0.0f64; features];
     let sigmoid_coeffs = chebyshev_fit(|t| 1.0 / (1.0 + (-2.0 * t).exp()), 4);
     let lr = 0.5;
     let iters = 4; // level budget: each iteration costs ~4 levels
+
+    // ---- one HELR iteration as a compiled program ----
+    let program = {
+        let mut b = Builder::new();
+        let w = b.input("w");
+        let xw = b.mul_plain(w, x.clone());
+        let dot = b.rotate_sum(xw, features); // log-tree; hoisted by the planner
+        let pred = b.chebyshev(dot, sigmoid_coeffs.clone());
+        let err = b.sub_plain_vec(pred, y.clone());
+        let grad = b.mul_plain(err, x.clone());
+        b.output("grad", grad);
+        b.output("pred", pred);
+        b.build().expect("HELR graph builds")
+    };
+    let level = ev.ctx.l();
+    let inputs_meta: HashMap<String, (usize, f64)> =
+        HashMap::from([("w".to_string(), (level, ev.ctx.scale()))]);
+    let compiled = compile(&program, &ev.ctx, &inputs_meta, &PassOptions::default())
+        .expect("HELR program compiles");
+    let unhoisted = compile(
+        &program,
+        &ev.ctx,
+        &inputs_meta,
+        &PassOptions {
+            hoist_rotations: false,
+            ..PassOptions::default()
+        },
+    )
+    .expect("unhoisted compile");
+    println!(
+        "program: {} nodes in {} waves; keyswitch pipelines {} hoisted vs {} unhoisted \
+         ({:.1}x fewer)",
+        compiled.program.nodes.len(),
+        compiled.waves.len(),
+        compiled.counts.keyswitch_invocations,
+        unhoisted.counts.keyswitch_invocations,
+        unhoisted.counts.keyswitch_invocations as f64
+            / compiled.counts.keyswitch_invocations as f64,
+    );
 
     println!("iter   loss(enc)   loss(plain)  sim-us");
     for it in 0..iters {
@@ -62,32 +109,38 @@ fn main() {
         // re-encrypts between bootstrap sections; our depth budget maps
         // one iteration per refresh)
         let w_packed: Vec<f64> = (0..slots).map(|i| w_plain[i % features]).collect();
-        let cw = ev.encrypt_real(&w_packed, coord.ctx.l());
+        let cw = ev.encrypt_real(&w_packed, level);
 
-        // dot = rotate-sum(x ⊙ w) within each feature block
-        let xw = {
-            let t = ev.mul_plain(&cw, &x);
-            coord.metrics.ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            t
-        };
-        let mut dot = xw.clone();
-        let mut step = 1usize;
-        while step < features {
-            let r = coord.rotate(&dot, step as i64);
-            dot = ev.add(&dot, &r);
-            step <<= 1;
+        // ---- hand-written path (the conformance baseline) ----
+        let xw = ev.mul_plain(&cw, &x);
+        let dot = ev.rotate_sum_hoisted(&xw, features);
+        let pred_hand = eval_chebyshev(&ev, &dot, &sigmoid_coeffs);
+        let err = ev.sub_plain(&pred_hand, &y);
+        let grad_hand = ev.mul_plain(&err, &x);
+
+        // ---- compiled path: same ciphertext through the planner +
+        // tiled mixed-batch executor ----
+        let run = compiled
+            .execute(&coord, &ev, &HashMap::from([("w".to_string(), cw)]))
+            .expect("compiled HELR executes");
+        let mut grad = None;
+        let mut pred = None;
+        for (name, ct) in &run.outputs {
+            match name.as_str() {
+                "grad" => grad = Some(ct.clone()),
+                "pred" => pred = Some(ct.clone()),
+                _ => {}
+            }
         }
-        // sigmoid(dot) via homomorphic Chebyshev
-        let pred = eval_chebyshev(ev, &dot, &sigmoid_coeffs);
-        // error = pred - y ; gradient slot f = err ⊙ x (reduced later)
-        let y_enc = ev.encode_plain(&y, pred.level, pred.scale);
-        let mut err = pred.clone();
-        err.c0.sub_assign(&{
-            let mut p = y_enc.clone();
-            p.to_ntt();
-            p
-        });
-        let grad = ev.mul_plain(&err, &x);
+        let (grad, pred) = (grad.expect("grad output"), pred.expect("pred output"));
+        assert_eq!(
+            grad.c0.data, grad_hand.c0.data,
+            "compiled gradient diverged from hand-written (c0)"
+        );
+        assert_eq!(
+            grad.c1.data, grad_hand.c1.data,
+            "compiled gradient diverged from hand-written (c1)"
+        );
 
         // decrypt to update weights (client-side step, as in HELR's
         // per-refresh protocol) and log the loss

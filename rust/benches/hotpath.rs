@@ -11,7 +11,9 @@
 //! cargo bench --bench hotpath -- --json BENCH_hotpath.json
 //! ```
 
+use fhemem::ckks::linear::eval_chebyshev;
 use fhemem::ckks::{Ciphertext, CkksContext, Evaluator, KeyChain};
+use fhemem::coordinator::Coordinator;
 use fhemem::mapping::LayoutPlan;
 use fhemem::math::ntt::{naive_forward, naive_inverse, NttContext};
 use fhemem::math::primes::ntt_primes;
@@ -275,6 +277,96 @@ fn bench_tiled_hmul_vs_flat(records: &mut Vec<Record>) -> f64 {
     speedup
 }
 
+/// One HELR iteration, hand-written vs `fhemem-compile`: the compiled
+/// path goes Builder graph → CSE + rotation hoisting + auto-rescale →
+/// tiled mixed-batch execution on the coordinator. Returns
+/// `(compiled_helr_speedup_vs_handwritten, hoisted_keyswitch_reduction_helr)`;
+/// CI requires the first to be present and gates the second > 1.0 (the
+/// planner must strictly reduce keyswitch pipelines on the HELR graph).
+fn bench_compiled_helr(records: &mut Vec<Record>) -> (f64, f64) {
+    use fhemem::program::{compile, Builder, PassOptions};
+    use std::collections::HashMap;
+    let coord = Coordinator::new(CkksParams::func_tiny(), ArchConfig::default(), None);
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 0xBE7C));
+    let ev = Arc::new(Evaluator::new(ctx.clone(), chain, 0xBE7D));
+    let slots = ctx.encoder.slots();
+    let features = 16usize;
+    let x: Vec<f64> = (0..slots).map(|i| 0.05 * ((i % 9) as f64 - 4.0)).collect();
+    let y: Vec<f64> = (0..slots).map(|i| ((i / features) % 2) as f64).collect();
+    let sigmoid = vec![0.5, 0.25]; // degree-1 fit fits func_tiny's levels
+    let level = ctx.l();
+    let w: Vec<f64> = (0..slots).map(|i| 0.02 * ((i % 7) as f64 - 3.0)).collect();
+    let cw = ev.encrypt_real(&w, level);
+
+    let prog = {
+        let mut b = Builder::new();
+        let win = b.input("w");
+        let xw = b.mul_plain(win, x.clone());
+        let dot = b.rotate_sum(xw, features);
+        let pred = b.chebyshev(dot, sigmoid.clone());
+        let err = b.sub_plain_vec(pred, y.clone());
+        let grad = b.mul_plain(err, x.clone());
+        b.output("grad", grad);
+        b.build().expect("HELR graph")
+    };
+    let meta = HashMap::from([("w".to_string(), (level, ctx.scale()))]);
+    let compiled = compile(&prog, &ctx, &meta, &PassOptions::default()).expect("compile");
+    let unhoisted = compile(
+        &prog,
+        &ctx,
+        &meta,
+        &PassOptions {
+            hoist_rotations: false,
+            ..PassOptions::default()
+        },
+    )
+    .expect("compile unhoisted");
+    let reduction = unhoisted.counts.keyswitch_invocations as f64
+        / compiled.counts.keyswitch_invocations.max(1) as f64;
+    println!(
+        "    -> HELR keyswitch pipelines: {} unhoisted vs {} hoisted ({reduction:.1}x reduction)",
+        unhoisted.counts.keyswitch_invocations, compiled.counts.keyswitch_invocations
+    );
+
+    // Bit-identity first (and key-cache warm-up for both paths).
+    let handwritten = |cw: &Ciphertext| {
+        let xw = ev.mul_plain(cw, &x);
+        let dot = ev.rotate_sum_hoisted(&xw, features);
+        let pred = eval_chebyshev(&ev, &dot, &sigmoid);
+        let err = ev.sub_plain(&pred, &y);
+        ev.mul_plain(&err, &x)
+    };
+    let want = handwritten(&cw);
+    let inputs = HashMap::from([("w".to_string(), cw.clone())]);
+    let run = compiled.execute(&coord, &ev, &inputs).expect("compiled run");
+    assert_eq!(
+        run.outputs[0].1.c0.data, want.c0.data,
+        "compiled HELR diverged from hand-written"
+    );
+
+    let s_hand = bench_fn("helr iteration hand-written (func_tiny)", || {
+        std::hint::black_box(handwritten(&cw));
+    });
+    let s_comp = bench_fn("helr iteration compiled program (func_tiny)", || {
+        std::hint::black_box(compiled.execute(&coord, &ev, &inputs).expect("compiled run"));
+    });
+    let speedup = if s_comp.median_ns() > 0.0 {
+        s_hand.median_ns() / s_comp.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> compiled HELR {speedup:.2}x vs hand-written");
+    records.push(Record {
+        name: "helr compiled-vs-handwritten func_tiny (speedup field = vs handwritten)"
+            .to_string(),
+        threads: fhemem::parallel::pool().threads(),
+        median_ns: s_comp.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    (speedup, reduction)
+}
+
 /// The serving layer end to end (minus TCP): two tenants' ops flow
 /// through keystore lookup + the admission-controlled batching scheduler
 /// + mixed-batch bank-pool execution. The returned ops/s figure is the
@@ -360,6 +452,8 @@ fn write_json(
     fourstep_speedup: f64,
     tiled_hmul_speedup: f64,
     service_ops_per_s: f64,
+    compiled_helr_speedup: f64,
+    hoisted_ks_reduction: f64,
 ) {
     let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let results = Json::Array(
@@ -394,6 +488,14 @@ fn write_json(
         (
             "service_batch_throughput_ops_per_s",
             Json::Float(service_ops_per_s),
+        ),
+        (
+            "compiled_helr_speedup_vs_handwritten",
+            Json::Float(compiled_helr_speedup),
+        ),
+        (
+            "hoisted_keyswitch_reduction_helr",
+            Json::Float(hoisted_ks_reduction),
         ),
         ("results", results),
     ]);
@@ -443,6 +545,10 @@ fn main() {
     // keystore + scheduler + mixed-batch coordinator path.
     let service_ops_per_s = bench_service_throughput(&mut records);
 
+    // fhemem-compile: one HELR iteration as a compiled program vs the
+    // hand-written evaluator path (CI gates the keyswitch reduction).
+    let (compiled_helr_speedup, hoisted_ks_reduction) = bench_compiled_helr(&mut records);
+
     // CKKS ops at func_default (logN=12, L=8, dnum=4).
     let ctx = CkksContext::new(CkksParams::func_default());
     let chain = Arc::new(KeyChain::new(ctx.clone(), 1));
@@ -482,6 +588,8 @@ fn main() {
             fourstep_speedup,
             tiled_hmul_speedup,
             service_ops_per_s,
+            compiled_helr_speedup,
+            hoisted_ks_reduction,
         );
     }
 }

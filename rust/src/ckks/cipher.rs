@@ -4,7 +4,9 @@
 
 use super::complex::C64;
 use super::keys::{decrypt_poly, encrypt_poly, KeyChain, KeyTag};
-use super::keyswitch::{key_switch, key_switch_tiled};
+use super::keyswitch::{
+    ext_mods, hoisted_decompose, key_switch, key_switch_tiled, mod_down, ExtPoly,
+};
 use super::CkksContext;
 use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
 use crate::math::poly::{Domain, RnsPoly};
@@ -278,6 +280,15 @@ impl Evaluator {
         self.add_plain(a, &p)
     }
 
+    /// Subtract a plaintext slot vector, encoded at the ciphertext's own
+    /// level and scale (the HELR residual step `pred − y`).
+    pub fn sub_plain(&self, a: &Ciphertext, z: &[f64]) -> Ciphertext {
+        let p = self.encode_plain(z, a.level, a.scale);
+        let mut out = a.clone();
+        out.c0.sub_assign(&p);
+        out
+    }
+
     /// Multiply by an encoded plaintext (scale multiplies; no rescale).
     pub fn mul_plain_no_rescale(&self, a: &Ciphertext, p: &RnsPoly, p_scale: f64) -> Ciphertext {
         assert_eq!(p.limbs, a.level);
@@ -408,6 +419,84 @@ impl Evaluator {
             step <<= 1;
         }
         acc
+    }
+
+    /// [`Self::rotate_sum`] in **hoisted-decompose** form: the same value
+    /// `Σ_{i=0}^{w-1} rot(a, i)` (for power-of-two `width`, exactly what
+    /// the log-step tree computes), but with the key-switch work
+    /// restructured the way the program planner's rotation-hoisting pass
+    /// assumes — `c1` is digit-decomposed and ModUp-extended **once**,
+    /// each rotation then only permutes the cached extended digits
+    /// (`ExtPoly::automorphism`), transforms and inner-products them with
+    /// its own Galois key, all rotations accumulate in the extended basis,
+    /// and a **single** ModDown finishes the group. One ModUp + one
+    /// ModDown for the whole reduction instead of `log2(width)` of each:
+    /// the `sim/cost` keyswitch reduction the CI bench gate pins.
+    ///
+    /// The output decrypts to the same slots as [`Self::rotate_sum`] but
+    /// is not bit-identical to it — accumulating before ModDown rounds
+    /// once instead of per rotation (a different, equally valid
+    /// ciphertext of the same message).
+    pub fn rotate_sum_hoisted(&self, a: &Ciphertext, width: usize) -> Ciphertext {
+        assert!(
+            width.is_power_of_two(),
+            "hoisted rotate-sum needs a power-of-two width, got {width}"
+        );
+        assert!(
+            width <= self.ctx.encoder.slots(),
+            "hoisted rotate-sum width {width} exceeds slot count"
+        );
+        if width <= 1 {
+            return a.clone();
+        }
+        let level = a.level;
+        let n = self.ctx.n();
+        // Galois keys for every step 1..width (the hoisting tradeoff:
+        // more key material, far less BConv work per operand).
+        let gals: Vec<usize> = (1..width)
+            .map(|s| RnsPoly::rotation_to_galois(s as i64, n))
+            .collect();
+        let evks: Vec<_> = gals
+            .iter()
+            .map(|&k| self.chain.eval_key(level, KeyTag::Galois(k)))
+            .collect();
+        // One decomposition + ModUp of c1 for the whole group (the digit
+        // scalars and ModUp tables depend only on the level, so any of
+        // the group's keys can supply them).
+        let mut d = a.c1.clone();
+        d.to_coeff();
+        let decomp = hoisted_decompose(&self.ctx, &d, &evks[0]);
+        let mods = ext_mods(&self.ctx, level);
+        let mut acc0 = ExtPoly::zero(&self.ctx, mods.clone(), Domain::Ntt);
+        let mut acc1 = ExtPoly::zero(&self.ctx, mods, Domain::Ntt);
+        let mut c0 = a.c0.clone();
+        c0.to_coeff();
+        // Identity term (i = 0) seeds the sums.
+        let mut c0_sum = c0.clone();
+        for (i, evk) in evks.iter().enumerate() {
+            let k = gals[i];
+            for (ext_d, digit) in decomp.iter().zip(&evk.digits) {
+                let mut ext = ext_d.automorphism(&self.ctx, k);
+                ext.to_ntt(&self.ctx);
+                ext.mul_acc_into(&self.ctx, &digit.b, &mut acc0);
+                ext.mul_acc_into(&self.ctx, &digit.a, &mut acc1);
+            }
+            c0_sum.add_assign(&c0.automorphism(k));
+        }
+        // One shared ModDown per component for the whole group.
+        let ks0 = mod_down(&self.ctx, acc0, &evks[0]);
+        let ks1 = mod_down(&self.ctx, acc1, &evks[0]);
+        c0_sum.to_ntt();
+        let mut out0 = c0_sum;
+        out0.add_assign(&ks0);
+        let mut out1 = a.c1.clone();
+        out1.add_assign(&ks1);
+        Ciphertext {
+            c0: out0,
+            c1: out1,
+            level,
+            scale: a.scale,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -562,6 +651,46 @@ impl Evaluator {
     /// HMul on tiles: tensor + relinearize + rescale.
     pub fn mul_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
         self.rescale_tiled(&self.mul_no_rescale_tiled(a, b))
+    }
+
+    /// Multiply by a plaintext slot vector on tiles, no rescale: the
+    /// plaintext is encoded flat at `(a.level, pt_scale)` — bit-identical
+    /// to the flat [`Self::mul_plain_no_rescale`] path — then tiled (a
+    /// memcpy) for the pointwise product.
+    pub fn mul_plain_no_rescale_tiled(
+        &self,
+        a: &TiledCiphertext,
+        z: &[f64],
+        pt_scale: f64,
+    ) -> TiledCiphertext {
+        let p = self.encode_plain(z, a.level, pt_scale);
+        let pt = TiledRnsPoly::from_flat(&p);
+        let mut out = a.clone();
+        out.c0.mul_assign(&pt);
+        out.c1.mul_assign(&pt);
+        out.scale = a.scale * pt_scale;
+        out
+    }
+
+    /// `ct ± plain` on tiles: the plaintext vector is encoded at the
+    /// ciphertext's level and `pt_scale` and added to (or, with `negate`,
+    /// subtracted from) `c0` only.
+    pub fn add_plain_tiled(
+        &self,
+        a: &TiledCiphertext,
+        z: &[f64],
+        pt_scale: f64,
+        negate: bool,
+    ) -> TiledCiphertext {
+        let p = self.encode_plain(z, a.level, pt_scale);
+        let pt = TiledRnsPoly::from_flat(&p);
+        let mut out = a.clone();
+        if negate {
+            out.c0.sub_assign(&pt);
+        } else {
+            out.c0.add_assign(&pt);
+        }
+        out
     }
 
     /// Homomorphic slot rotation on tiles.
@@ -747,6 +876,61 @@ mod tests {
         assert_eq!(qu.level, 1);
         let want: Vec<f64> = z.iter().map(|x| x.powi(4)).collect();
         close(&ev.decrypt(&qu), &want, 5e-2, "x^4");
+    }
+
+    #[test]
+    fn hoisted_rotate_sum_matches_tree_decryption() {
+        // Same message as the log-step tree (one shared ModUp/ModDown for
+        // the whole group), different rounding — decrypted slots agree to
+        // noise precision.
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots)
+            .map(|i| 0.01 * ((i % 11) as f64 - 5.0))
+            .collect();
+        let ct = ev.encrypt_real(&z, 3);
+        for width in [2usize, 8, 16] {
+            let tree = ev.rotate_sum(&ct, width);
+            let hoisted = ev.rotate_sum_hoisted(&ct, width);
+            assert_eq!(hoisted.level, tree.level);
+            assert!((hoisted.scale - tree.scale).abs() < 1e-9);
+            let dt = ev.decrypt(&tree);
+            let dh = ev.decrypt(&hoisted);
+            for i in 0..slots {
+                assert!(
+                    (dt[i].re - dh[i].re).abs() < 5e-3,
+                    "width {width} slot {i}: tree {} vs hoisted {}",
+                    dt[i].re,
+                    dh[i].re
+                );
+            }
+        }
+        // Width 1 is the identity.
+        let one = ev.rotate_sum_hoisted(&ct, 1);
+        assert_eq!(one.c0.data, ct.c0.data);
+        assert_eq!(one.c1.data, ct.c1.data);
+    }
+
+    #[test]
+    fn tiled_plain_ops_bit_identical_to_flat() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 9) as f64).collect();
+        let w: Vec<f64> = (0..slots).map(|i| 0.01 * ((i + 2) % 7) as f64).collect();
+        let ct = ev.encrypt_real(&z, 3);
+        let scale = ev.ctx.scale();
+        // Pmul (no rescale).
+        let p = ev.encode_plain(&w, ct.level, scale);
+        let flat = ev.mul_plain_no_rescale(&ct, &p, scale);
+        let tiled = ev.mul_plain_no_rescale_tiled(&ct.to_tiled(), &w, scale).to_flat();
+        assert_eq!(tiled.c0.data, flat.c0.data);
+        assert_eq!(tiled.c1.data, flat.c1.data);
+        assert!((tiled.scale - flat.scale).abs() < 1e-9);
+        // SubPlain at the ciphertext's scale.
+        let flat_sub = ev.sub_plain(&ct, &w);
+        let tiled_sub = ev.add_plain_tiled(&ct.to_tiled(), &w, ct.scale, true).to_flat();
+        assert_eq!(tiled_sub.c0.data, flat_sub.c0.data);
+        assert_eq!(tiled_sub.c1.data, flat_sub.c1.data);
     }
 
     #[test]

@@ -107,11 +107,41 @@ impl KeyChain {
             level,
             &mut sampler,
         ));
+        // First insert wins — a racing generation must not replace a key
+        // another path (generation or wire upload) already published, or
+        // key material would silently rotate under queued work.
         self.cache
             .lock()
             .unwrap()
-            .insert((level, tag), key.clone());
-        key
+            .entry((level, tag))
+            .or_insert(key)
+            .clone()
+    }
+
+    /// Install an externally provided key-switching key (the streaming
+    /// wire-upload path — see `service::wire`'s `EvalKeyFrame`). First
+    /// install wins and later generation hits the cache, so a tenant's
+    /// key material for a `(level, tag)` never silently rotates under
+    /// queued work; returns the key that ended up installed.
+    pub fn install_eval_key(
+        &self,
+        level: usize,
+        tag: KeyTag,
+        key: Arc<EvalKey>,
+    ) -> Arc<EvalKey> {
+        assert_eq!(key.level, level, "installed key level mismatch");
+        self.cache
+            .lock()
+            .unwrap()
+            .entry((level, tag))
+            .or_insert(key)
+            .clone()
+    }
+
+    /// Whether a key for `(level, tag)` is already materialised (without
+    /// generating one).
+    pub fn has_eval_key(&self, level: usize, tag: KeyTag) -> bool {
+        self.cache.lock().unwrap().contains_key(&(level, tag))
     }
 
     /// Number of keys currently materialised (test/metrics helper).

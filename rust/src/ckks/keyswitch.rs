@@ -67,6 +67,24 @@ impl ExtPoly {
         self.domain = Domain::Coeff;
     }
 
+    /// Galois automorphism X → X^k (k odd) over every extended row, in
+    /// coefficient domain — the per-rotation step of hoisted key
+    /// switching (the decomposition is computed once, then permuted per
+    /// Galois element). Same index map as [`RnsPoly::automorphism`].
+    ///
+    /// [`RnsPoly::automorphism`]: crate::math::poly::RnsPoly::automorphism
+    pub fn automorphism(&self, ctx: &CkksContext, k: usize) -> ExtPoly {
+        assert_eq!(self.domain, Domain::Coeff, "automorphism in coeff domain");
+        let n = ctx.n();
+        assert!(k % 2 == 1 && k < 2 * n);
+        let mut out = ExtPoly::zero(ctx, self.mods.clone(), Domain::Coeff);
+        for (r, &idx) in self.mods.iter().enumerate() {
+            let q = ctx.basis.q(idx);
+            crate::math::poly::automorphism_row(&self.rows[r], &mut out.rows[r], k, q);
+        }
+        out
+    }
+
     /// acc += other ⊙ self (pointwise, NTT domain), row-aligned.
     /// Barrett multiply — the key-switch inner-product hot loop, fanned
     /// out limb-parallel on the bank pool.
@@ -139,7 +157,7 @@ impl EvalKey {
         let mods = ext_mods(ctx, level);
         let n = ctx.n();
         let num_digits = (level + alpha - 1) / alpha;
-        let mut digits = Vec::with_capacity(num_digits);
+        let mut gadget = Vec::with_capacity(num_digits);
         for t in 0..num_digits {
             let lo = t * alpha;
             let hi = ((t + 1) * alpha).min(level);
@@ -178,6 +196,35 @@ impl EvalKey {
                     );
                 }
             }
+            gadget.push((b, a));
+        }
+        Self::from_gadget(ctx, level, gadget)
+    }
+
+    /// Assemble a key-switching key from externally supplied gadget
+    /// ciphertexts — the streaming-upload path (`service::wire` ships the
+    /// `(b_t, a_t)` digit pairs; everything else here is derived from the
+    /// context and level alone and carries no key material). `generate`
+    /// funnels through this too, so an uploaded key behaves identically
+    /// to a locally generated one.
+    pub fn from_gadget(
+        ctx: &Arc<CkksContext>,
+        level: usize,
+        gadget: Vec<(ExtPoly, ExtPoly)>,
+    ) -> Self {
+        assert!(level >= 1 && level <= ctx.l());
+        let alpha = ctx.params.digit_limbs();
+        let mods = ext_mods(ctx, level);
+        let num_digits = (level + alpha - 1) / alpha;
+        assert_eq!(gadget.len(), num_digits, "gadget digit count mismatch");
+        let mut digits = Vec::with_capacity(num_digits);
+        for (t, (b, a)) in gadget.into_iter().enumerate() {
+            assert_eq!(b.mods, mods, "gadget b over wrong extended basis");
+            assert_eq!(a.mods, mods, "gadget a over wrong extended basis");
+            assert_eq!(b.domain, Domain::Ntt, "gadget b must be NTT domain");
+            assert_eq!(a.domain, Domain::Ntt, "gadget a must be NTT domain");
+            let lo = t * alpha;
+            let hi = ((t + 1) * alpha).min(level);
             // --- ModUp precomputation ---
             let digit_mods: Vec<u64> = (lo..hi).map(|j| ctx.basis.q(j)).collect();
             let other_rows: Vec<usize> = (0..mods.len())
@@ -241,6 +288,50 @@ impl EvalKey {
     }
 }
 
+/// Max centered residual of a gadget digit against its expected message:
+/// `b + a·s − [P·(Q_l/D_t)]·s'` over the extended basis (all NTT
+/// domain), brought back to coefficients. For a well-formed key this is
+/// exactly the encryption noise `e` (tiny); for arbitrary residues it is
+/// uniform (≈ q/4). The serving layer uses it to refuse uploaded key
+/// material that is not actually keyed to the tenant's own secret —
+/// anyone can open a TCP connection, so this is what keeps a stranger's
+/// `EvalKeyFrame` from silently corrupting another tenant's results.
+pub fn gadget_digit_residual(
+    ctx: &Arc<CkksContext>,
+    sk: &SecretKey,
+    s_prime_full: &RnsPoly,
+    level: usize,
+    range: (usize, usize),
+    b: &ExtPoly,
+    a: &ExtPoly,
+) -> u64 {
+    let mods = ext_mods(ctx, level);
+    assert_eq!(b.mods, mods, "gadget b over wrong extended basis");
+    assert_eq!(a.mods, mods, "gadget a over wrong extended basis");
+    assert_eq!(b.domain, Domain::Ntt);
+    assert_eq!(a.domain, Domain::Ntt);
+    let msg = evk_message_scalars(ctx, level, range, &mods);
+    let n = ctx.n();
+    let mut worst = 0u64;
+    for (r, &idx) in mods.iter().enumerate() {
+        let q = ctx.basis.q(idx);
+        let s_row = &sk.s_full.data[idx];
+        let sp_row = &s_prime_full.data[idx];
+        let mut res: Vec<u64> = (0..n)
+            .map(|c| {
+                let a_s = mul_mod(a.rows[r][c], s_row[c], q);
+                let m_sp = mul_mod(msg[r], sp_row[c], q);
+                sub_mod(add_mod(b.rows[r][c], a_s, q), m_sp, q)
+            })
+            .collect();
+        ctx.basis.ntt[idx].inverse(&mut res);
+        for &v in &res {
+            worst = worst.max(v.min(q - v));
+        }
+    }
+    worst
+}
+
 /// ModDown: divide an extended-basis poly by P, returning a prefix poly
 /// over `Q_l`. Input NTT or coeff; output NTT domain.
 pub fn mod_down(ctx: &CkksContext, mut ext: ExtPoly, evk: &EvalKey) -> RnsPoly {
@@ -262,6 +353,49 @@ pub fn mod_down(ctx: &CkksContext, mut ext: ExtPoly, evk: &EvalKey) -> RnsPoly {
     out
 }
 
+/// The hoisted ("decompose once") half of key switching: scale every
+/// digit of `d_coeff` (coefficient domain) by its gadget inverse factor
+/// and ModUp-extend it to the full `Q_l·P` basis, returning one
+/// coefficient-domain [`ExtPoly`] per digit.
+///
+/// [`key_switch`] is this + per-digit NTT + gadget inner product +
+/// ModDown. Hoisted rotation groups (`Evaluator::rotate_sum_hoisted`)
+/// reuse the decomposition across many Galois keys at the same level —
+/// the digit scalars and ModUp tables depend only on the level, never on
+/// the key's target — paying the BConv once per *operand* instead of
+/// once per rotation.
+pub fn hoisted_decompose(ctx: &CkksContext, d_coeff: &RnsPoly, evk: &EvalKey) -> Vec<ExtPoly> {
+    assert_eq!(d_coeff.domain, Domain::Coeff, "decompose in coeff domain");
+    assert_eq!(d_coeff.limbs, evk.level, "digit decomposition level mismatch");
+    let mods = ext_mods(ctx, evk.level);
+    let n = ctx.n();
+    evk.digits
+        .iter()
+        .map(|digit| {
+            let (lo, hi) = digit.range;
+            // Scale digit residues by the gadget inverse factor.
+            let scaled: Vec<Vec<u64>> = (lo..hi)
+                .map(|j| {
+                    let q = ctx.basis.q(j);
+                    let s = digit.digit_scal[j - lo];
+                    d_coeff.data[j].iter().map(|&v| mul_mod(v, s, q)).collect()
+                })
+                .collect();
+            // ModUp: extend to every other modulus.
+            let converted = digit.mod_up.convert_poly(&scaled, n);
+            // Assemble the extended poly (coeff domain).
+            let mut ext = ExtPoly::zero(ctx, mods.clone(), Domain::Coeff);
+            for (j, row) in (lo..hi).zip(scaled) {
+                ext.rows[j] = row;
+            }
+            for (&r, row) in digit.other_rows.iter().zip(converted) {
+                ext.rows[r] = row;
+            }
+            ext
+        })
+        .collect()
+}
+
 /// Key switch `d` (limbs = evk.level) from the evk's source key to `s`.
 /// Returns `(ks0, ks1)` in NTT domain such that
 /// `ks0 + ks1·s ≈ d·s'` (mod Q_l).
@@ -271,31 +405,11 @@ pub fn key_switch(ctx: &CkksContext, d: &RnsPoly, evk: &EvalKey) -> (RnsPoly, Rn
     let mut d_coeff = d.clone();
     d_coeff.to_coeff();
     let mods = ext_mods(ctx, level);
-    let n = ctx.n();
 
     let mut acc0 = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
-    let mut acc1 = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+    let mut acc1 = ExtPoly::zero(ctx, mods, Domain::Ntt);
 
-    for digit in &evk.digits {
-        let (lo, hi) = digit.range;
-        // Scale digit residues by the gadget inverse factor.
-        let scaled: Vec<Vec<u64>> = (lo..hi)
-            .map(|j| {
-                let q = ctx.basis.q(j);
-                let s = digit.digit_scal[j - lo];
-                d_coeff.data[j].iter().map(|&v| mul_mod(v, s, q)).collect()
-            })
-            .collect();
-        // ModUp: extend to every other modulus.
-        let converted = digit.mod_up.convert_poly(&scaled, n);
-        // Assemble the extended poly (coeff domain).
-        let mut ext = ExtPoly::zero(ctx, mods.clone(), Domain::Coeff);
-        for (j, row) in (lo..hi).zip(scaled) {
-            ext.rows[j] = row;
-        }
-        for (&r, row) in digit.other_rows.iter().zip(converted) {
-            ext.rows[r] = row;
-        }
+    for (digit, mut ext) in evk.digits.iter().zip(hoisted_decompose(ctx, &d_coeff, evk)) {
         ext.to_ntt(ctx);
         // Inner product with the gadget ciphertext.
         ext.mul_acc_into(ctx, &digit.b, &mut acc0);
@@ -562,6 +676,98 @@ mod tests {
         let err = out.max_centered_diff(&expect);
         assert!(err <= 1, "ModDown exactness violated: err {err}");
         let _ = chain;
+    }
+
+    #[test]
+    fn from_gadget_rebuilds_bit_identical_key() {
+        // The upload path: strip a generated key down to its gadget
+        // ciphertexts, rebuild via from_gadget, and require bit-identical
+        // key-switch outputs (the derived tables carry no key material).
+        let (ctx, chain) = setup();
+        let level = 3usize;
+        let evk = chain.eval_key(level, KeyTag::Relin);
+        let gadget: Vec<(ExtPoly, ExtPoly)> = evk
+            .digits
+            .iter()
+            .map(|d| (d.b.clone(), d.a.clone()))
+            .collect();
+        let rebuilt = EvalKey::from_gadget(&ctx, level, gadget);
+        let mut sampler = Sampler::new(888);
+        let mut d = RnsPoly::zero(ctx.basis.clone(), level, Domain::Ntt);
+        for j in 0..level {
+            let q = ctx.basis.q(j);
+            for c in d.data[j].iter_mut() {
+                *c = sampler.rng().below(q);
+            }
+        }
+        let (a0, a1) = key_switch(&ctx, &d, &evk);
+        let (b0, b1) = key_switch(&ctx, &d, &rebuilt);
+        assert_eq!(a0.data, b0.data);
+        assert_eq!(a1.data, b1.data);
+    }
+
+    #[test]
+    fn hoisted_decompose_matches_key_switch_prefix() {
+        // key_switch == hoisted_decompose + NTT + IP + ModDown by
+        // construction; check the decomposition is deterministic and the
+        // digit rows land where the ranges say.
+        let (ctx, chain) = setup();
+        let level = 3usize;
+        let evk = chain.eval_key(level, KeyTag::Relin);
+        let mut sampler = Sampler::new(4242);
+        let mut d = RnsPoly::zero(ctx.basis.clone(), level, Domain::Coeff);
+        for j in 0..level {
+            let q = ctx.basis.q(j);
+            for c in d.data[j].iter_mut() {
+                *c = sampler.rng().below(q);
+            }
+        }
+        let decomp = hoisted_decompose(&ctx, &d, &evk);
+        assert_eq!(decomp.len(), evk.digits.len());
+        for (ext, digit) in decomp.iter().zip(&evk.digits) {
+            assert_eq!(ext.domain, Domain::Coeff);
+            let (lo, hi) = digit.range;
+            for j in lo..hi {
+                let q = ctx.basis.q(j);
+                let s = digit.digit_scal[j - lo];
+                for (c, &v) in ext.rows[j].iter().enumerate() {
+                    assert_eq!(v, mul_mod(d.data[j][c], s, q));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ext_automorphism_matches_flat_rows() {
+        let (ctx, _chain) = setup();
+        let mods = ext_mods(&ctx, 2);
+        let n = ctx.n();
+        let mut sampler = Sampler::new(77);
+        let mut ext = ExtPoly::zero(&ctx, mods.clone(), Domain::Coeff);
+        for (r, &idx) in mods.iter().enumerate() {
+            let q = ctx.basis.q(idx);
+            for c in ext.rows[r].iter_mut() {
+                *c = sampler.rng().below(q);
+            }
+        }
+        let k = 5usize;
+        let rotated = ext.automorphism(&ctx, k);
+        for (r, &idx) in mods.iter().enumerate() {
+            // Reference: the flat single-limb automorphism on this row's
+            // modulus (RnsPoly basis index 0 must match, so build a
+            // one-limb poly over a basis whose q(0) is this row's q).
+            let q = ctx.basis.q(idx);
+            for i in 0..n {
+                let t = (i * k) % (2 * n);
+                let (pos, flip) = if t < n { (t, false) } else { (t - n, true) };
+                let want = if flip {
+                    crate::math::modarith::neg_mod(ext.rows[r][i], q)
+                } else {
+                    ext.rows[r][i]
+                };
+                assert_eq!(rotated.rows[r][pos], want);
+            }
+        }
     }
 
     #[test]

@@ -40,7 +40,10 @@ pub struct Metrics {
     pub sim_energy_pj: AtomicU64,
 }
 
-/// Which homomorphic op a [`MixedOp`] requests.
+/// Which homomorphic op a [`MixedOp`] requests. The first four are the
+/// single-op wire protocol's surface; the rest exist for the program
+/// executor (`crate::program`), whose compiled waves flow through the
+/// same mixed-batch path so whole programs batch across tenants too.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MixedKind {
     Add,
@@ -48,6 +51,35 @@ pub enum MixedKind {
     Mul,
     /// Slot rotation by the carried step.
     Rotate(i64),
+    /// Ciphertext × encoded plaintext, **no rescale** (the planner
+    /// inserts explicit `Rescale` nodes); plaintext carried on the op.
+    Pmul,
+    /// Ciphertext + encoded plaintext (added to `c0` only).
+    AddPlain,
+    /// Ciphertext − encoded plaintext.
+    SubPlain,
+    /// Complex conjugation (Galois X → X^{2N−1} + key switch).
+    Conjugate,
+    /// Rescale by the last modulus (drops one limb).
+    Rescale,
+    /// Exact modulus drop to the carried level (scale unchanged).
+    LevelDown(usize),
+    /// `Σ_{i=0}^{w−1} rot(a, i)` via the hoisted shared-ModUp kernel
+    /// (`Evaluator::rotate_sum_hoisted`) — the planner's rewrite of a
+    /// log-step reduce tree.
+    RotSumHoisted(usize),
+}
+
+/// Plaintext slot operand for `Pmul`/`AddPlain`/`SubPlain`: raw slot
+/// values plus the encoding scale. Encoding is deferred to execution so
+/// the plaintext is encoded at the ciphertext operand's *actual* level —
+/// exactly what `Evaluator::mul_plain` does on the hand-written path.
+#[derive(Debug, Clone)]
+pub struct PlainOperand {
+    pub values: Vec<f64>,
+    /// Encoding scale; `None` = the ciphertext operand's own scale (the
+    /// `AddPlain`/`SubPlain` convention).
+    pub scale: Option<f64>,
 }
 
 /// One tenant-attributed op inside a heterogeneous (cross-tenant) batch:
@@ -59,9 +91,28 @@ pub struct MixedOp {
     pub a: Ciphertext,
     /// Second operand for binary ops (`Add`/`Sub`/`Mul`).
     pub b: Option<Ciphertext>,
+    /// Plaintext operand for `Pmul`/`AddPlain`/`SubPlain`.
+    pub plain: Option<PlainOperand>,
 }
 
 impl MixedOp {
+    /// A ciphertext-only op (everything the single-op wire protocol can
+    /// express; the program executor fills `plain` itself).
+    pub fn new(
+        eval: Arc<Evaluator>,
+        kind: MixedKind,
+        a: Ciphertext,
+        b: Option<Ciphertext>,
+    ) -> Self {
+        Self {
+            eval,
+            kind,
+            a,
+            b,
+            plain: None,
+        }
+    }
+
     /// Level the op executes at (binary ops align to the lower operand).
     pub fn level(&self) -> usize {
         match &self.b {
@@ -73,9 +124,36 @@ impl MixedOp {
     /// The trace-IR op this request maps to (for metrics/costing).
     pub fn fhe_op(&self) -> FheOp {
         match self.kind {
-            MixedKind::Add | MixedKind::Sub => FheOp::HAdd,
+            MixedKind::Add | MixedKind::Sub | MixedKind::AddPlain | MixedKind::SubPlain => {
+                FheOp::HAdd
+            }
             MixedKind::Mul => FheOp::HMul,
-            MixedKind::Rotate(_) => FheOp::HRot,
+            MixedKind::Pmul => FheOp::PMul,
+            MixedKind::Rotate(_) | MixedKind::Conjugate | MixedKind::RotSumHoisted(_) => {
+                FheOp::HRot
+            }
+            MixedKind::Rescale | MixedKind::LevelDown(_) => FheOp::Rescale,
+        }
+    }
+
+    /// The trace-IR op *stream* this request expands to — what the
+    /// scheduler records per batch so a serving session can be replayed
+    /// on the `sim` engine. Most kinds are one op; a hoisted rotation
+    /// group replays as its `w−1` rotation+add pairs (the hoisting saving
+    /// lives in the cycle model, not the op stream), and `Mul` carries
+    /// its built-in rescale.
+    pub fn trace_ops(&self) -> Vec<FheOp> {
+        match self.kind {
+            MixedKind::Mul => vec![FheOp::HMul, FheOp::Rescale],
+            MixedKind::RotSumHoisted(w) => {
+                let mut ops = Vec::with_capacity(2 * w.saturating_sub(1));
+                for _ in 1..w {
+                    ops.push(FheOp::HRot);
+                    ops.push(FheOp::HAdd);
+                }
+                ops
+            }
+            _ => vec![self.fhe_op()],
         }
     }
 
@@ -90,6 +168,28 @@ impl MixedOp {
         {
             return Err("binary op missing second operand".to_string());
         }
+        if matches!(
+            self.kind,
+            MixedKind::Pmul | MixedKind::AddPlain | MixedKind::SubPlain
+        ) {
+            match &self.plain {
+                None => return Err("plaintext op missing its plain operand".to_string()),
+                Some(p) => {
+                    let slots = self.eval.ctx.encoder.slots();
+                    if p.values.len() != slots {
+                        return Err(format!(
+                            "plain operand has {} values, context has {slots} slots",
+                            p.values.len()
+                        ));
+                    }
+                    if p.values.iter().any(|v| !v.is_finite())
+                        || p.scale.is_some_and(|s| !s.is_finite() || s <= 0.0)
+                    {
+                        return Err("plain operand carries non-finite values".to_string());
+                    }
+                }
+            }
+        }
         match self.kind {
             MixedKind::Mul => {
                 // HMul rescales, which consumes a limb.
@@ -97,6 +197,30 @@ impl MixedOp {
                     return Err(format!(
                         "HMul needs level >= 2 to rescale, got {}",
                         self.level()
+                    ));
+                }
+            }
+            MixedKind::Rescale => {
+                if self.a.level < 2 {
+                    return Err(format!(
+                        "Rescale needs level >= 2, got {}",
+                        self.a.level
+                    ));
+                }
+            }
+            MixedKind::LevelDown(l) => {
+                if l == 0 || l > self.a.level {
+                    return Err(format!(
+                        "LevelDown target {l} outside 1..={}",
+                        self.a.level
+                    ));
+                }
+            }
+            MixedKind::RotSumHoisted(w) => {
+                let slots = self.eval.ctx.encoder.slots();
+                if !w.is_power_of_two() || w > slots {
+                    return Err(format!(
+                        "hoisted rotate-sum width {w} must be a power of two <= {slots}"
                     ));
                 }
             }
@@ -112,7 +236,11 @@ impl MixedOp {
                     ));
                 }
             }
-            MixedKind::Rotate(_) => {}
+            MixedKind::Rotate(_)
+            | MixedKind::Pmul
+            | MixedKind::AddPlain
+            | MixedKind::SubPlain
+            | MixedKind::Conjugate => {}
         }
         Ok(())
     }
@@ -205,6 +333,17 @@ impl Coordinator {
         self.metrics
             .sim_energy_pj
             .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+    }
+
+    /// Cost a batch of trace-IR ops executed outside the mixed-op path
+    /// (the program executor's macro nodes — Chebyshev, linear
+    /// transforms — which run their flat kernels inline) against an
+    /// explicit parameter shape, so per-program sim figures cover the
+    /// whole graph.
+    pub fn record_ops(&self, params: &CkksParams, limbs: usize, ops: &[FheOp]) {
+        for &op in ops {
+            self.record_for(op, params, limbs);
+        }
     }
 
     /// HAdd on the hot path — AOT artifact kernel when available.
@@ -306,9 +445,61 @@ impl Coordinator {
                     let _ = op.eval.chain.eval_key(op.a.level, KeyTag::Galois(k));
                 }
             }
-            MixedKind::Add | MixedKind::Sub => {}
+            MixedKind::Conjugate => {
+                let k = RnsPoly::conjugation_galois(op.eval.ctx.n());
+                let _ = op.eval.chain.eval_key(op.a.level, KeyTag::Galois(k));
+            }
+            MixedKind::RotSumHoisted(w) => {
+                // Every Galois key of the group, so racing banks never
+                // duplicate generation mid-batch.
+                for step in 1..w as i64 {
+                    let k = RnsPoly::rotation_to_galois(step, op.eval.ctx.n());
+                    let _ = op.eval.chain.eval_key(op.a.level, KeyTag::Galois(k));
+                }
+            }
+            MixedKind::Add
+            | MixedKind::Sub
+            | MixedKind::Pmul
+            | MixedKind::AddPlain
+            | MixedKind::SubPlain
+            | MixedKind::Rescale
+            | MixedKind::LevelDown(_) => {}
         }
-        self.record_for(op.fhe_op(), &op.eval.ctx.params, op.level());
+        if let MixedKind::RotSumHoisted(w) = op.kind {
+            self.record_hoisted_rot_sum(&op.eval.ctx.params, op.level(), w);
+        } else {
+            self.record_for(op.fhe_op(), &op.eval.ctx.params, op.level());
+        }
+    }
+
+    /// Cost a hoisted rotation group on the FHEmem model: one shared
+    /// ModUp/ModDown keyswitch pipeline plus `w−1` automorphism + gadget
+    /// passes ([`CostModel::keyswitch_hoisted`]) — the saving the
+    /// planner's hoisting pass exists to realize.
+    fn record_hoisted_rot_sum(&self, params: &CkksParams, limbs: usize, width: usize) {
+        self.metrics.ops.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .rotations
+            .fetch_add(width.saturating_sub(1) as u64, Ordering::Relaxed);
+        let shape = FheShape {
+            log_n: params.log_n,
+            limbs,
+            k_special: params.k_special,
+            dnum: params.dnum,
+            mult_shifts: 3,
+        };
+        let model = CostModel::new(&self.arch, shape);
+        let mut bd = model
+            .automorphism_poly()
+            .scaled(2.0 * shape.limbs as f64 * width.saturating_sub(1) as f64);
+        bd.add(&model.keyswitch_hoisted(width.saturating_sub(1), true));
+        let t = bd.total();
+        self.metrics
+            .sim_cycles
+            .fetch_add(t.cycles as u64, Ordering::Relaxed);
+        self.metrics
+            .sim_energy_pj
+            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
     }
 
     /// Execute one mixed op on the **bank-tiled hot path**: operands are
@@ -319,19 +510,38 @@ impl Coordinator {
     /// response. Bit-identical to the flat evaluator ops, so serving
     /// results do not depend on the representation.
     fn run_mixed_op(&self, op: &MixedOp) -> Ciphertext {
+        let ev = &op.eval;
+        // The hoisted group runs its own flat kernel (shared ext-basis
+        // accumulators don't decompose into per-tile ops).
+        if let MixedKind::RotSumHoisted(w) = op.kind {
+            return ev.rotate_sum_hoisted(&op.a, w);
+        }
         let b = op.b.as_ref();
         let a_t = op.a.to_tiled();
         let out = match op.kind {
-            MixedKind::Add => op
-                .eval
-                .add_tiled(&a_t, &b.expect("Add needs two operands").to_tiled()),
-            MixedKind::Sub => op
-                .eval
-                .sub_tiled(&a_t, &b.expect("Sub needs two operands").to_tiled()),
-            MixedKind::Mul => op
-                .eval
-                .mul_tiled(&a_t, &b.expect("Mul needs two operands").to_tiled()),
-            MixedKind::Rotate(step) => op.eval.rotate_tiled(&a_t, step),
+            MixedKind::Add => ev.add_tiled(&a_t, &b.expect("Add needs two operands").to_tiled()),
+            MixedKind::Sub => ev.sub_tiled(&a_t, &b.expect("Sub needs two operands").to_tiled()),
+            MixedKind::Mul => ev.mul_tiled(&a_t, &b.expect("Mul needs two operands").to_tiled()),
+            MixedKind::Rotate(step) => ev.rotate_tiled(&a_t, step),
+            MixedKind::Conjugate => ev.conjugate_tiled(&a_t),
+            MixedKind::Rescale => ev.rescale_tiled(&a_t),
+            MixedKind::LevelDown(l) => ev.level_down_tiled(&a_t, l),
+            MixedKind::Pmul => {
+                let p = op.plain.as_ref().expect("Pmul needs a plain operand");
+                let scale = p.scale.unwrap_or_else(|| ev.ctx.scale());
+                ev.mul_plain_no_rescale_tiled(&a_t, &p.values, scale)
+            }
+            MixedKind::AddPlain | MixedKind::SubPlain => {
+                let p = op.plain.as_ref().expect("plain op needs a plain operand");
+                let scale = p.scale.unwrap_or(op.a.scale);
+                ev.add_plain_tiled(
+                    &a_t,
+                    &p.values,
+                    scale,
+                    matches!(op.kind, MixedKind::SubPlain),
+                )
+            }
+            MixedKind::RotSumHoisted(_) => unreachable!("handled above"),
         };
         out.to_flat()
     }
@@ -452,24 +662,9 @@ mod tests {
         let a = ev.encrypt_real(&z1, 3);
         let b = ev.encrypt_real(&z2, 3);
         let ops = vec![
-            MixedOp {
-                eval: ev.clone(),
-                kind: MixedKind::Add,
-                a: a.clone(),
-                b: Some(b.clone()),
-            },
-            MixedOp {
-                eval: ev.clone(),
-                kind: MixedKind::Mul,
-                a: a.clone(),
-                b: Some(b.clone()),
-            },
-            MixedOp {
-                eval: ev.clone(),
-                kind: MixedKind::Rotate(1),
-                a: a.clone(),
-                b: None,
-            },
+            MixedOp::new(ev.clone(), MixedKind::Add, a.clone(), Some(b.clone())),
+            MixedOp::new(ev.clone(), MixedKind::Mul, a.clone(), Some(b.clone())),
+            MixedOp::new(ev.clone(), MixedKind::Rotate(1), a.clone(), None),
         ];
         let outs = c.execute_mixed_batch(&ops);
         // The batch executed on bank tiles; the flat evaluator is the
@@ -480,6 +675,59 @@ mod tests {
             assert_eq!(got.c1.data, want.c1.data);
             assert_eq!(got.level, want.level);
             assert!((got.scale - want.scale).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn extended_mixed_kinds_bit_identical_to_flat_ops() {
+        use crate::ckks::KeyChain;
+        let c = coord();
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 404));
+        let ev = Arc::new(Evaluator::new(ctx, chain, 405));
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 7) as f64).collect();
+        let w: Vec<f64> = (0..slots).map(|i| 0.01 * ((i + 1) % 5) as f64).collect();
+        let a = ev.encrypt_real(&z, 3);
+        let scale = ev.ctx.scale();
+        let plain = |s: Option<f64>| {
+            Some(PlainOperand {
+                values: w.clone(),
+                scale: s,
+            })
+        };
+        let mut ops = vec![
+            MixedOp::new(ev.clone(), MixedKind::Pmul, a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::SubPlain, a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::AddPlain, a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::Conjugate, a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::Rescale, a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::LevelDown(2), a.clone(), None),
+            MixedOp::new(ev.clone(), MixedKind::RotSumHoisted(8), a.clone(), None),
+        ];
+        ops[0].plain = plain(Some(scale));
+        ops[1].plain = plain(None);
+        ops[2].plain = plain(None);
+        let outs = c.execute_mixed_batch(&ops);
+        // Flat references.
+        let p_enc = ev.encode_plain(&w, a.level, scale);
+        let want = [
+            ev.mul_plain_no_rescale(&a, &p_enc, scale),
+            ev.sub_plain(&a, &w),
+            {
+                let p = ev.encode_plain(&w, a.level, a.scale);
+                ev.add_plain(&a, &p)
+            },
+            ev.conjugate(&a),
+            ev.rescale(&a),
+            ev.level_down(&a, 2),
+            ev.rotate_sum_hoisted(&a, 8),
+        ];
+        for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+            assert_eq!(got.c0.data, want.c0.data, "op {i} c0");
+            assert_eq!(got.c1.data, want.c1.data, "op {i} c1");
+            assert_eq!(got.level, want.level, "op {i} level");
+            assert!((got.scale - want.scale).abs() < 1e-9, "op {i} scale");
         }
     }
 
@@ -499,24 +747,19 @@ mod tests {
         let z1: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 9) as f64).collect();
         let z2: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 5) as f64).collect();
         let ops = vec![
-            MixedOp {
-                eval: t1.clone(),
-                kind: MixedKind::Mul,
-                a: t1.encrypt_real(&z1, 3),
-                b: Some(t1.encrypt_real(&z2, 3)),
-            },
-            MixedOp {
-                eval: t2.clone(),
-                kind: MixedKind::Rotate(1),
-                a: t2.encrypt_real(&z1, 3),
-                b: None,
-            },
-            MixedOp {
-                eval: t2.clone(),
-                kind: MixedKind::Add,
-                a: t2.encrypt_real(&z1, 3),
-                b: Some(t2.encrypt_real(&z2, 3)),
-            },
+            MixedOp::new(
+                t1.clone(),
+                MixedKind::Mul,
+                t1.encrypt_real(&z1, 3),
+                Some(t1.encrypt_real(&z2, 3)),
+            ),
+            MixedOp::new(t2.clone(), MixedKind::Rotate(1), t2.encrypt_real(&z1, 3), None),
+            MixedOp::new(
+                t2.clone(),
+                MixedKind::Add,
+                t2.encrypt_real(&z1, 3),
+                Some(t2.encrypt_real(&z2, 3)),
+            ),
         ];
         let before = c.metrics.ops.load(Ordering::Relaxed);
         let outs = c.execute_mixed_batch(&ops);

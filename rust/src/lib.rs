@@ -25,6 +25,10 @@
 //!   simulation together.
 //! * [`service`] — `fhemem-serve`: the multi-tenant serving subsystem
 //!   (wire format, tenant keystore, batching scheduler, TCP front-end).
+//! * [`program`] — `fhemem-compile`: the CKKS program-graph IR and
+//!   optimizing planner (CSE/DCE, rotation hoisting, auto-rescale, wave
+//!   scheduling) that maps whole applications onto the tiled evaluator
+//!   and the serving layer.
 
 // Style lints that fire on deliberate patterns in the from-scratch math
 // code (multi-array index loops, hardware-mirroring argument lists).
@@ -43,6 +47,7 @@ pub mod mapping;
 pub mod math;
 pub mod parallel;
 pub mod params;
+pub mod program;
 pub mod report;
 pub mod runtime;
 pub mod service;

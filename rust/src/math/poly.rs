@@ -212,16 +212,7 @@ impl RnsPoly {
         let mut out = Self::zero(self.basis.clone(), self.limbs, Domain::Coeff);
         for j in 0..self.limbs {
             let q = self.basis.q(j);
-            for i in 0..n {
-                let target = (i * k) % (2 * n);
-                let (pos, flip) = if target < n {
-                    (target, false)
-                } else {
-                    (target - n, true)
-                };
-                let v = self.data[j][i];
-                out.data[j][pos] = if flip { neg_mod(v, q) } else { v };
-            }
+            automorphism_row(&self.data[j], &mut out.data[j], k, q);
         }
         out
     }
@@ -257,6 +248,25 @@ impl RnsPoly {
             }
         }
         worst
+    }
+}
+
+/// Scatter one residue row under X → X^k (k odd, coefficient domain):
+/// `dst[i·k mod 2N] = ±src[i]` with the negacyclic sign on wrap past N.
+/// The single source of truth for the flat index map — shared by
+/// [`RnsPoly::automorphism`] and the extended-basis
+/// `ckks::keyswitch::ExtPoly::automorphism` (the bank-tiled form in
+/// `math::tiled` keeps its §IV-E mat-to-mat specialization).
+pub fn automorphism_row(src: &[u64], dst: &mut [u64], k: usize, q: u64) {
+    let n = src.len();
+    for (i, &v) in src.iter().enumerate() {
+        let target = (i * k) % (2 * n);
+        let (pos, flip) = if target < n {
+            (target, false)
+        } else {
+            (target - n, true)
+        };
+        dst[pos] = if flip { neg_mod(v, q) } else { v };
     }
 }
 

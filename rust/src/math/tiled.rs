@@ -289,31 +289,60 @@ impl TiledRnsPoly {
         out
     }
 
-    /// Galois automorphism X → X^k (k odd) in coefficient domain,
-    /// scattering directly between bank tiles (§IV-E: the permutation
-    /// crosses every tile; destinations are computed per source tile).
+    /// Galois automorphism X → X^k (k odd) in coefficient domain via the
+    /// §IV-E **mat-to-mat** structure of the bank-tiled layout (replacing
+    /// the earlier generic per-element scatter).
+    ///
+    /// Viewing the flat vector as the plan's `n1 × n2` row-major matrix,
+    /// index `i = r·n2 + c` maps to
+    /// `i·k ≡ (r·k + a(c))·n2 + c2(c)  (mod 2N)` where
+    /// `c2(c) = c·k mod n2` and `a(c) = ⌊c·k / n2⌋ mod 2n1`: every source
+    /// **column** lands in exactly one destination column (shared by all
+    /// rows — the paper's mats-move-to-mats property), and within it the
+    /// destination row is the affine map `r ↦ r·k + a(c) (mod 2n1)` whose
+    /// wrap past `n1` is precisely the negacyclic sign flip. The column
+    /// map is computed once per call and shared by every limb and bank,
+    /// so the inner loop is adds and compares — no wide `mod 2N` per
+    /// element. Bit-identical to the flat [`RnsPoly::automorphism`]
+    /// (asserted in the tests below).
     pub fn automorphism(&self, k: usize) -> Self {
         assert_eq!(self.domain, Domain::Coeff, "automorphism in coeff domain");
         let n = self.n();
         assert!(k % 2 == 1 && k < 2 * n);
         let banks = self.plan.banks;
-        let te = self.plan.tile_elems;
+        let n1 = self.plan.n1;
+        let n2 = self.plan.n2;
+        let rpt = self.plan.rows_per_tile;
+        let two_n1 = 2 * n1;
+        // Per-column structure shared across rows, limbs and banks:
+        // (destination column, row offset carrying the wrap parity).
+        let col_map: Vec<(usize, usize)> = (0..n2)
+            .map(|c| {
+                let ck = c * k;
+                (ck % n2, (ck / n2) % two_n1)
+            })
+            .collect();
         let mut out = Self::zero(self.basis.clone(), self.limbs, Domain::Coeff);
-        // Limbs are independent; the scatter itself stays serial within a
-        // limb because destination tiles interleave arbitrarily.
+        // Limbs are independent; within a limb the column map fixes each
+        // element's destination tile/row/column directly.
         crate::parallel::par_tile_groups(&mut out.tiles, banks, |j, group| {
             let q = self.basis.q(j);
             for b in 0..banks {
-                let src = &self.tiles[j * banks + b];
-                for (off, &v) in src.iter().enumerate() {
-                    let i = b * te + off;
-                    let target = (i * k) % (2 * n);
-                    let (pos, flip) = if target < n {
-                        (target, false)
-                    } else {
-                        (target - n, true)
-                    };
-                    group[pos / te][pos % te] = if flip { neg_mod(v, q) } else { v };
+                let src_tile = &self.tiles[j * banks + b];
+                for lr in 0..rpt {
+                    let r = b * rpt + lr;
+                    let rk = (r * k) % two_n1;
+                    let src_row = &src_tile[lr * n2..(lr + 1) * n2];
+                    for (c, &v) in src_row.iter().enumerate() {
+                        let (c2, a) = col_map[c];
+                        let mut rr = rk + a;
+                        if rr >= two_n1 {
+                            rr -= two_n1;
+                        }
+                        let (dr, flip) = if rr >= n1 { (rr - n1, true) } else { (rr, false) };
+                        group[dr / rpt][(dr % rpt) * n2 + c2] =
+                            if flip { neg_mod(v, q) } else { v };
+                    }
                 }
             }
         });
@@ -464,15 +493,31 @@ mod tests {
 
     #[test]
     fn tiled_automorphism_bit_identical_to_flat() {
-        let b = basis(6, 2);
-        let n = 1usize << 6;
-        forall("tiled automorphism == flat", 6, |rng| {
-            let k = (rng.below(n as u64) as usize * 2 + 1) % (2 * n);
-            let p = random_poly(&b, 2, rng);
-            let flat = p.automorphism(k);
-            let tiled = TiledRnsPoly::from_flat(&p).automorphism(k);
-            assert_eq!(tiled.to_flat().data, flat.data, "k={k}");
-        });
+        // The §IV-E mat-to-mat implementation must reproduce the flat
+        // scatter bit-for-bit across plan geometries: degenerate (n=8,
+        // single tile), square split with one row per tile (n=64), and a
+        // 16-bank split with multiple matrix rows per tile (n=1024,
+        // n1=32, rows_per_tile=2) — the shape where the column-map / row
+        // affine decomposition actually crosses tiles.
+        for logn in [3usize, 6, 10] {
+            let b = basis(logn, 2);
+            let n = 1usize << logn;
+            forall("tiled automorphism == flat", 6, |rng| {
+                let k = (rng.below(n as u64) as usize * 2 + 1) % (2 * n);
+                let p = random_poly(&b, 2, rng);
+                let flat = p.automorphism(k);
+                let tiled = TiledRnsPoly::from_flat(&p).automorphism(k);
+                assert_eq!(tiled.to_flat().data, flat.data, "n={n} k={k}");
+            });
+            // Conjugation (k = 2N−1) and the unit element.
+            let mut rng = crate::util::check::SplitMix64::new(9);
+            let p = random_poly(&b, 2, &mut rng);
+            for k in [1usize, 2 * n - 1] {
+                let flat = p.automorphism(k);
+                let tiled = TiledRnsPoly::from_flat(&p).automorphism(k);
+                assert_eq!(tiled.to_flat().data, flat.data, "n={n} k={k}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Program executor: runs a [`CompiledProgram`] wave by wave on the
+//! bank-tiled evaluator.
+//!
+//! Each wave's primitive nodes become one batch of
+//! [`coordinator::MixedOp`]s — in-process they fan out through
+//! [`Coordinator::execute_mixed_batch_isolated`] (the tiled hot path,
+//! converting at op edges only), and on the serving path they are
+//! submitted individually to the [`BatchScheduler`], where they coalesce
+//! with *other tenants'* queued work: the scheduler batches across
+//! program nodes, not just single-op requests. Macro nodes (`Chebyshev`,
+//! `LinearTransform`) run inline through their existing flat kernels —
+//! the same functions the hand-written paths call, which is what makes
+//! compiled-vs-hand-written bit-identity possible.
+//!
+//! Every run emits a [`Trace`] (replayable on `sim::simulate`) and a
+//! [`ProgramReport`] with the run's simulated FHEmem cost.
+
+use super::ir::{chebyshev_static, OpKind, ProgramError};
+use super::passes::CompiledProgram;
+use crate::ckks::cipher::{Ciphertext, Evaluator};
+use crate::ckks::linear::eval_chebyshev;
+use crate::coordinator::{Coordinator, MixedKind, MixedOp, PlainOperand};
+use crate::service::BatchScheduler;
+use crate::trace::Trace;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-run report: what executed and what it costs on the FHEmem model.
+#[derive(Debug, Clone)]
+pub struct ProgramReport {
+    pub nodes_executed: usize,
+    pub waves: usize,
+    /// Static keyswitch pipelines (hoisted groups count once).
+    pub keyswitch_invocations: usize,
+    /// Simulated cycles measured as a delta of the executing
+    /// coordinator's counters (macro nodes are costed in via their
+    /// static op shapes). Exact on the in-process path; on the
+    /// *scheduled* path the coordinator is shared with other tenants, so
+    /// ops coalesced into the same batching windows are included — treat
+    /// it as "cycles the accelerator spent while this program ran", not
+    /// a per-program attribution (the static `keyswitch_invocations` and
+    /// the emitted trace are the per-program quantities).
+    pub sim_cycles: u64,
+    pub sim_energy_pj: u64,
+    pub wall_ns: u64,
+}
+
+impl ProgramReport {
+    pub fn json(&self) -> Json {
+        Json::obj([
+            ("nodes_executed", Json::Num(self.nodes_executed as u64)),
+            ("waves", Json::Num(self.waves as u64)),
+            (
+                "keyswitch_invocations",
+                Json::Num(self.keyswitch_invocations as u64),
+            ),
+            ("sim_cycles", Json::Num(self.sim_cycles)),
+            ("sim_energy_pj", Json::Num(self.sim_energy_pj)),
+            ("wall_ns", Json::Num(self.wall_ns)),
+        ])
+    }
+}
+
+/// A finished program run: named outputs + replayable trace + report.
+pub struct ProgramRun {
+    pub outputs: Vec<(String, Ciphertext)>,
+    pub trace: Trace,
+    pub report: ProgramReport,
+}
+
+impl CompiledProgram {
+    /// The run's trace (static op stream + program shape).
+    pub fn trace(&self) -> Trace {
+        Trace {
+            name: "program",
+            ops: self.trace_ops.clone(),
+            batch: 1,
+            const_bytes: self.const_bytes,
+            log_n: self.log_n,
+            limbs: self.max_level,
+        }
+    }
+
+    /// Execute in-process on a coordinator: each wave becomes one mixed
+    /// batch on the bank pool (the tiled hot path).
+    pub fn execute(
+        &self,
+        coord: &Coordinator,
+        eval: &Arc<Evaluator>,
+        inputs: &HashMap<String, Ciphertext>,
+    ) -> Result<ProgramRun, ProgramError> {
+        let metrics = &coord.metrics;
+        let cycles0 = metrics.sim_cycles.load(Ordering::Relaxed);
+        let energy0 = metrics.sim_energy_pj.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let outputs = self.run_waves(coord, eval, inputs, |ops| {
+            let ids: Vec<usize> = ops.iter().map(|(id, _)| *id).collect();
+            let mixed: Vec<MixedOp> = ops.into_iter().map(|(_, op)| op).collect();
+            let outs = coord.execute_mixed_batch_isolated(&mixed);
+            ids.into_iter()
+                .zip(outs)
+                .map(|(id, r)| r.map(|ct| (id, ct)).map_err(ProgramError::Exec))
+                .collect::<Result<Vec<_>, _>>()
+        })?;
+        Ok(self.finish(
+            outputs,
+            t0,
+            metrics.sim_cycles.load(Ordering::Relaxed) - cycles0,
+            metrics.sim_energy_pj.load(Ordering::Relaxed) - energy0,
+        ))
+    }
+
+    /// Execute through the serving scheduler: every wave op is submitted
+    /// individually and coalesces with whatever other tenants have
+    /// queued (cross-tenant batching across program nodes).
+    pub fn execute_scheduled(
+        &self,
+        sched: &BatchScheduler,
+        eval: &Arc<Evaluator>,
+        inputs: &HashMap<String, Ciphertext>,
+    ) -> Result<ProgramRun, ProgramError> {
+        let metrics = &sched.coordinator().metrics;
+        let cycles0 = metrics.sim_cycles.load(Ordering::Relaxed);
+        let energy0 = metrics.sim_energy_pj.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let outputs = self.run_waves(sched.coordinator(), eval, inputs, |ops| {
+            // Submit the whole wave, then collect: the scheduler's window
+            // coalesces these with other tenants' traffic.
+            let mut pending = Vec::with_capacity(ops.len());
+            for (id, op) in ops {
+                let rx = sched
+                    .submit(op)
+                    .map_err(|e| ProgramError::Exec(format!("submit: {e}")))?;
+                pending.push((id, rx));
+            }
+            pending
+                .into_iter()
+                .map(|(id, rx)| {
+                    let out = rx
+                        .recv()
+                        .map_err(|_| ProgramError::Exec("scheduler dropped the op".into()))?
+                        .map_err(|e| ProgramError::Exec(e.to_string()))?;
+                    Ok((id, out))
+                })
+                .collect::<Result<Vec<_>, _>>()
+        })?;
+        Ok(self.finish(
+            outputs,
+            t0,
+            metrics.sim_cycles.load(Ordering::Relaxed) - cycles0,
+            metrics.sim_energy_pj.load(Ordering::Relaxed) - energy0,
+        ))
+    }
+
+    fn finish(
+        &self,
+        outputs: Vec<(String, Ciphertext)>,
+        t0: Instant,
+        sim_cycles: u64,
+        sim_energy_pj: u64,
+    ) -> ProgramRun {
+        ProgramRun {
+            outputs,
+            trace: self.trace(),
+            report: ProgramReport {
+                nodes_executed: self
+                    .program
+                    .nodes
+                    .iter()
+                    .filter(|k| !matches!(k, OpKind::Input(_) | OpKind::PlainVec(_)))
+                    .count(),
+                waves: self.waves.len(),
+                keyswitch_invocations: self.counts.keyswitch_invocations,
+                sim_cycles,
+                sim_energy_pj,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+            },
+        }
+    }
+
+    /// Shared wave walker. `run_batch` executes one wave's primitive
+    /// `MixedOp`s and returns `(node id, result)` pairs.
+    fn run_waves<F>(
+        &self,
+        coord: &Coordinator,
+        eval: &Arc<Evaluator>,
+        inputs: &HashMap<String, Ciphertext>,
+        mut run_batch: F,
+    ) -> Result<Vec<(String, Ciphertext)>, ProgramError>
+    where
+        F: FnMut(Vec<(usize, MixedOp)>) -> Result<Vec<(usize, Ciphertext)>, ProgramError>,
+    {
+        let prog = &self.program;
+        let mut values: Vec<Option<Ciphertext>> = vec![None; prog.nodes.len()];
+        // Bind inputs (and verify the compile-time shape still holds —
+        // the planner's rescale placement and drift validation were
+        // decided against these levels AND scales).
+        for (id, kind) in prog.nodes.iter().enumerate() {
+            if let OpKind::Input(name) = kind {
+                let ct = inputs
+                    .get(name)
+                    .ok_or_else(|| ProgramError::UnknownInput(name.clone()))?;
+                if ct.level != self.meta[id].level {
+                    return Err(ProgramError::Exec(format!(
+                        "input '{name}' level {} != compiled level {}",
+                        ct.level, self.meta[id].level
+                    )));
+                }
+                let ratio = ct.scale / self.meta[id].scale;
+                if !ratio.is_finite() || (ratio - 1.0).abs() >= 6e-2 {
+                    return Err(ProgramError::Exec(format!(
+                        "input '{name}' scale {} drifted from compiled scale {}",
+                        ct.scale, self.meta[id].scale
+                    )));
+                }
+                values[id] = Some(ct.clone());
+            }
+        }
+        let ct_of = |values: &[Option<Ciphertext>], id: usize| -> Result<Ciphertext, ProgramError> {
+            values[id]
+                .clone()
+                .ok_or_else(|| ProgramError::Exec(format!("node {id} has no value yet")))
+        };
+        let plain_of = |id: usize| -> Result<Vec<f64>, ProgramError> {
+            match &prog.nodes[id] {
+                OpKind::PlainVec(v) => Ok(v.clone()),
+                other => Err(ProgramError::Exec(format!(
+                    "node {id} is not a plaintext: {other:?}"
+                ))),
+            }
+        };
+        for wave in &self.waves {
+            let mut batch: Vec<(usize, MixedOp)> = Vec::new();
+            for &id in wave {
+                let kind = &prog.nodes[id];
+                match kind {
+                    // Macro nodes run inline through the same flat
+                    // kernels the hand-written paths call; their static
+                    // op shapes are costed on the coordinator so the
+                    // report's sim figures cover the whole program.
+                    OpKind::Chebyshev(a, coeffs) => {
+                        let ct = ct_of(&values, *a)?;
+                        let ma = self.meta[*a];
+                        if let Ok(st) = chebyshev_static(&eval.ctx, coeffs, ma.level, ma.scale) {
+                            let mut ops = Vec::with_capacity(2 * (st.muls + st.terms));
+                            for _ in 0..st.muls {
+                                ops.push(crate::trace::FheOp::HMul);
+                                ops.push(crate::trace::FheOp::Rescale);
+                            }
+                            for _ in 0..st.terms {
+                                ops.push(crate::trace::FheOp::PMul);
+                                ops.push(crate::trace::FheOp::Rescale);
+                            }
+                            coord.record_ops(&eval.ctx.params, ma.level, &ops);
+                        }
+                        values[id] = Some(eval_chebyshev(eval, &ct, coeffs));
+                    }
+                    OpKind::LinearTransform(a, t) => {
+                        let ct = ct_of(&values, *a)?;
+                        let lt = &prog.transforms[*t];
+                        let mut ops = vec![crate::trace::FheOp::HRot; lt.rotation_count()];
+                        ops.extend(vec![crate::trace::FheOp::PMul; lt.diags.len()]);
+                        ops.push(crate::trace::FheOp::Rescale);
+                        coord.record_ops(&eval.ctx.params, self.meta[*a].level, &ops);
+                        values[id] = Some(lt.apply(eval, &ct));
+                    }
+                    _ => {
+                        let op = self.mixed_op_for(id, eval, &values, &plain_of)?;
+                        batch.push((id, op));
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                for (id, ct) in run_batch(batch)? {
+                    values[id] = Some(ct);
+                }
+            }
+        }
+        prog.outputs
+            .iter()
+            .map(|(name, id)| Ok((name.clone(), ct_of(&values, *id)?)))
+            .collect()
+    }
+
+    fn mixed_op_for(
+        &self,
+        id: usize,
+        eval: &Arc<Evaluator>,
+        values: &[Option<Ciphertext>],
+        plain_of: &dyn Fn(usize) -> Result<Vec<f64>, ProgramError>,
+    ) -> Result<MixedOp, ProgramError> {
+        let prog = &self.program;
+        let ct = |o: usize| -> Result<Ciphertext, ProgramError> {
+            values[o]
+                .clone()
+                .ok_or_else(|| ProgramError::Exec(format!("operand {o} has no value yet")))
+        };
+        let op = match &prog.nodes[id] {
+            OpKind::Add(a, b) => MixedOp::new(eval.clone(), MixedKind::Add, ct(*a)?, Some(ct(*b)?)),
+            OpKind::Sub(a, b) => MixedOp::new(eval.clone(), MixedKind::Sub, ct(*a)?, Some(ct(*b)?)),
+            OpKind::Mul(a, b) => MixedOp::new(eval.clone(), MixedKind::Mul, ct(*a)?, Some(ct(*b)?)),
+            OpKind::Pmul(a, p) => {
+                let mut op = MixedOp::new(eval.clone(), MixedKind::Pmul, ct(*a)?, None);
+                op.plain = Some(PlainOperand {
+                    values: plain_of(*p)?,
+                    scale: Some(eval.ctx.scale()),
+                });
+                op
+            }
+            OpKind::AddPlain(a, p) | OpKind::SubPlain(a, p) => {
+                let kind = if matches!(prog.nodes[id], OpKind::SubPlain(..)) {
+                    MixedKind::SubPlain
+                } else {
+                    MixedKind::AddPlain
+                };
+                let mut op = MixedOp::new(eval.clone(), kind, ct(*a)?, None);
+                op.plain = Some(PlainOperand {
+                    values: plain_of(*p)?,
+                    scale: None,
+                });
+                op
+            }
+            OpKind::Rotate(a, s) => {
+                MixedOp::new(eval.clone(), MixedKind::Rotate(*s), ct(*a)?, None)
+            }
+            OpKind::Conjugate(a) => MixedOp::new(eval.clone(), MixedKind::Conjugate, ct(*a)?, None),
+            OpKind::Rescale(a) => MixedOp::new(eval.clone(), MixedKind::Rescale, ct(*a)?, None),
+            OpKind::LevelDown(a, l) => {
+                MixedOp::new(eval.clone(), MixedKind::LevelDown(*l), ct(*a)?, None)
+            }
+            OpKind::HoistedRotSum(a, w) => {
+                MixedOp::new(eval.clone(), MixedKind::RotSumHoisted(*w), ct(*a)?, None)
+            }
+            other => {
+                return Err(ProgramError::Exec(format!(
+                    "node {id} is not a primitive op: {other:?}"
+                )))
+            }
+        };
+        Ok(op)
+    }
+}

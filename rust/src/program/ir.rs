@@ -1,0 +1,721 @@
+//! Typed DAG IR for CKKS programs — the programmable surface between
+//! workloads and the tiled evaluator.
+//!
+//! A [`Program`] is a flat vector of [`OpKind`] nodes in SSA form: node
+//! ids are indices, every operand id is smaller than its user's id (the
+//! [`Builder`] enforces this), so id order *is* a topological order.
+//! Nodes are either ciphertext-valued or plaintext-valued
+//! ([`OpKind::PlainVec`]); plaintext nodes are pure data — the executor
+//! encodes them at their use site, at the ciphertext operand's actual
+//! level, exactly as the hand-written `Evaluator::mul_plain` path does.
+//!
+//! Builders write *math*, not modulus bookkeeping: `Mul` is the full
+//! HMul (tensor + relinearize + rescale, the evaluator's headline op),
+//! `Pmul` is a raw plaintext product whose rescale the planner inserts
+//! (`passes::compile`), and level alignment for binary ops is inserted
+//! automatically. [`analyze`] infers per-node `(level, scale)` metadata
+//! and rejects level underflow and additive scale drift before anything
+//! executes.
+
+use crate::ckks::linear::LinearTransform;
+use crate::ckks::CkksContext;
+use std::collections::HashMap;
+
+/// Node id = index into [`Program::nodes`]; operands always refer to
+/// smaller ids (SSA / DAG by construction).
+pub type NodeId = usize;
+
+/// Everything the program layer can fail with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramError {
+    /// Malformed graph: bad operand ids, type confusion (plaintext where
+    /// ciphertext expected), duplicate output names, …
+    Structure(String),
+    /// A named input the program needs was not supplied.
+    UnknownInput(String),
+    /// An op would need more modulus levels than its operands carry.
+    LevelUnderflow(String),
+    /// Additive operands whose scales drifted beyond the evaluator's
+    /// tolerance (the same 6e-2 bound `Evaluator::align` enforces).
+    ScaleDrift(String),
+    /// Execution-time failure (evaluator/scheduler rejection).
+    Exec(String),
+}
+
+impl std::fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProgramError::Structure(m) => write!(f, "program structure: {m}"),
+            ProgramError::UnknownInput(m) => write!(f, "unknown program input '{m}'"),
+            ProgramError::LevelUnderflow(m) => write!(f, "level underflow: {m}"),
+            ProgramError::ScaleDrift(m) => write!(f, "scale drift: {m}"),
+            ProgramError::Exec(m) => write!(f, "program execution: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+/// One DAG node. Ciphertext-valued unless stated otherwise.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Named ciphertext input (bound at execution time).
+    Input(String),
+    /// Plaintext slot-vector constant (plaintext-valued; encoded at its
+    /// use site).
+    PlainVec(Vec<f64>),
+    /// HAdd (ct, ct).
+    Add(NodeId, NodeId),
+    /// HSub (ct, ct).
+    Sub(NodeId, NodeId),
+    /// Full HMul: tensor + relinearize + **rescale** (ct, ct).
+    Mul(NodeId, NodeId),
+    /// Ciphertext × plaintext, **no rescale** (ct, plain) — the planner
+    /// inserts the rescale.
+    Pmul(NodeId, NodeId),
+    /// Ciphertext + plaintext encoded at the ciphertext's scale.
+    AddPlain(NodeId, NodeId),
+    /// Ciphertext − plaintext encoded at the ciphertext's scale.
+    SubPlain(NodeId, NodeId),
+    /// Slot rotation by the carried step.
+    Rotate(NodeId, i64),
+    /// Complex conjugation.
+    Conjugate(NodeId),
+    /// Rescale by the last modulus.
+    Rescale(NodeId),
+    /// Exact modulus drop to the carried level.
+    LevelDown(NodeId, usize),
+    /// Slot-space linear transform (index into [`Program::transforms`]);
+    /// consumes one level (BSGS diagonals + final rescale).
+    LinearTransform(NodeId, usize),
+    /// Chebyshev series Σ c_k T_k over slots in [-1, 1] (the HELR
+    /// sigmoid shape); manages its own rescales internally.
+    Chebyshev(NodeId, Vec<f64>),
+    /// `Σ_{i=0}^{w-1} rot(a, i)` in hoisted-decompose form — inserted by
+    /// the planner's rotation-hoisting pass (power-of-two `w`).
+    HoistedRotSum(NodeId, usize),
+}
+
+impl OpKind {
+    /// All operand node ids, in order.
+    pub fn operands(&self) -> Vec<NodeId> {
+        match *self {
+            OpKind::Input(_) | OpKind::PlainVec(_) => vec![],
+            OpKind::Add(a, b)
+            | OpKind::Sub(a, b)
+            | OpKind::Mul(a, b)
+            | OpKind::Pmul(a, b)
+            | OpKind::AddPlain(a, b)
+            | OpKind::SubPlain(a, b) => vec![a, b],
+            OpKind::Rotate(a, _)
+            | OpKind::Conjugate(a)
+            | OpKind::Rescale(a)
+            | OpKind::LevelDown(a, _)
+            | OpKind::LinearTransform(a, _)
+            | OpKind::HoistedRotSum(a, _) => vec![a],
+            OpKind::Chebyshev(a, _) => vec![a],
+        }
+    }
+
+    /// Rebuild with remapped operand ids.
+    pub fn map_operands<F: Fn(NodeId) -> NodeId>(&self, f: F) -> OpKind {
+        match self {
+            OpKind::Input(n) => OpKind::Input(n.clone()),
+            OpKind::PlainVec(v) => OpKind::PlainVec(v.clone()),
+            OpKind::Add(a, b) => OpKind::Add(f(*a), f(*b)),
+            OpKind::Sub(a, b) => OpKind::Sub(f(*a), f(*b)),
+            OpKind::Mul(a, b) => OpKind::Mul(f(*a), f(*b)),
+            OpKind::Pmul(a, b) => OpKind::Pmul(f(*a), f(*b)),
+            OpKind::AddPlain(a, b) => OpKind::AddPlain(f(*a), f(*b)),
+            OpKind::SubPlain(a, b) => OpKind::SubPlain(f(*a), f(*b)),
+            OpKind::Rotate(a, s) => OpKind::Rotate(f(*a), *s),
+            OpKind::Conjugate(a) => OpKind::Conjugate(f(*a)),
+            OpKind::Rescale(a) => OpKind::Rescale(f(*a)),
+            OpKind::LevelDown(a, l) => OpKind::LevelDown(f(*a), *l),
+            OpKind::LinearTransform(a, t) => OpKind::LinearTransform(f(*a), *t),
+            OpKind::Chebyshev(a, c) => OpKind::Chebyshev(f(*a), c.clone()),
+            OpKind::HoistedRotSum(a, w) => OpKind::HoistedRotSum(f(*a), *w),
+        }
+    }
+
+    /// Plaintext-valued node (usable only as the second operand of
+    /// `Pmul`/`AddPlain`/`SubPlain`).
+    pub fn is_plain(&self) -> bool {
+        matches!(self, OpKind::PlainVec(_))
+    }
+}
+
+/// A CKKS program: SSA nodes (id order = topological order), the linear
+/// transforms referenced by `LinearTransform` nodes, and named outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub nodes: Vec<OpKind>,
+    pub transforms: Vec<LinearTransform>,
+    pub outputs: Vec<(String, NodeId)>,
+}
+
+impl Program {
+    /// Structural validation: operand ids strictly below their user,
+    /// plaintext nodes only where plaintext is expected, transform
+    /// indices in range, outputs ciphertext-valued with unique names.
+    pub fn validate_structure(&self) -> Result<(), ProgramError> {
+        let err = |m: String| Err(ProgramError::Structure(m));
+        for (id, kind) in self.nodes.iter().enumerate() {
+            for o in kind.operands() {
+                if o >= id {
+                    return err(format!("node {id} references operand {o} (not SSA order)"));
+                }
+            }
+            match kind {
+                OpKind::Pmul(a, p) | OpKind::AddPlain(a, p) | OpKind::SubPlain(a, p) => {
+                    if self.nodes[*a].is_plain() {
+                        return err(format!("node {id}: ciphertext operand {a} is plaintext"));
+                    }
+                    if !self.nodes[*p].is_plain() {
+                        return err(format!("node {id}: plain operand {p} is not a PlainVec"));
+                    }
+                }
+                OpKind::LinearTransform(a, t) => {
+                    if self.nodes[*a].is_plain() {
+                        return err(format!("node {id}: ciphertext operand {a} is plaintext"));
+                    }
+                    if *t >= self.transforms.len() {
+                        return err(format!("node {id}: transform index {t} out of range"));
+                    }
+                }
+                OpKind::Chebyshev(a, coeffs) => {
+                    if self.nodes[*a].is_plain() {
+                        return err(format!("node {id}: ciphertext operand {a} is plaintext"));
+                    }
+                    if coeffs.len() < 2 {
+                        return err(format!("node {id}: chebyshev needs degree >= 1"));
+                    }
+                }
+                OpKind::HoistedRotSum(a, w) => {
+                    if self.nodes[*a].is_plain() {
+                        return err(format!("node {id}: ciphertext operand {a} is plaintext"));
+                    }
+                    if !w.is_power_of_two() || *w == 0 {
+                        return err(format!("node {id}: hoisted width {w} not a power of two"));
+                    }
+                }
+                _ => {
+                    for o in kind.operands() {
+                        if self.nodes[o].is_plain() {
+                            return err(format!(
+                                "node {id}: plaintext node {o} used as ciphertext"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let mut names = std::collections::HashSet::new();
+        for (name, out) in &self.outputs {
+            if *out >= self.nodes.len() {
+                return err(format!("output '{name}' references missing node {out}"));
+            }
+            if self.nodes[*out].is_plain() {
+                return err(format!("output '{name}' is plaintext-valued"));
+            }
+            if !names.insert(name.as_str()) {
+                return err(format!("duplicate output name '{name}'"));
+            }
+        }
+        if self.outputs.is_empty() {
+            return err("program has no outputs".to_string());
+        }
+        Ok(())
+    }
+
+    /// Use counts per node (operand references + output references).
+    pub fn use_counts(&self) -> Vec<usize> {
+        let mut uses = vec![0usize; self.nodes.len()];
+        for kind in &self.nodes {
+            for o in kind.operands() {
+                uses[o] += 1;
+            }
+        }
+        for (_, out) in &self.outputs {
+            uses[*out] += 1;
+        }
+        uses
+    }
+}
+
+/// Per-node inferred metadata (see [`analyze`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeMeta {
+    pub level: usize,
+    /// Predicted scale. Exact for the primitive ops (the analysis
+    /// replicates the evaluator's f64 arithmetic operation for
+    /// operation); approximate only downstream of macro nodes, where the
+    /// executor resolves plaintext scales at run time instead.
+    pub scale: f64,
+    pub plain: bool,
+}
+
+/// Static shape of a `Chebyshev` node: replicates
+/// `ckks::linear::eval_chebyshev`'s recursion on levels/scales without
+/// touching ciphertexts, so the planner can validate depth and count ops.
+pub(crate) struct ChebStatic {
+    pub level: usize,
+    pub scale: f64,
+    /// Ciphertext multiplications performed (each is a keyswitch).
+    pub muls: usize,
+    /// Series terms (each a plaintext mul + rescale).
+    pub terms: usize,
+}
+
+pub(crate) fn chebyshev_static(
+    ctx: &CkksContext,
+    coeffs: &[f64],
+    level_in: usize,
+    scale_in: f64,
+) -> Result<ChebStatic, ProgramError> {
+    let deg = coeffs.len() - 1;
+    // t[k] = Some((level, scale)) once T_k is "built".
+    let mut t: Vec<Option<(usize, f64)>> = vec![None; deg + 1];
+    t[1] = Some((level_in, scale_in));
+    let mut muls = 0usize;
+    fn get_t(
+        ctx: &CkksContext,
+        t: &mut Vec<Option<(usize, f64)>>,
+        muls: &mut usize,
+        k: usize,
+    ) -> Result<(usize, f64), ProgramError> {
+        if let Some(m) = t[k] {
+            return Ok(m);
+        }
+        let a = k / 2 + (k % 2);
+        let b = k / 2;
+        let (la, sa) = get_t(ctx, t, muls, a)?;
+        let (lb, sb) = get_t(ctx, t, muls, b)?;
+        let lvl = la.min(lb);
+        if lvl < 2 {
+            return Err(ProgramError::LevelUnderflow(format!(
+                "chebyshev T_{k} needs level >= 2, has {lvl}"
+            )));
+        }
+        *muls += 1;
+        let scale = (sa * sb) / ctx.basis.q(lvl - 1) as f64;
+        let mut out = (lvl - 1, scale);
+        if a != b {
+            // sub(two, t1) aligns to the lower level; scale unchanged.
+            let (l1, _) = t[1].expect("T_1 seeded");
+            out.0 = out.0.min(l1);
+        }
+        t[k] = Some(out);
+        Ok(out)
+    }
+    let mut lowest = usize::MAX;
+    let mut terms: Vec<(usize, f64)> = Vec::new();
+    for k in 1..=deg {
+        if coeffs[k].abs() < 1e-12 {
+            continue;
+        }
+        let m = get_t(ctx, &mut t, &mut muls, k)?;
+        lowest = lowest.min(m.0);
+        terms.push(m);
+    }
+    if terms.is_empty() {
+        return Err(ProgramError::Structure(
+            "chebyshev series has no nonzero non-constant terms".to_string(),
+        ));
+    }
+    if lowest < 2 {
+        return Err(ProgramError::LevelUnderflow(format!(
+            "chebyshev terms land at level {lowest}, cannot rescale"
+        )));
+    }
+    // Every term is scalar-multiplied onto the exact context scale and
+    // rescaled once: out level = lowest - 1, scale ≈ Δ (replicating the
+    // combiner's f64 ops for the first term).
+    let target = ctx.scale();
+    let q_div = ctx.basis.q(lowest - 1) as f64;
+    let (_, s0) = terms[0];
+    let pt_scale = target * q_div / s0;
+    let out_scale = (s0 * pt_scale) / q_div;
+    Ok(ChebStatic {
+        level: lowest - 1,
+        scale: out_scale,
+        muls,
+        terms: terms.len(),
+    })
+}
+
+/// Infer `(level, scale)` for every node given the input bindings, and
+/// reject level underflow / additive scale drift. Id order is topo
+/// order, so a single forward pass suffices.
+pub fn analyze(
+    prog: &Program,
+    ctx: &CkksContext,
+    inputs: &HashMap<String, (usize, f64)>,
+) -> Result<Vec<NodeMeta>, ProgramError> {
+    let mut meta: Vec<NodeMeta> = Vec::with_capacity(prog.nodes.len());
+    let plain_meta = NodeMeta {
+        level: 0,
+        scale: 0.0,
+        plain: true,
+    };
+    for (id, kind) in prog.nodes.iter().enumerate() {
+        let m = match kind {
+            OpKind::Input(name) => {
+                let &(level, scale) = inputs
+                    .get(name)
+                    .ok_or_else(|| ProgramError::UnknownInput(name.clone()))?;
+                if level == 0 || level > ctx.l() {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "input '{name}' bound at level {level} (context max {})",
+                        ctx.l()
+                    )));
+                }
+                NodeMeta {
+                    level,
+                    scale,
+                    plain: false,
+                }
+            }
+            OpKind::PlainVec(_) => plain_meta,
+            OpKind::Add(a, b) | OpKind::Sub(a, b) => {
+                let (ma, mb) = (meta[*a], meta[*b]);
+                let ratio = ma.scale / mb.scale;
+                if !ratio.is_finite() || (ratio - 1.0).abs() >= 6e-2 {
+                    return Err(ProgramError::ScaleDrift(format!(
+                        "node {id}: additive operands at scales {} vs {}",
+                        ma.scale, mb.scale
+                    )));
+                }
+                NodeMeta {
+                    level: ma.level.min(mb.level),
+                    scale: ma.scale,
+                    plain: false,
+                }
+            }
+            OpKind::Mul(a, b) => {
+                let (ma, mb) = (meta[*a], meta[*b]);
+                let lvl = ma.level.min(mb.level);
+                if lvl < 2 {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "node {id}: HMul needs level >= 2, has {lvl}"
+                    )));
+                }
+                NodeMeta {
+                    level: lvl - 1,
+                    scale: (ma.scale * mb.scale) / ctx.basis.q(lvl - 1) as f64,
+                    plain: false,
+                }
+            }
+            OpKind::Pmul(a, _) => {
+                let ma = meta[*a];
+                NodeMeta {
+                    level: ma.level,
+                    scale: ma.scale * ctx.scale(),
+                    plain: false,
+                }
+            }
+            OpKind::AddPlain(a, _) | OpKind::SubPlain(a, _) => meta[*a],
+            OpKind::Rotate(a, _) | OpKind::Conjugate(a) | OpKind::HoistedRotSum(a, _) => meta[*a],
+            OpKind::Rescale(a) => {
+                let ma = meta[*a];
+                if ma.level < 2 {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "node {id}: rescale needs level >= 2, has {}",
+                        ma.level
+                    )));
+                }
+                NodeMeta {
+                    level: ma.level - 1,
+                    scale: ma.scale / ctx.basis.q(ma.level - 1) as f64,
+                    plain: false,
+                }
+            }
+            OpKind::LevelDown(a, l) => {
+                let ma = meta[*a];
+                if *l == 0 || *l > ma.level {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "node {id}: level_down to {l} from {}",
+                        ma.level
+                    )));
+                }
+                NodeMeta {
+                    level: *l,
+                    scale: ma.scale,
+                    plain: false,
+                }
+            }
+            OpKind::LinearTransform(a, _) => {
+                let ma = meta[*a];
+                if ma.level < 2 {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "node {id}: linear transform needs level >= 2, has {}",
+                        ma.level
+                    )));
+                }
+                NodeMeta {
+                    level: ma.level - 1,
+                    scale: (ma.scale * ctx.scale()) / ctx.basis.q(ma.level - 1) as f64,
+                    plain: false,
+                }
+            }
+            OpKind::Chebyshev(a, coeffs) => {
+                let ma = meta[*a];
+                let st = chebyshev_static(ctx, coeffs, ma.level, ma.scale)?;
+                NodeMeta {
+                    level: st.level,
+                    scale: st.scale,
+                    plain: false,
+                }
+            }
+        };
+        meta.push(m);
+    }
+    Ok(meta)
+}
+
+/// Incremental program builder. Methods return the new node's id;
+/// operands must come from the same builder (ids are checked at
+/// [`Builder::build`]).
+#[derive(Default)]
+pub struct Builder {
+    nodes: Vec<OpKind>,
+    transforms: Vec<LinearTransform>,
+    outputs: Vec<(String, NodeId)>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, kind: OpKind) -> NodeId {
+        self.nodes.push(kind);
+        self.nodes.len() - 1
+    }
+
+    /// Named ciphertext input.
+    pub fn input(&mut self, name: &str) -> NodeId {
+        self.push(OpKind::Input(name.to_string()))
+    }
+
+    /// Plaintext slot-vector constant.
+    pub fn plain_vec(&mut self, values: Vec<f64>) -> NodeId {
+        self.push(OpKind::PlainVec(values))
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(OpKind::Add(a, b))
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(OpKind::Sub(a, b))
+    }
+
+    /// Full HMul (tensor + relinearize + rescale).
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(OpKind::Mul(a, b))
+    }
+
+    /// Ciphertext × plaintext node, no rescale (the planner inserts it).
+    pub fn pmul(&mut self, ct: NodeId, plain: NodeId) -> NodeId {
+        self.push(OpKind::Pmul(ct, plain))
+    }
+
+    /// Sugar: `pmul` against a fresh plaintext vector.
+    pub fn mul_plain(&mut self, ct: NodeId, values: Vec<f64>) -> NodeId {
+        let p = self.plain_vec(values);
+        self.pmul(ct, p)
+    }
+
+    pub fn add_plain(&mut self, ct: NodeId, plain: NodeId) -> NodeId {
+        self.push(OpKind::AddPlain(ct, plain))
+    }
+
+    pub fn sub_plain(&mut self, ct: NodeId, plain: NodeId) -> NodeId {
+        self.push(OpKind::SubPlain(ct, plain))
+    }
+
+    /// Sugar: `sub_plain` against a fresh plaintext vector.
+    pub fn sub_plain_vec(&mut self, ct: NodeId, values: Vec<f64>) -> NodeId {
+        let p = self.plain_vec(values);
+        self.sub_plain(ct, p)
+    }
+
+    pub fn rotate(&mut self, a: NodeId, step: i64) -> NodeId {
+        self.push(OpKind::Rotate(a, step))
+    }
+
+    pub fn conjugate(&mut self, a: NodeId) -> NodeId {
+        self.push(OpKind::Conjugate(a))
+    }
+
+    pub fn rescale(&mut self, a: NodeId) -> NodeId {
+        self.push(OpKind::Rescale(a))
+    }
+
+    pub fn level_down(&mut self, a: NodeId, level: usize) -> NodeId {
+        self.push(OpKind::LevelDown(a, level))
+    }
+
+    /// The log-step rotate-sum reduce tree (the HELR dot-product
+    /// reduction): builders write the tree; the planner's hoisting pass
+    /// rewrites it into [`OpKind::HoistedRotSum`].
+    pub fn rotate_sum(&mut self, a: NodeId, width: usize) -> NodeId {
+        let mut acc = a;
+        let mut step = 1usize;
+        while step < width {
+            let rot = self.rotate(acc, step as i64);
+            acc = self.add(acc, rot);
+            step <<= 1;
+        }
+        acc
+    }
+
+    pub fn chebyshev(&mut self, a: NodeId, coeffs: Vec<f64>) -> NodeId {
+        self.push(OpKind::Chebyshev(a, coeffs))
+    }
+
+    pub fn linear_transform(&mut self, a: NodeId, lt: LinearTransform) -> NodeId {
+        self.transforms.push(lt);
+        let idx = self.transforms.len() - 1;
+        self.push(OpKind::LinearTransform(a, idx))
+    }
+
+    /// Name a node as a program output.
+    pub fn output(&mut self, name: &str, id: NodeId) {
+        self.outputs.push((name.to_string(), id));
+    }
+
+    /// Finish and structurally validate.
+    pub fn build(self) -> Result<Program, ProgramError> {
+        let prog = Program {
+            nodes: self.nodes,
+            transforms: self.transforms,
+            outputs: self.outputs,
+        };
+        prog.validate_structure()?;
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    fn ctx() -> std::sync::Arc<CkksContext> {
+        CkksContext::new(CkksParams::func_tiny())
+    }
+
+    fn input_map(level: usize, scale: f64) -> HashMap<String, (usize, f64)> {
+        let mut m = HashMap::new();
+        m.insert("x".to_string(), (level, scale));
+        m
+    }
+
+    #[test]
+    fn builder_produces_ssa_order_and_validates() {
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let y = b.mul(x, x);
+        b.output("y", y);
+        let prog = b.build().unwrap();
+        assert_eq!(prog.nodes.len(), 2);
+        prog.validate_structure().unwrap();
+    }
+
+    #[test]
+    fn structure_rejects_plain_misuse_and_missing_outputs() {
+        // Plaintext used as a ciphertext operand.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let p = b.plain_vec(vec![1.0; 4]);
+        let bad = b.add(x, p);
+        b.output("bad", bad);
+        assert!(matches!(b.build(), Err(ProgramError::Structure(_))));
+        // No outputs.
+        let mut b = Builder::new();
+        let _ = b.input("x");
+        assert!(matches!(b.build(), Err(ProgramError::Structure(_))));
+        // Duplicate output names.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        b.output("o", x);
+        b.output("o", x);
+        assert!(matches!(b.build(), Err(ProgramError::Structure(_))));
+    }
+
+    #[test]
+    fn analyze_tracks_levels_and_scales() {
+        let ctx = ctx();
+        let scale = ctx.scale();
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let sq = b.mul(x, x); // level 4 -> 3, scale ≈ Δ
+        let r = b.rotate(sq, 1);
+        let s = b.add(sq, r);
+        b.output("s", s);
+        let prog = b.build().unwrap();
+        let meta = analyze(&prog, &ctx, &input_map(4, scale)).unwrap();
+        assert_eq!(meta[x].level, 4);
+        assert_eq!(meta[sq].level, 3);
+        let q = ctx.basis.q(3) as f64;
+        assert!((meta[sq].scale - scale * scale / q).abs() < 1e-6);
+        assert_eq!(meta[s].level, 3);
+    }
+
+    #[test]
+    fn analyze_rejects_underflow_and_drift() {
+        let ctx = ctx();
+        let scale = ctx.scale();
+        // Mul at level 1 cannot rescale.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let m = b.mul(x, x);
+        b.output("m", m);
+        let prog = b.build().unwrap();
+        assert!(matches!(
+            analyze(&prog, &ctx, &input_map(1, scale)),
+            Err(ProgramError::LevelUnderflow(_))
+        ));
+        // Adding Δ-scaled to Δ²-scaled operands drifts.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let p = b.plain_vec(vec![0.5; 512]);
+        let xx = b.pmul(x, p); // scale Δ²
+        let s = b.add(x, xx);
+        b.output("s", s);
+        let prog = b.build().unwrap();
+        assert!(matches!(
+            analyze(&prog, &ctx, &input_map(3, scale)),
+            Err(ProgramError::ScaleDrift(_))
+        ));
+    }
+
+    #[test]
+    fn chebyshev_static_matches_runtime_shape() {
+        // Degree-4 sigmoid fit: runtime consumes 3 levels from a level-4
+        // input (T2, T4 chain + the per-term rescale).
+        use crate::ckks::linear::{chebyshev_fit, eval_chebyshev};
+        use crate::ckks::{Evaluator, KeyChain};
+        use std::sync::Arc;
+        let ctx = ctx();
+        let chain = Arc::new(KeyChain::new(ctx.clone(), 2024));
+        let ev = Evaluator::new(ctx.clone(), chain, 555);
+        let coeffs = chebyshev_fit(|t| 1.0 / (1.0 + (-2.0 * t).exp()), 4);
+        let level_in = ctx.l();
+        let scale_in = ctx.scale();
+        let st = chebyshev_static(&ctx, &coeffs, level_in, scale_in).unwrap();
+        let slots = ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| (i % 3) as f64 * 0.2 - 0.2).collect();
+        let ct = ev.encrypt_real(&z, level_in);
+        let out = eval_chebyshev(&ev, &ct, &coeffs);
+        assert_eq!(st.level, out.level, "static level must match runtime");
+        assert!(
+            (st.scale / out.scale - 1.0).abs() < 1e-9,
+            "static scale {} vs runtime {}",
+            st.scale,
+            out.scale
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! `fhemem-compile`: an FHE program-graph IR + optimizing planner that
+//! maps whole applications onto the tiled evaluator and the serving
+//! layer — the paper's "high-level application mapping" made
+//! programmable.
+//!
+//! * [`ir`] — a typed DAG IR for CKKS programs (SSA ids, per-node
+//!   level/scale metadata, a [`Builder`] API, structural + depth/scale
+//!   validation).
+//! * [`passes`] — the planner: CSE, DCE, **rotation hoisting** (a
+//!   log-step reduce tree becomes one shared-ModUp
+//!   [`ir::OpKind::HoistedRotSum`] group — strictly fewer keyswitch
+//!   pipelines), automatic rescale/level insertion (builders write math,
+//!   not modulus bookkeeping), and a topological wave scheduler whose
+//!   waves become `coordinator::MixedOp` batches.
+//! * [`exec`] — the executor: waves run tiled through the coordinator
+//!   in-process, or through the serving [`BatchScheduler`] where program
+//!   nodes coalesce with other tenants' traffic; every run emits a
+//!   replayable `trace::Trace` and a simulated-cost report.
+//!
+//! The serving layer ships whole programs in one wire frame
+//! (`service::wire`'s `Program` frame), so a tenant submits a
+//! computation, not an op stream.
+//!
+//! [`Builder`]: ir::Builder
+//! [`BatchScheduler`]: crate::service::BatchScheduler
+
+pub mod exec;
+pub mod ir;
+pub mod passes;
+
+pub use exec::{ProgramReport, ProgramRun};
+pub use ir::{analyze, Builder, NodeId, NodeMeta, OpKind, Program, ProgramError};
+pub use passes::{compile, CompiledProgram, OpCounts, PassOptions};

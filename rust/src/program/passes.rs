@@ -1,0 +1,973 @@
+//! The optimizing planner: rewrites a [`Program`] through common-
+//! subexpression elimination, dead-node elimination, rotation hoisting
+//! and automatic rescale/level insertion, then schedules it into
+//! topological waves of independent nodes (the batches the executor
+//! hands to `coordinator::MixedOp` fan-out).
+//!
+//! Pass pipeline (`compile`): structure validation → CSE → DCE →
+//! rotation hoisting → auto-rescale/level insertion → final analysis
+//! (level/scale validation) → wave scheduling → static op counts.
+//!
+//! **Rotation hoisting** is the headline rewrite: a log-step reduce tree
+//! `acc ← acc + rot(acc, 2^i)` (what [`super::ir::Builder::rotate_sum`]
+//! emits — the HELR dot-product reduction) computes
+//! `Σ_{i=0}^{w-1} rot(x, i)`, and the pass replaces the whole tree with
+//! one [`OpKind::HoistedRotSum`] node. Executed through
+//! `Evaluator::rotate_sum_hoisted`, that is **one** digit-decompose +
+//! ModUp and **one** ModDown for the whole reduction instead of
+//! `log2(w)` full key switches — the keyswitch-count reduction the
+//! pinned op-count fixture and the `hoisted_keyswitch_reduction_helr`
+//! bench figure pin.
+
+use super::ir::{analyze, chebyshev_static, NodeId, NodeMeta, OpKind, Program, ProgramError};
+use crate::ckks::CkksContext;
+use crate::trace::FheOp;
+use std::collections::HashMap;
+
+/// Which passes run (all on by default; the op-count fixture and the
+/// bench compile twice with hoisting toggled).
+#[derive(Debug, Clone, Copy)]
+pub struct PassOptions {
+    pub cse: bool,
+    pub dce: bool,
+    pub hoist_rotations: bool,
+    pub auto_rescale: bool,
+}
+
+impl Default for PassOptions {
+    fn default() -> Self {
+        Self {
+            cse: true,
+            dce: true,
+            hoist_rotations: true,
+            auto_rescale: true,
+        }
+    }
+}
+
+/// Static op counts of a compiled program (macro nodes contribute their
+/// internal shapes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Full ModUp→inner-product→ModDown pipelines: `Mul`, `Rotate` and
+    /// `Conjugate` count 1 each, a `HoistedRotSum` counts **1** for its
+    /// whole group (the shared decompose/ModDown), macro nodes add their
+    /// internal rotations/muls.
+    pub keyswitch_invocations: usize,
+    pub hmuls: usize,
+    pub pmuls: usize,
+    pub rotations: usize,
+    pub adds: usize,
+    pub rescales: usize,
+    pub hoisted_groups: usize,
+}
+
+/// A compiled program: the rewritten graph, per-node metadata, the wave
+/// schedule, and static counts. Produced by [`compile`]; executed by
+/// `super::exec`.
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    pub program: Program,
+    pub meta: Vec<NodeMeta>,
+    /// Topological batch schedule: `waves[i]` are mutually independent
+    /// ciphertext-op nodes, executable as one mixed batch.
+    pub waves: Vec<Vec<NodeId>>,
+    pub counts: OpCounts,
+    /// Static trace-IR op stream (macro nodes expanded) — the
+    /// `trace::Trace` the executor emits per program run.
+    pub trace_ops: Vec<FheOp>,
+    /// Plaintext constant bytes the program carries (trace const data).
+    pub const_bytes: f64,
+    pub log_n: usize,
+    /// Highest input level (the trace/report shape).
+    pub max_level: usize,
+}
+
+/// Run the pass pipeline. `inputs` binds every program input name to its
+/// `(level, scale)` at execution time (the executor checks the real
+/// ciphertexts against this).
+pub fn compile(
+    prog: &Program,
+    ctx: &CkksContext,
+    inputs: &HashMap<String, (usize, f64)>,
+    opts: &PassOptions,
+) -> Result<CompiledProgram, ProgramError> {
+    prog.validate_structure()?;
+    let mut p = prog.clone();
+    if opts.cse {
+        p = cse(&p);
+    }
+    if opts.dce {
+        p = dce(&p);
+    }
+    if opts.hoist_rotations {
+        p = hoist_rotation_trees(&p);
+        if opts.dce {
+            p = dce(&p);
+        }
+    }
+    if opts.auto_rescale {
+        p = auto_rescale(&p, ctx, inputs)?;
+    }
+    let meta = analyze(&p, ctx, inputs)?;
+    let waves = schedule_waves(&p);
+    let (counts, trace_ops, const_bytes) = count_ops(&p, ctx, &meta)?;
+    let max_level = inputs.values().map(|&(l, _)| l).max().unwrap_or(1);
+    Ok(CompiledProgram {
+        program: p,
+        meta,
+        waves,
+        counts,
+        trace_ops,
+        const_bytes,
+        log_n: ctx.params.log_n,
+        max_level,
+    })
+}
+
+// ----------------------------------------------------------------------
+// CSE
+// ----------------------------------------------------------------------
+
+/// Canonical byte key of a node (after operand remapping): structurally
+/// identical nodes collide and merge.
+fn node_key(kind: &OpKind) -> Vec<u8> {
+    let mut k = Vec::new();
+    let tag = |k: &mut Vec<u8>, t: u8| k.push(t);
+    let id = |k: &mut Vec<u8>, v: NodeId| k.extend_from_slice(&(v as u64).to_le_bytes());
+    let f64s = |k: &mut Vec<u8>, vs: &[f64]| {
+        for v in vs {
+            k.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    };
+    match kind {
+        OpKind::Input(n) => {
+            tag(&mut k, 0);
+            k.extend_from_slice(n.as_bytes());
+        }
+        OpKind::PlainVec(v) => {
+            tag(&mut k, 1);
+            f64s(&mut k, v);
+        }
+        OpKind::Add(a, b) => {
+            tag(&mut k, 2);
+            // Commutative: canonical operand order.
+            id(&mut k, *a.min(b));
+            id(&mut k, *a.max(b));
+        }
+        OpKind::Sub(a, b) => {
+            tag(&mut k, 3);
+            id(&mut k, *a);
+            id(&mut k, *b);
+        }
+        OpKind::Mul(a, b) => {
+            tag(&mut k, 4);
+            id(&mut k, *a.min(b));
+            id(&mut k, *a.max(b));
+        }
+        OpKind::Pmul(a, b) => {
+            tag(&mut k, 5);
+            id(&mut k, *a);
+            id(&mut k, *b);
+        }
+        OpKind::AddPlain(a, b) => {
+            tag(&mut k, 6);
+            id(&mut k, *a);
+            id(&mut k, *b);
+        }
+        OpKind::SubPlain(a, b) => {
+            tag(&mut k, 7);
+            id(&mut k, *a);
+            id(&mut k, *b);
+        }
+        OpKind::Rotate(a, s) => {
+            tag(&mut k, 8);
+            id(&mut k, *a);
+            k.extend_from_slice(&s.to_le_bytes());
+        }
+        OpKind::Conjugate(a) => {
+            tag(&mut k, 9);
+            id(&mut k, *a);
+        }
+        OpKind::Rescale(a) => {
+            tag(&mut k, 10);
+            id(&mut k, *a);
+        }
+        OpKind::LevelDown(a, l) => {
+            tag(&mut k, 11);
+            id(&mut k, *a);
+            id(&mut k, *l);
+        }
+        OpKind::LinearTransform(a, t) => {
+            tag(&mut k, 12);
+            id(&mut k, *a);
+            id(&mut k, *t);
+        }
+        OpKind::Chebyshev(a, c) => {
+            tag(&mut k, 13);
+            id(&mut k, *a);
+            f64s(&mut k, c);
+        }
+        OpKind::HoistedRotSum(a, w) => {
+            tag(&mut k, 14);
+            id(&mut k, *a);
+            id(&mut k, *w);
+        }
+    }
+    k
+}
+
+/// Common-subexpression elimination: structurally identical nodes (same
+/// kind, same — already CSE'd — operands, same constants) merge into the
+/// first occurrence. One forward pass suffices because ids are topo
+/// order.
+fn cse(prog: &Program) -> Program {
+    let mut seen: HashMap<Vec<u8>, NodeId> = HashMap::new();
+    let mut remap: Vec<NodeId> = Vec::with_capacity(prog.nodes.len());
+    let mut nodes: Vec<OpKind> = Vec::new();
+    for kind in &prog.nodes {
+        let mapped = kind.map_operands(|o| remap[o]);
+        let key = node_key(&mapped);
+        let new_id = match seen.get(&key) {
+            Some(&id) => id,
+            None => {
+                nodes.push(mapped);
+                let id = nodes.len() - 1;
+                seen.insert(key, id);
+                id
+            }
+        };
+        remap.push(new_id);
+    }
+    Program {
+        nodes,
+        transforms: prog.transforms.clone(),
+        outputs: prog
+            .outputs
+            .iter()
+            .map(|(n, o)| (n.clone(), remap[*o]))
+            .collect(),
+    }
+}
+
+// ----------------------------------------------------------------------
+// DCE
+// ----------------------------------------------------------------------
+
+/// Dead-node elimination: drop everything not reachable from an output.
+fn dce(prog: &Program) -> Program {
+    let mut live = vec![false; prog.nodes.len()];
+    let mut stack: Vec<NodeId> = prog.outputs.iter().map(|(_, o)| *o).collect();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(prog.nodes[id].operands());
+    }
+    let mut remap = vec![usize::MAX; prog.nodes.len()];
+    let mut nodes = Vec::new();
+    for (id, kind) in prog.nodes.iter().enumerate() {
+        if live[id] {
+            remap[id] = nodes.len();
+            nodes.push(kind.map_operands(|o| remap[o]));
+        }
+    }
+    Program {
+        nodes,
+        transforms: prog.transforms.clone(),
+        outputs: prog
+            .outputs
+            .iter()
+            .map(|(n, o)| (n.clone(), remap[*o]))
+            .collect(),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Rotation hoisting
+// ----------------------------------------------------------------------
+
+/// `(source, step)` if `id` is a `Rotate` node.
+fn rotate_of(prog: &Program, id: NodeId) -> Option<(NodeId, i64)> {
+    match prog.nodes[id] {
+        OpKind::Rotate(src, step) => Some((src, step)),
+        _ => None,
+    }
+}
+
+/// `(prev, rotate_node, step)` if `id` is `Add(prev, rot(prev, step))`
+/// in either operand order.
+fn reduce_stage_of(prog: &Program, id: NodeId) -> Option<(NodeId, NodeId, i64)> {
+    let OpKind::Add(x, y) = prog.nodes[id] else {
+        return None;
+    };
+    if let Some((src, step)) = rotate_of(prog, y) {
+        if src == x {
+            return Some((x, y, step));
+        }
+    }
+    if let Some((src, step)) = rotate_of(prog, x) {
+        if src == y {
+            return Some((y, x, step));
+        }
+    }
+    None
+}
+
+/// Walk down from a candidate head collecting the reduce chain. Returns
+/// `(base, width, interior)` when `head` roots a full tree with steps
+/// `2^{t}, …, 2, 1` whose intermediates are used only inside the chain.
+fn match_reduce_tree(
+    prog: &Program,
+    uses: &[usize],
+    head: NodeId,
+) -> Option<(NodeId, usize, Vec<NodeId>)> {
+    let mut interior = Vec::new();
+    let mut steps: Vec<i64> = Vec::new();
+    let mut cur = head;
+    loop {
+        let (prev, rot, step) = reduce_stage_of(prog, cur)?;
+        if step <= 0 || (step as u64) & ((step as u64) - 1) != 0 {
+            return None;
+        }
+        // The rotation feeds only this add.
+        if uses[rot] != 1 {
+            return None;
+        }
+        if cur != head {
+            interior.push(cur);
+        }
+        interior.push(rot);
+        steps.push(step);
+        if step == 1 {
+            // Base reached: validate the step ladder 2^{t}, …, 2, 1.
+            let t = steps.len();
+            for (i, &s) in steps.iter().enumerate() {
+                if s != 1i64 << (t - 1 - i) {
+                    return None;
+                }
+            }
+            return Some((prev, 1usize << t, interior));
+        }
+        // The chain continues below: `prev` must itself be a reduce
+        // stage consumed only by this add and its rotation.
+        if reduce_stage_of(prog, prev).is_none() || uses[prev] != 2 {
+            return None;
+        }
+        cur = prev;
+    }
+}
+
+/// Rewrite every maximal log-step reduce tree into one
+/// [`OpKind::HoistedRotSum`] node (the orphaned intermediates fall to
+/// the following DCE).
+fn hoist_rotation_trees(prog: &Program) -> Program {
+    let uses = prog.use_counts();
+    let n = prog.nodes.len();
+    let mut nodes = prog.nodes.clone();
+    let mut consumed = vec![false; n];
+    // Outermost heads first (largest ids), so an inner stage of an
+    // already-rewritten tree is never rewritten again.
+    for id in (0..n).rev() {
+        if consumed[id] {
+            continue;
+        }
+        let Some((base, width, interior)) = match_reduce_tree(prog, &uses, id) else {
+            continue;
+        };
+        nodes[id] = OpKind::HoistedRotSum(base, width);
+        for i in interior {
+            consumed[i] = true;
+        }
+    }
+    Program {
+        nodes,
+        transforms: prog.transforms.clone(),
+        outputs: prog.outputs.clone(),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Auto-rescale / level insertion
+// ----------------------------------------------------------------------
+
+/// Insert the modulus bookkeeping builders get to omit: a `Rescale`
+/// after every `Pmul` (unless the builder already consumes it through an
+/// explicit one), and `LevelDown` nodes aligning the operands of binary
+/// ciphertext ops. Metadata is tracked alongside so insertion decisions
+/// see the already-rewritten graph.
+fn auto_rescale(
+    prog: &Program,
+    ctx: &CkksContext,
+    inputs: &HashMap<String, (usize, f64)>,
+) -> Result<Program, ProgramError> {
+    // Does some consumer of `id` already rescale it explicitly?
+    let mut rescaled_by_user = vec![false; prog.nodes.len()];
+    for kind in &prog.nodes {
+        if let OpKind::Rescale(a) = kind {
+            rescaled_by_user[*a] = true;
+        }
+    }
+    let mut nodes: Vec<OpKind> = Vec::new();
+    let mut meta: Vec<NodeMeta> = Vec::new();
+    let mut remap: Vec<NodeId> = Vec::with_capacity(prog.nodes.len());
+    // Push a node and compute its meta on the new graph.
+    macro_rules! push {
+        ($kind:expr) => {{
+            let kind = $kind;
+            nodes.push(kind);
+            let id = nodes.len() - 1;
+            let m = single_meta(ctx, inputs, &nodes, &meta, id)?;
+            meta.push(m);
+            id
+        }};
+    }
+    for kind in &prog.nodes {
+        let mapped = kind.map_operands(|o| remap[o]);
+        let mapped = match mapped {
+            OpKind::Add(a, b) | OpKind::Sub(a, b) | OpKind::Mul(a, b)
+                if meta[a].level != meta[b].level =>
+            {
+                // Align the higher-level operand down explicitly.
+                let (la, lb) = (meta[a].level, meta[b].level);
+                let target = la.min(lb);
+                let (na, nb) = if la > target {
+                    (push!(OpKind::LevelDown(a, target)), b)
+                } else {
+                    (a, push!(OpKind::LevelDown(b, target)))
+                };
+                match kind {
+                    OpKind::Add(..) => OpKind::Add(na, nb),
+                    OpKind::Sub(..) => OpKind::Sub(na, nb),
+                    _ => OpKind::Mul(na, nb),
+                }
+            }
+            other => other,
+        };
+        let is_pmul = matches!(mapped, OpKind::Pmul(..));
+        let was_user_rescaled = {
+            let old_id = remap.len();
+            rescaled_by_user[old_id]
+        };
+        let new_id = push!(mapped);
+        let final_id = if is_pmul && !was_user_rescaled {
+            if meta[new_id].level < 2 {
+                return Err(ProgramError::LevelUnderflow(format!(
+                    "auto-rescale after Pmul node {new_id}: level {} cannot rescale",
+                    meta[new_id].level
+                )));
+            }
+            push!(OpKind::Rescale(new_id))
+        } else {
+            new_id
+        };
+        remap.push(final_id);
+    }
+    Ok(Program {
+        nodes,
+        transforms: prog.transforms.clone(),
+        outputs: prog
+            .outputs
+            .iter()
+            .map(|(n, o)| (n.clone(), remap[*o]))
+            .collect(),
+    })
+}
+
+/// Meta of one node on a partially built graph (same rules as
+/// [`analyze`], which re-derives and validates the whole graph at the
+/// end of the pipeline).
+fn single_meta(
+    ctx: &CkksContext,
+    inputs: &HashMap<String, (usize, f64)>,
+    nodes: &[OpKind],
+    meta: &[NodeMeta],
+    id: NodeId,
+) -> Result<NodeMeta, ProgramError> {
+    let kind = &nodes[id];
+    let m = match kind {
+        OpKind::Input(name) => {
+            let &(level, scale) = inputs
+                .get(name)
+                .ok_or_else(|| ProgramError::UnknownInput(name.clone()))?;
+            NodeMeta {
+                level,
+                scale,
+                plain: false,
+            }
+        }
+        OpKind::PlainVec(_) => NodeMeta {
+            level: 0,
+            scale: 0.0,
+            plain: true,
+        },
+        OpKind::Add(a, b) | OpKind::Sub(a, b) => NodeMeta {
+            level: meta[*a].level.min(meta[*b].level),
+            scale: meta[*a].scale,
+            plain: false,
+        },
+        OpKind::Mul(a, b) => {
+            let lvl = meta[*a].level.min(meta[*b].level);
+            if lvl < 2 {
+                return Err(ProgramError::LevelUnderflow(format!(
+                    "node {id}: HMul needs level >= 2, has {lvl}"
+                )));
+            }
+            NodeMeta {
+                level: lvl - 1,
+                scale: (meta[*a].scale * meta[*b].scale) / ctx.basis.q(lvl - 1) as f64,
+                plain: false,
+            }
+        }
+        OpKind::Pmul(a, _) => NodeMeta {
+            level: meta[*a].level,
+            scale: meta[*a].scale * ctx.scale(),
+            plain: false,
+        },
+        OpKind::AddPlain(a, _)
+        | OpKind::SubPlain(a, _)
+        | OpKind::Rotate(a, _)
+        | OpKind::Conjugate(a)
+        | OpKind::HoistedRotSum(a, _) => meta[*a],
+        OpKind::Rescale(a) => {
+            let ma = meta[*a];
+            if ma.level < 2 {
+                return Err(ProgramError::LevelUnderflow(format!(
+                    "node {id}: rescale needs level >= 2, has {}",
+                    ma.level
+                )));
+            }
+            NodeMeta {
+                level: ma.level - 1,
+                scale: ma.scale / ctx.basis.q(ma.level - 1) as f64,
+                plain: false,
+            }
+        }
+        OpKind::LevelDown(a, l) => NodeMeta {
+            level: *l,
+            scale: meta[*a].scale,
+            plain: false,
+        },
+        OpKind::LinearTransform(a, _) => {
+            let ma = meta[*a];
+            if ma.level < 2 {
+                return Err(ProgramError::LevelUnderflow(format!(
+                    "node {id}: linear transform needs level >= 2, has {}",
+                    ma.level
+                )));
+            }
+            NodeMeta {
+                level: ma.level - 1,
+                scale: (ma.scale * ctx.scale()) / ctx.basis.q(ma.level - 1) as f64,
+                plain: false,
+            }
+        }
+        OpKind::Chebyshev(a, coeffs) => {
+            let ma = meta[*a];
+            let st = chebyshev_static(ctx, coeffs, ma.level, ma.scale)?;
+            NodeMeta {
+                level: st.level,
+                scale: st.scale,
+                plain: false,
+            }
+        }
+    };
+    Ok(m)
+}
+
+// ----------------------------------------------------------------------
+// Wave scheduling + counts
+// ----------------------------------------------------------------------
+
+/// Topological batch schedule: wave i holds the ciphertext-op nodes
+/// whose longest ciphertext-dependency chain has length i+1. Nodes in
+/// one wave are mutually independent by construction — the executor
+/// coalesces each wave into one `coordinator` mixed batch.
+fn schedule_waves(prog: &Program) -> Vec<Vec<NodeId>> {
+    let mut depth = vec![0usize; prog.nodes.len()];
+    let mut waves: Vec<Vec<NodeId>> = Vec::new();
+    for (id, kind) in prog.nodes.iter().enumerate() {
+        if matches!(kind, OpKind::Input(_) | OpKind::PlainVec(_)) {
+            depth[id] = 0;
+            continue;
+        }
+        let d = kind
+            .operands()
+            .into_iter()
+            .map(|o| depth[o])
+            .max()
+            .unwrap_or(0)
+            + 1;
+        depth[id] = d;
+        while waves.len() < d {
+            waves.push(Vec::new());
+        }
+        waves[d - 1].push(id);
+    }
+    waves
+}
+
+/// Static op counts + the expanded trace-IR op stream + plaintext
+/// constant bytes (macro nodes expanded by their static shapes).
+fn count_ops(
+    prog: &Program,
+    ctx: &CkksContext,
+    meta: &[NodeMeta],
+) -> Result<(OpCounts, Vec<FheOp>, f64), ProgramError> {
+    let mut c = OpCounts::default();
+    let mut ops: Vec<FheOp> = Vec::new();
+    let mut const_bytes = 0f64;
+    for kind in &prog.nodes {
+        match kind {
+            OpKind::Input(_) | OpKind::LevelDown(..) => {}
+            OpKind::PlainVec(v) => {
+                const_bytes += v.len() as f64 * 8.0;
+            }
+            OpKind::Add(..) | OpKind::Sub(..) | OpKind::AddPlain(..) | OpKind::SubPlain(..) => {
+                c.adds += 1;
+                ops.push(FheOp::HAdd);
+            }
+            OpKind::Mul(..) => {
+                c.hmuls += 1;
+                c.keyswitch_invocations += 1;
+                c.rescales += 1;
+                ops.push(FheOp::HMul);
+                ops.push(FheOp::Rescale);
+            }
+            OpKind::Pmul(..) => {
+                c.pmuls += 1;
+                ops.push(FheOp::PMul);
+            }
+            OpKind::Rotate(..) | OpKind::Conjugate(..) => {
+                c.rotations += 1;
+                c.keyswitch_invocations += 1;
+                ops.push(FheOp::HRot);
+            }
+            OpKind::Rescale(..) => {
+                c.rescales += 1;
+                ops.push(FheOp::Rescale);
+            }
+            OpKind::HoistedRotSum(_, w) => {
+                c.hoisted_groups += 1;
+                c.rotations += w - 1;
+                // One shared decompose + ModDown for the whole group; the
+                // trace stream replays the homomorphic semantics (the
+                // hoisting saving lives in the cycle model).
+                c.keyswitch_invocations += 1;
+                for _ in 1..*w {
+                    ops.push(FheOp::HRot);
+                    ops.push(FheOp::HAdd);
+                }
+            }
+            OpKind::LinearTransform(_, t) => {
+                let lt = &prog.transforms[*t];
+                let rots = lt.rotation_count();
+                c.rotations += rots;
+                c.keyswitch_invocations += rots;
+                c.pmuls += lt.diags.len();
+                c.rescales += 1;
+                for _ in 0..rots {
+                    ops.push(FheOp::HRot);
+                }
+                for _ in 0..lt.diags.len() {
+                    ops.push(FheOp::PMul);
+                }
+                ops.push(FheOp::Rescale);
+            }
+            OpKind::Chebyshev(a, coeffs) => {
+                let ma = meta[*a];
+                let st = chebyshev_static(ctx, coeffs, ma.level, ma.scale)?;
+                c.hmuls += st.muls;
+                c.keyswitch_invocations += st.muls;
+                c.pmuls += st.terms;
+                c.rescales += st.muls + st.terms;
+                for _ in 0..st.muls {
+                    ops.push(FheOp::HMul);
+                    ops.push(FheOp::Rescale);
+                }
+                for _ in 0..st.terms {
+                    ops.push(FheOp::PMul);
+                    ops.push(FheOp::Rescale);
+                }
+            }
+        }
+    }
+    Ok((c, ops, const_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::CkksContext;
+    use crate::params::CkksParams;
+    use crate::program::ir::Builder;
+    use std::sync::Arc;
+
+    fn ctx() -> Arc<CkksContext> {
+        CkksContext::new(CkksParams::func_tiny())
+    }
+
+    fn inputs_at(ctx: &CkksContext, names: &[&str], level: usize) -> HashMap<String, (usize, f64)> {
+        names
+            .iter()
+            .map(|n| (n.to_string(), (level, ctx.scale())))
+            .collect()
+    }
+
+    #[test]
+    fn cse_merges_structurally_identical_nodes() {
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let r1 = b.rotate(x, 3);
+        let r2 = b.rotate(x, 3); // duplicate
+        let s = b.add(r1, r2);
+        b.output("s", s);
+        let prog = b.build().unwrap();
+        let out = cse(&prog);
+        // rotate deduped; the add now references one node twice.
+        assert_eq!(out.nodes.len(), 3);
+        assert!(matches!(out.nodes[2], OpKind::Add(a, b) if a == b));
+    }
+
+    #[test]
+    fn cse_respects_commutativity_and_constants() {
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let y = b.input("y");
+        let m1 = b.mul(x, y);
+        let m2 = b.mul(y, x); // commutes with m1
+        let r1 = b.rotate(x, 1);
+        let r2 = b.rotate(x, 2); // different step: kept
+        let s1 = b.add(m1, r1);
+        let s2 = b.add(m2, r2);
+        let o = b.add(s1, s2);
+        b.output("o", o);
+        let prog = b.build().unwrap();
+        let out = cse(&prog);
+        let muls = out
+            .nodes
+            .iter()
+            .filter(|k| matches!(k, OpKind::Mul(..)))
+            .count();
+        let rots = out
+            .nodes
+            .iter()
+            .filter(|k| matches!(k, OpKind::Rotate(..)))
+            .count();
+        assert_eq!(muls, 1, "commuted muls merge");
+        assert_eq!(rots, 2, "distinct steps survive");
+    }
+
+    #[test]
+    fn dce_drops_unreachable_nodes() {
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let dead = b.rotate(x, 7);
+        let _deader = b.add(dead, dead);
+        let live = b.rotate(x, 1);
+        b.output("live", live);
+        let prog = b.build().unwrap();
+        let out = dce(&prog);
+        assert_eq!(out.nodes.len(), 2, "input + live rotate survive");
+        assert_eq!(out.outputs[0].1, 1);
+    }
+
+    #[test]
+    fn hoisting_rewrites_reduce_tree() {
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let dot = b.rotate_sum(x, 16);
+        b.output("dot", dot);
+        let prog = b.build().unwrap();
+        let hoisted = hoist_rotation_trees(&prog);
+        let out = dce(&hoisted);
+        assert_eq!(out.nodes.len(), 2, "input + hoisted node");
+        assert!(
+            matches!(out.nodes[1], OpKind::HoistedRotSum(_, 16)),
+            "tree became a width-16 hoisted group: {:?}",
+            out.nodes
+        );
+    }
+
+    #[test]
+    fn hoisting_skips_shared_intermediates_and_odd_steps() {
+        // An intermediate with an extra consumer breaks the chain above
+        // it, but the inner subtree still hoists.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let r1 = b.rotate(x, 1);
+        let a1 = b.add(x, r1); // width-2 stage
+        let r2 = b.rotate(a1, 2);
+        let a2 = b.add(a1, r2); // width-4 head
+        let leak = b.rotate(a1, 5); // extra consumer of a1
+        let o = b.add(a2, leak);
+        b.output("o", o);
+        let prog = b.build().unwrap();
+        let out = dce(&hoist_rotation_trees(&prog));
+        // a2's chain stops at a1 (3 uses), so only the inner width-2
+        // stage hoists; a 4-wide group must NOT appear.
+        assert!(out
+            .nodes
+            .iter()
+            .any(|k| matches!(k, OpKind::HoistedRotSum(_, 2))));
+        assert!(!out
+            .nodes
+            .iter()
+            .any(|k| matches!(k, OpKind::HoistedRotSum(_, 4))));
+
+        // Non-power-of-two step ladders never hoist.
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let r = b.rotate(x, 3);
+        let a = b.add(x, r);
+        b.output("a", a);
+        let prog = b.build().unwrap();
+        let out = hoist_rotation_trees(&prog);
+        assert!(!out
+            .nodes
+            .iter()
+            .any(|k| matches!(k, OpKind::HoistedRotSum(..))));
+    }
+
+    #[test]
+    fn auto_rescale_inserts_rescale_and_level_alignment() {
+        let ctx = ctx();
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let w = b.mul_plain(x, vec![0.5; ctx.encoder.slots()]); // Pmul
+        let deep = b.mul(x, x); // one level below x
+        let s = b.add(w, deep); // operands at different levels
+        b.output("s", s);
+        let prog = b.build().unwrap();
+        let compiled = compile(&prog, &ctx, &inputs_at(&ctx, &["x"], 3), &PassOptions::default())
+            .unwrap();
+        let kinds = &compiled.program.nodes;
+        assert!(
+            kinds.iter().any(|k| matches!(k, OpKind::Rescale(_))),
+            "Pmul got an auto-rescale: {kinds:?}"
+        );
+        assert!(
+            !kinds.iter().any(|k| matches!(k, OpKind::LevelDown(..))),
+            "Pmul+rescale and Mul both land one level down — no alignment needed"
+        );
+        // The add's operands sit at equal levels in the final metadata.
+        let add_id = compiled
+            .program
+            .nodes
+            .iter()
+            .position(|k| matches!(k, OpKind::Add(..)))
+            .unwrap();
+        if let OpKind::Add(a, b) = compiled.program.nodes[add_id] {
+            assert_eq!(compiled.meta[a].level, compiled.meta[b].level);
+        }
+
+        // Mismatched levels DO get an explicit LevelDown.
+        let mut b2 = Builder::new();
+        let x = b2.input("x");
+        let deep = b2.mul(x, x);
+        let deeper = b2.mul(deep, deep);
+        let s = b2.add(x, deeper);
+        b2.output("s", s);
+        let prog2 = b2.build().unwrap();
+        let compiled2 =
+            compile(&prog2, &ctx, &inputs_at(&ctx, &["x"], 4), &PassOptions::default()).unwrap();
+        assert!(compiled2
+            .program
+            .nodes
+            .iter()
+            .any(|k| matches!(k, OpKind::LevelDown(..))));
+    }
+
+    #[test]
+    fn compile_validates_underflow() {
+        let ctx = ctx();
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let m = b.mul(x, x);
+        b.output("m", m);
+        let prog = b.build().unwrap();
+        assert!(matches!(
+            compile(&prog, &ctx, &inputs_at(&ctx, &["x"], 1), &PassOptions::default()),
+            Err(ProgramError::LevelUnderflow(_))
+        ));
+    }
+
+    #[test]
+    fn waves_group_independent_nodes() {
+        let ctx = ctx();
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let y = b.input("y");
+        let r1 = b.rotate(x, 1); // wave 1
+        let r2 = b.rotate(y, 2); // wave 1
+        let s = b.add(r1, r2); // wave 2
+        b.output("s", s);
+        let prog = b.build().unwrap();
+        let compiled = compile(
+            &prog,
+            &ctx,
+            &inputs_at(&ctx, &["x", "y"], 2),
+            &PassOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(compiled.waves.len(), 2);
+        assert_eq!(compiled.waves[0].len(), 2, "independent rotations batch");
+        assert_eq!(compiled.waves[1].len(), 1);
+        // Waves respect dependencies: every operand sits in an earlier wave.
+        let mut wave_of = HashMap::new();
+        for (w, ids) in compiled.waves.iter().enumerate() {
+            for &id in ids {
+                wave_of.insert(id, w);
+            }
+        }
+        for (w, ids) in compiled.waves.iter().enumerate() {
+            for &id in ids {
+                for o in compiled.program.nodes[id].operands() {
+                    if let Some(&ow) = wave_of.get(&o) {
+                        assert!(ow < w, "operand {o} of {id} in same/later wave");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_helr_opcounts_hoisting_strictly_reduces_keyswitches() {
+        // The acceptance fixture: one HELR iteration's reduce tree is 4
+        // rotations (width 16) unhoisted; hoisting collapses them into
+        // ONE keyswitch pipeline.
+        let ctx = ctx();
+        let slots = ctx.encoder.slots();
+        let build = || {
+            let mut b = Builder::new();
+            let w = b.input("w");
+            let xw = b.mul_plain(w, vec![0.1; slots]);
+            let dot = b.rotate_sum(xw, 16);
+            b.output("dot", dot);
+            b.build().unwrap()
+        };
+        let inputs = inputs_at(&ctx, &["w"], 4);
+        let hoisted = compile(&build(), &ctx, &inputs, &PassOptions::default()).unwrap();
+        let unhoisted = compile(
+            &build(),
+            &ctx,
+            &inputs,
+            &PassOptions {
+                hoist_rotations: false,
+                ..PassOptions::default()
+            },
+        )
+        .unwrap();
+        // Pinned: 4 rotations -> 4 keyswitches unhoisted; 1 hoisted group.
+        assert_eq!(unhoisted.counts.keyswitch_invocations, 4);
+        assert_eq!(unhoisted.counts.rotations, 4);
+        assert_eq!(hoisted.counts.keyswitch_invocations, 1);
+        assert_eq!(hoisted.counts.hoisted_groups, 1);
+        assert_eq!(hoisted.counts.rotations, 15);
+        assert!(
+            hoisted.counts.keyswitch_invocations < unhoisted.counts.keyswitch_invocations,
+            "hoisting must strictly reduce keyswitch invocations"
+        );
+    }
+}

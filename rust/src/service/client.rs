@@ -19,10 +19,13 @@ use std::sync::Arc;
 use super::keystore::Tenant;
 use super::server::error_code;
 use super::wire::{
-    decode_ciphertext, decode_error, decode_metrics, encode_eval_request, encode_register,
-    read_frame_from, write_frame_to, FrameKind, WireCiphertext, WireOp,
+    decode_ciphertext, decode_error, decode_metrics, decode_program_outputs, encode_eval_request,
+    encode_evalkey_frame, encode_program_request, encode_register, read_frame_from,
+    write_frame_to, FrameKind, WireCiphertext, WireOp,
 };
 use super::ServiceError;
+use crate::ckks::keys::KeyTag;
+use crate::program::Program;
 
 /// A connected, registered tenant client.
 pub struct ServiceClient {
@@ -109,6 +112,58 @@ impl ServiceClient {
     /// Remote slot rotation.
     pub fn rotate(&mut self, a: &WireCiphertext, step: i64) -> Result<Ciphertext, ServiceError> {
         self.eval_remote(WireOp::Rotate, step, &[a])
+    }
+
+    /// Submit a whole program in one frame and decode its named outputs.
+    /// The server compiles it (CSE, rotation hoisting, auto-rescale) and
+    /// executes it through the batching scheduler.
+    pub fn run_program(
+        &mut self,
+        prog: &Program,
+        inputs: &[(String, WireCiphertext)],
+    ) -> Result<Vec<(String, Ciphertext)>, ServiceError> {
+        let payload = encode_program_request(self.tenant_id, prog, inputs);
+        write_frame_to(&mut self.stream, FrameKind::Program, &payload)
+            .map_err(ServiceError::Io)?;
+        match read_response(&mut self.stream)? {
+            (FrameKind::ProgramOk, payload) => {
+                decode_program_outputs(&payload, &self.ctx).map_err(ServiceError::Wire)
+            }
+            (kind, _) => Err(ServiceError::Protocol(format!(
+                "expected ProgramOk, got {kind:?}"
+            ))),
+        }
+    }
+
+    /// Stream an evaluation key `(level, tag)` to the server, one gadget
+    /// digit per frame. The client materializes the key from its own
+    /// chain (same seed ⇒ bit-identical to what the server would have
+    /// generated), so after upload the server never runs keygen for it.
+    pub fn upload_eval_key(&mut self, level: usize, tag: KeyTag) -> Result<(), ServiceError> {
+        let key = self.eval.chain.eval_key(level, tag);
+        let count = key.digits.len();
+        for (i, digit) in key.digits.iter().enumerate() {
+            let payload = encode_evalkey_frame(
+                self.tenant_id,
+                level,
+                tag,
+                i,
+                count,
+                &digit.b,
+                &digit.a,
+            );
+            write_frame_to(&mut self.stream, FrameKind::EvalKeyFrame, &payload)
+                .map_err(ServiceError::Io)?;
+            match read_response(&mut self.stream)? {
+                (FrameKind::Ack, _) => {}
+                (kind, _) => {
+                    return Err(ServiceError::Protocol(format!(
+                        "expected Ack to EvalKeyFrame, got {kind:?}"
+                    )))
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Fetch the scheduler's metrics snapshot (JSON text).

@@ -33,10 +33,14 @@ pub use scheduler::{BatchScheduler, SchedulerConfig};
 pub use wire::{WireCiphertext, WireError, WireOp};
 
 use crate::ckks::cipher::Ciphertext;
+use crate::ckks::keys::KeyTag;
+use crate::ckks::keyswitch::{gadget_digit_residual, EvalKey, ExtPoly};
 use crate::coordinator::{Coordinator, MixedKind, MixedOp};
 use crate::params::CkksParams;
+use crate::program::{self, PassOptions, ProgramRun};
 use crate::sim::ArchConfig;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Anything the serving path can fail with.
 #[derive(Debug)]
@@ -76,6 +80,19 @@ impl From<WireError> for ServiceError {
     }
 }
 
+/// Honest-noise ceiling for uploaded evaluation-key digits: a
+/// well-formed gadget's residual is the encryption noise `e` (≲ 2^10);
+/// random or wrongly-keyed residues land near q/4 (≳ 2^38). Matches the
+/// key-switch noise bound the keyswitch tests pin.
+pub const MAX_EVK_UPLOAD_NOISE: u64 = 1 << 16;
+
+/// At most this many partial evaluation-key uploads are buffered **per
+/// tenant** (each holds two extended-basis polynomials). A tenant at
+/// its cap evicts its own oldest partial rather than being refused, so
+/// an abandoned upload can never wedge the path — and one tenant's
+/// partials never consume another tenant's budget.
+pub const MAX_PENDING_KEY_UPLOADS_PER_TENANT: usize = 8;
+
 /// The assembled service: keystore + batching scheduler + coordinator.
 /// [`server::spawn`] puts a TCP front-end in front of it; tests and the
 /// bench drive it in-process.
@@ -83,6 +100,10 @@ pub struct FheService {
     pub store: KeyStore,
     pub sched: Arc<BatchScheduler>,
     pub coord: Arc<Coordinator>,
+    /// In-flight streamed evaluation-key uploads: `(tenant, level, tag)`
+    /// → the gadget digits received so far. Completed keys move into the
+    /// tenant's key chain and the entry is dropped.
+    pending_keys: Mutex<HashMap<(u64, usize, KeyTag), Vec<Option<(ExtPoly, ExtPoly)>>>>,
 }
 
 impl FheService {
@@ -96,6 +117,7 @@ impl FheService {
             store: KeyStore::new(),
             sched,
             coord,
+            pending_keys: Mutex::new(HashMap::new()),
         })
     }
 
@@ -133,12 +155,8 @@ impl FheService {
             WireOp::Mul => MixedKind::Mul,
             WireOp::Rotate => MixedKind::Rotate(step),
         };
-        self.sched.execute_blocking(MixedOp {
-            eval: tenant.eval.clone(),
-            kind,
-            a,
-            b,
-        })
+        self.sched
+            .execute_blocking(MixedOp::new(tenant.eval.clone(), kind, a, b))
     }
 
     /// Convenience for in-process callers (bench, tests): look the
@@ -155,6 +173,120 @@ impl FheService {
             .get(tenant_id)
             .ok_or(ServiceError::UnknownTenant(tenant_id))?;
         self.eval_decoded(&tenant, op, step, cts)
+    }
+
+    /// Compile and execute a whole program for `tenant` through the
+    /// batching scheduler: every compiled wave's ops coalesce with other
+    /// tenants' queued traffic, so the scheduler batches across program
+    /// nodes, not just single-op requests.
+    pub fn eval_program(
+        &self,
+        tenant: &Arc<Tenant>,
+        prog: program::Program,
+        inputs: Vec<(String, Ciphertext)>,
+    ) -> Result<ProgramRun, ServiceError> {
+        let levels: HashMap<String, (usize, f64)> = inputs
+            .iter()
+            .map(|(name, ct)| (name.clone(), (ct.level, ct.scale)))
+            .collect();
+        let compiled = program::compile(&prog, &tenant.ctx, &levels, &PassOptions::default())
+            .map_err(|e| ServiceError::Rejected(format!("program compile: {e}")))?;
+        let input_map: HashMap<String, Ciphertext> = inputs.into_iter().collect();
+        compiled
+            .execute_scheduled(&self.sched, &tenant.eval, &input_map)
+            .map_err(|e| ServiceError::Rejected(e.to_string()))
+    }
+
+    /// Accept one streamed evaluation-key digit. Returns `true` once the
+    /// key is complete and installed in the tenant's chain (so the
+    /// server will never generate that `(level, tag)` itself).
+    ///
+    /// Every digit is **verified against the tenant's own key** before
+    /// it is even buffered: the gadget residual `b + a·s − msg·s'` must
+    /// be encryption-noise-sized under the tenant's seed-derived secret.
+    /// Anyone can open a TCP connection, so without this check a
+    /// stranger could install garbage keys into another tenant's chain
+    /// and silently corrupt all of that tenant's future results.
+    pub fn upload_eval_key_digit(
+        &self,
+        msg: wire::EvalKeyFrameMsg,
+    ) -> Result<bool, ServiceError> {
+        let tenant = self
+            .store
+            .get(msg.tenant_id)
+            .ok_or(ServiceError::UnknownTenant(msg.tenant_id))?;
+        let alpha = tenant.ctx.params.digit_limbs();
+        let lo = msg.digit_index * alpha;
+        let hi = ((msg.digit_index + 1) * alpha).min(msg.level);
+        let sk = &tenant.eval.chain.sk;
+        let s_prime = match msg.tag {
+            KeyTag::Relin => sk.s2_full.clone(),
+            KeyTag::Galois(k) => sk.automorphed(&tenant.ctx, k),
+        };
+        let residual = gadget_digit_residual(
+            &tenant.ctx,
+            sk,
+            &s_prime,
+            msg.level,
+            (lo, hi),
+            &msg.b,
+            &msg.a,
+        );
+        if residual > MAX_EVK_UPLOAD_NOISE {
+            return Err(ServiceError::Rejected(format!(
+                "evk digit rejected: residual {residual} exceeds the noise bound \
+                 (not keyed to this tenant)"
+            )));
+        }
+        let key = (msg.tenant_id, msg.level, msg.tag);
+        // Buffer the digit under the lock; heavy key assembly happens
+        // OUTSIDE it so one tenant's completion never stalls another
+        // tenant's independent digit frames.
+        let complete_gadget: Option<Vec<(ExtPoly, ExtPoly)>> = {
+            let mut pending = self.pending_keys.lock().unwrap();
+            // Per-tenant bound, self-healing: at the cap, the tenant's
+            // own (oldest-found) partial is evicted instead of the
+            // upload path wedging forever on abandoned uploads.
+            if !pending.contains_key(&key) {
+                let mine: Vec<_> = pending
+                    .keys()
+                    .filter(|(t, _, _)| *t == msg.tenant_id)
+                    .copied()
+                    .collect();
+                if mine.len() >= MAX_PENDING_KEY_UPLOADS_PER_TENANT {
+                    pending.remove(&mine[0]);
+                }
+            }
+            let slot = pending
+                .entry(key)
+                .or_insert_with(|| vec![None; msg.digit_count]);
+            if slot.len() != msg.digit_count {
+                return Err(ServiceError::Rejected(
+                    "evk digit count changed mid-upload".to_string(),
+                ));
+            }
+            slot[msg.digit_index] = Some((msg.b, msg.a));
+            if slot.iter().all(|d| d.is_some()) {
+                Some(
+                    pending
+                        .remove(&key)
+                        .expect("entry just inserted")
+                        .into_iter()
+                        .map(|d| d.expect("all digits present"))
+                        .collect(),
+                )
+            } else {
+                None
+            }
+        };
+        if let Some(gadget) = complete_gadget {
+            // Decode validated geometry/domain/residues, so assembly
+            // cannot panic on wire-controlled data.
+            let evk = Arc::new(EvalKey::from_gadget(&tenant.ctx, msg.level, gadget));
+            tenant.eval.chain.install_eval_key(msg.level, msg.tag, evk);
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Scheduler metrics snapshot as pretty JSON.

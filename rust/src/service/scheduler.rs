@@ -30,6 +30,7 @@
 
 use crate::ckks::cipher::Ciphertext;
 use crate::coordinator::{Coordinator, MixedOp};
+use crate::trace::Trace;
 use crate::util::json::Json;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -250,7 +251,14 @@ pub struct BatchScheduler {
     stop: AtomicBool,
     pub metrics: SchedulerMetrics,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Ring of the most recent coalesced batches as `trace::Trace`s, so a
+    /// serving session can be replayed on the `sim` engine
+    /// ([`Self::recent_traces`]); bounded at [`TRACE_RING`].
+    traces: Mutex<VecDeque<Trace>>,
 }
+
+/// How many per-batch traces [`BatchScheduler`] retains for replay.
+pub const TRACE_RING: usize = 64;
 
 impl BatchScheduler {
     /// Effective per-tenant cap (`0` = uncapped).
@@ -273,6 +281,7 @@ impl BatchScheduler {
             stop: AtomicBool::new(false),
             metrics: SchedulerMetrics::default(),
             worker: Mutex::new(None),
+            traces: Mutex::new(VecDeque::new()),
         });
         let clone = sched.clone();
         let handle = std::thread::Builder::new()
@@ -323,6 +332,20 @@ impl BatchScheduler {
     /// Current queue depth (tests/metrics).
     pub fn queued(&self) -> usize {
         self.queue.lock().unwrap().len()
+    }
+
+    /// The coordinator this scheduler executes on (the program executor
+    /// reads its metrics to report per-program simulated cost).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    /// The most recent coalesced batches as replayable [`Trace`]s (oldest
+    /// first, bounded at [`TRACE_RING`]): feed one to
+    /// [`crate::sim::simulate`] to re-run a serving window on the full
+    /// FHEmem model.
+    pub fn recent_traces(&self) -> Vec<Trace> {
+        self.traces.lock().unwrap().iter().cloned().collect()
     }
 
     pub fn metrics_json(&self) -> String {
@@ -409,6 +432,31 @@ impl BatchScheduler {
             ops.push(p.op);
             txs.push(p.tx);
         }
+        // Record this batch as a replayable trace before executing it
+        // (the op stream is what the batch *is*, independent of whether
+        // individual ops later fail isolation).
+        {
+            let trace_ops: Vec<crate::trace::FheOp> =
+                ops.iter().flat_map(|op| op.trace_ops()).collect();
+            let log_n = ops
+                .iter()
+                .map(|op| op.eval.ctx.params.log_n)
+                .max()
+                .unwrap_or(0);
+            let limbs = ops.iter().map(|op| op.level()).max().unwrap_or(1);
+            let mut ring = self.traces.lock().unwrap();
+            ring.push_back(Trace {
+                name: "serve-batch",
+                ops: trace_ops,
+                batch: 1,
+                const_bytes: 0.0,
+                log_n,
+                limbs,
+            });
+            while ring.len() > TRACE_RING {
+                ring.pop_front();
+            }
+        }
         let cycles_before = self.coord.metrics.sim_cycles.load(Ordering::Relaxed);
         let t0 = Instant::now();
         // Per-op panic isolation: a wire-valid but evaluator-invalid op
@@ -492,12 +540,7 @@ mod tests {
                             (MixedKind::Rotate(1), None)
                         };
                         sched
-                            .submit(MixedOp {
-                                eval: t.eval.clone(),
-                                kind,
-                                a,
-                                b,
-                            })
+                            .submit(MixedOp::new(t.eval.clone(), kind, a, b))
                             .unwrap()
                     })
                 })
@@ -531,12 +574,7 @@ mod tests {
         let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
         let a = t.eval.encrypt_real(&z, 2);
         let err = sched
-            .submit(MixedOp {
-                eval: t.eval.clone(),
-                kind: MixedKind::Rotate(1),
-                a,
-                b: None,
-            })
+            .submit(MixedOp::new(t.eval.clone(), MixedKind::Rotate(1), a, None))
             .unwrap_err();
         assert!(matches!(err, ServiceError::Backpressure));
         assert_eq!(sched.metrics.rejected.load(Ordering::Relaxed), 1);
@@ -567,20 +605,10 @@ mod tests {
         let mut bad_b = t.eval.encrypt_real(&z, 3);
         bad_b.scale *= 64.0;
         let rx_bad = sched
-            .submit(MixedOp {
-                eval: t.eval.clone(),
-                kind: MixedKind::Add,
-                a: a.clone(),
-                b: Some(bad_b),
-            })
+            .submit(MixedOp::new(t.eval.clone(), MixedKind::Add, a.clone(), Some(bad_b)))
             .unwrap();
         let rx_good = sched
-            .submit(MixedOp {
-                eval: t.eval.clone(),
-                kind: MixedKind::Rotate(1),
-                a: a.clone(),
-                b: None,
-            })
+            .submit(MixedOp::new(t.eval.clone(), MixedKind::Rotate(1), a.clone(), None))
             .unwrap();
         assert!(rx_bad.recv().unwrap().is_err());
         assert!(rx_good.recv().unwrap().is_ok());
@@ -588,12 +616,8 @@ mod tests {
         assert_eq!(sched.metrics.failed.load(Ordering::Relaxed), 1);
         assert_eq!(sched.metrics.ops_executed.load(Ordering::Relaxed), 1);
         // The worker survived: another op still executes.
-        let ok = sched.execute_blocking(MixedOp {
-            eval: t.eval.clone(),
-            kind: MixedKind::Rotate(2),
-            a,
-            b: None,
-        });
+        let ok =
+            sched.execute_blocking(MixedOp::new(t.eval.clone(), MixedKind::Rotate(2), a, None));
         assert!(ok.is_ok());
         sched.shutdown();
     }
@@ -602,12 +626,12 @@ mod tests {
         let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
         let (tx, _rx) = mpsc::channel();
         Pending {
-            op: MixedOp {
-                eval: t.eval.clone(),
-                kind: MixedKind::Rotate(step),
-                a: t.eval.encrypt_real(&z, 2),
-                b: None,
-            },
+            op: MixedOp::new(
+                t.eval.clone(),
+                MixedKind::Rotate(step),
+                t.eval.encrypt_real(&z, 2),
+                None,
+            ),
             tx,
             enqueued: Instant::now(),
             tenant: Arc::as_ptr(&t.eval) as usize,
@@ -700,12 +724,12 @@ mod tests {
             .collect();
         let submit = |t: &Tenant, step: i64| {
             sched
-                .submit(MixedOp {
-                    eval: t.eval.clone(),
-                    kind: MixedKind::Rotate(step),
-                    a: t.eval.encrypt_real(&z, 2),
-                    b: None,
-                })
+                .submit(MixedOp::new(
+                    t.eval.clone(),
+                    MixedKind::Rotate(step),
+                    t.eval.encrypt_real(&z, 2),
+                    None,
+                ))
                 .unwrap()
         };
         // Flood first: 4 ops from tenant 1. Eligible = min(4, 2) = 2 <
@@ -732,6 +756,48 @@ mod tests {
             2,
             "t1's overflow deferred out of the first window"
         );
+        sched.shutdown();
+    }
+
+    #[test]
+    fn batch_traces_are_recorded_and_replayable_on_sim() {
+        use crate::sim::{simulate, SimOptions};
+        let sched = BatchScheduler::start(
+            coord(),
+            SchedulerConfig {
+                max_batch: 2,
+                max_delay: Duration::from_millis(300),
+                max_queue: 8,
+                max_tenant_inflight: 0,
+            },
+        );
+        let t = Tenant::new(1, CkksParams::func_tiny(), 5);
+        let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
+        let rx1 = sched
+            .submit(MixedOp::new(
+                t.eval.clone(),
+                MixedKind::Rotate(1),
+                t.eval.encrypt_real(&z, 2),
+                None,
+            ))
+            .unwrap();
+        let rx2 = sched
+            .submit(MixedOp::new(
+                t.eval.clone(),
+                MixedKind::Rotate(2),
+                t.eval.encrypt_real(&z, 2),
+                None,
+            ))
+            .unwrap();
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
+        let traces = sched.recent_traces();
+        assert_eq!(traces.len(), 1, "one coalesced batch, one trace");
+        assert_eq!(traces[0].ops.len(), 2, "two rotations recorded");
+        assert_eq!(traces[0].log_n, t.ctx.params.log_n);
+        // The recorded batch replays on the full FHEmem simulator.
+        let res = simulate(&ArchConfig::default(), &traces[0], SimOptions::default());
+        assert!(res.latency_s > 0.0);
         sched.shutdown();
     }
 

@@ -21,8 +21,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::wire::{
-    self, decode_ciphertext, decode_eval_request, decode_register, encode_ciphertext,
-    encode_error, encode_metrics, read_frame_from, FrameKind,
+    self, decode_ciphertext, decode_eval_request, decode_evalkey_frame, decode_program_request,
+    decode_register, encode_ciphertext, encode_error, encode_metrics, encode_program_outputs,
+    read_frame_from, FrameKind,
 };
 use super::{FheService, ServiceError};
 
@@ -186,6 +187,46 @@ fn handle_frame(
             }
             let out = svc.eval_decoded(&tenant, req.op, req.step, cts)?;
             send(stream, FrameKind::EvalOk, &encode_ciphertext(&out)).map_err(ServiceError::Io)
+        }
+        FrameKind::Program => {
+            let req = decode_program_request(payload).map_err(ServiceError::Wire)?;
+            let tenant = svc
+                .store
+                .get(req.tenant_id)
+                .ok_or(ServiceError::UnknownTenant(req.tenant_id))?;
+            let mut inputs = Vec::with_capacity(req.inputs.len());
+            for (name, ct_kind, block) in &req.inputs {
+                inputs.push((
+                    name.clone(),
+                    decode_ciphertext(*ct_kind, block, &tenant.ctx)
+                        .map_err(ServiceError::Wire)?,
+                ));
+            }
+            let run = svc.eval_program(&tenant, req.program, inputs)?;
+            send(
+                stream,
+                FrameKind::ProgramOk,
+                &encode_program_outputs(&run.outputs),
+            )
+            .map_err(ServiceError::Io)
+        }
+        FrameKind::EvalKeyFrame => {
+            // The tenant id leads the payload; the rest of the frame can
+            // only be validated against that tenant's context.
+            if payload.len() < 8 {
+                return Err(ServiceError::Wire(wire::WireError::Truncated {
+                    need: 8,
+                    have: payload.len(),
+                }));
+            }
+            let tenant_id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+            let tenant = svc
+                .store
+                .get(tenant_id)
+                .ok_or(ServiceError::UnknownTenant(tenant_id))?;
+            let msg = decode_evalkey_frame(payload, &tenant.ctx).map_err(ServiceError::Wire)?;
+            svc.upload_eval_key_digit(msg)?;
+            send(stream, FrameKind::Ack, &[]).map_err(ServiceError::Io)
         }
         FrameKind::MetricsReq => {
             let json = svc.metrics_json();

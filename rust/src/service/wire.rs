@@ -28,10 +28,12 @@
 //! structure and go [`FrameKind::CtFull`]).
 
 use crate::ckks::cipher::Ciphertext;
-use crate::ckks::keys::{expand_a, SecretKey};
+use crate::ckks::keys::{expand_a, KeyTag, SecretKey};
+use crate::ckks::keyswitch::{ext_mods, ExtPoly};
 use crate::ckks::CkksContext;
 use crate::math::poly::{Domain, RnsPoly};
 use crate::params::CkksParams;
+use crate::program::ir::{OpKind, Program};
 use std::sync::Arc;
 
 /// Frame magic; the trailing byte doubles as the format version.
@@ -55,6 +57,9 @@ pub enum FrameKind {
     CtSeeded = 3,
     /// Ternary secret key coefficients.
     SecretKey = 4,
+    /// One digit of a streamed evaluation-key upload (gadget `(b, a)`
+    /// pair over the extended basis).
+    EvalKeyFrame = 5,
     /// Protocol: register a tenant (id, key seed, params).
     Register = 16,
     /// Protocol: evaluate one op on 1–2 ciphertexts.
@@ -69,6 +74,10 @@ pub enum FrameKind {
     Error = 21,
     /// Protocol: bare acknowledgement.
     Ack = 22,
+    /// Protocol: submit a whole program graph + its input ciphertexts.
+    Program = 23,
+    /// Protocol: program outputs (named `CtFull` blocks).
+    ProgramOk = 24,
 }
 
 impl FrameKind {
@@ -78,6 +87,7 @@ impl FrameKind {
             2 => FrameKind::CtFull,
             3 => FrameKind::CtSeeded,
             4 => FrameKind::SecretKey,
+            5 => FrameKind::EvalKeyFrame,
             16 => FrameKind::Register,
             17 => FrameKind::Eval,
             18 => FrameKind::EvalOk,
@@ -85,6 +95,8 @@ impl FrameKind {
             20 => FrameKind::MetricsOk,
             21 => FrameKind::Error,
             22 => FrameKind::Ack,
+            23 => FrameKind::Program,
+            24 => FrameKind::ProgramOk,
             _ => return None,
         })
     }
@@ -818,6 +830,477 @@ pub fn decode_error(payload: &[u8]) -> Result<(u16, u64, String), WireError> {
     Ok((code, detail, msg))
 }
 
+// ----------------------------------------------------------------------
+// program frames
+// ----------------------------------------------------------------------
+
+/// Caps on program frames (garbage-length defence).
+pub const MAX_PROGRAM_NODES: usize = 4096;
+/// Max plaintext-vector / diagonal length in a program frame.
+pub const MAX_PROGRAM_VEC: usize = 1 << 20;
+
+fn check_finite(vs: &[f64]) -> Result<(), WireError> {
+    if vs.iter().any(|v| !v.is_finite()) {
+        return malformed("non-finite f64 in program payload");
+    }
+    Ok(())
+}
+
+fn write_node(w: &mut WireWriter, prog: &Program, kind: &OpKind) {
+    let id32 = |w: &mut WireWriter, v: usize| w.u32(v as u32);
+    match kind {
+        OpKind::Input(name) => {
+            w.u8(0);
+            w.str_(name);
+        }
+        OpKind::PlainVec(v) => {
+            w.u8(1);
+            w.u32(v.len() as u32);
+            for &x in v {
+                w.f64(x);
+            }
+        }
+        OpKind::Add(a, b) => {
+            w.u8(2);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::Sub(a, b) => {
+            w.u8(3);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::Mul(a, b) => {
+            w.u8(4);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::Pmul(a, b) => {
+            w.u8(5);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::AddPlain(a, b) => {
+            w.u8(6);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::SubPlain(a, b) => {
+            w.u8(7);
+            id32(w, *a);
+            id32(w, *b);
+        }
+        OpKind::Rotate(a, s) => {
+            w.u8(8);
+            id32(w, *a);
+            w.i64(*s);
+        }
+        OpKind::Conjugate(a) => {
+            w.u8(9);
+            id32(w, *a);
+        }
+        OpKind::Rescale(a) => {
+            w.u8(10);
+            id32(w, *a);
+        }
+        OpKind::LevelDown(a, l) => {
+            w.u8(11);
+            id32(w, *a);
+            w.u16(*l as u16);
+        }
+        OpKind::Chebyshev(a, coeffs) => {
+            w.u8(12);
+            id32(w, *a);
+            w.u16(coeffs.len() as u16);
+            for &c in coeffs {
+                w.f64(c);
+            }
+        }
+        OpKind::LinearTransform(a, t) => {
+            w.u8(13);
+            id32(w, *a);
+            let lt = &prog.transforms[*t];
+            w.u32(lt.n as u32);
+            w.u16(lt.diags.len() as u16);
+            for (off, vals) in &lt.diags {
+                w.u32(*off as u32);
+                w.u32(vals.len() as u32);
+                for v in vals {
+                    w.f64(v.re);
+                    w.f64(v.im);
+                }
+            }
+        }
+        OpKind::HoistedRotSum(a, width) => {
+            w.u8(14);
+            id32(w, *a);
+            w.u16(*width as u16);
+        }
+    }
+}
+
+fn read_node(
+    r: &mut WireReader,
+    transforms: &mut Vec<crate::ckks::linear::LinearTransform>,
+) -> Result<OpKind, WireError> {
+    let tag = r.u8()?;
+    let id32 = |r: &mut WireReader| -> Result<usize, WireError> { Ok(r.u32()? as usize) };
+    Ok(match tag {
+        0 => OpKind::Input(r.str_()?),
+        1 => {
+            let len = r.u32()? as usize;
+            if len > MAX_PROGRAM_VEC {
+                return Err(WireError::Oversized(len));
+            }
+            let mut v = Vec::with_capacity(len);
+            for _ in 0..len {
+                v.push(r.f64()?);
+            }
+            check_finite(&v)?;
+            OpKind::PlainVec(v)
+        }
+        2 => OpKind::Add(id32(r)?, id32(r)?),
+        3 => OpKind::Sub(id32(r)?, id32(r)?),
+        4 => OpKind::Mul(id32(r)?, id32(r)?),
+        5 => OpKind::Pmul(id32(r)?, id32(r)?),
+        6 => OpKind::AddPlain(id32(r)?, id32(r)?),
+        7 => OpKind::SubPlain(id32(r)?, id32(r)?),
+        8 => {
+            let a = id32(r)?;
+            let s = r.i64()?;
+            OpKind::Rotate(a, s)
+        }
+        9 => OpKind::Conjugate(id32(r)?),
+        10 => OpKind::Rescale(id32(r)?),
+        11 => {
+            let a = id32(r)?;
+            let l = r.u16()? as usize;
+            OpKind::LevelDown(a, l)
+        }
+        12 => {
+            let a = id32(r)?;
+            let count = r.u16()? as usize;
+            if count > MAX_PROGRAM_NODES {
+                return Err(WireError::Oversized(count));
+            }
+            let mut coeffs = Vec::with_capacity(count);
+            for _ in 0..count {
+                coeffs.push(r.f64()?);
+            }
+            check_finite(&coeffs)?;
+            OpKind::Chebyshev(a, coeffs)
+        }
+        13 => {
+            let a = id32(r)?;
+            let n = r.u32()? as usize;
+            if n > MAX_PROGRAM_VEC {
+                return Err(WireError::Oversized(n));
+            }
+            if n == 0 {
+                return malformed("linear transform of size 0");
+            }
+            let diag_count = r.u16()? as usize;
+            let mut diags = Vec::with_capacity(diag_count);
+            for _ in 0..diag_count {
+                let off = r.u32()? as usize;
+                if off >= n.max(1) {
+                    return malformed(format!("diagonal offset {off} >= transform size {n}"));
+                }
+                let len = r.u32()? as usize;
+                if len != n {
+                    return malformed(format!("diagonal length {len} != transform size {n}"));
+                }
+                let mut vals = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let re = r.f64()?;
+                    let im = r.f64()?;
+                    if !re.is_finite() || !im.is_finite() {
+                        return malformed("non-finite diagonal value");
+                    }
+                    vals.push(crate::ckks::C64::new(re, im));
+                }
+                diags.push((off, vals));
+            }
+            transforms.push(crate::ckks::linear::LinearTransform { n, diags });
+            OpKind::LinearTransform(a, transforms.len() - 1)
+        }
+        14 => {
+            let a = id32(r)?;
+            let w = r.u16()? as usize;
+            OpKind::HoistedRotSum(a, w)
+        }
+        other => return malformed(format!("unknown program node tag {other}")),
+    })
+}
+
+/// Decoded [`FrameKind::Program`] payload header: the graph plus raw
+/// input ciphertext blocks (decoded once the tenant's context is known).
+#[derive(Debug)]
+pub struct ProgramRequest<'a> {
+    pub tenant_id: u64,
+    pub program: Program,
+    /// Named inputs: (name, encoding kind, raw ciphertext payload).
+    pub inputs: Vec<(String, FrameKind, &'a [u8])>,
+}
+
+/// Encode a whole-program request: graph, named outputs, and the input
+/// ciphertexts (seed-compressed where fresh).
+pub fn encode_program_request(
+    tenant_id: u64,
+    prog: &Program,
+    inputs: &[(String, WireCiphertext)],
+) -> Vec<u8> {
+    assert!(prog.nodes.len() <= MAX_PROGRAM_NODES, "program too large");
+    let mut w = WireWriter::new();
+    w.u64(tenant_id);
+    w.u32(prog.nodes.len() as u32);
+    for kind in &prog.nodes {
+        write_node(&mut w, prog, kind);
+    }
+    w.u16(prog.outputs.len() as u16);
+    for (name, id) in &prog.outputs {
+        w.str_(name);
+        w.u32(*id as u32);
+    }
+    w.u16(inputs.len() as u16);
+    for (name, ct) in inputs {
+        w.str_(name);
+        w.u8(ct.kind() as u8);
+        w.block(&ct.encode());
+    }
+    w.into_bytes()
+}
+
+/// Strictly decode a [`FrameKind::Program`] payload. The graph is
+/// structurally validated (SSA order, plaintext typing, outputs) and
+/// every `Input` node must have a matching input ciphertext block;
+/// level/scale validation happens at compile time against the decoded
+/// ciphertexts.
+pub fn decode_program_request(payload: &[u8]) -> Result<ProgramRequest<'_>, WireError> {
+    let mut r = WireReader::new(payload);
+    let tenant_id = r.u64()?;
+    let node_count = r.u32()? as usize;
+    if node_count > MAX_PROGRAM_NODES {
+        return Err(WireError::Oversized(node_count));
+    }
+    let mut transforms = Vec::new();
+    let mut nodes = Vec::with_capacity(node_count);
+    for _ in 0..node_count {
+        nodes.push(read_node(&mut r, &mut transforms)?);
+    }
+    let out_count = r.u16()? as usize;
+    let mut outputs = Vec::with_capacity(out_count);
+    for _ in 0..out_count {
+        let name = r.str_()?;
+        let id = r.u32()? as usize;
+        outputs.push((name, id));
+    }
+    let in_count = r.u16()? as usize;
+    let mut inputs = Vec::with_capacity(in_count);
+    for _ in 0..in_count {
+        let name = r.str_()?;
+        let kind_raw = r.u8()?;
+        let kind = match FrameKind::from_u8(kind_raw) {
+            Some(FrameKind::CtFull) => FrameKind::CtFull,
+            Some(FrameKind::CtSeeded) => FrameKind::CtSeeded,
+            _ => return malformed(format!("input kind {kind_raw} is not a ciphertext")),
+        };
+        let block = r.block()?;
+        inputs.push((name, kind, block));
+    }
+    r.finish()?;
+    let program = Program {
+        nodes,
+        transforms,
+        outputs,
+    };
+    program
+        .validate_structure()
+        .map_err(|e| WireError::Malformed(format!("program graph: {e}")))?;
+    // Every named input must be supplied.
+    for kind in &program.nodes {
+        if let OpKind::Input(name) = kind {
+            if !inputs.iter().any(|(n, _, _)| n == name) {
+                return malformed(format!("program input '{name}' has no ciphertext block"));
+            }
+        }
+    }
+    Ok(ProgramRequest {
+        tenant_id,
+        program,
+        inputs,
+    })
+}
+
+/// [`FrameKind::ProgramOk`] payload: named output ciphertexts.
+pub fn encode_program_outputs(outputs: &[(String, Ciphertext)]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u16(outputs.len() as u16);
+    for (name, ct) in outputs {
+        w.str_(name);
+        w.block(&encode_ciphertext(ct));
+    }
+    w.into_bytes()
+}
+
+/// Strictly decode program outputs against the tenant's context.
+pub fn decode_program_outputs(
+    payload: &[u8],
+    ctx: &Arc<CkksContext>,
+) -> Result<Vec<(String, Ciphertext)>, WireError> {
+    let mut r = WireReader::new(payload);
+    let count = r.u16()? as usize;
+    let mut outs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = r.str_()?;
+        let block = r.block()?;
+        outs.push((name, decode_ciphertext(FrameKind::CtFull, block, ctx)?));
+    }
+    r.finish()?;
+    Ok(outs)
+}
+
+// ----------------------------------------------------------------------
+// streamed evaluation-key upload
+// ----------------------------------------------------------------------
+
+/// One decoded [`FrameKind::EvalKeyFrame`]: a single gadget digit of a
+/// key-switching key, uploaded by the client so the server never has to
+/// generate it.
+pub struct EvalKeyFrameMsg {
+    pub tenant_id: u64,
+    pub level: usize,
+    pub tag: KeyTag,
+    pub digit_index: usize,
+    pub digit_count: usize,
+    /// Gadget pair over the extended basis, NTT domain.
+    pub b: ExtPoly,
+    pub a: ExtPoly,
+}
+
+/// Encode one digit of an evaluation key for streaming upload.
+pub fn encode_evalkey_frame(
+    tenant_id: u64,
+    level: usize,
+    tag: KeyTag,
+    digit_index: usize,
+    digit_count: usize,
+    b: &ExtPoly,
+    a: &ExtPoly,
+) -> Vec<u8> {
+    assert_eq!(b.rows.len(), a.rows.len(), "gadget rows mismatch");
+    let rows = b.rows.len();
+    let n = b.rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut w = WireWriter::with_capacity(32 + 2 * rows * n * 8);
+    w.u64(tenant_id);
+    w.u16(level as u16);
+    match tag {
+        KeyTag::Relin => {
+            w.u8(0);
+            w.u64(0);
+        }
+        KeyTag::Galois(k) => {
+            w.u8(1);
+            w.u64(k as u64);
+        }
+    }
+    w.u16(digit_index as u16);
+    w.u16(digit_count as u16);
+    w.u16(rows as u16);
+    for poly in [b, a] {
+        for row in &poly.rows {
+            for &v in row {
+                w.u64(v);
+            }
+        }
+    }
+    w.into_bytes()
+}
+
+/// Strictly decode an evaluation-key digit frame against a tenant's
+/// context: the level, digit geometry and every residue are validated
+/// before any key material is accepted.
+pub fn decode_evalkey_frame(
+    payload: &[u8],
+    ctx: &Arc<CkksContext>,
+) -> Result<EvalKeyFrameMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let tenant_id = r.u64()?;
+    let level = r.u16()? as usize;
+    if level == 0 || level > ctx.l() {
+        return malformed(format!("evk level {level} outside 1..={}", ctx.l()));
+    }
+    let tag = match r.u8()? {
+        0 => {
+            let k = r.u64()?;
+            if k != 0 {
+                return malformed(format!("relin tag carries galois element {k}"));
+            }
+            KeyTag::Relin
+        }
+        1 => {
+            let k = r.u64()? as usize;
+            let n = ctx.n();
+            if k % 2 != 1 || k >= 2 * n {
+                return malformed(format!("galois element {k} invalid for N={n}"));
+            }
+            KeyTag::Galois(k)
+        }
+        other => return malformed(format!("unknown evk tag kind {other}")),
+    };
+    let digit_index = r.u16()? as usize;
+    let digit_count = r.u16()? as usize;
+    let alpha = ctx.params.digit_limbs();
+    let expect_digits = (level + alpha - 1) / alpha;
+    if digit_count != expect_digits {
+        return malformed(format!(
+            "evk digit count {digit_count} != expected {expect_digits} at level {level}"
+        ));
+    }
+    if digit_index >= digit_count {
+        return malformed(format!("evk digit index {digit_index} >= count {digit_count}"));
+    }
+    let rows = r.u16()? as usize;
+    let mods = ext_mods(ctx, level);
+    if rows != mods.len() {
+        return malformed(format!(
+            "evk row count {rows} != extended basis size {}",
+            mods.len()
+        ));
+    }
+    let n = ctx.n();
+    let mut polys = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let mut ext = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+        for (row_idx, &mod_idx) in mods.iter().enumerate() {
+            let q = ctx.basis.q(mod_idx);
+            let raw = r.take(n * 8)?;
+            for (c, chunk) in raw.chunks_exact(8).enumerate() {
+                let v = u64::from_le_bytes(chunk.try_into().unwrap());
+                if v >= q {
+                    return malformed(format!(
+                        "evk residue {v} >= modulus {q} (row {row_idx}, coeff {c})"
+                    ));
+                }
+                ext.rows[row_idx][c] = v;
+            }
+        }
+        polys.push(ext);
+    }
+    r.finish()?;
+    let a = polys.pop().expect("two polys");
+    let b = polys.pop().expect("two polys");
+    Ok(EvalKeyFrameMsg {
+        tenant_id,
+        level,
+        tag,
+        digit_index,
+        digit_count,
+        b,
+        a,
+    })
+}
+
 /// [`FrameKind::MetricsOk`] payload: a JSON string.
 pub fn encode_metrics(json: &str) -> Vec<u8> {
     json.as_bytes().to_vec()
@@ -935,6 +1418,94 @@ mod tests {
             let _ = decode_register(&buf);
             let _ = decode_eval_request(&buf);
             let _ = decode_error(&buf);
+            let _ = decode_program_request(&buf);
         }
+    }
+
+    #[test]
+    fn program_request_roundtrips_and_rejects_malformed() {
+        use crate::program::ir::Builder;
+        let slots = 8usize;
+        let mut b = Builder::new();
+        let x = b.input("x");
+        let p = b.plain_vec(vec![0.25; slots]);
+        let t = b.pmul(x, p);
+        let dot = b.rotate_sum(t, 4);
+        let s = b.chebyshev(dot, vec![0.1, 0.4, 0.0, 0.2]);
+        b.output("s", s);
+        let prog = b.build().unwrap();
+
+        // A fake (structurally opaque) input block: this test exercises
+        // the program-graph codec; ciphertext decoding is covered by the
+        // e2e tests against a real context.
+        let fake_ct = vec![0u8; 16];
+        let payload = {
+            let mut w = WireWriter::new();
+            w.u64(7);
+            w.u32(prog.nodes.len() as u32);
+            for kind in &prog.nodes {
+                super::write_node(&mut w, &prog, kind);
+            }
+            w.u16(prog.outputs.len() as u16);
+            for (name, id) in &prog.outputs {
+                w.str_(name);
+                w.u32(*id as u32);
+            }
+            w.u16(1);
+            w.str_("x");
+            w.u8(FrameKind::CtFull as u8);
+            w.block(&fake_ct);
+            w.into_bytes()
+        };
+        let req = decode_program_request(&payload).unwrap();
+        assert_eq!(req.tenant_id, 7);
+        assert_eq!(req.program.nodes.len(), prog.nodes.len());
+        assert_eq!(req.program.outputs, prog.outputs);
+        assert_eq!(req.inputs.len(), 1);
+        assert_eq!(req.inputs[0].0, "x");
+        // Node-for-node identity.
+        for (got, want) in req.program.nodes.iter().zip(&prog.nodes) {
+            assert_eq!(got, want);
+        }
+
+        // Missing input block for a named Input node.
+        let mut bad = {
+            let mut w = WireWriter::new();
+            w.u64(7);
+            w.u32(prog.nodes.len() as u32);
+            for kind in &prog.nodes {
+                super::write_node(&mut w, &prog, kind);
+            }
+            w.u16(prog.outputs.len() as u16);
+            for (name, id) in &prog.outputs {
+                w.str_(name);
+                w.u32(*id as u32);
+            }
+            w.u16(0);
+            w.into_bytes()
+        };
+        assert!(matches!(
+            decode_program_request(&bad),
+            Err(WireError::Malformed(_))
+        ));
+        // Truncations never panic.
+        bad = payload.clone();
+        for cut in 0..bad.len() {
+            assert!(decode_program_request(&bad[..cut]).is_err(), "cut={cut}");
+        }
+        // Forward reference (not SSA order) is rejected.
+        let mut w = WireWriter::new();
+        w.u64(1);
+        w.u32(1);
+        w.u8(10); // Rescale
+        w.u32(5); // operand beyond the node's own id
+        w.u16(1);
+        w.str_("o");
+        w.u32(0);
+        w.u16(0);
+        assert!(matches!(
+            decode_program_request(&w.into_bytes()),
+            Err(WireError::Malformed(_))
+        ));
     }
 }

@@ -385,6 +385,47 @@ impl<'a> CostModel<'a> {
         bd
     }
 
+    /// A **hoisted rotation group** (the program planner's rewrite of an
+    /// N-rotation reduce tree): the input is iNTT'd and ModUp-BConv'd
+    /// **once**, each of the `rotations` Galois elements then permutes
+    /// the cached extended digits, NTTs them and inner-products with its
+    /// own key, and one shared ModDown finishes the group — versus
+    /// [`Self::keyswitch`] paying ModUp + ModDown per rotation. This is
+    /// the cycle model behind the `hoisted_keyswitch_reduction_helr`
+    /// bench figure.
+    pub fn keyswitch_hoisted(&self, rotations: usize, use_chain: bool) -> Breakdown {
+        let l = self.shape.limbs;
+        let k = self.shape.k_special;
+        let dnum = self.shape.dnum.min(l).max(1);
+        let alpha = (l + dnum - 1) / dnum;
+        let r = rotations.max(1) as f64;
+        let mut bd = Breakdown::default();
+        let ntt = self.ntt_poly();
+        // Shared decompose: iNTT the input + per-digit ModUp BConv, once
+        // for the whole group.
+        bd.add(&ntt.scaled(l as f64));
+        for _digit in 0..dnum {
+            bd.add(&self.bconv(alpha, l - alpha + k, use_chain));
+        }
+        // Per rotation and per digit: automorphism of the cached extended
+        // digit, NTT of the extended digit, gadget inner product.
+        let auto = self.automorphism_poly();
+        let mm = self.modmul_poly();
+        let ma = self.modadd_poly();
+        for _digit in 0..dnum {
+            bd.add(&auto.scaled(r * (l + k) as f64));
+            bd.add(&ntt.scaled(r * (l + k) as f64));
+            bd.add(&mm.scaled(r * 2.0 * (l + k) as f64));
+            bd.add(&ma.scaled(r * 2.0 * (l + k) as f64));
+        }
+        // One shared ModDown + NTT back (2 polys).
+        bd.add(&ntt.scaled((2 * k) as f64));
+        bd.add(&self.bconv(k, l, use_chain).scaled(2.0));
+        bd.add(&mm.scaled(2.0 * l as f64));
+        bd.add(&ntt.scaled(2.0 * l as f64));
+        bd
+    }
+
     /// Key material loaded per key switch (evk digits), bytes — drives
     /// the load-save pipeline's data-loading term (§IV-F3).
     pub fn evk_bytes(&self) -> f64 {

@@ -1,0 +1,353 @@
+//! End-to-end tests for `fhemem-compile`: a HELR iteration built on the
+//! `program::Builder` API, compiled through CSE + rotation hoisting +
+//! auto-rescale, executed tiled through the coordinator — bit-identical
+//! to the hand-written evaluator path, both in-process and submitted as
+//! a single `Program` wire frame through the TCP serving layer. Plus
+//! streamed evaluation-key upload and malformed-program rejection.
+
+use fhemem::ckks::cipher::{Ciphertext, Evaluator};
+use fhemem::ckks::linear::eval_chebyshev;
+use fhemem::ckks::{CkksContext, KeyChain, KeyTag};
+use fhemem::coordinator::Coordinator;
+use fhemem::params::CkksParams;
+use fhemem::program::{compile, Builder, PassOptions, Program};
+use fhemem::service::wire::{
+    self, encode_frame, read_frame_from, write_frame_to, FrameKind,
+};
+use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient};
+use fhemem::sim::ArchConfig;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const FEATURES: usize = 16;
+
+/// Synthetic HELR slot data (features packed sample-major).
+fn helr_data(slots: usize) -> (Vec<f64>, Vec<f64>) {
+    let x: Vec<f64> = (0..slots).map(|i| 0.05 * ((i % 9) as f64 - 4.0)).collect();
+    let y: Vec<f64> = (0..slots).map(|i| ((i / FEATURES) % 2) as f64).collect();
+    (x, y)
+}
+
+/// Degree-1 sigmoid stand-in: keeps the full five-stage HELR iteration
+/// (pmul → hoisted rotate-sum → chebyshev → residual → gradient pmul)
+/// inside func_tiny's four-level budget.
+fn sigmoid_coeffs() -> Vec<f64> {
+    vec![0.5, 0.25]
+}
+
+/// One HELR iteration as a program graph.
+fn helr_program(x: &[f64], y: &[f64]) -> Program {
+    let mut b = Builder::new();
+    let w = b.input("w");
+    let xw = b.mul_plain(w, x.to_vec());
+    let dot = b.rotate_sum(xw, FEATURES);
+    let pred = b.chebyshev(dot, sigmoid_coeffs());
+    let err = b.sub_plain_vec(pred, y.to_vec());
+    let grad = b.mul_plain(err, x.to_vec());
+    b.output("grad", grad);
+    b.output("pred", pred);
+    b.build().expect("HELR graph builds")
+}
+
+/// The same iteration hand-written against the evaluator (the
+/// conformance baseline the compiled path must reproduce bit-for-bit).
+fn helr_handwritten(
+    ev: &Evaluator,
+    cw: &Ciphertext,
+    x: &[f64],
+    y: &[f64],
+) -> (Ciphertext, Ciphertext) {
+    let xw = ev.mul_plain(cw, x);
+    let dot = ev.rotate_sum_hoisted(&xw, FEATURES);
+    let pred = eval_chebyshev(ev, &dot, &sigmoid_coeffs());
+    let err = ev.sub_plain(&pred, y);
+    let grad = ev.mul_plain(&err, x);
+    (grad, pred)
+}
+
+fn assert_ct_eq(got: &Ciphertext, want: &Ciphertext, what: &str) {
+    assert_eq!(got.c0.data, want.c0.data, "{what}: c0 residues");
+    assert_eq!(got.c1.data, want.c1.data, "{what}: c1 residues");
+    assert_eq!(got.level, want.level, "{what}: level");
+    assert!((got.scale - want.scale).abs() < 1e-9, "{what}: scale");
+}
+
+#[test]
+fn compiled_helr_iteration_bit_identical_in_process() {
+    let coord = Coordinator::new(CkksParams::func_tiny(), ArchConfig::default(), None);
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 0x600D));
+    let ev = Arc::new(Evaluator::new(ctx.clone(), chain, 0x600E));
+    let slots = ev.ctx.encoder.slots();
+    let (x, y) = helr_data(slots);
+    let level = ev.ctx.l();
+    let w: Vec<f64> = (0..slots).map(|i| 0.02 * ((i % FEATURES) as f64 - 8.0)).collect();
+    let cw = ev.encrypt_real(&w, level);
+
+    let (grad_hand, pred_hand) = helr_handwritten(&ev, &cw, &x, &y);
+
+    let prog = helr_program(&x, &y);
+    let inputs_meta = HashMap::from([("w".to_string(), (level, ev.ctx.scale()))]);
+    let compiled = compile(&prog, &ev.ctx, &inputs_meta, &PassOptions::default()).unwrap();
+    // The planner hoisted the 16-wide reduce tree into one group.
+    assert_eq!(compiled.counts.hoisted_groups, 1);
+    assert_eq!(compiled.counts.keyswitch_invocations, 1);
+    let run = compiled
+        .execute(&coord, &ev, &HashMap::from([("w".to_string(), cw.clone())]))
+        .expect("compiled HELR executes");
+    assert_eq!(run.outputs.len(), 2);
+    for (name, ct) in &run.outputs {
+        match name.as_str() {
+            "grad" => assert_ct_eq(ct, &grad_hand, "grad"),
+            "pred" => assert_ct_eq(ct, &pred_hand, "pred"),
+            other => panic!("unexpected output '{other}'"),
+        }
+    }
+    // The run carries a replayable trace and a costed report.
+    assert!(!run.trace.ops.is_empty());
+    assert_eq!(run.trace.log_n, ev.ctx.params.log_n);
+    assert!(run.report.sim_cycles > 0, "compiled run was costed");
+    assert_eq!(run.report.keyswitch_invocations, 1);
+
+    // Sanity: the gradient also decrypts to the plaintext computation
+    // (rotate-sum semantics: slot i sums the 16 cyclically-following
+    // slots of x⊙w).
+    let g = ev.decrypt_real(
+        run.outputs
+            .iter()
+            .find(|(n, _)| n == "grad")
+            .map(|(_, ct)| ct)
+            .unwrap(),
+    );
+    let xw_p: Vec<f64> = (0..slots).map(|i| x[i] * w[i]).collect();
+    for i in (0..slots).step_by(97) {
+        let dot: f64 = (0..FEATURES).map(|j| xw_p[(i + j) % slots]).sum();
+        let pred = 0.5 + 0.25 * dot;
+        let want = (pred - y[i]) * x[i];
+        assert!((g[i] - want).abs() < 3e-2, "slot {i}: {} vs {want}", g[i]);
+    }
+}
+
+#[test]
+fn chebyshev_macro_matches_flat_kernel_bitwise() {
+    // A deeper (degree-2) chebyshev as a lone program node, against the
+    // flat kernel directly.
+    let coord = Coordinator::new(CkksParams::func_tiny(), ArchConfig::default(), None);
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 0xCEB));
+    let ev = Arc::new(Evaluator::new(ctx.clone(), chain, 0xCEC));
+    let slots = ev.ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.002 * ((i % 11) as f64 - 5.0)).collect();
+    let ct = ev.encrypt_real(&z, 3);
+    let coeffs = vec![0.1, 0.6, 0.3];
+    let want = eval_chebyshev(&ev, &ct, &coeffs);
+
+    let mut b = Builder::new();
+    let x = b.input("x");
+    let c = b.chebyshev(x, coeffs);
+    b.output("c", c);
+    let prog = b.build().unwrap();
+    let compiled = compile(
+        &prog,
+        &ev.ctx,
+        &HashMap::from([("x".to_string(), (3, ct.scale))]),
+        &PassOptions::default(),
+    )
+    .unwrap();
+    let run = compiled
+        .execute(&coord, &ev, &HashMap::from([("x".to_string(), ct)]))
+        .unwrap();
+    assert_ct_eq(&run.outputs[0].1, &want, "chebyshev");
+}
+
+#[test]
+fn helr_program_over_tcp_bit_identical_to_local_path() {
+    let svc = FheService::new(
+        ArchConfig::default(),
+        SchedulerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            max_queue: 64,
+            max_tenant_inflight: 0,
+        },
+    );
+    let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind loopback");
+    let addr = handle.addr;
+
+    let mut client = ServiceClient::connect(addr, 9, CkksParams::func_tiny(), 0x9E).unwrap();
+    let slots = client.ctx.encoder.slots();
+    let (x, y) = helr_data(slots);
+    let w: Vec<f64> = (0..slots).map(|i| 0.01 * ((i % 5) as f64 - 2.0)).collect();
+    let level = client.ctx.l();
+
+    // One seed-compressed fresh ciphertext carries the weights; the
+    // whole iteration travels as a single Program frame.
+    let cw = client.encrypt(&w, level);
+    let prog = helr_program(&x, &y);
+    let outputs = client
+        .run_program(&prog, &[("w".to_string(), cw.clone())])
+        .expect("program over TCP");
+    assert_eq!(outputs.len(), 2);
+
+    // The local twin replays the hand-written path on the identical
+    // ciphertext and key chain — results must match bit for bit.
+    let (grad_hand, pred_hand) = helr_handwritten(&client.eval, cw.ct(), &x, &y);
+    for (name, ct) in &outputs {
+        match name.as_str() {
+            "grad" => assert_ct_eq(ct, &grad_hand, "tcp grad"),
+            "pred" => assert_ct_eq(ct, &pred_hand, "tcp pred"),
+            other => panic!("unexpected output '{other}'"),
+        }
+    }
+    // The scheduler saw the program's waves as batched ops.
+    let m = svc.sched.metrics.ops_executed.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(m >= 5, "program nodes went through the scheduler (saw {m})");
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn evalkey_upload_streams_digits_and_installs_before_use() {
+    let svc = FheService::new(ArchConfig::default(), SchedulerConfig::default());
+    let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind loopback");
+    let addr = handle.addr;
+
+    let mut client = ServiceClient::connect(addr, 3, CkksParams::func_tiny(), 0x3A).unwrap();
+    let level = 3usize;
+    let n = client.ctx.n();
+    let k = fhemem::math::poly::RnsPoly::rotation_to_galois(2, n);
+
+    // Server has generated nothing for this tenant yet.
+    let tenant = svc.store.get(3).unwrap();
+    assert!(!tenant.eval.chain.has_eval_key(level, KeyTag::Galois(k)));
+
+    client
+        .upload_eval_key(level, KeyTag::Galois(k))
+        .expect("streamed upload");
+    assert!(
+        tenant.eval.chain.has_eval_key(level, KeyTag::Galois(k)),
+        "uploaded key installed without server-side keygen"
+    );
+
+    // The uploaded key is the one the rotation uses — and since client
+    // and server derive identical chains, the result matches the
+    // client-local rotation bit for bit.
+    let slots = client.ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 13) as f64).collect();
+    let ct = client.encrypt(&z, level);
+    let remote = client.rotate(&ct, 2).expect("remote rotation");
+    let local = client.eval.rotate(ct.ct(), 2);
+    assert_eq!(remote.c0.data, local.c0.data);
+    assert_eq!(remote.c1.data, local.c1.data);
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn forged_evalkey_upload_is_rejected_before_install() {
+    // Anyone can open a TCP connection, so an uploaded digit must prove
+    // it is keyed to the target tenant: a *different* tenant's otherwise
+    // perfectly well-formed key digits (valid residues, right geometry)
+    // must be refused by the gadget-residual check and never installed.
+    let svc = FheService::new(ArchConfig::default(), SchedulerConfig::default());
+    let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind loopback");
+    let addr = handle.addr;
+    let _victim = ServiceClient::connect(addr, 1, CkksParams::func_tiny(), 0x111).unwrap();
+
+    // The attacker derives a *different* chain and tries to plant its
+    // keys under the victim's tenant id.
+    let attacker = fhemem::service::Tenant::new(2, CkksParams::func_tiny(), 0x222);
+    let level = 2usize;
+    let n = attacker.ctx.n();
+    let k = fhemem::math::poly::RnsPoly::rotation_to_galois(1, n);
+    let key = attacker.eval.chain.eval_key(level, KeyTag::Galois(k));
+    let count = key.digits.len();
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let payload = wire::encode_evalkey_frame(
+        1, // victim's tenant id
+        level,
+        KeyTag::Galois(k),
+        0,
+        count,
+        &key.digits[0].b,
+        &key.digits[0].a,
+    );
+    write_frame_to(&mut stream, FrameKind::EvalKeyFrame, &payload).unwrap();
+    let (kind, resp) = read_frame_from(&mut stream).unwrap().expect("response");
+    assert_eq!(kind, FrameKind::Error, "forged digit draws an Error");
+    let (code, _, msg) = wire::decode_error(&resp).unwrap();
+    assert_eq!(code, server::error_code::REJECTED);
+    assert!(msg.contains("residual"), "rejection names the check: {msg}");
+    // Nothing was installed or buffered against the victim.
+    let victim = svc.store.get(1).unwrap();
+    assert!(!victim.eval.chain.has_eval_key(level, KeyTag::Galois(k)));
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_program_frames_are_rejected_over_tcp() {
+    let svc = FheService::new(ArchConfig::default(), SchedulerConfig::default());
+    let handle = server::spawn("127.0.0.1:0", svc.clone()).expect("bind loopback");
+    let addr = handle.addr;
+    // Register the tenant on a normal client connection first.
+    let _client = ServiceClient::connect(addr, 5, CkksParams::func_tiny(), 0x55).unwrap();
+
+    // A structurally broken program payload (forward reference).
+    let mut w = wire::WireWriter::new();
+    w.u64(5);
+    w.u32(1);
+    w.u8(10); // Rescale
+    w.u32(7); // operand beyond the node id
+    w.u16(1);
+    w.str_("o");
+    w.u32(0);
+    w.u16(0);
+    let bad_program = w.into_bytes();
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    write_frame_to(&mut stream, FrameKind::Program, &bad_program).unwrap();
+    let (kind, payload) = read_frame_from(&mut stream).unwrap().expect("response");
+    assert_eq!(kind, FrameKind::Error, "malformed program draws an Error");
+    let (code, _, msg) = wire::decode_error(&payload).unwrap();
+    assert_eq!(code, server::error_code::WIRE);
+    assert!(msg.contains("program"), "error names the program: {msg}");
+
+    // An unknown-tenant program on a well-formed graph.
+    let mut b = Builder::new();
+    let xin = b.input("w");
+    let r = b.rotate(xin, 1);
+    b.output("r", r);
+    let prog = b.build().unwrap();
+    let tenant = svc.store.get(5).unwrap();
+    let z = vec![0.1f64; tenant.ctx.encoder.slots()];
+    let (ct, seed) = tenant.eval.encrypt_real_seeded(&z, 2);
+    let wire_ct = wire::WireCiphertext::Seeded { ct, a_seed: seed };
+    let payload = wire::encode_program_request(404, &prog, &[("w".to_string(), wire_ct)]);
+    write_frame_to(&mut stream, FrameKind::Program, &payload).unwrap();
+    let (kind, payload) = read_frame_from(&mut stream).unwrap().expect("response");
+    assert_eq!(kind, FrameKind::Error);
+    let (code, detail, _) = wire::decode_error(&payload).unwrap();
+    assert_eq!(code, server::error_code::UNKNOWN_TENANT);
+    assert_eq!(detail, 404);
+
+    // A frame whose payload is cut mid-graph never takes the server
+    // down: the connection closes (no trustworthy framing) and a fresh
+    // connection still serves.
+    let good = encode_frame(FrameKind::Program, &bad_program);
+    let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+    use std::io::Write;
+    s2.write_all(&good[..good.len() / 2]).unwrap();
+    drop(s2);
+    let mut s3 = std::net::TcpStream::connect(addr).unwrap();
+    write_frame_to(&mut s3, FrameKind::MetricsReq, &[]).unwrap();
+    let (kind, _) = read_frame_from(&mut s3).unwrap().expect("server alive");
+    assert_eq!(kind, FrameKind::MetricsOk);
+
+    handle.stop();
+    svc.shutdown();
+}
