@@ -12,7 +12,7 @@
 //! ```
 
 use fhemem::ckks::linear::eval_chebyshev;
-use fhemem::ckks::{Ciphertext, CkksContext, Evaluator, KeyChain};
+use fhemem::ckks::{Ciphertext, CkksContext, CtRepr, Evaluator, KeyChain};
 use fhemem::coordinator::Coordinator;
 use fhemem::mapping::LayoutPlan;
 use fhemem::math::ntt::{naive_forward, naive_inverse, NttContext};
@@ -250,7 +250,7 @@ fn bench_tiled_hmul_vs_flat(records: &mut Vec<Record>) -> f64 {
     // Warm the key cache and cross-check bit-identity before timing.
     let flat_out = ev.mul(&a, &b);
     let (at, bt) = (a.to_tiled(), b.to_tiled());
-    let tiled_out = ev.mul_tiled(&at, &bt);
+    let tiled_out = at.mul(&ev, &bt);
     assert_eq!(
         tiled_out.to_flat().c0.data, flat_out.c0.data,
         "tiled HMul diverged from flat"
@@ -260,7 +260,7 @@ fn bench_tiled_hmul_vs_flat(records: &mut Vec<Record>) -> f64 {
         std::hint::black_box(ev.mul(&a, &b));
     });
     let s_tiled = bench_fn("ckks_hmul tiled logN=15 L=3", || {
-        std::hint::black_box(ev.mul_tiled(&at, &bt));
+        std::hint::black_box(at.mul(&ev, &bt));
     });
     let speedup = if s_tiled.median_ns() > 0.0 {
         s_flat.median_ns() / s_tiled.median_ns()
@@ -367,6 +367,85 @@ fn bench_compiled_helr(records: &mut Vec<Record>) -> (f64, f64) {
     (speedup, reduction)
 }
 
+/// Bootstrapping as a compiled program: the real CoeffToSlot transform's
+/// BSGS plan on func_boot gives the CI-gated keyswitch-pipeline
+/// reduction (`bsgs_keyswitch_reduction_c2s`, > 1.0 required), and the
+/// compiled program's op shape — two BSGS transforms plus the EvalMod
+/// keyswitches and pointwise work — is costed statically on the
+/// paper-scale n=2^15 ring (`bootstrap_cycles_n32768`). Building the
+/// n=2^15 numerics is out of bench budget; the shape-level model is the
+/// same one the coordinator charges at run time.
+fn bench_compiled_bootstrap(records: &mut Vec<Record>) -> (f64, f64) {
+    use fhemem::ckks::bootstrap::BootstrapConfig;
+    use fhemem::program::{compile, PassOptions};
+    use fhemem::sim::{Breakdown, CostModel, FheShape};
+    use std::collections::HashMap;
+
+    let ctx = CkksContext::new(CkksParams::func_boot());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 0xB007));
+    let ev = Evaluator::new(ctx.clone(), chain, 0xB008);
+    let bs = BootstrapConfig::default().build(&ev);
+    let prog = bs.to_program();
+    let meta = HashMap::from([("raised".to_string(), (ctx.l(), ctx.scale()))]);
+    let s = bench_fn("bootstrap program compile+plan (func_boot)", || {
+        std::hint::black_box(
+            compile(&prog, &ctx, &meta, &PassOptions::default()).expect("bootstrap compiles"),
+        );
+    });
+    let compiled =
+        compile(&prog, &ctx, &meta, &PassOptions::default()).expect("bootstrap compiles");
+
+    // CoeffToSlot (transform 0): keyswitch pipelines unhoisted vs
+    // hoisted — the baby steps collapse into one shared decompose.
+    let c2s = &compiled.lt_plans[0].plan;
+    let reduction = c2s.keyswitches(false) as f64 / c2s.keyswitches(true).max(1) as f64;
+    println!(
+        "    -> CoeffToSlot BSGS (n1={}): {} keyswitch pipelines unhoisted vs {} hoisted \
+         ({reduction:.1}x reduction)",
+        c2s.n1,
+        c2s.keyswitches(false),
+        c2s.keyswitches(true)
+    );
+
+    // Static paper-scale costing: func_boot's RNS shape on the 2^15 ring.
+    let cfg = ArchConfig::default();
+    let shape = FheShape {
+        log_n: 15,
+        limbs: 14,
+        k_special: 3,
+        dnum: 7,
+        mult_shifts: 3,
+    };
+    let m = CostModel::new(&cfg, shape);
+    let limbs = shape.limbs as f64;
+    let mut bd = Breakdown::default();
+    for lp in &compiled.lt_plans {
+        let (b, g) = (lp.plan.baby_rots.len(), lp.plan.giant_rots.len());
+        bd.add(&m.keyswitch_bsgs(b, g, true));
+        bd.add(&m.automorphism_poly().scaled(2.0 * limbs * (b + g) as f64));
+    }
+    let lt_ks: usize = compiled.lt_plans.iter().map(|p| p.keyswitches()).sum();
+    let other_ks = compiled.counts.keyswitch_invocations.saturating_sub(lt_ks);
+    bd.add(&m.keyswitch(true).scaled(other_ks as f64));
+    let pointwise = (compiled.counts.pmuls + compiled.counts.rescales) as f64;
+    bd.add(&m.modmul_poly().scaled(limbs * pointwise));
+    bd.add(&m.modadd_poly().scaled(2.0 * limbs * compiled.counts.adds as f64));
+    let bootstrap_cycles = bd.total().cycles;
+    println!(
+        "    -> bootstrap @ n=2^15: {:.3e} sim cycles ({} keyswitch pipelines, {} rotations)",
+        bootstrap_cycles, compiled.counts.keyswitch_invocations, compiled.counts.rotations
+    );
+
+    records.push(Record {
+        name: "bootstrap compile+plan func_boot (speedup field = c2s keyswitch reduction)"
+            .to_string(),
+        threads: 1,
+        median_ns: s.median_ns(),
+        speedup_vs_serial: reduction,
+    });
+    (reduction, bootstrap_cycles)
+}
+
 /// The serving layer end to end (minus TCP): two tenants' ops flow
 /// through keystore lookup + the admission-controlled batching scheduler
 /// + mixed-batch bank-pool execution. The returned ops/s figure is the
@@ -454,6 +533,8 @@ fn write_json(
     service_ops_per_s: f64,
     compiled_helr_speedup: f64,
     hoisted_ks_reduction: f64,
+    bsgs_reduction_c2s: f64,
+    bootstrap_cycles: f64,
 ) {
     let machine = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let results = Json::Array(
@@ -497,6 +578,11 @@ fn write_json(
             "hoisted_keyswitch_reduction_helr",
             Json::Float(hoisted_ks_reduction),
         ),
+        (
+            "bsgs_keyswitch_reduction_c2s",
+            Json::Float(bsgs_reduction_c2s),
+        ),
+        ("bootstrap_cycles_n32768", Json::Float(bootstrap_cycles)),
         ("results", results),
     ]);
     match std::fs::write(path, doc.write_pretty()) {
@@ -549,6 +635,11 @@ fn main() {
     // hand-written evaluator path (CI gates the keyswitch reduction).
     let (compiled_helr_speedup, hoisted_ks_reduction) = bench_compiled_helr(&mut records);
 
+    // Bootstrapping as a compiled program: BSGS keyswitch reduction on
+    // the CoeffToSlot transform (CI-gated > 1.0) + the paper-scale
+    // static cycle figure.
+    let (bsgs_reduction_c2s, bootstrap_cycles) = bench_compiled_bootstrap(&mut records);
+
     // CKKS ops at func_default (logN=12, L=8, dnum=4).
     let ctx = CkksContext::new(CkksParams::func_default());
     let chain = Arc::new(KeyChain::new(ctx.clone(), 1));
@@ -590,6 +681,8 @@ fn main() {
             service_ops_per_s,
             compiled_helr_speedup,
             hoisted_ks_reduction,
+            bsgs_reduction_c2s,
+            bootstrap_cycles,
         );
     }
 }

@@ -32,8 +32,94 @@
 use super::cipher::{Ciphertext, Evaluator};
 use super::complex::C64;
 use super::linear::{chebyshev_fit, eval_chebyshev, LinearTransform};
+use crate::coordinator::Coordinator;
 use crate::math::poly::{Domain, RnsPoly};
 use crate::math::prng::mod_to_signed;
+use crate::program::ir::{Builder, NodeId, Program, ProgramError};
+use crate::program::passes::{compile, PassOptions};
+use crate::program::ProgramReport;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Validated bootstrap configuration — the one config type both the
+/// flat and the compiled path build from. Knobs chain:
+/// `BootstrapConfig::default().k_bound(12.0).bsgs_n1(16).build(&ev)`.
+#[derive(Debug, Clone)]
+pub struct BootstrapConfig {
+    k_bound: f64,
+    r_doubles: usize,
+    deg: usize,
+    bsgs_n1: Option<usize>,
+}
+
+impl Default for BootstrapConfig {
+    fn default() -> Self {
+        Self {
+            k_bound: 16.0,
+            r_doubles: 3,
+            deg: 30,
+            bsgs_n1: None,
+        }
+    }
+}
+
+impl BootstrapConfig {
+    /// ModRaise overflow bound K (sparse-secret dependent; default 16).
+    pub fn k_bound(mut self, k: f64) -> Self {
+        self.k_bound = k;
+        self
+    }
+
+    /// Double-angle iterations r (default 3).
+    pub fn r_doubles(mut self, r: usize) -> Self {
+        self.r_doubles = r;
+        self
+    }
+
+    /// Chebyshev degree of the base cosine (default 30 — ample for
+    /// K=16, r=3).
+    pub fn deg(mut self, deg: usize) -> Self {
+        self.deg = deg;
+        self
+    }
+
+    /// BSGS baby-step count n1 for CoeffToSlot/SlotToCoeff (default:
+    /// per-transform `⌈√d⌉` rounded up to a power of two). The
+    /// giant-step count n2 follows as `⌈d/n1⌉`.
+    pub fn bsgs_n1(mut self, n1: usize) -> Self {
+        self.bsgs_n1 = Some(n1);
+        self
+    }
+
+    /// Validate and precompute the bootstrapper for this evaluator's
+    /// context. Panics on out-of-range knobs (misconfiguration, not
+    /// runtime input).
+    pub fn build(self, ev: &Evaluator) -> Bootstrapper {
+        assert!(
+            self.k_bound.is_finite() && self.k_bound >= 1.0,
+            "k_bound {} must be a finite bound >= 1",
+            self.k_bound
+        );
+        assert!(
+            self.deg >= 2,
+            "chebyshev degree {} too small to carry the cosine",
+            self.deg
+        );
+        assert!(
+            self.r_doubles <= 16,
+            "r_doubles {} would consume more levels than any supported basis",
+            self.r_doubles
+        );
+        let slots = ev.ctx.encoder.slots();
+        if let Some(n1) = self.bsgs_n1 {
+            assert!(
+                (1..=slots).contains(&n1),
+                "bsgs_n1 {n1} outside 1..={slots}"
+            );
+        }
+        Bootstrapper::from_config(ev, self)
+    }
+}
 
 /// Precomputed bootstrapping context.
 pub struct Bootstrapper {
@@ -49,12 +135,29 @@ pub struct Bootstrapper {
     pub r_doubles: usize,
     /// Levels consumed by one bootstrap (for budgeting).
     pub depth: usize,
+    /// BSGS baby-step override for both FFT transforms.
+    pub bsgs_n1: Option<usize>,
 }
 
 impl Bootstrapper {
-    /// Build for the evaluator's context. `deg` is the Chebyshev degree
-    /// of the base cosine (≈30 is ample for K=12, r=3).
+    /// Build for the evaluator's context. Prefer the
+    /// [`BootstrapConfig`] builder.
+    #[deprecated(note = "use BootstrapConfig::default().k_bound(..).r_doubles(..).deg(..).build(ev)")]
     pub fn new(ev: &Evaluator, k_bound: f64, r_doubles: usize, deg: usize) -> Self {
+        BootstrapConfig::default()
+            .k_bound(k_bound)
+            .r_doubles(r_doubles)
+            .deg(deg)
+            .build(ev)
+    }
+
+    fn from_config(ev: &Evaluator, cfg: BootstrapConfig) -> Self {
+        let BootstrapConfig {
+            k_bound,
+            r_doubles,
+            deg,
+            bsgs_n1,
+        } = cfg;
         let ctx = &ev.ctx;
         let n_slots = ctx.encoder.slots();
         let delta = ctx.scale();
@@ -112,6 +215,7 @@ impl Bootstrapper {
             k_bound,
             r_doubles,
             depth,
+            bsgs_n1,
         }
     }
 
@@ -156,39 +260,114 @@ impl Bootstrapper {
     }
 
     /// Full bootstrap: level-1 ciphertext in, refreshed ciphertext out,
-    /// message preserved up to the EvalMod approximation error.
+    /// message preserved up to the EvalMod approximation error. Every
+    /// constant multiplication is the exact-prime op ([`OpKind::MulConstC`]
+    /// semantics), so this flat pipeline and [`Self::bootstrap_compiled`]
+    /// share op-for-op numerics.
+    ///
+    /// [`OpKind::MulConstC`]: crate::program::OpKind::MulConstC
     pub fn bootstrap(&self, ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
         let mut raised = self.mod_raise(ev, ct);
         // The CtS matrix folds all scaling; bookkeep at the default Δ.
         raised.scale = ev.ctx.scale();
 
         // CoeffToSlot (1 level): slots = (M_j + i·M_{j+n})/(q0·K·2^r).
-        let w = self.cts.apply(ev, &raised);
+        let w = self.cts.apply_with(ev, &raised, self.bsgs_n1);
 
         // Split real/imag (1 level): u = (w + w̄)/2, v = (w − w̄)/(2i).
         let wc = ev.conjugate(&w);
         let sum = ev.add(&w, &wc);
-        let u = ev.mul_const(&sum, 0.5);
+        let u = ev.mul_const_complex_exact(&sum, C64::new(0.5, 0.0));
         let diff = ev.sub(&w, &wc);
-        let v = ev.mul_const_complex(&diff, C64::new(0.0, -0.5));
+        let v = ev.mul_const_complex_exact(&diff, C64::new(0.0, -0.5));
 
         // EvalMod both branches, then recombine w' = su + i·sv (1 level).
         let su = self.eval_mod(ev, &u);
         let sv = self.eval_mod(ev, &v);
-        // Encode the i at a plaintext scale that lands sv_i *exactly* on
-        // su's scale after rescaling (their histories already match, but
-        // exactness here costs nothing).
-        let q_div = ev.ctx.basis.q(sv.level - 1) as f64;
-        let pt_scale = su.scale * q_div / sv.scale;
-        let sv_i = ev.mul_const_complex_scaled(&sv, C64::new(0.0, 1.0), pt_scale);
-        let level = su.level.min(sv_i.level);
-        let su = ev.level_down(&su, level);
+        // The branches share one scale history, so the exact-prime
+        // encoding lands i·sv exactly on su's scale after its rescale.
+        let sv_i = ev.mul_const_complex_exact(&sv, C64::new(0.0, 1.0));
+        let su = ev.level_down(&su, sv_i.level);
         let wprime = ev.add(&su, &sv_i);
 
         // SlotToCoeff (1 level).
-        let mut out = self.stc.apply(ev, &wprime);
+        let mut out = self.stc.apply_with(ev, &wprime, self.bsgs_n1);
         out.scale = ev.ctx.scale();
         out
+    }
+
+    /// EvalMod as IR nodes: Chebyshev base cosine + r double-angle
+    /// steps (`cos 2a = 2cos²a − 1`).
+    fn eval_mod_nodes(&self, b: &mut Builder, c: NodeId, slots: usize) -> NodeId {
+        let mut c = b.chebyshev(c, self.cos_coeffs.clone());
+        for _ in 0..self.r_doubles {
+            let sq = b.mul(c, c);
+            let two = b.add(sq, sq);
+            let neg_one = b.plain_vec(vec![-1.0; slots]);
+            c = b.add_plain(two, neg_one);
+        }
+        c
+    }
+
+    /// The bootstrap pipeline (everything after ModRaise) as a
+    /// [`Program`] graph: CoeffToSlot and SlotToCoeff lower to
+    /// `LinearTransform` nodes (executed hoisted-BSGS and tiled),
+    /// EvalMod to `Chebyshev` + primitive double-angle nodes, the
+    /// conjugate-split/recombine constants to `MulConstC`. Input
+    /// `"raised"`, output `"boot"`. The planner's auto-alignment
+    /// inserts the same `LevelDown` before the recombining add that the
+    /// flat path performs explicitly.
+    pub fn to_program(&self) -> Program {
+        let slots = self.cts.n;
+        let mut b = Builder::new();
+        let raised = b.input("raised");
+        let w = b.linear_transform(raised, self.cts.clone());
+        let wc = b.conjugate(w);
+        let sum = b.add(w, wc);
+        let u = b.mul_const_c(sum, 0.5, 0.0);
+        let diff = b.sub(w, wc);
+        let v = b.mul_const_c(diff, 0.0, -0.5);
+        let su = self.eval_mod_nodes(&mut b, u, slots);
+        let sv = self.eval_mod_nodes(&mut b, v, slots);
+        let sv_i = b.mul_const_c(sv, 0.0, 1.0);
+        let wprime = b.add(su, sv_i);
+        let out = b.linear_transform(wprime, self.stc.clone());
+        b.output("boot", out);
+        b.build().expect("bootstrap graph is structurally valid")
+    }
+
+    /// Compiled, tiled bootstrap: ModRaise flat (a basis
+    /// reinterpretation, not an HE op), then [`Self::to_program`]
+    /// compiled with the planner (BSGS hoisting on, this config's n1)
+    /// and executed wave-by-wave on the coordinator's bank-tiled hot
+    /// path. Bit-identical to [`Self::bootstrap`] — both run the same
+    /// hoisted-BSGS transform kernel, the same Chebyshev evaluator and
+    /// the same exact-prime constant ops.
+    pub fn bootstrap_compiled(
+        &self,
+        coord: &Coordinator,
+        ev: &Arc<Evaluator>,
+        ct: &Ciphertext,
+    ) -> Result<(Ciphertext, ProgramReport), ProgramError> {
+        let mut raised = self.mod_raise(ev, ct);
+        raised.scale = ev.ctx.scale();
+        let prog = self.to_program();
+        let opts = PassOptions {
+            bsgs_n1: self.bsgs_n1,
+            ..PassOptions::default()
+        };
+        let shapes = HashMap::from([("raised".to_string(), (raised.level, raised.scale))]);
+        let compiled = compile(&prog, &ev.ctx, &shapes, &opts)?;
+        let inputs = HashMap::from([("raised".to_string(), raised)]);
+        let run = compiled.execute(coord, ev, &inputs)?;
+        let mut out = run
+            .outputs
+            .into_iter()
+            .find(|(name, _)| name == "boot")
+            .map(|(_, ct)| ct)
+            .expect("program declares the 'boot' output");
+        out.scale = ev.ctx.scale();
+        Ok((out, run.report))
     }
 }
 
@@ -208,7 +387,7 @@ mod tests {
     #[test]
     fn mod_raise_preserves_message_mod_q0() {
         let ev = eval_boot();
-        let bs = Bootstrapper::new(&ev, 16.0, 3, 30);
+        let bs = BootstrapConfig::default().build(&ev);
         let slots = ev.ctx.encoder.slots();
         let z: Vec<f64> = (0..slots).map(|i| 0.15 * ((i % 5) as f64 - 2.0)).collect();
         let ct_full = ev.encrypt_real(&z, ev.ctx.l());
@@ -246,7 +425,7 @@ mod tests {
     #[test]
     fn eval_mod_approximates_sine() {
         let ev = eval_boot();
-        let bs = Bootstrapper::new(&ev, 16.0, 3, 30);
+        let bs = BootstrapConfig::default().build(&ev);
         let slots = ev.ctx.encoder.slots();
         let k2r = bs.k_bound;
         // x = I + f with integer |I| ≤ 4 and small fraction f.
@@ -275,7 +454,7 @@ mod tests {
     #[test]
     fn full_bootstrap_preserves_message() {
         let ev = eval_boot();
-        let bs = Bootstrapper::new(&ev, 16.0, 3, 30);
+        let bs = BootstrapConfig::default().build(&ev);
         let slots = ev.ctx.encoder.slots();
         let z: Vec<f64> = (0..slots)
             .map(|i| 0.4 * (2.0 * std::f64::consts::PI * i as f64 / slots as f64).sin())

@@ -5,7 +5,8 @@
 use super::complex::C64;
 use super::keys::{decrypt_poly, encrypt_poly, KeyChain, KeyTag};
 use super::keyswitch::{
-    ext_mods, hoisted_decompose, key_switch, key_switch_tiled, mod_down, ExtPoly,
+    ext_mods, hoisted_decompose, hoisted_key_switch, key_switch, key_switch_tiled, mod_down,
+    ExtPoly,
 };
 use super::CkksContext;
 use crate::math::modarith::{inv_mod, mul_mod, sub_mod};
@@ -69,6 +70,54 @@ impl TiledCiphertext {
             scale: self.scale,
         }
     }
+}
+
+/// The unified ciphertext-representation surface: one set of evaluator
+/// ops over both the flat [`Ciphertext`] and the bank-tiled
+/// [`TiledCiphertext`], so call sites pick the representation by type
+/// instead of by method suffix. `coordinator::run_mixed_op` and
+/// `program::exec` run tiled through this trait; reference paths run
+/// flat; kernels generic over `CtRepr` (the hoisted-BSGS linear
+/// transform in `ckks::linear`) are bit-identical across
+/// representations by construction, which `rust/tests/tiled_kernels.rs`
+/// asserts op by op. The old `Evaluator::*_tiled` names survive as
+/// deprecated forwarders for one release.
+pub trait CtRepr: Clone + Sized {
+    /// Wrap a flat ciphertext in this representation (memcpy at most).
+    fn from_flat_ct(ct: Ciphertext) -> Self;
+    /// Active q-limbs.
+    fn level(&self) -> usize;
+    /// Current scaling factor Δ.
+    fn scale(&self) -> f64;
+    /// HAdd.
+    fn add(&self, ev: &Evaluator, other: &Self) -> Self;
+    /// HSub.
+    fn sub(&self, ev: &Evaluator, other: &Self) -> Self;
+    /// HMul: tensor + relinearize + rescale.
+    fn mul(&self, ev: &Evaluator, other: &Self) -> Self;
+    /// Tensor + relinearize, no rescale.
+    fn mul_no_rescale(&self, ev: &Evaluator, other: &Self) -> Self;
+    /// Multiply by a real plaintext vector encoded at `pt_scale`
+    /// (no rescale; scale multiplies).
+    fn pmul(&self, ev: &Evaluator, z: &[f64], pt_scale: f64) -> Self;
+    /// Multiply by a complex plaintext vector encoded at `pt_scale`
+    /// (no rescale; scale multiplies) — the BSGS diagonal product.
+    fn pmul_complex(&self, ev: &Evaluator, vals: &[C64], pt_scale: f64) -> Self;
+    /// `ct ± plain`: the vector is encoded at the ciphertext's level and
+    /// `pt_scale` and added to (or, with `negate`, subtracted from) c0.
+    fn add_plain(&self, ev: &Evaluator, z: &[f64], pt_scale: f64, negate: bool) -> Self;
+    /// Multiply every slot by a complex constant encoded at the exact
+    /// rescaling prime `q_{l-1}`, then rescale: level drops by one, the
+    /// scale is preserved to f64 rounding (the IR `MulConstC` op).
+    fn mul_const_c(&self, ev: &Evaluator, re: f64, im: f64) -> Self;
+    /// Homomorphic slot rotation.
+    fn rotate(&self, ev: &Evaluator, step: i64) -> Self;
+    /// Homomorphic complex conjugation.
+    fn conjugate(&self, ev: &Evaluator) -> Self;
+    /// Rescale by the last modulus.
+    fn rescale(&self, ev: &Evaluator) -> Self;
+    /// Drop limbs down to `level` (exact, scale unchanged).
+    fn level_down(&self, ev: &Evaluator, level: usize) -> Self;
 }
 
 /// Homomorphic evaluator bound to a key chain.
@@ -158,6 +207,15 @@ impl Evaluator {
             .ctx
             .encoder
             .encode_real(&self.ctx.basis, level, z, scale);
+        p.to_ntt();
+        p
+    }
+
+    /// Encode a **complex** plaintext vector (NTT domain) for plaintext
+    /// multiplication — the BSGS diagonals of
+    /// [`super::linear::LinearTransform`] are complex.
+    pub fn encode_plain_complex(&self, z: &[C64], level: usize, scale: f64) -> RnsPoly {
+        let mut p = self.ctx.encoder.encode(&self.ctx.basis, level, z, scale);
         p.to_ntt();
         p
     }
@@ -330,6 +388,17 @@ impl Evaluator {
         self.rescale(&out)
     }
 
+    /// [`Self::mul_const_complex`] with the plaintext encoded at the
+    /// **exact rescaling prime** `q_{l-1}`: after the internal rescale
+    /// the output scale equals the input scale up to f64 rounding, so
+    /// constant multiplications never drift ciphertexts apart. The
+    /// program IR's `MulConstC` node replicates exactly this op, which
+    /// is how the compiled bootstrap stays bit-identical to the flat
+    /// one through the conjugate-split and recombine steps.
+    pub fn mul_const_complex_exact(&self, a: &Ciphertext, v: C64) -> Ciphertext {
+        self.mul_const_complex_scaled(a, v, self.ctx.basis.q(a.level - 1) as f64)
+    }
+
     /// Full homomorphic multiplication: tensor + relinearize, no rescale.
     pub fn mul_no_rescale(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         let (a, b) = self.align_level(a, b);
@@ -499,6 +568,63 @@ impl Evaluator {
         }
     }
 
+    /// Rotate `a` by every step in `steps` with **one shared** digit
+    /// decomposition + ModUp of `c1` (Halevi–Shoup sibling hoisting):
+    /// each rotation only permutes the cached extended digits
+    /// ([`ExtPoly::automorphism`]), inner-products them with its own
+    /// Galois key and ModDowns individually — one ModUp for the whole
+    /// group instead of `steps.len()`. The BSGS baby steps of
+    /// [`super::linear::LinearTransform::apply`] all act on the same
+    /// input ciphertext, which is exactly this shape.
+    ///
+    /// Each output decrypts to the same slots as the corresponding
+    /// [`Self::rotate`] but is not bit-identical to it (ModUp before the
+    /// permutation instead of after — a different, equally valid
+    /// ciphertext of the same message).
+    pub fn rotate_hoisted_group(&self, a: &Ciphertext, steps: &[i64]) -> Vec<Ciphertext> {
+        if steps.is_empty() {
+            return Vec::new();
+        }
+        let level = a.level;
+        let n = self.ctx.n();
+        let slots = self.ctx.encoder.slots() as i64;
+        let gals: Vec<usize> = steps
+            .iter()
+            .map(|&s| {
+                assert!(
+                    s.rem_euclid(slots) != 0,
+                    "hoisted rotation group: identity step {s}"
+                );
+                RnsPoly::rotation_to_galois(s, n)
+            })
+            .collect();
+        let evks: Vec<_> = gals
+            .iter()
+            .map(|&k| self.chain.eval_key(level, KeyTag::Galois(k)))
+            .collect();
+        // One decomposition + ModUp of c1 shared by the whole group.
+        let mut d = a.c1.clone();
+        d.to_coeff();
+        let decomp = hoisted_decompose(&self.ctx, &d, &evks[0]);
+        let mut c0 = a.c0.clone();
+        c0.to_coeff();
+        gals.iter()
+            .zip(&evks)
+            .map(|(&k, evk)| {
+                let (ks0, ks1) = hoisted_key_switch(&self.ctx, &decomp, evk, k);
+                let mut out0 = c0.automorphism(k);
+                out0.to_ntt();
+                out0.add_assign(&ks0);
+                Ciphertext {
+                    c0: out0,
+                    c1: ks1,
+                    level,
+                    scale: a.scale,
+                }
+            })
+            .collect()
+    }
+
     // ------------------------------------------------------------------
     // batched execution (bank-pool parallel)
     // ------------------------------------------------------------------
@@ -547,6 +673,7 @@ impl Evaluator {
     // is per-coefficient — which `rust/tests/tiled_kernels.rs` asserts.
 
     /// Drop limbs of a tiled ciphertext down to `level` (exact).
+    #[deprecated(note = "use the unified CtRepr surface: `ct.level_down(ev, level)`")]
     pub fn level_down_tiled(&self, ct: &TiledCiphertext, level: usize) -> TiledCiphertext {
         assert!(level <= ct.level);
         TiledCiphertext {
@@ -559,6 +686,7 @@ impl Evaluator {
 
     /// Rescale by the last modulus on tiles (four-step iNTT → per-bank
     /// exact division → four-step NTT).
+    #[deprecated(note = "use the unified CtRepr surface: `ct.rescale(ev)`")]
     pub fn rescale_tiled(&self, ct: &TiledCiphertext) -> TiledCiphertext {
         assert!(ct.level >= 2, "cannot rescale at level 1");
         let ql = self.ctx.basis.q(ct.level - 1);
@@ -607,6 +735,7 @@ impl Evaluator {
     }
 
     /// HAdd on tiles.
+    #[deprecated(note = "use the unified CtRepr surface: `a.add(ev, b)`")]
     pub fn add_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
         let (mut a, b) = self.align_tiled(a, b);
         a.c0.add_assign(&b.c0);
@@ -615,6 +744,7 @@ impl Evaluator {
     }
 
     /// HSub on tiles.
+    #[deprecated(note = "use the unified CtRepr surface: `a.sub(ev, b)`")]
     pub fn sub_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
         let (mut a, b) = self.align_tiled(a, b);
         a.c0.sub_assign(&b.c0);
@@ -624,6 +754,7 @@ impl Evaluator {
 
     /// Tensor + relinearize on tiles, no rescale (mirror of
     /// [`Self::mul_no_rescale`]).
+    #[deprecated(note = "use the unified CtRepr surface: `a.mul_no_rescale(ev, b)`")]
     pub fn mul_no_rescale_tiled(
         &self,
         a: &TiledCiphertext,
@@ -649,6 +780,7 @@ impl Evaluator {
     }
 
     /// HMul on tiles: tensor + relinearize + rescale.
+    #[deprecated(note = "use the unified CtRepr surface: `a.mul(ev, b)`")]
     pub fn mul_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
         self.rescale_tiled(&self.mul_no_rescale_tiled(a, b))
     }
@@ -657,6 +789,7 @@ impl Evaluator {
     /// plaintext is encoded flat at `(a.level, pt_scale)` — bit-identical
     /// to the flat [`Self::mul_plain_no_rescale`] path — then tiled (a
     /// memcpy) for the pointwise product.
+    #[deprecated(note = "use the unified CtRepr surface: `a.pmul(ev, z, pt_scale)`")]
     pub fn mul_plain_no_rescale_tiled(
         &self,
         a: &TiledCiphertext,
@@ -675,6 +808,7 @@ impl Evaluator {
     /// `ct ± plain` on tiles: the plaintext vector is encoded at the
     /// ciphertext's level and `pt_scale` and added to (or, with `negate`,
     /// subtracted from) `c0` only.
+    #[deprecated(note = "use the unified CtRepr surface: `a.add_plain(ev, z, pt_scale, negate)`")]
     pub fn add_plain_tiled(
         &self,
         a: &TiledCiphertext,
@@ -694,6 +828,7 @@ impl Evaluator {
     }
 
     /// Homomorphic slot rotation on tiles.
+    #[deprecated(note = "use the unified CtRepr surface: `a.rotate(ev, step)`")]
     pub fn rotate_tiled(&self, a: &TiledCiphertext, step: i64) -> TiledCiphertext {
         if step.rem_euclid(self.ctx.encoder.slots() as i64) == 0 {
             return a.clone();
@@ -703,6 +838,7 @@ impl Evaluator {
     }
 
     /// Homomorphic complex conjugation on tiles.
+    #[deprecated(note = "use the unified CtRepr surface: `a.conjugate(ev)`")]
     pub fn conjugate_tiled(&self, a: &TiledCiphertext) -> TiledCiphertext {
         self.apply_galois_tiled(a, RnsPoly::conjugation_galois(self.ctx.n()))
     }
@@ -747,6 +883,154 @@ impl Evaluator {
             let _ = self.chain.eval_key(level, KeyTag::Galois(k));
         }
         crate::parallel::pool().par_map(a, |i, ct| self.rotate(ct, steps[i]))
+    }
+}
+
+impl CtRepr for Ciphertext {
+    fn from_flat_ct(ct: Ciphertext) -> Self {
+        ct
+    }
+
+    fn level(&self) -> usize {
+        self.level
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    fn add(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.add(self, other)
+    }
+
+    fn sub(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.sub(self, other)
+    }
+
+    fn mul(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.mul(self, other)
+    }
+
+    fn mul_no_rescale(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.mul_no_rescale(self, other)
+    }
+
+    fn pmul(&self, ev: &Evaluator, z: &[f64], pt_scale: f64) -> Self {
+        let p = ev.encode_plain(z, self.level, pt_scale);
+        ev.mul_plain_no_rescale(self, &p, pt_scale)
+    }
+
+    fn pmul_complex(&self, ev: &Evaluator, vals: &[C64], pt_scale: f64) -> Self {
+        let p = ev.encode_plain_complex(vals, self.level, pt_scale);
+        ev.mul_plain_no_rescale(self, &p, pt_scale)
+    }
+
+    fn add_plain(&self, ev: &Evaluator, z: &[f64], pt_scale: f64, negate: bool) -> Self {
+        let p = ev.encode_plain(z, self.level, pt_scale);
+        let mut out = self.clone();
+        if negate {
+            out.c0.sub_assign(&p);
+        } else {
+            out.c0.add_assign(&p);
+        }
+        out
+    }
+
+    fn mul_const_c(&self, ev: &Evaluator, re: f64, im: f64) -> Self {
+        ev.mul_const_complex_exact(self, C64::new(re, im))
+    }
+
+    fn rotate(&self, ev: &Evaluator, step: i64) -> Self {
+        ev.rotate(self, step)
+    }
+
+    fn conjugate(&self, ev: &Evaluator) -> Self {
+        ev.conjugate(self)
+    }
+
+    fn rescale(&self, ev: &Evaluator) -> Self {
+        ev.rescale(self)
+    }
+
+    fn level_down(&self, ev: &Evaluator, level: usize) -> Self {
+        ev.level_down(self, level)
+    }
+}
+
+// The canonical tiled surface: forwards to the (deprecated) suffixed
+// names for one release so the bodies stay where their history is.
+#[allow(deprecated)]
+impl CtRepr for TiledCiphertext {
+    fn from_flat_ct(ct: Ciphertext) -> Self {
+        ct.to_tiled()
+    }
+
+    fn level(&self) -> usize {
+        self.level
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    fn add(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.add_tiled(self, other)
+    }
+
+    fn sub(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.sub_tiled(self, other)
+    }
+
+    fn mul(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.mul_tiled(self, other)
+    }
+
+    fn mul_no_rescale(&self, ev: &Evaluator, other: &Self) -> Self {
+        ev.mul_no_rescale_tiled(self, other)
+    }
+
+    fn pmul(&self, ev: &Evaluator, z: &[f64], pt_scale: f64) -> Self {
+        ev.mul_plain_no_rescale_tiled(self, z, pt_scale)
+    }
+
+    fn pmul_complex(&self, ev: &Evaluator, vals: &[C64], pt_scale: f64) -> Self {
+        // Encoded flat (bit-identical to the flat path), tiled by memcpy
+        // for the pointwise product — the same shape as `pmul`.
+        let p = ev.encode_plain_complex(vals, self.level, pt_scale);
+        let pt = TiledRnsPoly::from_flat(&p);
+        let mut out = self.clone();
+        out.c0.mul_assign(&pt);
+        out.c1.mul_assign(&pt);
+        out.scale = self.scale * pt_scale;
+        out
+    }
+
+    fn add_plain(&self, ev: &Evaluator, z: &[f64], pt_scale: f64, negate: bool) -> Self {
+        ev.add_plain_tiled(self, z, pt_scale, negate)
+    }
+
+    fn mul_const_c(&self, ev: &Evaluator, re: f64, im: f64) -> Self {
+        // Mirror of `Evaluator::mul_const_complex_exact` on tiles.
+        let pt_scale = ev.ctx.basis.q(self.level - 1) as f64;
+        let z = vec![C64::new(re, im); ev.ctx.encoder.slots()];
+        let prod = self.pmul_complex(ev, &z, pt_scale);
+        ev.rescale_tiled(&prod)
+    }
+
+    fn rotate(&self, ev: &Evaluator, step: i64) -> Self {
+        ev.rotate_tiled(self, step)
+    }
+
+    fn conjugate(&self, ev: &Evaluator) -> Self {
+        ev.conjugate_tiled(self)
+    }
+
+    fn rescale(&self, ev: &Evaluator) -> Self {
+        ev.rescale_tiled(self)
+    }
+
+    fn level_down(&self, ev: &Evaluator, level: usize) -> Self {
+        ev.level_down_tiled(self, level)
     }
 }
 
@@ -919,18 +1203,84 @@ mod tests {
         let w: Vec<f64> = (0..slots).map(|i| 0.01 * ((i + 2) % 7) as f64).collect();
         let ct = ev.encrypt_real(&z, 3);
         let scale = ev.ctx.scale();
-        // Pmul (no rescale).
+        // Pmul (no rescale) — through the unified CtRepr surface.
         let p = ev.encode_plain(&w, ct.level, scale);
         let flat = ev.mul_plain_no_rescale(&ct, &p, scale);
-        let tiled = ev.mul_plain_no_rescale_tiled(&ct.to_tiled(), &w, scale).to_flat();
+        let tiled = ct.to_tiled().pmul(&ev, &w, scale).to_flat();
         assert_eq!(tiled.c0.data, flat.c0.data);
         assert_eq!(tiled.c1.data, flat.c1.data);
         assert!((tiled.scale - flat.scale).abs() < 1e-9);
         // SubPlain at the ciphertext's scale.
         let flat_sub = ev.sub_plain(&ct, &w);
-        let tiled_sub = ev.add_plain_tiled(&ct.to_tiled(), &w, ct.scale, true).to_flat();
+        let tiled_sub = ct.to_tiled().add_plain(&ev, &w, ct.scale, true).to_flat();
         assert_eq!(tiled_sub.c0.data, flat_sub.c0.data);
         assert_eq!(tiled_sub.c1.data, flat_sub.c1.data);
+    }
+
+    #[test]
+    fn complex_pmul_and_const_bit_identical_across_reprs() {
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.03 * ((i % 8) as f64 - 3.0)).collect();
+        let vals: Vec<C64> = (0..slots)
+            .map(|i| C64::new(0.1 * (i % 5) as f64, 0.05 * ((i + 1) % 4) as f64))
+            .collect();
+        let ct = ev.encrypt_real(&z, 3);
+        let scale = ev.ctx.scale();
+        let flat = ct.pmul_complex(&ev, &vals, scale);
+        let tiled = ct.to_tiled().pmul_complex(&ev, &vals, scale).to_flat();
+        assert_eq!(tiled.c0.data, flat.c0.data, "pmul_complex c0");
+        assert_eq!(tiled.c1.data, flat.c1.data, "pmul_complex c1");
+        assert!((tiled.scale - flat.scale).abs() < 1e-9);
+
+        // MulConstC: exact-prime encoding preserves the scale and the
+        // tiled path is bit-identical to the flat one.
+        let fc = ct.mul_const_c(&ev, 0.0, -0.5);
+        let tc = ct.to_tiled().mul_const_c(&ev, 0.0, -0.5).to_flat();
+        assert_eq!(tc.c0.data, fc.c0.data, "mul_const_c c0");
+        assert_eq!(tc.c1.data, fc.c1.data, "mul_const_c c1");
+        assert_eq!(fc.level, ct.level - 1);
+        assert!(
+            ((fc.scale / ct.scale) - 1.0).abs() < 1e-12,
+            "exact-prime const mul drifted the scale: {} vs {}",
+            fc.scale,
+            ct.scale
+        );
+        let dec = ev.decrypt(&fc);
+        for i in 0..slots {
+            assert!((dec[i].im + 0.5 * z[i]).abs() < 5e-3, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn hoisted_rotation_group_decrypts_like_rotate() {
+        // Shared-ModUp rotations: same message as per-rotation key
+        // switching, different rounding (ModUp-then-permute), so compare
+        // decryptions — the same contract as rotate_sum_hoisted.
+        let ev = eval();
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots)
+            .map(|i| 0.01 * ((i % 11) as f64 - 5.0))
+            .collect();
+        let ct = ev.encrypt_real(&z, 3);
+        let steps = [1i64, 5, -3];
+        let outs = ev.rotate_hoisted_group(&ct, &steps);
+        assert_eq!(outs.len(), steps.len());
+        for (&step, hoisted) in steps.iter().zip(&outs) {
+            let plain = ev.rotate(&ct, step);
+            assert_eq!(hoisted.level, plain.level);
+            assert!((hoisted.scale - plain.scale).abs() < 1e-9);
+            let dh = ev.decrypt(hoisted);
+            let dp = ev.decrypt(&plain);
+            for i in 0..slots {
+                assert!(
+                    (dh[i].re - dp[i].re).abs() < 5e-3,
+                    "step {step} slot {i}: hoisted {} vs plain {}",
+                    dh[i].re,
+                    dp[i].re
+                );
+            }
+        }
     }
 
     #[test]

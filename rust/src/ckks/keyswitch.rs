@@ -419,6 +419,39 @@ pub fn key_switch(ctx: &CkksContext, d: &RnsPoly, evk: &EvalKey) -> (RnsPoly, Rn
     (mod_down(ctx, acc0, evk), mod_down(ctx, acc1, evk))
 }
 
+/// One rotation's worth of key switching on a **shared** hoisted
+/// decomposition: `decomp` is the output of [`hoisted_decompose`] for the
+/// group's common operand, `k` the Galois element of this rotation, and
+/// `evk` the matching `KeyTag::Galois(k)` key. Each call permutes the
+/// cached extended digits (`ExtPoly::automorphism` — BConv-free), runs
+/// the gadget inner product against this key, and ModDowns. A group of
+/// `r` sibling rotations therefore costs one ModUp + `r` of these,
+/// instead of `r` full [`key_switch`] pipelines — the BSGS baby-step
+/// shape `LinearTransform::apply` exploits, costed by
+/// `sim::cost::CostModel::keyswitch_hoisted`.
+pub fn hoisted_key_switch(
+    ctx: &CkksContext,
+    decomp: &[ExtPoly],
+    evk: &EvalKey,
+    k: usize,
+) -> (RnsPoly, RnsPoly) {
+    assert_eq!(
+        decomp.len(),
+        evk.digits.len(),
+        "hoisted decomposition does not match key digit count"
+    );
+    let mods = ext_mods(ctx, evk.level);
+    let mut acc0 = ExtPoly::zero(ctx, mods.clone(), Domain::Ntt);
+    let mut acc1 = ExtPoly::zero(ctx, mods, Domain::Ntt);
+    for (ext_d, digit) in decomp.iter().zip(&evk.digits) {
+        let mut ext = ext_d.automorphism(ctx, k);
+        ext.to_ntt(ctx);
+        ext.mul_acc_into(ctx, &digit.b, &mut acc0);
+        ext.mul_acc_into(ctx, &digit.a, &mut acc1);
+    }
+    (mod_down(ctx, acc0, evk), mod_down(ctx, acc1, evk))
+}
+
 // ---------------------------------------------------------------------
 // Tiled key switching (the bank-tiled hot path)
 // ---------------------------------------------------------------------

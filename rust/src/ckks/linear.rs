@@ -5,8 +5,9 @@
 //! matrix layers, the HELR sigmoid, and the CoeffToSlot / SlotToCoeff /
 //! EvalMod stages of bootstrapping (§IV-F example pipeline).
 
-use super::cipher::{Ciphertext, Evaluator};
+use super::cipher::{Ciphertext, CtRepr, Evaluator, TiledCiphertext};
 use super::complex::C64;
+use std::collections::BTreeSet;
 
 /// A dense slot-space linear transform `out = M · slots`, stored by
 /// diagonals: `diag[d][i] = M[i][(i+d) mod n]`.
@@ -61,25 +62,133 @@ impl LinearTransform {
         out
     }
 
-    /// Homomorphic application with baby-step/giant-step rotations:
-    /// `d = g·i + j` ⇒ `out = Σ_i rot_{gi}( Σ_j rot_{-gi}(diag_d) ⊙ rot_j(ct) )`.
-    /// Costs ~`g + n/g` rotations and one plaintext-mul level.
-    pub fn apply(&self, ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+    /// The concrete BSGS geometry of this transform for a baby-step
+    /// width `n1` (default: `⌈√n⌉` rounded up to a power of two, the
+    /// classic split). Every diagonal `d` factors as `n1·i + j`; the
+    /// distinct non-zero `j` are the baby rotations — all acting on the
+    /// *same* input ciphertext, hence hoistable behind one shared
+    /// ModUp — and the distinct non-zero `n1·i` are the giant
+    /// rotations, each a full key switch.
+    pub fn bsgs_plan(&self, n1: Option<usize>) -> BsgsPlan {
         let n = self.n;
-        assert_eq!(n, ev.ctx.encoder.slots(), "transform size != slots");
-        let g = (1usize..=n)
+        let default = (1usize..=n)
             .find(|&g| g * g >= n)
             .unwrap()
             .next_power_of_two();
+        let g = n1.unwrap_or(default);
+        assert!(
+            (1..=n).contains(&g),
+            "BSGS split n1={g} out of range for n={n}"
+        );
+        let mut babies = BTreeSet::new();
+        let mut giants = BTreeSet::new();
+        for (d, _) in &self.diags {
+            babies.insert(d % g);
+            giants.insert((d / g) * g);
+        }
+        babies.remove(&0);
+        giants.remove(&0);
+        BsgsPlan {
+            n1: g,
+            baby_rots: babies.into_iter().collect(),
+            giant_rots: giants.into_iter().collect(),
+        }
+    }
+
+    /// Homomorphic application with baby-step/giant-step rotations:
+    /// `d = g·i + j` ⇒ `out = Σ_i rot_{gi}( Σ_j rot_{-gi}(diag_d) ⊙ rot_j(ct) )`.
+    /// Costs ~`g + n/g` rotations and one plaintext-mul level. The baby
+    /// rotations run **hoisted** — one shared digit-decompose/ModUp of
+    /// the input's `c1` ([`Evaluator::rotate_hoisted_group`]), each baby
+    /// just permuting the cached extended digits — so the key-switch
+    /// count drops from `babies + giants` to `1 + giants`.
+    pub fn apply(&self, ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+        self.apply_with(ev, ct, None)
+    }
+
+    /// [`Self::apply`] with an explicit BSGS baby-step width.
+    pub fn apply_with(&self, ev: &Evaluator, ct: &Ciphertext, n1: Option<usize>) -> Ciphertext {
+        let plan = self.bsgs_plan(n1);
+        let babies = self.hoisted_babies(ev, ct, &plan);
+        self.apply_repr::<Ciphertext>(ev, ct, babies, plan.n1)
+    }
+
+    /// [`Self::apply`] on the bank-tiled representation: the hoisted
+    /// baby generation stays flat (the shared extended-basis
+    /// accumulators do not decompose into per-tile ops — same policy as
+    /// `coordinator`'s `RotSumHoisted`), babies are tiled by memcpy, and
+    /// the whole BSGS accumulation — diagonal products, inner/giant
+    /// sums, giant rotations, final rescale — runs on tiles.
+    /// Bit-identical to the flat [`Self::apply`] because every tiled op
+    /// is, and both run the one generic kernel.
+    pub fn apply_tiled(
+        &self,
+        ev: &Evaluator,
+        ct: &TiledCiphertext,
+        n1: Option<usize>,
+    ) -> TiledCiphertext {
+        let plan = self.bsgs_plan(n1);
+        let flat = ct.to_flat();
+        let babies: Vec<(usize, TiledCiphertext)> = self
+            .hoisted_babies(ev, &flat, &plan)
+            .into_iter()
+            .map(|(j, b)| (j, b.to_tiled()))
+            .collect();
+        self.apply_repr::<TiledCiphertext>(ev, ct, babies, plan.n1)
+    }
+
+    /// The pre-hoisting reference application: every baby rotation is a
+    /// full per-rotation key switch (kept for the planner's
+    /// `bsgs_hoist: false` mode and as the conformance baseline — same
+    /// message as [`Self::apply`], different rounding).
+    pub fn apply_unhoisted(&self, ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+        let plan = self.bsgs_plan(None);
+        let babies: Vec<(usize, Ciphertext)> = plan
+            .baby_rots
+            .iter()
+            .map(|&j| (j, ev.rotate(ct, j as i64)))
+            .collect();
+        self.apply_repr::<Ciphertext>(ev, ct, babies, plan.n1)
+    }
+
+    /// All non-zero baby rotations of `plan`, behind one shared ModUp.
+    fn hoisted_babies(
+        &self,
+        ev: &Evaluator,
+        ct: &Ciphertext,
+        plan: &BsgsPlan,
+    ) -> Vec<(usize, Ciphertext)> {
+        let steps: Vec<i64> = plan.baby_rots.iter().map(|&j| j as i64).collect();
+        plan.baby_rots
+            .iter()
+            .copied()
+            .zip(ev.rotate_hoisted_group(ct, &steps))
+            .collect()
+    }
+
+    /// The BSGS accumulation loop, generic over the ciphertext
+    /// representation — the single kernel both the flat and the tiled
+    /// application run, so they cannot drift apart.
+    fn apply_repr<R: CtRepr>(
+        &self,
+        ev: &Evaluator,
+        ct: &R,
+        babies: Vec<(usize, R)>,
+        g: usize,
+    ) -> R {
+        let n = self.n;
+        assert_eq!(n, ev.ctx.encoder.slots(), "transform size != slots");
         let scale = ev.ctx.scale();
-        // Baby rotations rot_j(ct), computed lazily.
-        let mut babies: Vec<Option<Ciphertext>> = vec![None; g];
-        babies[0] = Some(ct.clone());
-        let mut giant_acc: Option<Ciphertext> = None;
+        let mut baby_of: Vec<Option<R>> = vec![None; g];
+        baby_of[0] = Some(ct.clone());
+        for (j, b) in babies {
+            baby_of[j] = Some(b);
+        }
+        let mut giant_acc: Option<R> = None;
         let mut i = 0usize;
         while i * g < n {
             // inner = Σ_j diag'_{gi+j} ⊙ rot_j(ct)
-            let mut inner: Option<Ciphertext> = None;
+            let mut inner: Option<R> = None;
             for j in 0..g {
                 let d = i * g + j;
                 let Some((_, vals)) = self.diags.iter().find(|(dd, _)| *dd == d) else {
@@ -87,57 +196,63 @@ impl LinearTransform {
                 };
                 // pre-rotate the diagonal by -g·i: rot_{-gi}(v)[t] = v[t-gi]
                 let shift = (n - (g * i) % n) % n;
-                let rotated: Vec<C64> =
-                    (0..n).map(|t| vals[(t + shift) % n]).collect();
-                if babies[j].is_none() {
-                    babies[j] = Some(ev.rotate(ct, j as i64));
-                }
-                let baby = babies[j].as_ref().unwrap();
-                let pt = {
-                    let mut p = ev.ctx.encoder.encode(
-                        &ev.ctx.basis,
-                        baby.level,
-                        &rotated,
-                        scale,
-                    );
-                    p.to_ntt();
-                    p
-                };
-                let term = ev.mul_plain_no_rescale(baby, &pt, scale);
+                let rotated: Vec<C64> = (0..n).map(|t| vals[(t + shift) % n]).collect();
+                let baby = baby_of[j]
+                    .as_ref()
+                    .expect("baby rotation missing from BSGS plan");
+                let term = baby.pmul_complex(ev, &rotated, scale);
                 inner = Some(match inner {
                     None => term,
-                    Some(acc) => ev.add(&acc, &term),
+                    Some(acc) => acc.add(ev, &term),
                 });
             }
             if let Some(inner) = inner {
-                let rotated = ev.rotate(&inner, (g * i) as i64);
+                let rotated = inner.rotate(ev, (g * i) as i64);
                 giant_acc = Some(match giant_acc {
                     None => rotated,
-                    Some(acc) => ev.add(&acc, &rotated),
+                    Some(acc) => acc.add(ev, &rotated),
                 });
             }
             i += 1;
         }
         let out = giant_acc.expect("transform has no diagonals");
-        ev.rescale(&out)
+        out.rescale(ev)
     }
 
     /// Number of rotations the BSGS application issues (cost model).
     pub fn rotation_count(&self) -> usize {
-        let n = self.n;
-        let g = (1usize..=n)
-            .find(|&g| g * g >= n)
-            .unwrap()
-            .next_power_of_two();
-        let mut babies = std::collections::HashSet::new();
-        let mut giants = std::collections::HashSet::new();
-        for (d, _) in &self.diags {
-            babies.insert(d % g);
-            giants.insert(d / g);
+        self.bsgs_plan(None).rotation_count()
+    }
+}
+
+/// The rotation geometry [`LinearTransform::bsgs_plan`] computes: the
+/// baby-step width and the distinct non-zero baby/giant rotations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BsgsPlan {
+    /// Baby-step width `n1` (the `g` of `d = g·i + j`).
+    pub n1: usize,
+    /// Distinct non-zero baby rotations `j` (sorted).
+    pub baby_rots: Vec<usize>,
+    /// Distinct non-zero giant rotations `n1·i` (sorted).
+    pub giant_rots: Vec<usize>,
+}
+
+impl BsgsPlan {
+    /// Total homomorphic rotations issued.
+    pub fn rotation_count(&self) -> usize {
+        self.baby_rots.len() + self.giant_rots.len()
+    }
+
+    /// Key-switch pipelines: hoisted, the whole baby group shares one
+    /// digit-decompose/ModUp (counted once); giants are always full
+    /// per-rotation key switches.
+    pub fn keyswitches(&self, hoisted: bool) -> usize {
+        let giants = self.giant_rots.len();
+        if hoisted {
+            usize::from(!self.baby_rots.is_empty()) + giants
+        } else {
+            self.baby_rots.len() + giants
         }
-        babies.remove(&0);
-        giants.remove(&0);
-        babies.len() + giants.len()
     }
 }
 
@@ -326,6 +441,76 @@ mod tests {
                 want[i]
             );
         }
+    }
+
+    #[test]
+    fn hoisted_apply_matches_unhoisted_and_tiled_is_bit_identical() {
+        let ev = eval();
+        let n = ev.ctx.encoder.slots();
+        let mut m = vec![vec![C64::ZERO; n]; n];
+        for i in 0..n {
+            m[i][i] = C64::real(0.4 + 0.05 * ((i % 6) as f64));
+            m[i][(i + 2) % n] = C64::new(0.1, 0.02 * ((i % 4) as f64));
+            m[i][(i + 37) % n] = C64::new(-0.07, 0.03);
+            m[i][(i + n - 5) % n] = C64::real(0.02 * ((i % 9) as f64) - 0.08);
+        }
+        let lt = LinearTransform::from_matrix(&m);
+        let z: Vec<C64> = (0..n)
+            .map(|i| C64::new((i % 11) as f64 * 0.04 - 0.2, (i % 3) as f64 * 0.06))
+            .collect();
+        let ct = ev.encrypt(&z, 3);
+
+        // Hoisted (the default) vs per-rotation reference: same message,
+        // different rounding — compare decryptions.
+        let hoisted = lt.apply(&ev, &ct);
+        let unhoisted = lt.apply_unhoisted(&ev, &ct);
+        assert_eq!(hoisted.level, unhoisted.level);
+        assert!((hoisted.scale - unhoisted.scale).abs() < 1e-6);
+        let dh = ev.decrypt(&hoisted);
+        let du = ev.decrypt(&unhoisted);
+        for i in 0..n {
+            assert!(
+                (dh[i] - du[i]).norm() < 5e-3,
+                "slot {i}: hoisted {:?} vs unhoisted {:?}",
+                dh[i],
+                du[i]
+            );
+        }
+
+        // Tiled application runs the same generic kernel on bit-identical
+        // ops: outputs must match the flat hoisted path exactly.
+        let tiled = lt.apply_tiled(&ev, &ct.to_tiled(), None).to_flat();
+        assert_eq!(tiled.c0.data, hoisted.c0.data, "tiled c0");
+        assert_eq!(tiled.c1.data, hoisted.c1.data, "tiled c1");
+        assert_eq!(tiled.level, hoisted.level);
+        assert!((tiled.scale - hoisted.scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bsgs_plan_counts_hoisted_keyswitches() {
+        // diags {0,1,2,3, 32,33, 64} at n=512 (g = 32): babies {1,2,3},
+        // giants {32, 64} ⇒ 5 unhoisted key switches, 1 + 2 hoisted.
+        let n = 512;
+        let diags: Vec<(usize, Vec<C64>)> = [0usize, 1, 2, 3, 32, 33, 64]
+            .iter()
+            .map(|&d| (d, vec![C64::ONE; n]))
+            .collect();
+        let lt = LinearTransform { n, diags };
+        let plan = lt.bsgs_plan(None);
+        assert_eq!(plan.n1, 32);
+        assert_eq!(plan.baby_rots, vec![1, 2, 3]);
+        assert_eq!(plan.giant_rots, vec![32, 64]);
+        assert_eq!(plan.rotation_count(), 5);
+        assert_eq!(lt.rotation_count(), 5);
+        assert_eq!(plan.keyswitches(false), 5);
+        assert_eq!(plan.keyswitches(true), 3);
+        // A custom split changes the geometry: with n1=8, d=33 lands in
+        // giant group 32 with baby 1, and d=3 stays a pure baby.
+        let plan8 = lt.bsgs_plan(Some(8));
+        assert_eq!(plan8.n1, 8);
+        assert_eq!(plan8.baby_rots, vec![1, 2, 3]);
+        assert_eq!(plan8.giant_rots, vec![32, 64]);
+        assert_eq!(plan8.keyswitches(true), 3);
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub mod encoding;
 pub mod keys;
 pub mod keyswitch;
 
-pub use cipher::{Ciphertext, Evaluator, TiledCiphertext};
+pub use bootstrap::{BootstrapConfig, Bootstrapper};
+pub use cipher::{Ciphertext, CtRepr, Evaluator, TiledCiphertext};
 pub use complex::C64;
 pub use encoding::Encoder;
 pub use keys::{KeyChain, KeyTag, SecretKey};

@@ -10,7 +10,7 @@
 //! many independent ciphertexts concurrently across the bank pool — the
 //! software mirror of FHEmem assigning ciphertexts to banks.
 
-use crate::ckks::cipher::{Ciphertext, Evaluator};
+use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator};
 use crate::ckks::{CkksContext, KeyChain, KeyTag};
 use crate::math::poly::RnsPoly;
 use crate::params::CkksParams;
@@ -502,6 +502,56 @@ impl Coordinator {
             .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
     }
 
+    /// Cost a hoisted-BSGS linear transform on the FHEmem model: the
+    /// baby-step rotations share one decompose/ModUp + ModDown, each
+    /// giant step pays a full keyswitch
+    /// ([`CostModel::keyswitch_bsgs`]), plus the diagonal pmuls, inner
+    /// sums and the closing rescale — the execution shape of a compiled
+    /// `LinearTransform` node.
+    pub fn record_bsgs_transform(
+        &self,
+        params: &CkksParams,
+        limbs: usize,
+        babies: usize,
+        giants: usize,
+        pmuls: usize,
+    ) {
+        self.metrics.ops.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .rotations
+            .fetch_add((babies + giants) as u64, Ordering::Relaxed);
+        let shape = FheShape {
+            log_n: params.log_n,
+            limbs,
+            k_special: params.k_special,
+            dnum: params.dnum,
+            mult_shifts: 3,
+        };
+        let model = CostModel::new(&self.arch, shape);
+        let mut bd = model
+            .automorphism_poly()
+            .scaled(2.0 * shape.limbs as f64 * (babies + giants) as f64);
+        bd.add(&model.keyswitch_bsgs(babies, giants, true));
+        // Diagonal pmuls + the closing rescale, and the inner-sum adds.
+        bd.add(
+            &model
+                .modmul_poly()
+                .scaled(shape.limbs as f64 * (pmuls + 1) as f64),
+        );
+        bd.add(
+            &model
+                .modadd_poly()
+                .scaled(2.0 * shape.limbs as f64 * pmuls as f64),
+        );
+        let t = bd.total();
+        self.metrics
+            .sim_cycles
+            .fetch_add(t.cycles as u64, Ordering::Relaxed);
+        self.metrics
+            .sim_energy_pj
+            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+    }
+
     /// Execute one mixed op on the **bank-tiled hot path**: operands are
     /// tiled once at the batch edge (a memcpy — tiles are contiguous
     /// chunks of the flat vectors), every kernel in between (four-step
@@ -519,23 +569,23 @@ impl Coordinator {
         let b = op.b.as_ref();
         let a_t = op.a.to_tiled();
         let out = match op.kind {
-            MixedKind::Add => ev.add_tiled(&a_t, &b.expect("Add needs two operands").to_tiled()),
-            MixedKind::Sub => ev.sub_tiled(&a_t, &b.expect("Sub needs two operands").to_tiled()),
-            MixedKind::Mul => ev.mul_tiled(&a_t, &b.expect("Mul needs two operands").to_tiled()),
-            MixedKind::Rotate(step) => ev.rotate_tiled(&a_t, step),
-            MixedKind::Conjugate => ev.conjugate_tiled(&a_t),
-            MixedKind::Rescale => ev.rescale_tiled(&a_t),
-            MixedKind::LevelDown(l) => ev.level_down_tiled(&a_t, l),
+            MixedKind::Add => a_t.add(ev, &b.expect("Add needs two operands").to_tiled()),
+            MixedKind::Sub => a_t.sub(ev, &b.expect("Sub needs two operands").to_tiled()),
+            MixedKind::Mul => a_t.mul(ev, &b.expect("Mul needs two operands").to_tiled()),
+            MixedKind::Rotate(step) => a_t.rotate(ev, step),
+            MixedKind::Conjugate => a_t.conjugate(ev),
+            MixedKind::Rescale => a_t.rescale(ev),
+            MixedKind::LevelDown(l) => a_t.level_down(ev, l),
             MixedKind::Pmul => {
                 let p = op.plain.as_ref().expect("Pmul needs a plain operand");
                 let scale = p.scale.unwrap_or_else(|| ev.ctx.scale());
-                ev.mul_plain_no_rescale_tiled(&a_t, &p.values, scale)
+                a_t.pmul(ev, &p.values, scale)
             }
             MixedKind::AddPlain | MixedKind::SubPlain => {
                 let p = op.plain.as_ref().expect("plain op needs a plain operand");
                 let scale = p.scale.unwrap_or(op.a.scale);
-                ev.add_plain_tiled(
-                    &a_t,
+                a_t.add_plain(
+                    ev,
                     &p.values,
                     scale,
                     matches!(op.kind, MixedKind::SubPlain),

@@ -17,7 +17,7 @@
 
 use super::ir::{chebyshev_static, OpKind, ProgramError};
 use super::passes::CompiledProgram;
-use crate::ckks::cipher::{Ciphertext, Evaluator};
+use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator};
 use crate::ckks::linear::eval_chebyshev;
 use crate::coordinator::{Coordinator, MixedKind, MixedOp, PlainOperand};
 use crate::service::BatchScheduler;
@@ -261,11 +261,38 @@ impl CompiledProgram {
                     OpKind::LinearTransform(a, t) => {
                         let ct = ct_of(&values, *a)?;
                         let lt = &prog.transforms[*t];
-                        let mut ops = vec![crate::trace::FheOp::HRot; lt.rotation_count()];
-                        ops.extend(vec![crate::trace::FheOp::PMul; lt.diags.len()]);
-                        ops.push(crate::trace::FheOp::Rescale);
-                        coord.record_ops(&eval.ctx.params, self.meta[*a].level, &ops);
-                        values[id] = Some(lt.apply(eval, &ct));
+                        let plan = &self.lt_plans[*t];
+                        if plan.hoisted {
+                            // Hoisted BSGS on the tiled representation:
+                            // the baby steps share one decompose/ModUp
+                            // (costed as such), the diagonal pmuls and
+                            // inner sums run bank-tiled.
+                            coord.record_bsgs_transform(
+                                &eval.ctx.params,
+                                self.meta[*a].level,
+                                plan.plan.baby_rots.len(),
+                                plan.plan.giant_rots.len(),
+                                lt.diags.len(),
+                            );
+                            let out = lt.apply_tiled(eval, &ct.to_tiled(), Some(plan.plan.n1));
+                            values[id] = Some(out.to_flat());
+                        } else {
+                            let mut ops =
+                                vec![crate::trace::FheOp::HRot; plan.plan.rotation_count()];
+                            ops.extend(vec![crate::trace::FheOp::PMul; lt.diags.len()]);
+                            ops.push(crate::trace::FheOp::Rescale);
+                            coord.record_ops(&eval.ctx.params, self.meta[*a].level, &ops);
+                            values[id] = Some(lt.apply_unhoisted(eval, &ct));
+                        }
+                    }
+                    OpKind::MulConstC(a, re, im) => {
+                        let ct = ct_of(&values, *a)?;
+                        coord.record_ops(
+                            &eval.ctx.params,
+                            self.meta[*a].level,
+                            &[crate::trace::FheOp::PMul, crate::trace::FheOp::Rescale],
+                        );
+                        values[id] = Some(ct.to_tiled().mul_const_c(eval, *re, *im).to_flat());
                     }
                     _ => {
                         let op = self.mixed_op_for(id, eval, &values, &plain_of)?;

@@ -94,6 +94,12 @@ pub enum OpKind {
     /// `Σ_{i=0}^{w-1} rot(a, i)` in hoisted-decompose form — inserted by
     /// the planner's rotation-hoisting pass (power-of-two `w`).
     HoistedRotSum(NodeId, usize),
+    /// Multiply every slot by the complex constant `re + im·i`, encoded
+    /// at the exact rescaling prime `q_{l-1}`, then rescale: level drops
+    /// by one, the scale is preserved to f64 rounding
+    /// (`Evaluator::mul_const_complex_exact` — the bootstrap
+    /// conjugate-split and recombine steps).
+    MulConstC(NodeId, f64, f64),
 }
 
 impl OpKind {
@@ -112,7 +118,8 @@ impl OpKind {
             | OpKind::Rescale(a)
             | OpKind::LevelDown(a, _)
             | OpKind::LinearTransform(a, _)
-            | OpKind::HoistedRotSum(a, _) => vec![a],
+            | OpKind::HoistedRotSum(a, _)
+            | OpKind::MulConstC(a, _, _) => vec![a],
             OpKind::Chebyshev(a, _) => vec![a],
         }
     }
@@ -135,6 +142,7 @@ impl OpKind {
             OpKind::LinearTransform(a, t) => OpKind::LinearTransform(f(*a), *t),
             OpKind::Chebyshev(a, c) => OpKind::Chebyshev(f(*a), c.clone()),
             OpKind::HoistedRotSum(a, w) => OpKind::HoistedRotSum(f(*a), *w),
+            OpKind::MulConstC(a, re, im) => OpKind::MulConstC(f(*a), *re, *im),
         }
     }
 
@@ -197,6 +205,14 @@ impl Program {
                     }
                     if !w.is_power_of_two() || *w == 0 {
                         return err(format!("node {id}: hoisted width {w} not a power of two"));
+                    }
+                }
+                OpKind::MulConstC(a, re, im) => {
+                    if self.nodes[*a].is_plain() {
+                        return err(format!("node {id}: ciphertext operand {a} is plaintext"));
+                    }
+                    if !re.is_finite() || !im.is_finite() {
+                        return err(format!("node {id}: non-finite constant {re}+{im}i"));
                     }
                 }
                 _ => {
@@ -467,6 +483,23 @@ pub fn analyze(
                     plain: false,
                 }
             }
+            OpKind::MulConstC(a, _, _) => {
+                let ma = meta[*a];
+                if ma.level < 2 {
+                    return Err(ProgramError::LevelUnderflow(format!(
+                        "node {id}: const mul needs level >= 2, has {}",
+                        ma.level
+                    )));
+                }
+                // Encoded at the exact rescaling prime, then rescaled:
+                // replicate the evaluator's f64 ops verbatim.
+                let q_div = ctx.basis.q(ma.level - 1) as f64;
+                NodeMeta {
+                    level: ma.level - 1,
+                    scale: (ma.scale * q_div) / q_div,
+                    plain: false,
+                }
+            }
         };
         meta.push(m);
     }
@@ -573,6 +606,12 @@ impl Builder {
 
     pub fn chebyshev(&mut self, a: NodeId, coeffs: Vec<f64>) -> NodeId {
         self.push(OpKind::Chebyshev(a, coeffs))
+    }
+
+    /// Multiply by a complex constant at the exact rescaling prime
+    /// (level −1, scale preserved).
+    pub fn mul_const_c(&mut self, a: NodeId, re: f64, im: f64) -> NodeId {
+        self.push(OpKind::MulConstC(a, re, im))
     }
 
     pub fn linear_transform(&mut self, a: NodeId, lt: LinearTransform) -> NodeId {

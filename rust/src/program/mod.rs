@@ -30,4 +30,4 @@ pub mod passes;
 
 pub use exec::{ProgramReport, ProgramRun};
 pub use ir::{analyze, Builder, NodeId, NodeMeta, OpKind, Program, ProgramError};
-pub use passes::{compile, CompiledProgram, OpCounts, PassOptions};
+pub use passes::{compile, CompiledProgram, LtPlan, OpCounts, PassOptions};

@@ -20,6 +20,7 @@
 //! bench figure pin.
 
 use super::ir::{analyze, chebyshev_static, NodeId, NodeMeta, OpKind, Program, ProgramError};
+use crate::ckks::linear::BsgsPlan;
 use crate::ckks::CkksContext;
 use crate::trace::FheOp;
 use std::collections::HashMap;
@@ -32,6 +33,14 @@ pub struct PassOptions {
     pub dce: bool,
     pub hoist_rotations: bool,
     pub auto_rescale: bool,
+    /// Execute `LinearTransform` nodes with the hoisted-BSGS kernel:
+    /// all baby-step rotations share one digit-decompose/ModUp, so a
+    /// d-rotation transform costs `1 + #giants` keyswitch pipelines
+    /// instead of `#babies + #giants`.
+    pub bsgs_hoist: bool,
+    /// Override the BSGS baby-step count n1 for every transform
+    /// (`None` = per-transform `⌈√d⌉` rounded to a power of two).
+    pub bsgs_n1: Option<usize>,
 }
 
 impl Default for PassOptions {
@@ -41,7 +50,25 @@ impl Default for PassOptions {
             dce: true,
             hoist_rotations: true,
             auto_rescale: true,
+            bsgs_hoist: true,
+            bsgs_n1: None,
         }
+    }
+}
+
+/// How one `LinearTransform` of the program's transform table executes:
+/// the BSGS rotation split plus whether the baby steps run hoisted.
+/// Indexed like `Program::transforms`.
+#[derive(Debug, Clone)]
+pub struct LtPlan {
+    pub plan: BsgsPlan,
+    pub hoisted: bool,
+}
+
+impl LtPlan {
+    /// Full ModUp→inner-product→ModDown pipelines this transform costs.
+    pub fn keyswitches(&self) -> usize {
+        self.plan.keyswitches(self.hoisted)
     }
 }
 
@@ -81,6 +108,10 @@ pub struct CompiledProgram {
     pub log_n: usize,
     /// Highest input level (the trace/report shape).
     pub max_level: usize,
+    /// BSGS execution plan per transform-table entry (same index as
+    /// `program.transforms`) — the executor dispatches `LinearTransform`
+    /// nodes through these.
+    pub lt_plans: Vec<LtPlan>,
 }
 
 /// Run the pass pipeline. `inputs` binds every program input name to its
@@ -111,7 +142,15 @@ pub fn compile(
     }
     let meta = analyze(&p, ctx, inputs)?;
     let waves = schedule_waves(&p);
-    let (counts, trace_ops, const_bytes) = count_ops(&p, ctx, &meta)?;
+    let lt_plans: Vec<LtPlan> = p
+        .transforms
+        .iter()
+        .map(|lt| LtPlan {
+            plan: lt.bsgs_plan(opts.bsgs_n1),
+            hoisted: opts.bsgs_hoist,
+        })
+        .collect();
+    let (counts, trace_ops, const_bytes) = count_ops(&p, ctx, &meta, &lt_plans)?;
     let max_level = inputs.values().map(|&(l, _)| l).max().unwrap_or(1);
     Ok(CompiledProgram {
         program: p,
@@ -122,6 +161,7 @@ pub fn compile(
         const_bytes,
         log_n: ctx.params.log_n,
         max_level,
+        lt_plans,
     })
 }
 
@@ -212,6 +252,11 @@ fn node_key(kind: &OpKind) -> Vec<u8> {
             tag(&mut k, 14);
             id(&mut k, *a);
             id(&mut k, *w);
+        }
+        OpKind::MulConstC(a, re, im) => {
+            tag(&mut k, 15);
+            id(&mut k, *a);
+            f64s(&mut k, &[*re, *im]);
         }
     }
     k
@@ -572,6 +617,21 @@ fn single_meta(
                 plain: false,
             }
         }
+        OpKind::MulConstC(a, _, _) => {
+            let ma = meta[*a];
+            if ma.level < 2 {
+                return Err(ProgramError::LevelUnderflow(format!(
+                    "node {id}: const mul needs level >= 2, has {}",
+                    ma.level
+                )));
+            }
+            let q_div = ctx.basis.q(ma.level - 1) as f64;
+            NodeMeta {
+                level: ma.level - 1,
+                scale: (ma.scale * q_div) / q_div,
+                plain: false,
+            }
+        }
     };
     Ok(m)
 }
@@ -614,6 +674,7 @@ fn count_ops(
     prog: &Program,
     ctx: &CkksContext,
     meta: &[NodeMeta],
+    lt_plans: &[LtPlan],
 ) -> Result<(OpCounts, Vec<FheOp>, f64), ProgramError> {
     let mut c = OpCounts::default();
     let mut ops: Vec<FheOp> = Vec::new();
@@ -662,9 +723,17 @@ fn count_ops(
             }
             OpKind::LinearTransform(_, t) => {
                 let lt = &prog.transforms[*t];
-                let rots = lt.rotation_count();
+                let plan = &lt_plans[*t];
+                let rots = plan.plan.rotation_count();
                 c.rotations += rots;
-                c.keyswitch_invocations += rots;
+                // Hoisted BSGS: the baby steps share one decompose +
+                // ModDown, each nonzero giant step key-switches alone.
+                // The trace stream replays homomorphic semantics either
+                // way (the saving lives in the cycle model).
+                c.keyswitch_invocations += plan.keyswitches();
+                if plan.hoisted && !plan.plan.baby_rots.is_empty() {
+                    c.hoisted_groups += 1;
+                }
                 c.pmuls += lt.diags.len();
                 c.rescales += 1;
                 for _ in 0..rots {
@@ -690,6 +759,12 @@ fn count_ops(
                     ops.push(FheOp::PMul);
                     ops.push(FheOp::Rescale);
                 }
+            }
+            OpKind::MulConstC(..) => {
+                c.pmuls += 1;
+                c.rescales += 1;
+                ops.push(FheOp::PMul);
+                ops.push(FheOp::Rescale);
             }
         }
     }
@@ -930,6 +1005,62 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pinned_bsgs_lt_opcounts_hoisting_strictly_reduces_keyswitches() {
+        // The BSGS acceptance fixture: a 7-diagonal transform on 512
+        // slots splits as n1 = 32 → baby steps {1,2,3}, giant steps
+        // {32,64}. Unhoisted that is 5 keyswitch pipelines; hoisted,
+        // the three baby rotations share one decompose/ModUp, leaving
+        // 1 + 2 = 3.
+        use crate::ckks::complex::C64;
+        use crate::ckks::linear::LinearTransform;
+        let ctx = ctx();
+        let slots = ctx.encoder.slots();
+        let diag = |d: usize| (d, vec![C64::new(1.0, 0.0); slots]);
+        let lt = LinearTransform {
+            n: slots,
+            diags: vec![
+                diag(0),
+                diag(1),
+                diag(2),
+                diag(3),
+                diag(32),
+                diag(33),
+                diag(64),
+            ],
+        };
+        let build = |lt: LinearTransform| {
+            let mut b = Builder::new();
+            let x = b.input("x");
+            let y = b.linear_transform(x, lt);
+            b.output("y", y);
+            b.build().unwrap()
+        };
+        let inputs = inputs_at(&ctx, &["x"], 3);
+        let hoisted = compile(&build(lt.clone()), &ctx, &inputs, &PassOptions::default()).unwrap();
+        let unhoisted = compile(
+            &build(lt),
+            &ctx,
+            &inputs,
+            &PassOptions {
+                bsgs_hoist: false,
+                ..PassOptions::default()
+            },
+        )
+        .unwrap();
+        // Pinned: 3 babies + 2 giants.
+        assert_eq!(hoisted.lt_plans[0].plan.n1, 32);
+        assert_eq!(unhoisted.counts.keyswitch_invocations, 5);
+        assert_eq!(unhoisted.counts.rotations, 5);
+        assert_eq!(hoisted.counts.keyswitch_invocations, 3);
+        assert_eq!(hoisted.counts.hoisted_groups, 1);
+        assert_eq!(hoisted.counts.rotations, 5);
+        assert!(
+            hoisted.counts.keyswitch_invocations < unhoisted.counts.keyswitch_invocations,
+            "BSGS hoisting must strictly reduce keyswitch invocations"
+        );
     }
 
     #[test]

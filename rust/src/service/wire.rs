@@ -936,6 +936,12 @@ fn write_node(w: &mut WireWriter, prog: &Program, kind: &OpKind) {
             id32(w, *a);
             w.u16(*width as u16);
         }
+        OpKind::MulConstC(a, re, im) => {
+            w.u8(15);
+            id32(w, *a);
+            w.f64(*re);
+            w.f64(*im);
+        }
     }
 }
 
@@ -1028,6 +1034,15 @@ fn read_node(
             let a = id32(r)?;
             let w = r.u16()? as usize;
             OpKind::HoistedRotSum(a, w)
+        }
+        15 => {
+            let a = id32(r)?;
+            let re = r.f64()?;
+            let im = r.f64()?;
+            if !re.is_finite() || !im.is_finite() {
+                return malformed("non-finite complex constant");
+            }
+            OpKind::MulConstC(a, re, im)
         }
         other => return malformed(format!("unknown program node tag {other}")),
     })

@@ -426,6 +426,24 @@ impl<'a> CostModel<'a> {
         bd
     }
 
+    /// A **hoisted-BSGS linear transform** (the compiled
+    /// `LinearTransform` execution shape): the `babies` baby-step
+    /// rotations form one hoisted group sharing a single
+    /// decompose/ModUp + ModDown, while each of the `giants` giant-step
+    /// rotations — applied to a fresh inner sum, not the shared input —
+    /// pays a full [`Self::keyswitch`]. This is the cycle model behind
+    /// the `bsgs_keyswitch_reduction_c2s` bench figure.
+    pub fn keyswitch_bsgs(&self, babies: usize, giants: usize, use_chain: bool) -> Breakdown {
+        let mut bd = Breakdown::default();
+        if babies > 0 {
+            bd.add(&self.keyswitch_hoisted(babies, use_chain));
+        }
+        if giants > 0 {
+            bd.add(&self.keyswitch(use_chain).scaled(giants as f64));
+        }
+        bd
+    }
+
     /// Key material loaded per key switch (evk digits), bytes — drives
     /// the load-save pipeline's data-loading term (§IV-F3).
     pub fn evk_bytes(&self) -> f64 {
@@ -516,6 +534,22 @@ mod tests {
         assert!(ks.computation.cycles > 0.0);
         assert!(ks.permutation.cycles > 0.0);
         assert!(ks.interbank.cycles > 0.0);
+    }
+
+    #[test]
+    fn bsgs_keyswitch_cheaper_than_per_rotation() {
+        // 3 babies + 2 giants hoisted vs 5 independent keyswitch
+        // pipelines — the saving the CI-gated reduction figure pins.
+        let cfg = ArchConfig::default();
+        let m = model(&cfg);
+        let hoisted = m.keyswitch_bsgs(3, 2, true).total().cycles;
+        let per_rot = m.keyswitch(true).total().cycles * 5.0;
+        assert!(
+            hoisted < per_rot,
+            "bsgs {hoisted} !< per-rotation {per_rot}"
+        );
+        // Degenerate shapes cost nothing extra.
+        assert_eq!(m.keyswitch_bsgs(0, 0, true).total().cycles, 0.0);
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! End-to-end bootstrap conformance: the compiled, tiled bootstrap
+//! program (`Bootstrapper::bootstrap_compiled`) must be **bit-identical**
+//! to the flat pipeline (`Bootstrapper::bootstrap`) — both run the same
+//! hoisted-BSGS linear-transform kernel, the same Chebyshev evaluator
+//! and the same exact-prime constant multiplications, so the program
+//! lowering is purely a re-plumbing, never a numerics change. The
+//! refreshed ciphertext must also honor the advertised depth budget and
+//! stay usable for further computation at the bottom level.
+
+use fhemem::ckks::{BootstrapConfig, CkksContext, Evaluator, KeyChain};
+use fhemem::coordinator::Coordinator;
+use fhemem::params::CkksParams;
+use fhemem::sim::ArchConfig;
+use std::sync::Arc;
+
+#[test]
+fn compiled_tiled_bootstrap_bit_identical_to_flat() {
+    let coord = Coordinator::new(CkksParams::func_boot(), ArchConfig::default(), None);
+    let ctx = CkksContext::new(CkksParams::func_boot());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 777));
+    let ev = Arc::new(Evaluator::new(ctx, chain, 888));
+    let bs = BootstrapConfig::default().build(&ev);
+
+    let slots = ev.ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots)
+        .map(|i| 0.4 * (2.0 * std::f64::consts::PI * i as f64 / slots as f64).sin())
+        .collect();
+    let ct_full = ev.encrypt_real(&z, ev.ctx.l());
+    let ct1 = ev.level_down(&ct_full, 1);
+
+    let flat = bs.bootstrap(&ev, &ct1);
+    let (tiled, report) = bs
+        .bootstrap_compiled(&coord, &ev, &ct1)
+        .expect("compiled bootstrap executes");
+
+    // Bit-identity: residues, level and scale all match the flat path.
+    assert_eq!(tiled.c0.data, flat.c0.data, "c0 residues");
+    assert_eq!(tiled.c1.data, flat.c1.data, "c1 residues");
+    assert_eq!(tiled.level, flat.level, "level");
+    assert!((tiled.scale - flat.scale).abs() < 1e-9, "scale");
+    assert!(report.sim_cycles > 0, "compiled run was costed");
+
+    // Depth budget: the refresh consumes exactly `depth` levels off the
+    // top of the basis and must leave at least one.
+    assert_eq!(tiled.level, ev.ctx.l() - bs.depth, "advertised depth");
+    assert!(tiled.level >= 1, "no budget left: {}", tiled.level);
+
+    // The refreshed ciphertext still decrypts to the message…
+    let got = ev.decrypt(&tiled);
+    let mut worst = 0.0f64;
+    for i in 0..slots {
+        worst = worst.max((got[i].re - z[i]).abs());
+    }
+    assert!(worst < 5e-2, "bootstrap error {worst}");
+
+    // …and carries enough scale headroom at the bottom level for one
+    // more plaintext multiply without a rescale (Δ·2^4 < q0): halve
+    // every slot and decrypt.
+    let p = ev.encode_plain(&vec![0.5; slots], tiled.level, 16.0);
+    let halved = ev.mul_plain_no_rescale(&tiled, &p, 16.0);
+    let got2 = ev.decrypt(&halved);
+    for i in (0..slots).step_by(29) {
+        assert!(
+            (got2[i].re - 0.5 * z[i]).abs() < 5e-2,
+            "slot {i}: {} vs {}",
+            got2[i].re,
+            0.5 * z[i]
+        );
+    }
+}
+
+#[test]
+#[should_panic(expected = "bsgs_n1")]
+fn bootstrap_config_rejects_out_of_range_bsgs_n1() {
+    let ctx = CkksContext::new(CkksParams::func_tiny());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 1));
+    let ev = Evaluator::new(ctx, chain, 2);
+    let _ = BootstrapConfig::default().bsgs_n1(0).build(&ev);
+}

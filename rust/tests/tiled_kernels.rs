@@ -6,7 +6,7 @@
 //! baseline (golden-pinned against `python/compile/kernels/ref.py`); the
 //! tiled path is the one the batched serving ops actually run on.
 
-use fhemem::ckks::cipher::TiledCiphertext;
+use fhemem::ckks::cipher::{CtRepr, TiledCiphertext};
 use fhemem::ckks::keyswitch::{key_switch, key_switch_tiled};
 use fhemem::ckks::{CkksContext, Evaluator, KeyChain, KeyTag};
 use fhemem::mapping::LayoutPlan;
@@ -121,8 +121,8 @@ fn tiled_add_sub_bit_identical_to_flat() {
         let a = ev.encrypt_real(&z1, 3);
         let b = ev.encrypt_real(&z2, 3);
         let (at, bt) = (a.to_tiled(), b.to_tiled());
-        assert_ct_bit_identical(&ev.add_tiled(&at, &bt), &ev.add(&a, &b), "add");
-        assert_ct_bit_identical(&ev.sub_tiled(&at, &bt), &ev.sub(&a, &b), "sub");
+        assert_ct_bit_identical(&at.add(&ev, &bt), &ev.add(&a, &b), "add");
+        assert_ct_bit_identical(&at.sub(&ev, &bt), &ev.sub(&a, &b), "sub");
     });
 }
 
@@ -140,7 +140,7 @@ fn tiled_mul_bit_identical_to_flat() {
             let a = ev.encrypt_real(&z1, level);
             let b = ev.encrypt_real(&z2, level);
             let flat = ev.mul(&a, &b);
-            let tiled = ev.mul_tiled(&a.to_tiled(), &b.to_tiled());
+            let tiled = a.to_tiled().mul(&ev, &b.to_tiled());
             assert_ct_bit_identical(&tiled, &flat, ev.ctx.params.name);
         });
     }
@@ -155,14 +155,14 @@ fn tiled_rotate_and_conjugate_bit_identical_to_flat() {
     let at = a.to_tiled();
     for step in [1i64, 2, 7, -3] {
         assert_ct_bit_identical(
-            &ev.rotate_tiled(&at, step),
+            &at.rotate(&ev, step),
             &ev.rotate(&a, step),
             &format!("rotate {step}"),
         );
     }
-    assert_ct_bit_identical(&ev.conjugate_tiled(&at), &ev.conjugate(&a), "conjugate");
+    assert_ct_bit_identical(&at.conjugate(&ev), &ev.conjugate(&a), "conjugate");
     // Zero rotation short-circuits on both paths.
-    assert_ct_bit_identical(&ev.rotate_tiled(&at, 0), &ev.rotate(&a, 0), "rotate 0");
+    assert_ct_bit_identical(&at.rotate(&ev, 0), &ev.rotate(&a, 0), "rotate 0");
 }
 
 #[test]
@@ -177,11 +177,15 @@ fn tiled_rescale_and_level_down_bit_identical_to_flat() {
     let flat_scaled = ev.mul_plain_no_rescale(&a, &p, ev.ctx.scale());
     let tiled_scaled = flat_scaled.to_tiled();
     assert_ct_bit_identical(
-        &ev.rescale_tiled(&tiled_scaled),
+        &tiled_scaled.rescale(&ev),
         &ev.rescale(&flat_scaled),
         "rescale",
     );
-    assert_ct_bit_identical(&ev.level_down_tiled(&a.to_tiled(), 2), &ev.level_down(&a, 2), "level_down");
+    assert_ct_bit_identical(
+        &a.to_tiled().level_down(&ev, 2),
+        &ev.level_down(&a, 2),
+        "level_down",
+    );
 }
 
 #[test]
@@ -200,10 +204,10 @@ fn tiled_chain_stays_bit_identical_over_depth() {
     let f3 = ev.rotate(&f2, 2);
     let f4 = ev.mul(&f3, &f3);
 
-    let t1 = ev.mul_tiled(&a.to_tiled(), &b.to_tiled());
-    let t2 = ev.add_tiled(&t1, &ev.level_down_tiled(&a.to_tiled(), t1.level));
-    let t3 = ev.rotate_tiled(&t2, 2);
-    let t4 = ev.mul_tiled(&t3, &t3);
+    let t1 = a.to_tiled().mul(&ev, &b.to_tiled());
+    let t2 = t1.add(&ev, &a.to_tiled().level_down(&ev, t1.level));
+    let t3 = t2.rotate(&ev, 2);
+    let t4 = t3.mul(&ev, &t3);
     assert_ct_bit_identical(&t4, &f4, "depth chain");
 
     // And it still decrypts to the right thing.
