@@ -1,0 +1,241 @@
+//! Synthetic fleet driver for the serving layer: open-loop arrivals
+//! from a fleet of concurrent tenants, plus a block of fully idle
+//! connections, against the readiness-loop front-end. Records p50/p99
+//! latency and sustained ops/s into `BENCH_hotpath.json` (merged into
+//! the existing document — the other bench figures are preserved).
+//!
+//! Standalone (spawns an in-process server on ephemeral ports):
+//!
+//! ```sh
+//! cargo run --release --example load_harness -- --tenants 128 --ops 5
+//! ```
+//!
+//! Against an already-running `fhemem serve` (the CI load-smoke job's
+//! mode drives a loopback server):
+//!
+//! ```sh
+//! cargo run --release --example load_harness -- --port 7171 --json BENCH_hotpath.json
+//! ```
+//!
+//! **Open loop**: every op has a scheduled arrival time fixed up front
+//! (fleet-wide Poisson-ish spread: tenant phases stagger uniformly);
+//! latency is measured from the *scheduled* arrival, not the send, so
+//! a server that falls behind shows the queueing delay in its tail —
+//! the metric an SLO actually cares about.
+
+use fhemem::params::CkksParams;
+use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient};
+use fhemem::sim::ArchConfig;
+use fhemem::util::cli::Args;
+use fhemem::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env();
+    fhemem::parallel::configure_threads(args.threads());
+
+    let tenants = args.get_usize("tenants", 128);
+    let ops_per_tenant = args.get_usize("ops", 5);
+    let rate = args.get_usize("rate", 100).max(1); // fleet-wide ops/s target
+    let idle_conns = args.get_usize("idle", 256);
+    let json_path = args.get("json").map(|s| s.to_string());
+
+    // Either drive an external server or bring one up in-process (wire
+    // listener + HTTP metrics listener on ephemeral ports).
+    let (addr, http_addr, local) = match args.get("port") {
+        Some(_) => {
+            let port = args.get_port("port", 7070);
+            let http = args
+                .get("metrics-port")
+                .map(|_| format!("127.0.0.1:{}", args.get_port("metrics-port", 7071)));
+            (format!("127.0.0.1:{port}"), http, None)
+        }
+        None => {
+            let svc = FheService::new(
+                ArchConfig::default(),
+                SchedulerConfig {
+                    max_batch: args.get_usize("max-batch", 8),
+                    max_delay: Duration::from_millis(args.get_u64("max-delay-ms", 3)),
+                    max_queue: args.get_usize("max-queue", 4096),
+                    max_tenant_inflight: 0,
+                },
+            );
+            let handle = server::spawn_with(
+                "127.0.0.1:0",
+                Some("127.0.0.1:0"),
+                svc.clone(),
+                server::ServeOptions {
+                    workers: args.get_usize("workers", 8),
+                    ..server::ServeOptions::default()
+                },
+            )
+            .expect("bind ephemeral ports");
+            println!(
+                "in-process server on {} (metrics http://{}/metrics)",
+                handle.addr,
+                handle.http_addr.expect("http listener")
+            );
+            let http = handle.http_addr.map(|a| a.to_string());
+            (handle.addr.to_string(), http, Some((svc, handle)))
+        }
+    };
+
+    // Idle block: raw connections that never send a byte. Under the
+    // readiness loop they cost two empty buffers each and zero threads;
+    // under thread-per-connection they would each pin a thread.
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(idle_conns);
+    for _ in 0..idle_conns {
+        match TcpStream::connect(&addr) {
+            Ok(s) => idle.push(s),
+            Err(_) => break,
+        }
+    }
+    println!("fleet: {tenants} active tenants, {} idle connections", idle.len());
+
+    // Fleet-wide open-loop schedule: `rate` ops/s spread across the
+    // fleet; tenant i's k-th op is due at phase(i) + k * interval where
+    // interval = tenants / rate seconds (per tenant).
+    let interval = Duration::from_secs_f64(tenants as f64 / rate as f64);
+    let phase_step = Duration::from_secs_f64(1.0 / rate as f64);
+
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let errors = Arc::new(AtomicU64::new(0));
+    let t_start = Instant::now() + Duration::from_millis(200);
+
+    std::thread::scope(|s| {
+        for i in 0..tenants {
+            let addr = addr.clone();
+            let latencies = latencies.clone();
+            let errors = errors.clone();
+            s.spawn(move || {
+                let mut client = match ServiceClient::connect(
+                    &addr,
+                    1000 + i as u64,
+                    CkksParams::func_tiny(),
+                    0xF1EE7 + i as u64,
+                ) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        errors.fetch_add(ops_per_tenant as u64, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let slots = client.ctx.encoder.slots();
+                let z: Vec<f64> = (0..slots).map(|j| 0.01 * ((i + j) % 11) as f64).collect();
+                let ct = client.encrypt(&z, 3);
+                // Warm-up (materializes this tenant's Galois key server
+                // side) before the timed window opens.
+                let _ = client.rotate(&ct, 1);
+                let phase = phase_step * i as u32;
+                for k in 0..ops_per_tenant {
+                    let due = t_start + phase + interval * k as u32;
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    // Alternate rotate/add: same-shape ops from different
+                    // tenants coalesce into mixed bank-pool batches.
+                    let res = if k % 2 == 0 {
+                        client.rotate(&ct, 1)
+                    } else {
+                        client.add(&ct, &ct)
+                    };
+                    match res {
+                        Ok(_) => {
+                            let ms = due.elapsed().as_secs_f64() * 1e3;
+                            latencies.lock().unwrap().push(ms);
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t_start.elapsed().as_secs_f64();
+    drop(idle);
+
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let completed = lats.len();
+    let failed = errors.load(Ordering::Relaxed);
+    assert!(completed > 0, "no op completed — server unreachable?");
+    let pct = |p: f64| lats[((completed as f64 * p) as usize).min(completed - 1)];
+    let p50 = pct(0.50);
+    let p99 = pct(0.99);
+    let sustained = completed as f64 / elapsed;
+    println!(
+        "completed {completed} ops ({failed} failed) in {elapsed:.2}s: \
+         p50 {p50:.1} ms, p99 {p99:.1} ms, sustained {sustained:.1} ops/s"
+    );
+
+    // Scrape the HTTP metrics endpoint (proves the plain-GET path e2e)
+    // and the wire-level snapshot for batching evidence.
+    if let Some(http) = &http_addr {
+        let body = http_get_metrics(http).expect("GET /metrics");
+        assert!(
+            body.contains("\"batches\""),
+            "metrics endpoint returned no scheduler snapshot: {body}"
+        );
+        println!("GET /metrics OK ({} bytes)", body.len());
+    }
+    let mut probe = ServiceClient::connect(&addr, 1000, CkksParams::func_tiny(), 0xF1EE7)
+        .expect("metrics probe");
+    println!("scheduler metrics:\n{}", probe.metrics().expect("metrics"));
+
+    if let Some(path) = json_path {
+        merge_bench_json(&path, tenants, idle_conns, p50, p99, sustained);
+        println!("recorded serve_p50_ms/serve_p99_ms/serve_sustained_ops_per_s into {path}");
+    }
+
+    if let Some((svc, handle)) = local {
+        handle.stop();
+        svc.shutdown();
+    }
+    println!("load_harness OK");
+}
+
+/// Minimal HTTP GET against the metrics listener; returns the body.
+fn http_get_metrics(addr: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\n\r\n").as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    match raw.split_once("\r\n\r\n") {
+        Some((head, body)) if head.starts_with("HTTP/1.1 200") => Ok(body.to_string()),
+        _ => Err(std::io::Error::other(format!("bad response: {raw}"))),
+    }
+}
+
+/// Merge the serving figures into the bench JSON, preserving whatever
+/// other figures the document already holds (the hotpath bench and this
+/// harness share one artifact).
+fn merge_bench_json(path: &str, tenants: usize, idle: usize, p50: f64, p99: f64, ops_s: f64) {
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text).unwrap_or_else(|_| Json::Object(Vec::new())),
+        Err(_) => Json::Object(Vec::new()),
+    };
+    if !matches!(doc, Json::Object(_)) {
+        doc = Json::Object(Vec::new());
+    }
+    if let Json::Object(fields) = &mut doc {
+        let mut set = |key: &str, val: Json| {
+            if let Some(slot) = fields.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val;
+            } else {
+                fields.push((key.to_string(), val));
+            }
+        };
+        set("serve_tenants", Json::Num(tenants as u64));
+        set("serve_idle_conns", Json::Num(idle as u64));
+        set("serve_p50_ms", Json::Float(p50));
+        set("serve_p99_ms", Json::Float(p99));
+        set("serve_sustained_ops_per_s", Json::Float(ops_s));
+    }
+    std::fs::write(path, doc.write_pretty()).expect("write bench json");
+}

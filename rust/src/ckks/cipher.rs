@@ -80,8 +80,8 @@ impl TiledCiphertext {
 /// flat; kernels generic over `CtRepr` (the hoisted-BSGS linear
 /// transform in `ckks::linear`) are bit-identical across
 /// representations by construction, which `rust/tests/tiled_kernels.rs`
-/// asserts op by op. The old `Evaluator::*_tiled` names survive as
-/// deprecated forwarders for one release.
+/// asserts op by op. (The transitional `Evaluator::*_tiled` forwarders
+/// are gone; this trait is the only op surface.)
 pub trait CtRepr: Clone + Sized {
     /// Wrap a flat ciphertext in this representation (memcpy at most).
     fn from_flat_ct(ct: Ciphertext) -> Self;
@@ -665,45 +665,15 @@ impl Evaluator {
     // tiled execution (the bank-tiled hot path)
     // ------------------------------------------------------------------
     //
-    // Mirrors of add/sub/mul/rotate/rescale over [`TiledCiphertext`]:
-    // the representation the batched serving path runs on end-to-end
-    // (`coordinator::execute_mixed_batch` converts at the batch edges).
-    // Each op is bit-identical to its flat counterpart — the four-step
-    // NTT reproduces the radix-2 kernels exactly and every other kernel
-    // is per-coefficient — which `rust/tests/tiled_kernels.rs` asserts.
-
-    /// Drop limbs of a tiled ciphertext down to `level` (exact).
-    #[deprecated(note = "use the unified CtRepr surface: `ct.level_down(ev, level)`")]
-    pub fn level_down_tiled(&self, ct: &TiledCiphertext, level: usize) -> TiledCiphertext {
-        assert!(level <= ct.level);
-        TiledCiphertext {
-            c0: ct.c0.truncate_limbs(level),
-            c1: ct.c1.truncate_limbs(level),
-            level,
-            scale: ct.scale,
-        }
-    }
-
-    /// Rescale by the last modulus on tiles (four-step iNTT → per-bank
-    /// exact division → four-step NTT).
-    #[deprecated(note = "use the unified CtRepr surface: `ct.rescale(ev)`")]
-    pub fn rescale_tiled(&self, ct: &TiledCiphertext) -> TiledCiphertext {
-        assert!(ct.level >= 2, "cannot rescale at level 1");
-        let ql = self.ctx.basis.q(ct.level - 1);
-        let div = |p: &TiledRnsPoly| {
-            let mut p = p.clone();
-            p.to_coeff();
-            let mut out = p.rescale_by_last();
-            out.to_ntt();
-            out
-        };
-        TiledCiphertext {
-            c0: div(&ct.c0),
-            c1: div(&ct.c1),
-            level: ct.level - 1,
-            scale: ct.scale / ql as f64,
-        }
-    }
+    // The tiled mirrors of add/sub/mul/rotate/rescale live on the
+    // unified `CtRepr` surface (`impl CtRepr for TiledCiphertext`
+    // below): the representation the batched serving path runs on
+    // end-to-end (`coordinator::execute_mixed_batch` converts at the
+    // batch edges). Each op is bit-identical to its flat counterpart —
+    // the four-step NTT reproduces the radix-2 kernels exactly and
+    // every other kernel is per-coefficient — which
+    // `rust/tests/tiled_kernels.rs` asserts. Only the shared private
+    // helpers stay here on the evaluator.
 
     fn align_level_tiled(
         &self,
@@ -711,10 +681,13 @@ impl Evaluator {
         b: &TiledCiphertext,
     ) -> (TiledCiphertext, TiledCiphertext) {
         let level = a.level.min(b.level);
-        (
-            self.level_down_tiled(a, level),
-            self.level_down_tiled(b, level),
-        )
+        let down = |ct: &TiledCiphertext| TiledCiphertext {
+            c0: ct.c0.truncate_limbs(level),
+            c1: ct.c1.truncate_limbs(level),
+            level,
+            scale: ct.scale,
+        };
+        (down(a), down(b))
     }
 
     /// Level + scale alignment — same drift tolerance as [`Self::align`].
@@ -732,115 +705,6 @@ impl Evaluator {
             b.scale
         );
         (a, b)
-    }
-
-    /// HAdd on tiles.
-    #[deprecated(note = "use the unified CtRepr surface: `a.add(ev, b)`")]
-    pub fn add_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
-        let (mut a, b) = self.align_tiled(a, b);
-        a.c0.add_assign(&b.c0);
-        a.c1.add_assign(&b.c1);
-        a
-    }
-
-    /// HSub on tiles.
-    #[deprecated(note = "use the unified CtRepr surface: `a.sub(ev, b)`")]
-    pub fn sub_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
-        let (mut a, b) = self.align_tiled(a, b);
-        a.c0.sub_assign(&b.c0);
-        a.c1.sub_assign(&b.c1);
-        a
-    }
-
-    /// Tensor + relinearize on tiles, no rescale (mirror of
-    /// [`Self::mul_no_rescale`]).
-    #[deprecated(note = "use the unified CtRepr surface: `a.mul_no_rescale(ev, b)`")]
-    pub fn mul_no_rescale_tiled(
-        &self,
-        a: &TiledCiphertext,
-        b: &TiledCiphertext,
-    ) -> TiledCiphertext {
-        let (a, b) = self.align_level_tiled(a, b);
-        let level = a.level;
-        let mut d0 = a.c0.clone();
-        d0.mul_assign(&b.c0);
-        let mut d1 = TiledRnsPoly::fused_mul_add(&[(&a.c0, &b.c1), (&a.c1, &b.c0)]);
-        let mut d2 = a.c1.clone();
-        d2.mul_assign(&b.c1);
-        let evk = self.chain.eval_key(level, KeyTag::Relin);
-        let (ks0, ks1) = key_switch_tiled(&self.ctx, &d2, &evk);
-        d0.add_assign(&ks0);
-        d1.add_assign(&ks1);
-        TiledCiphertext {
-            c0: d0,
-            c1: d1,
-            level,
-            scale: a.scale * b.scale,
-        }
-    }
-
-    /// HMul on tiles: tensor + relinearize + rescale.
-    #[deprecated(note = "use the unified CtRepr surface: `a.mul(ev, b)`")]
-    pub fn mul_tiled(&self, a: &TiledCiphertext, b: &TiledCiphertext) -> TiledCiphertext {
-        self.rescale_tiled(&self.mul_no_rescale_tiled(a, b))
-    }
-
-    /// Multiply by a plaintext slot vector on tiles, no rescale: the
-    /// plaintext is encoded flat at `(a.level, pt_scale)` — bit-identical
-    /// to the flat [`Self::mul_plain_no_rescale`] path — then tiled (a
-    /// memcpy) for the pointwise product.
-    #[deprecated(note = "use the unified CtRepr surface: `a.pmul(ev, z, pt_scale)`")]
-    pub fn mul_plain_no_rescale_tiled(
-        &self,
-        a: &TiledCiphertext,
-        z: &[f64],
-        pt_scale: f64,
-    ) -> TiledCiphertext {
-        let p = self.encode_plain(z, a.level, pt_scale);
-        let pt = TiledRnsPoly::from_flat(&p);
-        let mut out = a.clone();
-        out.c0.mul_assign(&pt);
-        out.c1.mul_assign(&pt);
-        out.scale = a.scale * pt_scale;
-        out
-    }
-
-    /// `ct ± plain` on tiles: the plaintext vector is encoded at the
-    /// ciphertext's level and `pt_scale` and added to (or, with `negate`,
-    /// subtracted from) `c0` only.
-    #[deprecated(note = "use the unified CtRepr surface: `a.add_plain(ev, z, pt_scale, negate)`")]
-    pub fn add_plain_tiled(
-        &self,
-        a: &TiledCiphertext,
-        z: &[f64],
-        pt_scale: f64,
-        negate: bool,
-    ) -> TiledCiphertext {
-        let p = self.encode_plain(z, a.level, pt_scale);
-        let pt = TiledRnsPoly::from_flat(&p);
-        let mut out = a.clone();
-        if negate {
-            out.c0.sub_assign(&pt);
-        } else {
-            out.c0.add_assign(&pt);
-        }
-        out
-    }
-
-    /// Homomorphic slot rotation on tiles.
-    #[deprecated(note = "use the unified CtRepr surface: `a.rotate(ev, step)`")]
-    pub fn rotate_tiled(&self, a: &TiledCiphertext, step: i64) -> TiledCiphertext {
-        if step.rem_euclid(self.ctx.encoder.slots() as i64) == 0 {
-            return a.clone();
-        }
-        let k = RnsPoly::rotation_to_galois(step, self.ctx.n());
-        self.apply_galois_tiled(a, k)
-    }
-
-    /// Homomorphic complex conjugation on tiles.
-    #[deprecated(note = "use the unified CtRepr surface: `a.conjugate(ev)`")]
-    pub fn conjugate_tiled(&self, a: &TiledCiphertext) -> TiledCiphertext {
-        self.apply_galois_tiled(a, RnsPoly::conjugation_galois(self.ctx.n()))
     }
 
     fn apply_galois_tiled(&self, a: &TiledCiphertext, k: usize) -> TiledCiphertext {
@@ -957,9 +821,10 @@ impl CtRepr for Ciphertext {
     }
 }
 
-// The canonical tiled surface: forwards to the (deprecated) suffixed
-// names for one release so the bodies stay where their history is.
-#[allow(deprecated)]
+// The canonical tiled surface. Every op here is the bank-tiled mirror
+// of its flat counterpart and is bit-identical to it — the four-step
+// NTT reproduces the radix-2 kernels exactly and every other kernel is
+// per-coefficient (`rust/tests/tiled_kernels.rs` asserts this).
 impl CtRepr for TiledCiphertext {
     fn from_flat_ct(ct: Ciphertext) -> Self {
         ct.to_tiled()
@@ -974,23 +839,56 @@ impl CtRepr for TiledCiphertext {
     }
 
     fn add(&self, ev: &Evaluator, other: &Self) -> Self {
-        ev.add_tiled(self, other)
+        let (mut a, b) = ev.align_tiled(self, other);
+        a.c0.add_assign(&b.c0);
+        a.c1.add_assign(&b.c1);
+        a
     }
 
     fn sub(&self, ev: &Evaluator, other: &Self) -> Self {
-        ev.sub_tiled(self, other)
+        let (mut a, b) = ev.align_tiled(self, other);
+        a.c0.sub_assign(&b.c0);
+        a.c1.sub_assign(&b.c1);
+        a
     }
 
     fn mul(&self, ev: &Evaluator, other: &Self) -> Self {
-        ev.mul_tiled(self, other)
+        self.mul_no_rescale(ev, other).rescale(ev)
     }
 
     fn mul_no_rescale(&self, ev: &Evaluator, other: &Self) -> Self {
-        ev.mul_no_rescale_tiled(self, other)
+        // Tensor + relinearize on tiles (mirror of the flat
+        // `Evaluator::mul_no_rescale`).
+        let (a, b) = ev.align_level_tiled(self, other);
+        let level = a.level;
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&b.c0);
+        let mut d1 = TiledRnsPoly::fused_mul_add(&[(&a.c0, &b.c1), (&a.c1, &b.c0)]);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&b.c1);
+        let evk = ev.chain.eval_key(level, KeyTag::Relin);
+        let (ks0, ks1) = key_switch_tiled(&ev.ctx, &d2, &evk);
+        d0.add_assign(&ks0);
+        d1.add_assign(&ks1);
+        TiledCiphertext {
+            c0: d0,
+            c1: d1,
+            level,
+            scale: a.scale * b.scale,
+        }
     }
 
     fn pmul(&self, ev: &Evaluator, z: &[f64], pt_scale: f64) -> Self {
-        ev.mul_plain_no_rescale_tiled(self, z, pt_scale)
+        // The plaintext is encoded flat at `(self.level, pt_scale)` —
+        // bit-identical to the flat `mul_plain_no_rescale` path — then
+        // tiled (a memcpy) for the pointwise product.
+        let p = ev.encode_plain(z, self.level, pt_scale);
+        let pt = TiledRnsPoly::from_flat(&p);
+        let mut out = self.clone();
+        out.c0.mul_assign(&pt);
+        out.c1.mul_assign(&pt);
+        out.scale = self.scale * pt_scale;
+        out
     }
 
     fn pmul_complex(&self, ev: &Evaluator, vals: &[C64], pt_scale: f64) -> Self {
@@ -1006,31 +904,64 @@ impl CtRepr for TiledCiphertext {
     }
 
     fn add_plain(&self, ev: &Evaluator, z: &[f64], pt_scale: f64, negate: bool) -> Self {
-        ev.add_plain_tiled(self, z, pt_scale, negate)
+        let p = ev.encode_plain(z, self.level, pt_scale);
+        let pt = TiledRnsPoly::from_flat(&p);
+        let mut out = self.clone();
+        if negate {
+            out.c0.sub_assign(&pt);
+        } else {
+            out.c0.add_assign(&pt);
+        }
+        out
     }
 
     fn mul_const_c(&self, ev: &Evaluator, re: f64, im: f64) -> Self {
         // Mirror of `Evaluator::mul_const_complex_exact` on tiles.
         let pt_scale = ev.ctx.basis.q(self.level - 1) as f64;
         let z = vec![C64::new(re, im); ev.ctx.encoder.slots()];
-        let prod = self.pmul_complex(ev, &z, pt_scale);
-        ev.rescale_tiled(&prod)
+        self.pmul_complex(ev, &z, pt_scale).rescale(ev)
     }
 
     fn rotate(&self, ev: &Evaluator, step: i64) -> Self {
-        ev.rotate_tiled(self, step)
+        if step.rem_euclid(ev.ctx.encoder.slots() as i64) == 0 {
+            return self.clone();
+        }
+        let k = RnsPoly::rotation_to_galois(step, ev.ctx.n());
+        ev.apply_galois_tiled(self, k)
     }
 
     fn conjugate(&self, ev: &Evaluator) -> Self {
-        ev.conjugate_tiled(self)
+        ev.apply_galois_tiled(self, RnsPoly::conjugation_galois(ev.ctx.n()))
     }
 
     fn rescale(&self, ev: &Evaluator) -> Self {
-        ev.rescale_tiled(self)
+        // Rescale by the last modulus on tiles (four-step iNTT →
+        // per-bank exact division → four-step NTT).
+        assert!(self.level >= 2, "cannot rescale at level 1");
+        let ql = ev.ctx.basis.q(self.level - 1);
+        let div = |p: &TiledRnsPoly| {
+            let mut p = p.clone();
+            p.to_coeff();
+            let mut out = p.rescale_by_last();
+            out.to_ntt();
+            out
+        };
+        TiledCiphertext {
+            c0: div(&self.c0),
+            c1: div(&self.c1),
+            level: self.level - 1,
+            scale: self.scale / ql as f64,
+        }
     }
 
-    fn level_down(&self, ev: &Evaluator, level: usize) -> Self {
-        ev.level_down_tiled(self, level)
+    fn level_down(&self, _ev: &Evaluator, level: usize) -> Self {
+        assert!(level <= self.level);
+        TiledCiphertext {
+            c0: self.c0.truncate_limbs(level),
+            c1: self.c1.truncate_limbs(level),
+            level,
+            scale: self.scale,
+        }
     }
 }
 

@@ -25,7 +25,9 @@ fn main() {
             eprintln!(
                 "usage: fhemem <simulate|figures|bandwidth|pim|demo|serve> [--arch ARx4-4k] \
                  [--workload helr] [--artifacts DIR] [--threads N] \
-                 [--port 7070] [--max-batch 8] [--max-delay-ms 5] [--max-queue 64]"
+                 [--port 7070] [--metrics-port P] [--workers 8] [--max-batch 8] \
+                 [--max-delay-ms 5] [--max-queue 64] [--read-deadline-ms 10000] \
+                 [--idle-timeout-ms 600000]"
             );
             std::process::exit(2);
         }
@@ -47,18 +49,36 @@ fn cmd_serve(args: &Args) {
         // 0 = uncapped; set to bound one tenant's share of a batch.
         max_tenant_inflight: args.get_usize("max-tenant-inflight", 0),
     };
+    let opts = server::ServeOptions {
+        workers: args.get_usize("workers", 8),
+        read_deadline: Duration::from_millis(args.get_u64("read-deadline-ms", 10_000)),
+        idle_timeout: Duration::from_millis(args.get_u64("idle-timeout-ms", 600_000)),
+    };
+    // `--metrics-port`: a plain-HTTP listener beside the wire port;
+    // `GET /metrics` serves the scheduler snapshot for dashboards.
+    let metrics_port = args.get("metrics-port").map(|_| args.get_port("metrics-port", 0));
     let svc = FheService::new(arch, cfg.clone());
-    let handle = server::spawn(("127.0.0.1", port), svc).expect("bind serve port");
+    let handle = server::spawn_with(
+        ("127.0.0.1", port),
+        metrics_port.map(|p| ("127.0.0.1", p)),
+        svc,
+        opts.clone(),
+    )
+    .expect("bind serve port");
     println!(
         "fhemem-serve listening on {} (arch {}, max-batch {}, max-delay {:?}, max-queue {}, \
-         bank pool {} threads)",
+         {} workers, bank pool {} threads)",
         handle.addr,
         arch.name(),
         cfg.max_batch,
         cfg.max_delay,
         cfg.max_queue,
+        opts.workers,
         fhemem::parallel::pool().threads(),
     );
+    if let Some(http) = handle.http_addr {
+        println!("fhemem-serve metrics at http://{http}/metrics");
+    }
     handle.join();
 }
 

@@ -113,9 +113,11 @@ impl CompiledProgram {
         ))
     }
 
-    /// Execute through the serving scheduler: every wave op is submitted
-    /// individually and coalesces with whatever other tenants have
-    /// queued (cross-tenant batching across program nodes).
+    /// Execute through the serving scheduler: each wave is submitted
+    /// *atomically* ([`BatchScheduler::submit_many`] — one queue lock,
+    /// one wake-up) and coalesces with whatever other tenants have
+    /// queued, so same-shape nodes from concurrently running programs
+    /// share mixed batches (cross-program wave-level batching).
     pub fn execute_scheduled(
         &self,
         sched: &BatchScheduler,
@@ -127,15 +129,15 @@ impl CompiledProgram {
         let energy0 = metrics.sim_energy_pj.load(Ordering::Relaxed);
         let t0 = Instant::now();
         let outputs = self.run_waves(sched.coordinator(), eval, inputs, |ops| {
-            // Submit the whole wave, then collect: the scheduler's window
-            // coalesces these with other tenants' traffic.
-            let mut pending = Vec::with_capacity(ops.len());
-            for (id, op) in ops {
-                let rx = sched
-                    .submit(op)
-                    .map_err(|e| ProgramError::Exec(format!("submit: {e}")))?;
-                pending.push((id, rx));
-            }
+            // Submit the whole wave in one shot, then collect: the
+            // scheduler's window coalesces it with other tenants'
+            // concurrently submitted waves.
+            let ids: Vec<usize> = ops.iter().map(|(id, _)| *id).collect();
+            let mixed: Vec<MixedOp> = ops.into_iter().map(|(_, op)| op).collect();
+            let rxs = sched
+                .submit_many(mixed)
+                .map_err(|e| ProgramError::Exec(format!("submit: {e}")))?;
+            let pending: Vec<_> = ids.into_iter().zip(rxs).collect();
             pending
                 .into_iter()
                 .map(|(id, rx)| {

@@ -5,10 +5,13 @@
 //! determinism, not cryptographic strength, is the goal of this
 //! reproduction). The client derives the *same* chain from the same
 //! seed, so it can encrypt and decrypt locally while the server only
-//! ever evaluates. Lookup is interior-mutability-safe: an `RwLock`
-//! around the map means concurrent connections share read access and
-//! registration takes the write lock briefly; the returned `Arc<Tenant>`
-//! outlives any re-registration.
+//! ever evaluates. Lookup is interior-mutability-safe and *sharded*:
+//! the registry is [`KEYSTORE_SHARDS`] independent `RwLock`ed maps,
+//! keyed by a Fibonacci hash of the tenant id, so a burst of
+//! registrations (fleet admission) serializes only within a shard
+//! instead of across the whole store, and lookups on the hot eval path
+//! never contend with unrelated tenants' writes. The returned
+//! `Arc<Tenant>` outlives any re-registration.
 
 use crate::ckks::cipher::Evaluator;
 use crate::ckks::{CkksContext, KeyChain};
@@ -44,15 +47,34 @@ impl Tenant {
     }
 }
 
-/// Concurrent tenant registry.
-#[derive(Default)]
+/// Number of independent lock shards in the registry (power of two).
+pub const KEYSTORE_SHARDS: usize = 16;
+
+/// Concurrent tenant registry, sharded to keep admission off the
+/// serving hot path's lock.
 pub struct KeyStore {
-    tenants: RwLock<HashMap<u64, Arc<Tenant>>>,
+    shards: [RwLock<HashMap<u64, Arc<Tenant>>>; KEYSTORE_SHARDS],
+}
+
+impl Default for KeyStore {
+    fn default() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+        }
+    }
 }
 
 impl KeyStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Shard index for a tenant id: Fibonacci (golden-ratio) hashing
+    /// spreads sequential ids (fleet drivers register 0..n) across all
+    /// shards; the top bits carry the mix.
+    fn shard(&self, id: u64) -> &RwLock<HashMap<u64, Arc<Tenant>>> {
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[(h >> 60) as usize & (KEYSTORE_SHARDS - 1)]
     }
 
     /// Register a tenant. Re-registering the same `(id, seed, params)` is
@@ -86,7 +108,7 @@ impl KeyStore {
         // Key generation happens outside the write lock; a racing
         // duplicate registration resolves to whichever insert wins.
         let tenant = Tenant::new(id, params, key_seed);
-        let mut map = self.tenants.write().unwrap();
+        let mut map = self.shard(id).write().unwrap();
         match map.get(&id) {
             Some(existing) if same_identity(existing) => Ok(existing.clone()),
             Some(_) => conflict(),
@@ -97,13 +119,13 @@ impl KeyStore {
         }
     }
 
-    /// Shared-lock lookup.
+    /// Shared-lock lookup (touches exactly one shard).
     pub fn get(&self, id: u64) -> Option<Arc<Tenant>> {
-        self.tenants.read().unwrap().get(&id).cloned()
+        self.shard(id).read().unwrap().get(&id).cloned()
     }
 
     pub fn len(&self) -> usize {
-        self.tenants.read().unwrap().len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -158,6 +180,22 @@ mod tests {
         let ct = client.eval.encrypt_real(&z, 2);
         let dec = server.eval.decrypt_real(&ct);
         assert!((dec[3] - z[3]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sequential_ids_spread_across_shards() {
+        // Fleet drivers register tenants 0..n; Fibonacci hashing must
+        // spread those across most shards or sharding buys nothing.
+        let store = KeyStore::new();
+        let mut used: Vec<*const RwLock<HashMap<u64, Arc<Tenant>>>> =
+            (0..64u64).map(|id| store.shard(id) as *const _).collect();
+        used.sort();
+        used.dedup();
+        assert!(
+            used.len() >= KEYSTORE_SHARDS / 2,
+            "64 sequential ids hit only {} of {KEYSTORE_SHARDS} shards",
+            used.len()
+        );
     }
 
     #[test]

@@ -80,6 +80,14 @@ pub struct SchedulerMetrics {
     /// not `max_batch` truncation, held them back (fairness at work,
     /// not an error; always 0 when uncapped).
     pub fairness_deferrals: AtomicU64,
+    /// Batches whose ops came from two or more distinct tenants — the
+    /// direct evidence that wave-level cross-program coalescing is
+    /// happening (independent tenants' compiled programs sharing one
+    /// mixed bank-pool batch).
+    pub multi_tenant_batches: AtomicU64,
+    /// Whole program waves admitted atomically via
+    /// [`BatchScheduler::submit_many`].
+    pub wave_submits: AtomicU64,
 }
 
 impl SchedulerMetrics {
@@ -116,6 +124,14 @@ impl SchedulerMetrics {
             (
                 "fairness_deferrals",
                 Json::Num(self.fairness_deferrals.load(Ordering::Relaxed)),
+            ),
+            (
+                "multi_tenant_batches",
+                Json::Num(self.multi_tenant_batches.load(Ordering::Relaxed)),
+            ),
+            (
+                "wave_submits",
+                Json::Num(self.wave_submits.load(Ordering::Relaxed)),
             ),
             ("avg_batch_fill", Json::Float(avg_fill)),
             ("throughput_ops_per_s", Json::Float(throughput)),
@@ -322,6 +338,55 @@ impl BatchScheduler {
         Ok(rx)
     }
 
+    /// Submit a whole program *wave* atomically: every op lands in the
+    /// queue under one lock acquisition (and one wake-up), so
+    /// same-shape nodes from different tenants' concurrently submitted
+    /// programs interleave in the fair queue and coalesce into shared
+    /// mixed batches instead of trickling in one lock at a time.
+    /// Admission is all-or-nothing — if the wave does not fit under
+    /// `max_queue`, nothing is enqueued and the caller sees
+    /// [`ServiceError::Backpressure`] (no half-admitted waves to leak
+    /// receivers for).
+    pub fn submit_many(
+        &self,
+        ops: Vec<MixedOp>,
+    ) -> Result<Vec<mpsc::Receiver<OpResult>>, ServiceError> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut rxs = Vec::with_capacity(ops.len());
+        {
+            let mut q = self.queue.lock().unwrap();
+            // Same stop-under-lock discipline as `submit`: shutdown()
+            // drains under this lock, so a wave can never slip in
+            // between drain and worker exit.
+            if self.stop.load(Ordering::Acquire) {
+                return Err(ServiceError::Rejected("scheduler is shut down".into()));
+            }
+            if q.len() + ops.len() > self.cfg.max_queue {
+                self.metrics
+                    .rejected
+                    .fetch_add(ops.len() as u64, Ordering::Relaxed);
+                return Err(ServiceError::Backpressure);
+            }
+            let now = Instant::now();
+            for op in ops {
+                let (tx, rx) = mpsc::channel();
+                let tenant = Arc::as_ptr(&op.eval) as usize;
+                q.push(Pending {
+                    op,
+                    tx,
+                    enqueued: now,
+                    tenant,
+                });
+                rxs.push(rx);
+            }
+        }
+        self.metrics.wave_submits.fetch_add(1, Ordering::Relaxed);
+        self.notify.notify_all();
+        Ok(rxs)
+    }
+
     /// Submit and block until the batch containing this op completes.
     pub fn execute_blocking(&self, op: MixedOp) -> OpResult {
         let rx = self.submit(op)?;
@@ -428,9 +493,18 @@ impl BatchScheduler {
         let n = batch.len() as u64;
         let mut ops = Vec::with_capacity(batch.len());
         let mut txs = Vec::with_capacity(batch.len());
+        let mut tenants: Vec<usize> = Vec::with_capacity(batch.len());
         for p in batch {
+            if !tenants.contains(&p.tenant) {
+                tenants.push(p.tenant);
+            }
             ops.push(p.op);
             txs.push(p.tx);
+        }
+        if tenants.len() >= 2 {
+            self.metrics
+                .multi_tenant_batches
+                .fetch_add(1, Ordering::Relaxed);
         }
         // Record this batch as a replayable trace before executing it
         // (the op stream is what the batch *is*, independent of whether

@@ -1,29 +1,51 @@
-//! `std::net` TCP front-end speaking the wire format.
+//! `std::net` TCP front-end speaking the wire format — as a
+//! nonblocking readiness loop, not thread-per-connection.
 //!
-//! One accept loop (non-blocking + stop flag so it can be shut down
-//! without an extra wake-up connection), one handler thread per
-//! connection. A connection carries any number of frames; each request
-//! frame gets exactly one response frame:
+//! One event thread owns every connection: a poll-style registry of
+//! nonblocking sockets with per-connection partial-frame read/write
+//! buffers. Thousands of idle tenants cost two buffers each and zero
+//! threads. Complete request frames are handed to a small worker pool
+//! (the only threads that touch the scheduler); finished responses
+//! travel back over a channel and are flushed by the event thread as
+//! sockets become writable. A connection carries any number of frames;
+//! each request frame gets exactly one response frame, in order:
 //!
 //! | request | response |
 //! |---|---|
 //! | [`FrameKind::Register`] | [`FrameKind::Ack`] or [`FrameKind::Error`] |
 //! | [`FrameKind::Eval`] | [`FrameKind::EvalOk`] or [`FrameKind::Error`] |
+//! | [`FrameKind::Program`] | [`FrameKind::ProgramOk`] or [`FrameKind::Error`] |
 //! | [`FrameKind::MetricsReq`] | [`FrameKind::MetricsOk`] |
 //!
-//! Evaluation blocks the connection thread while the scheduler batches
-//! it with whatever other tenants have queued — which is exactly how the
-//! batching window fills up under concurrent load.
+//! Ordering per connection is preserved by dispatching at most one
+//! frame per connection at a time; further complete frames queue in
+//! the connection until the in-flight response lands. Different
+//! connections' frames run concurrently across the pool — which is how
+//! the scheduler's batching window fills with cross-tenant waves.
+//!
+//! Two timeouts defend the registry (ISSUE 7 satellite): a *read
+//! deadline* bounds how long a partially received frame may sit (a
+//! slow-loris writer is dropped, torn frames cannot pin a slot), and
+//! an *idle timeout* reaps connections with no traffic at all. Both
+//! are per-connection and enforced by the event thread.
+//!
+//! An optional second listener serves plain HTTP: `GET /metrics`
+//! returns the scheduler's `metrics_json` snapshot, so dashboards can
+//! poll without speaking the binary protocol. HTTP connections share
+//! the same event loop and timeouts.
 
+use std::collections::VecDeque;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::wire::{
     self, decode_ciphertext, decode_eval_request, decode_evalkey_frame, decode_program_request,
     decode_register, encode_ciphertext, encode_error, encode_metrics, encode_program_outputs,
-    read_frame_from, FrameKind,
+    FrameKind,
 };
 use super::{FheService, ServiceError};
 
@@ -36,141 +58,482 @@ pub mod error_code {
     pub const PROTOCOL: u16 = 5;
 }
 
-/// A running server: address + stop handle + accept-thread join handle.
+/// Front-end tuning knobs (all enforced by the event thread).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads decoding and evaluating request frames. These are
+    /// the only threads that block on the scheduler; more workers means
+    /// more frames in flight and fuller mixed batches.
+    pub workers: usize,
+    /// Maximum age of a partially received frame before the connection
+    /// is dropped (slow-loris / torn-frame defence).
+    pub read_deadline: Duration,
+    /// Maximum fully-idle age (no unread bytes, no queued work, no
+    /// unflushed response) before the connection is reaped.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 8,
+            read_deadline: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// A running server: address(es) + stop handle + event-thread join.
 pub struct ServerHandle {
     pub addr: SocketAddr,
+    /// Bound address of the HTTP metrics listener, when enabled.
+    pub http_addr: Option<SocketAddr>,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    event_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Signal the accept loop to exit and join it. In-flight connection
-    /// handlers finish their current frame and exit on peer close.
+    /// Signal the event loop to exit and join it. Open connections are
+    /// dropped; in-flight worker jobs finish and are discarded.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept_thread.take() {
+        if let Some(h) = self.event_thread.take() {
             let _ = h.join();
         }
     }
 
-    /// Block on the accept loop (the `serve` subcommand's foreground
+    /// Block on the event loop (the `serve` subcommand's foreground
     /// mode — runs until the process is killed).
     pub fn join(mut self) {
-        if let Some(h) = self.accept_thread.take() {
+        if let Some(h) = self.event_thread.take() {
             let _ = h.join();
         }
     }
 }
 
 /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
-/// `svc` on a background accept thread.
+/// `svc` with default options and no HTTP listener.
 pub fn spawn<A: ToSocketAddrs>(addr: A, svc: Arc<FheService>) -> std::io::Result<ServerHandle> {
+    spawn_with(addr, None::<SocketAddr>, svc, ServeOptions::default())
+}
+
+/// Bind the wire listener at `addr` and, when `http_addr` is given, a
+/// plain-HTTP metrics listener beside it; serve both from one event
+/// thread.
+pub fn spawn_with<A: ToSocketAddrs, B: ToSocketAddrs>(
+    addr: A,
+    http_addr: Option<B>,
+    svc: Arc<FheService>,
+    opts: ServeOptions,
+) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let local = listener.local_addr()?;
+    let http_listener = match http_addr {
+        Some(a) => {
+            let l = TcpListener::bind(a)?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        }
+        None => None,
+    };
+    let http_local = match &http_listener {
+        Some(l) => Some(l.local_addr()?),
+        None => None,
+    };
     let stop = Arc::new(AtomicBool::new(false));
     let stop_flag = stop.clone();
-    let accept_thread = std::thread::Builder::new()
-        .name("fhemem-accept".into())
-        .spawn(move || accept_loop(listener, svc, stop_flag))?;
+    let event_thread = std::thread::Builder::new()
+        .name("fhemem-event".into())
+        .spawn(move || event_loop(listener, http_listener, svc, stop_flag, opts))?;
     Ok(ServerHandle {
         addr: local,
+        http_addr: http_local,
         stop,
-        accept_thread: Some(accept_thread),
+        event_thread: Some(event_thread),
     })
 }
 
-fn accept_loop(listener: TcpListener, svc: Arc<FheService>, stop: Arc<AtomicBool>) {
+// ----------------------------------------------------------------------
+// connection registry
+// ----------------------------------------------------------------------
+
+#[derive(PartialEq, Eq, Clone, Copy)]
+enum Proto {
+    Wire,
+    Http,
+}
+
+/// Per-connection state owned exclusively by the event thread.
+struct Conn {
+    stream: TcpStream,
+    proto: Proto,
+    /// Partially received bytes (may hold several pipelined frames).
+    rbuf: Vec<u8>,
+    /// Encoded response bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Complete frames waiting their turn (one in flight at a time).
+    queued: VecDeque<(FrameKind, Vec<u8>)>,
+    /// A frame from this connection is in the worker pool.
+    busy: bool,
+    /// Peer half-closed; drain queued work + wbuf, then drop.
+    eof: bool,
+    /// Close once wbuf drains (HTTP responses, fatal wire errors).
+    close_after_flush: bool,
+    /// When the oldest unparsed byte arrived (read-deadline clock).
+    partial_since: Option<Instant>,
+    last_activity: Instant,
+    /// Bumped when the slot is reused so stale worker responses for a
+    /// previous occupant are discarded.
+    gen: u64,
+}
+
+struct Job {
+    conn: usize,
+    gen: u64,
+    kind: FrameKind,
+    payload: Vec<u8>,
+}
+
+struct Done {
+    conn: usize,
+    gen: u64,
+    bytes: Vec<u8>,
+}
+
+/// Largest HTTP request head we will buffer before dropping the peer.
+const MAX_HTTP_HEAD: usize = 8 * 1024;
+
+fn event_loop(
+    listener: TcpListener,
+    http_listener: Option<TcpListener>,
+    svc: Arc<FheService>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) {
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let mut workers = Vec::new();
+    for w in 0..opts.workers.max(1) {
+        let rx = job_rx.clone();
+        let tx = done_tx.clone();
+        let svc = svc.clone();
+        if let Ok(h) = std::thread::Builder::new()
+            .name(format!("fhemem-worker-{w}"))
+            .spawn(move || worker_loop(rx, tx, svc))
+        {
+            workers.push(h);
+        }
+    }
+    drop(done_tx);
+
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut next_gen: u64 = 1;
     while !stop.load(Ordering::Acquire) {
+        let mut progressed = false;
+        let now = Instant::now();
+
+        // 1. Accept newly arrived connections (both listeners).
+        progressed |= accept_into(&listener, Proto::Wire, &mut conns, &mut next_gen, now);
+        if let Some(hl) = &http_listener {
+            progressed |= accept_into(hl, Proto::Http, &mut conns, &mut next_gen, now);
+        }
+
+        // 2. Land finished worker responses, then dispatch the next
+        //    queued frame of each now-free connection.
+        while let Ok(done) = done_rx.try_recv() {
+            progressed = true;
+            if let Some(Some(c)) = conns.get_mut(done.conn) {
+                if c.gen == done.gen {
+                    c.wbuf.extend_from_slice(&done.bytes);
+                    c.busy = false;
+                    dispatch_next(done.conn, c, &job_tx);
+                }
+            }
+        }
+
+        // 3. Per-connection I/O sweep.
+        for idx in 0..conns.len() {
+            let Some(c) = conns[idx].as_mut() else {
+                continue;
+            };
+            let mut drop_conn = false;
+
+            // Flush pending response bytes.
+            while c.wpos < c.wbuf.len() {
+                match c.stream.write(&c.wbuf[c.wpos..]) {
+                    Ok(0) => {
+                        drop_conn = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.wpos += n;
+                        c.last_activity = now;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        drop_conn = true;
+                        break;
+                    }
+                }
+            }
+            if c.wpos == c.wbuf.len() && !c.wbuf.is_empty() {
+                c.wbuf.clear();
+                c.wpos = 0;
+                if c.close_after_flush {
+                    drop_conn = true;
+                }
+            }
+
+            // Read whatever the socket has ready.
+            if !drop_conn && !c.eof {
+                let mut chunk = [0u8; 16 * 1024];
+                loop {
+                    match c.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            c.eof = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.rbuf.extend_from_slice(&chunk[..n]);
+                            c.last_activity = now;
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            drop_conn = true;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // Parse complete requests out of the read buffer.
+            if !drop_conn {
+                match c.proto {
+                    Proto::Wire => loop {
+                        match wire::try_extract_frame(&c.rbuf) {
+                            Ok(Some((kind, payload, consumed))) => {
+                                c.rbuf.drain(..consumed);
+                                c.queued.push_back((kind, payload));
+                                progressed = true;
+                            }
+                            Ok(None) => break,
+                            // Framing is broken (bad magic/checksum):
+                            // there is no trustworthy boundary to
+                            // resynchronize on — close.
+                            Err(_) => {
+                                drop_conn = true;
+                                break;
+                            }
+                        }
+                    },
+                    Proto::Http => {
+                        if let Some(resp) = parse_http_request(&mut c.rbuf, &svc) {
+                            c.wbuf.extend_from_slice(&resp);
+                            c.close_after_flush = true;
+                            progressed = true;
+                        } else if c.rbuf.len() > MAX_HTTP_HEAD {
+                            drop_conn = true;
+                        }
+                    }
+                }
+                // The read-deadline clock runs only while unparsed
+                // bytes sit in the buffer.
+                c.partial_since = match (c.rbuf.is_empty(), c.partial_since) {
+                    (true, _) => None,
+                    (false, Some(t)) => Some(t),
+                    (false, None) => Some(now),
+                };
+            }
+
+            // Hand the oldest queued frame to the pool.
+            if !drop_conn && !c.busy {
+                dispatch_next(idx, c, &job_tx);
+            }
+
+            // Timeouts: slow-loris partial frames, then full idleness.
+            if !drop_conn {
+                if let Some(t) = c.partial_since {
+                    if now.duration_since(t) > opts.read_deadline {
+                        drop_conn = true;
+                    }
+                }
+            }
+            if !drop_conn
+                && !c.busy
+                && c.queued.is_empty()
+                && c.wbuf.is_empty()
+                && c.rbuf.is_empty()
+                && now.duration_since(c.last_activity) > opts.idle_timeout
+            {
+                drop_conn = true;
+            }
+
+            // Peer closed and everything owed has been delivered.
+            if !drop_conn && c.eof && c.queued.is_empty() && !c.busy && c.wbuf.is_empty() {
+                drop_conn = true;
+            }
+
+            if drop_conn {
+                conns[idx] = None;
+                progressed = true;
+            }
+        }
+
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    // Shutdown: drop connections and the job channel; workers drain and
+    // exit (their remaining Done messages land in a closed channel).
+    conns.clear();
+    drop(job_tx);
+    drop(done_rx);
+    for h in workers {
+        let _ = h.join();
+    }
+}
+
+fn accept_into(
+    listener: &TcpListener,
+    proto: Proto,
+    conns: &mut Vec<Option<Conn>>,
+    next_gen: &mut u64,
+    now: Instant,
+) -> bool {
+    let mut any = false;
+    loop {
         match listener.accept() {
-            Ok((stream, peer)) => {
-                let svc = svc.clone();
-                let _ = std::thread::Builder::new()
-                    .name(format!("fhemem-conn-{peer}"))
-                    .spawn(move || {
-                        // The accepted socket must be blocking regardless
-                        // of the listener's mode.
-                        let _ = stream.set_nonblocking(false);
-                        let _ = stream.set_nodelay(true);
-                        handle_conn(stream, svc);
-                    });
+            Ok((stream, _peer)) => {
+                // Everything this loop owns must be nonblocking; a
+                // socket we cannot flip is a socket we cannot serve.
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let gen = *next_gen;
+                *next_gen += 1;
+                let conn = Conn {
+                    stream,
+                    proto,
+                    rbuf: Vec::new(),
+                    wbuf: Vec::new(),
+                    wpos: 0,
+                    queued: VecDeque::new(),
+                    busy: false,
+                    eof: false,
+                    close_after_flush: false,
+                    partial_since: None,
+                    last_activity: now,
+                    gen,
+                };
+                match conns.iter_mut().position(|s| s.is_none()) {
+                    Some(i) => conns[i] = Some(conn),
+                    None => conns.push(Some(conn)),
+                }
+                any = true;
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
             // Transient per-connection failures (ECONNABORTED from a
             // client RST before accept, momentary fd exhaustion, EINTR)
-            // must not kill the whole server — back off and keep
-            // accepting. Only the stop flag ends the loop.
-            Err(_) => {
-                std::thread::sleep(Duration::from_millis(10));
-            }
+            // must not kill the server — yield to the next sweep.
+            Err(_) => break,
         }
+    }
+    any
+}
+
+fn dispatch_next(idx: usize, c: &mut Conn, job_tx: &mpsc::Sender<Job>) {
+    if let Some((kind, payload)) = c.queued.pop_front() {
+        c.busy = true;
+        let _ = job_tx.send(Job {
+            conn: idx,
+            gen: c.gen,
+            kind,
+            payload,
+        });
     }
 }
 
-fn send(stream: &mut TcpStream, kind: FrameKind, payload: &[u8]) -> std::io::Result<()> {
-    wire::write_frame_to(stream, kind, payload)
-}
+// ----------------------------------------------------------------------
+// workers
+// ----------------------------------------------------------------------
 
-fn send_service_error(stream: &mut TcpStream, err: &ServiceError) -> std::io::Result<()> {
-    let (code, detail, msg) = match err {
-        ServiceError::Wire(w) => (error_code::WIRE, 0, w.to_string()),
-        ServiceError::UnknownTenant(id) => (
-            error_code::UNKNOWN_TENANT,
-            *id,
-            format!("unknown tenant {id}"),
-        ),
-        ServiceError::Backpressure => (
-            error_code::BACKPRESSURE,
-            0,
-            "queue full, retry later".to_string(),
-        ),
-        ServiceError::Rejected(msg) => (error_code::REJECTED, 0, msg.clone()),
-        ServiceError::Io(e) => (error_code::PROTOCOL, 0, e.to_string()),
-        ServiceError::Protocol(msg) => (error_code::PROTOCOL, 0, msg.clone()),
-    };
-    send(stream, FrameKind::Error, &encode_error(code, detail, &msg))
-}
-
-fn handle_conn(mut stream: TcpStream, svc: Arc<FheService>) {
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    tx: mpsc::Sender<Done>,
+    svc: Arc<FheService>,
+) {
     loop {
-        let (kind, payload) = match read_frame_from(&mut stream) {
-            Ok(Some(frame)) => frame,
-            // Clean close between frames.
-            Ok(None) => return,
-            // Framing is broken (bad magic/checksum/short read): there is
-            // no trustworthy boundary to resynchronize on — close.
+        // Hold the lock only across the blocking recv; processing runs
+        // unlocked so the pool genuinely parallelizes.
+        let job = match rx.lock() {
+            Ok(guard) => match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            },
             Err(_) => return,
         };
-        if let Err(err) = handle_frame(kind, &payload, &svc, &mut stream) {
-            // An Io error means a response write already failed — bytes
-            // of a torn frame may be on the wire, so appending an Error
-            // frame would desynchronize the client. Close instead.
-            // Application errors (decode/eval/registration) happen before
-            // any response bytes and are safely reportable.
-            if matches!(err, ServiceError::Io(_)) {
-                return;
-            }
-            if send_service_error(&mut stream, &err).is_err() {
-                return;
-            }
+        let bytes = process_frame(job.kind, &job.payload, &svc);
+        if tx
+            .send(Done {
+                conn: job.conn,
+                gen: job.gen,
+                bytes,
+            })
+            .is_err()
+        {
+            return;
         }
     }
 }
 
-/// Process one request frame; `Ok(())` means a response was written.
-fn handle_frame(
+/// Run one request frame to completion and encode the response frame.
+/// Application errors (decode/eval/registration) become [`FrameKind::Error`]
+/// frames — workers never touch sockets, so there is no torn-write case.
+fn process_frame(kind: FrameKind, payload: &[u8], svc: &Arc<FheService>) -> Vec<u8> {
+    match handle_request(kind, payload, svc) {
+        Ok((k, body)) => wire::encode_frame(k, &body),
+        Err(err) => {
+            let (code, detail, msg) = match &err {
+                ServiceError::Wire(w) => (error_code::WIRE, 0, w.to_string()),
+                ServiceError::UnknownTenant(id) => (
+                    error_code::UNKNOWN_TENANT,
+                    *id,
+                    format!("unknown tenant {id}"),
+                ),
+                ServiceError::Backpressure => (
+                    error_code::BACKPRESSURE,
+                    0,
+                    "queue full, retry later".to_string(),
+                ),
+                ServiceError::Rejected(msg) => (error_code::REJECTED, 0, msg.clone()),
+                ServiceError::Io(e) => (error_code::PROTOCOL, 0, e.to_string()),
+                ServiceError::Protocol(msg) => (error_code::PROTOCOL, 0, msg.clone()),
+            };
+            wire::encode_frame(FrameKind::Error, &encode_error(code, detail, &msg))
+        }
+    }
+}
+
+/// Process one request frame; returns the response (kind, payload).
+fn handle_request(
     kind: FrameKind,
     payload: &[u8],
     svc: &Arc<FheService>,
-    stream: &mut TcpStream,
-) -> Result<(), ServiceError> {
+) -> Result<(FrameKind, Vec<u8>), ServiceError> {
     match kind {
         FrameKind::Register => {
             let msg = decode_register(payload).map_err(ServiceError::Wire)?;
             svc.register(msg.tenant_id, msg.params, msg.key_seed)?;
-            send(stream, FrameKind::Ack, &[]).map_err(ServiceError::Io)
+            Ok((FrameKind::Ack, Vec::new()))
         }
         FrameKind::Eval => {
             let req = decode_eval_request(payload).map_err(ServiceError::Wire)?;
@@ -186,7 +549,7 @@ fn handle_frame(
                 );
             }
             let out = svc.eval_decoded(&tenant, req.op, req.step, cts)?;
-            send(stream, FrameKind::EvalOk, &encode_ciphertext(&out)).map_err(ServiceError::Io)
+            Ok((FrameKind::EvalOk, encode_ciphertext(&out)))
         }
         FrameKind::Program => {
             let req = decode_program_request(payload).map_err(ServiceError::Wire)?;
@@ -203,12 +566,7 @@ fn handle_frame(
                 ));
             }
             let run = svc.eval_program(&tenant, req.program, inputs)?;
-            send(
-                stream,
-                FrameKind::ProgramOk,
-                &encode_program_outputs(&run.outputs),
-            )
-            .map_err(ServiceError::Io)
+            Ok((FrameKind::ProgramOk, encode_program_outputs(&run.outputs)))
         }
         FrameKind::EvalKeyFrame => {
             // The tenant id leads the payload; the rest of the frame can
@@ -226,16 +584,52 @@ fn handle_frame(
                 .ok_or(ServiceError::UnknownTenant(tenant_id))?;
             let msg = decode_evalkey_frame(payload, &tenant.ctx).map_err(ServiceError::Wire)?;
             svc.upload_eval_key_digit(msg)?;
-            send(stream, FrameKind::Ack, &[]).map_err(ServiceError::Io)
+            Ok((FrameKind::Ack, Vec::new()))
         }
         FrameKind::MetricsReq => {
             let json = svc.metrics_json();
-            send(stream, FrameKind::MetricsOk, &encode_metrics(&json)).map_err(ServiceError::Io)
+            Ok((FrameKind::MetricsOk, encode_metrics(&json)))
         }
         other => Err(ServiceError::Protocol(format!(
             "frame kind {other:?} is not a request"
         ))),
     }
+}
+
+// ----------------------------------------------------------------------
+// HTTP metrics endpoint
+// ----------------------------------------------------------------------
+
+/// If `rbuf` holds a complete HTTP request head, consume it and build
+/// the response bytes. `GET /metrics` serves the scheduler snapshot;
+/// anything else is 404. One request per connection (Connection: close).
+fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u8>> {
+    let head_end = rbuf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)?;
+    let head = String::from_utf8_lossy(&rbuf[..head_end]).into_owned();
+    rbuf.drain(..head_end);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = if method == "GET" && path == "/metrics" {
+        ("200 OK", "application/json", svc.metrics_json())
+    } else {
+        (
+            "404 Not Found",
+            "text/plain",
+            "not found (try GET /metrics)\n".to_string(),
+        )
+    };
+    Some(
+        format!(
+            "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes(),
+    )
 }
 
 // Re-export for callers that match on response kinds.

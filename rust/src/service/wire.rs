@@ -366,6 +366,28 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameKind, &[u8]), WireError> {
     Ok((kind, payload))
 }
 
+/// Incremental decode for nonblocking readers: inspect the front of a
+/// partial read buffer. Returns `Ok(None)` while the frame is still
+/// incomplete, or `Ok(Some((kind, payload, consumed)))` once the first
+/// frame is whole — the caller drains `consumed` bytes and may call
+/// again for pipelined frames. Header or checksum corruption is an
+/// error as soon as it is detectable (a bad header never waits for the
+/// rest of the frame).
+pub fn try_extract_frame(buf: &[u8]) -> Result<Option<(FrameKind, Vec<u8>, usize)>, WireError> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return Ok(None);
+    }
+    let (kind, len) = validate_header(&buf[..FRAME_HEADER_LEN])?;
+    let total = FRAME_HEADER_LEN + len + 8;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len];
+    let want = u64::from_le_bytes(buf[total - 8..total].try_into().unwrap());
+    verify_checksum(payload, want)?;
+    Ok(Some((kind, payload.to_vec(), total)))
+}
+
 /// Write one frame to a stream.
 pub fn write_frame_to<W: std::io::Write>(
     w: &mut W,

@@ -1,0 +1,193 @@
+//! Readiness-loop front-end regression tests: partial-frame buffering,
+//! slow-loris read deadlines, idle reaping, response ordering for
+//! pipelined frames, and the HTTP metrics endpoint.
+//!
+//! These drive the server with *raw* sockets (no `ServiceClient`), so
+//! they exercise exactly the byte-level cases the event loop's
+//! incremental parser has to get right.
+
+use fhemem::service::wire::{encode_frame, read_frame_from, FrameKind};
+use fhemem::service::{server, FheService, SchedulerConfig};
+use fhemem::sim::ArchConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spawn_with_opts(
+    opts: server::ServeOptions,
+    http: bool,
+) -> (Arc<FheService>, server::ServerHandle) {
+    let svc = FheService::new(ArchConfig::default(), SchedulerConfig::default());
+    let http_addr = if http { Some("127.0.0.1:0") } else { None };
+    let handle =
+        server::spawn_with("127.0.0.1:0", http_addr, svc.clone(), opts).expect("bind loopback");
+    (svc, handle)
+}
+
+/// Read until EOF or error, bounded by the stream's read timeout.
+/// Returns true if the server closed the connection.
+fn server_closed(stream: &mut TcpStream) -> bool {
+    let mut buf = [0u8; 256];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return true,
+            Ok(_) => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::ConnectionReset
+                    || e.kind() == std::io::ErrorKind::BrokenPipe =>
+            {
+                return true
+            }
+            Err(_) => return false, // timeout: still open
+        }
+    }
+}
+
+#[test]
+fn half_written_frame_is_dropped_by_read_deadline() {
+    // A client that writes half a header and stalls (slow loris / torn
+    // frame) must be dropped once the read deadline passes — it cannot
+    // pin a registry slot, let alone a thread.
+    let (svc, handle) = spawn_with_opts(
+        server::ServeOptions {
+            workers: 2,
+            read_deadline: Duration::from_millis(200),
+            idle_timeout: Duration::from_secs(60),
+        },
+        false,
+    );
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    // Two bytes of magic: a syntactically incomplete header the parser
+    // must keep buffering (it cannot reject it yet) — only the deadline
+    // can clear it.
+    stream.write_all(b"FH").expect("partial write");
+    assert!(
+        server_closed(&mut stream),
+        "slow-loris connection survived the read deadline"
+    );
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn frame_split_across_writes_is_served() {
+    // The inverse case: a *legitimate* client whose frame arrives in
+    // pieces (TCP segmentation, slow uplink) inside the deadline must
+    // be served — the per-connection buffer reassembles it.
+    let (svc, handle) = spawn_with_opts(server::ServeOptions::default(), false);
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let frame = encode_frame(FrameKind::MetricsReq, &[]);
+    let (head, tail) = frame.split_at(4);
+    stream.write_all(head).expect("first half");
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+    stream.write_all(tail).expect("second half");
+    let (kind, payload) = read_frame_from(&mut stream)
+        .expect("response frame")
+        .expect("open connection");
+    assert_eq!(kind, FrameKind::MetricsOk);
+    assert!(!payload.is_empty());
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn pipelined_frames_get_ordered_responses() {
+    // Several requests written back-to-back before any response is
+    // read: the loop queues complete frames per connection and answers
+    // strictly in order (one in flight at a time).
+    let (svc, handle) = spawn_with_opts(server::ServeOptions::default(), false);
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut burst = Vec::new();
+    for _ in 0..3 {
+        burst.extend_from_slice(&encode_frame(FrameKind::MetricsReq, &[]));
+    }
+    stream.write_all(&burst).expect("pipelined burst");
+    for _ in 0..3 {
+        let (kind, _) = read_frame_from(&mut stream)
+            .expect("response frame")
+            .expect("open connection");
+        assert_eq!(kind, FrameKind::MetricsOk);
+    }
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn fully_idle_connection_is_reaped_after_idle_timeout() {
+    let (svc, handle) = spawn_with_opts(
+        server::ServeOptions {
+            workers: 2,
+            read_deadline: Duration::from_secs(60),
+            idle_timeout: Duration::from_millis(200),
+        },
+        false,
+    );
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    assert!(
+        server_closed(&mut stream),
+        "idle connection survived the idle timeout"
+    );
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn corrupt_magic_closes_the_connection() {
+    // A complete-but-garbage header has no trustworthy frame boundary
+    // to resynchronize on; the only safe move is to close.
+    let (svc, handle) = spawn_with_opts(server::ServeOptions::default(), false);
+    let mut stream = TcpStream::connect(handle.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    stream.write_all(b"XXXX\0\0\0\0\0\0").expect("bad header");
+    assert!(
+        server_closed(&mut stream),
+        "corrupt framing did not close the connection"
+    );
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn http_metrics_endpoint_serves_snapshot_and_404() {
+    let (svc, handle) = spawn_with_opts(server::ServeOptions::default(), true);
+    let http = handle.http_addr.expect("http listener");
+
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(http).expect("connect http");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read http response");
+        out
+    };
+
+    let ok = get("/metrics");
+    assert!(ok.starts_with("HTTP/1.1 200"), "bad status: {ok}");
+    assert!(
+        ok.contains("\"batches\"") && ok.contains("\"queued\""),
+        "metrics body lacks scheduler snapshot fields: {ok}"
+    );
+
+    let missing = get("/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "bad status: {missing}");
+
+    handle.stop();
+    svc.shutdown();
+}
