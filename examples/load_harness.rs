@@ -174,23 +174,59 @@ fn main() {
          p50 {p50:.1} ms, p99 {p99:.1} ms, sustained {sustained:.1} ops/s"
     );
 
-    // Scrape the HTTP metrics endpoint (proves the plain-GET path e2e)
-    // and the wire-level snapshot for batching evidence.
+    // Scrape the HTTP endpoints (proves the plain-GET paths e2e) and the
+    // wire-level snapshot for batching evidence.
     if let Some(http) = &http_addr {
-        let body = http_get_metrics(http).expect("GET /metrics");
+        let body = http_get(http, "/metrics").expect("GET /metrics");
         assert!(
             body.contains("\"batches\""),
             "metrics endpoint returned no scheduler snapshot: {body}"
         );
         println!("GET /metrics OK ({} bytes)", body.len());
+        let prom = http_get(http, "/metrics/prometheus").expect("GET /metrics/prometheus");
+        assert!(
+            prom.contains("_bucket{le=") && prom.contains("# TYPE"),
+            "prometheus exposition carries no histogram buckets: {prom}"
+        );
+        println!("GET /metrics/prometheus OK ({} bytes)", prom.len());
+        let spans = http_get(http, "/spans").expect("GET /spans");
+        assert!(
+            spans.contains("\"traceEvents\""),
+            "span endpoint returned no trace document: {spans}"
+        );
+        println!("GET /spans OK ({} bytes)", spans.len());
     }
     let mut probe = ServiceClient::connect(&addr, 1000, CkksParams::func_tiny(), 0xF1EE7)
         .expect("metrics probe");
-    println!("scheduler metrics:\n{}", probe.metrics().expect("metrics"));
+    let metrics_text = probe.metrics().expect("metrics");
+    println!("scheduler metrics:\n{metrics_text}");
+    // Server-side observability figures for the bench artifact: the
+    // scheduler's own queue-wait/exec p99s and the running cost-model
+    // drift ratio, straight from the metrics snapshot (works identically
+    // for in-process and external servers).
+    let mdoc = Json::parse(&metrics_text).expect("metrics JSON parses");
+    let figure = |key: &str| -> f64 {
+        mdoc.field(key)
+            .ok()
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let queue_wait_p99 = figure("queue_wait_p99_ms");
+    let exec_p99 = figure("exec_p99_ms");
+    let drift = figure("cost_model_drift_ratio");
+    println!(
+        "server obs: queue-wait p99 {queue_wait_p99:.3} ms, exec p99 {exec_p99:.3} ms, \
+         cost-model drift ratio {drift:.3}"
+    );
 
     if let Some(path) = json_path {
-        merge_bench_json(&path, tenants, idle_conns, p50, p99, sustained);
-        println!("recorded serve_p50_ms/serve_p99_ms/serve_sustained_ops_per_s into {path}");
+        merge_bench_json(
+            &path, tenants, idle_conns, p50, p99, sustained, queue_wait_p99, exec_p99, drift,
+        );
+        println!(
+            "recorded serve_p50_ms/serve_p99_ms/serve_sustained_ops_per_s/\
+             serve_queue_wait_p99_ms/serve_exec_p99_ms/cost_model_drift_ratio into {path}"
+        );
     }
 
     if let Some((svc, handle)) = local {
@@ -201,9 +237,9 @@ fn main() {
 }
 
 /// Minimal HTTP GET against the metrics listener; returns the body.
-fn http_get_metrics(addr: &str) -> std::io::Result<String> {
+fn http_get(addr: &str, path: &str) -> std::io::Result<String> {
     let mut stream = TcpStream::connect(addr)?;
-    stream.write_all(format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\n\r\n").as_bytes())?;
+    stream.write_all(format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\n\r\n").as_bytes())?;
     let mut raw = String::new();
     stream.read_to_string(&mut raw)?;
     match raw.split_once("\r\n\r\n") {
@@ -215,7 +251,18 @@ fn http_get_metrics(addr: &str) -> std::io::Result<String> {
 /// Merge the serving figures into the bench JSON, preserving whatever
 /// other figures the document already holds (the hotpath bench and this
 /// harness share one artifact).
-fn merge_bench_json(path: &str, tenants: usize, idle: usize, p50: f64, p99: f64, ops_s: f64) {
+#[allow(clippy::too_many_arguments)]
+fn merge_bench_json(
+    path: &str,
+    tenants: usize,
+    idle: usize,
+    p50: f64,
+    p99: f64,
+    ops_s: f64,
+    queue_wait_p99: f64,
+    exec_p99: f64,
+    drift: f64,
+) {
     let mut doc = match std::fs::read_to_string(path) {
         Ok(text) => Json::parse(&text).unwrap_or_else(|_| Json::Object(Vec::new())),
         Err(_) => Json::Object(Vec::new()),
@@ -236,6 +283,9 @@ fn merge_bench_json(path: &str, tenants: usize, idle: usize, p50: f64, p99: f64,
         set("serve_p50_ms", Json::Float(p50));
         set("serve_p99_ms", Json::Float(p99));
         set("serve_sustained_ops_per_s", Json::Float(ops_s));
+        set("serve_queue_wait_p99_ms", Json::Float(queue_wait_p99));
+        set("serve_exec_p99_ms", Json::Float(exec_p99));
+        set("cost_model_drift_ratio", Json::Float(drift));
     }
     std::fs::write(path, doc.write_pretty()).expect("write bench json");
 }

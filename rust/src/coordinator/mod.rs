@@ -13,6 +13,7 @@
 use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator};
 use crate::ckks::{CkksContext, KeyChain, KeyTag};
 use crate::math::poly::RnsPoly;
+use crate::obs::{Histogram, Registry};
 use crate::params::CkksParams;
 use crate::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
 use crate::sim::{ArchConfig, Breakdown, CostModel, FheShape, SimOptions};
@@ -20,6 +21,7 @@ use crate::trace::FheOp;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Which engine executes the pointwise hot path.
 pub enum Backend {
@@ -68,6 +70,81 @@ pub enum MixedKind {
     /// (`Evaluator::rotate_sum_hoisted`) — the planner's rewrite of a
     /// log-step reduce tree.
     RotSumHoisted(usize),
+}
+
+impl MixedKind {
+    /// Stable short name (metric labels: `coord_exec_<name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixedKind::Add => "add",
+            MixedKind::Sub => "sub",
+            MixedKind::Mul => "mul",
+            MixedKind::Rotate(_) => "rotate",
+            MixedKind::Pmul => "pmul",
+            MixedKind::AddPlain => "add_plain",
+            MixedKind::SubPlain => "sub_plain",
+            MixedKind::Conjugate => "conjugate",
+            MixedKind::Rescale => "rescale",
+            MixedKind::LevelDown(_) => "level_down",
+            MixedKind::RotSumHoisted(_) => "rot_sum_hoisted",
+        }
+    }
+
+    /// Dense index into [`CoordObs`]'s per-kind histogram table.
+    fn index(&self) -> usize {
+        match self {
+            MixedKind::Add => 0,
+            MixedKind::Sub => 1,
+            MixedKind::Mul => 2,
+            MixedKind::Rotate(_) => 3,
+            MixedKind::Pmul => 4,
+            MixedKind::AddPlain => 5,
+            MixedKind::SubPlain => 6,
+            MixedKind::Conjugate => 7,
+            MixedKind::Rescale => 8,
+            MixedKind::LevelDown(_) => 9,
+            MixedKind::RotSumHoisted(_) => 10,
+        }
+    }
+}
+
+/// All [`MixedKind`] metric names, in [`MixedKind::index`] order.
+const KIND_NAMES: [&str; 11] = [
+    "add",
+    "sub",
+    "mul",
+    "rotate",
+    "pmul",
+    "add_plain",
+    "sub_plain",
+    "conjugate",
+    "rescale",
+    "level_down",
+    "rot_sum_hoisted",
+];
+
+/// Global-registry histograms the coordinator records into, resolved
+/// once at construction so the per-op path never takes the registry
+/// lock: one wall-clock execute histogram per [`MixedKind`]
+/// (`coord_exec_<name>`, nanoseconds exposed as seconds) and the
+/// per-batch cost-model drift (`cost_model_drift`, ratio×1000 exposed
+/// as the plain ratio via scale `1e-3`).
+struct CoordObs {
+    per_kind: Vec<Arc<Histogram>>,
+    drift: Arc<Histogram>,
+}
+
+impl CoordObs {
+    fn new() -> Self {
+        let reg = Registry::global();
+        Self {
+            per_kind: KIND_NAMES
+                .iter()
+                .map(|n| reg.histogram(&format!("coord_exec_{n}"), 1e-9))
+                .collect(),
+            drift: reg.histogram("cost_model_drift", 1e-3),
+        }
+    }
 }
 
 /// Plaintext slot operand for `Pmul`/`AddPlain`/`SubPlain`: raw slot
@@ -253,6 +330,7 @@ pub struct Coordinator {
     pub backend: Backend,
     pub arch: ArchConfig,
     pub metrics: Metrics,
+    obs: CoordObs,
 }
 
 impl Coordinator {
@@ -272,6 +350,7 @@ impl Coordinator {
             backend,
             arch,
             metrics: Metrics::default(),
+            obs: CoordObs::new(),
         }
     }
 
@@ -560,6 +639,16 @@ impl Coordinator {
     /// response. Bit-identical to the flat evaluator ops, so serving
     /// results do not depend on the representation.
     fn run_mixed_op(&self, op: &MixedOp) -> Ciphertext {
+        let t0 = Instant::now();
+        let out = self.run_mixed_op_inner(op);
+        // Per-kind execute histogram (lock-free: the Arc was resolved at
+        // construction); panicking ops never reach the record, which is
+        // the right bias — failure latency is not execute latency.
+        self.obs.per_kind[op.kind.index()].record_duration(t0.elapsed());
+        out
+    }
+
+    fn run_mixed_op_inner(&self, op: &MixedOp) -> Ciphertext {
         let ev = &op.eval;
         // The hoisted group runs its own flat kernel (shared ext-basis
         // accumulators don't decompose into per-tile ops).
@@ -622,6 +711,8 @@ impl Coordinator {
         ops: &[MixedOp],
     ) -> Vec<Result<Ciphertext, String>> {
         use std::panic::{catch_unwind, AssertUnwindSafe};
+        let cycles_before = self.metrics.sim_cycles.load(Ordering::Relaxed);
+        let t0 = Instant::now();
         // Known-bad ops are refused by validation (no panic, no stderr
         // noise); catch_unwind remains only as the backstop for the
         // unexpected.
@@ -634,13 +725,29 @@ impl Coordinator {
             })
             .collect();
         let prepared = &prepared;
-        crate::parallel::pool().par_map(ops, |i, op| {
+        let outs = crate::parallel::pool().par_map(ops, |i, op| {
             if let Err(e) = &prepared[i] {
                 return Err(e.clone());
             }
             catch_unwind(AssertUnwindSafe(|| self.run_mixed_op(op)))
                 .map_err(|_| "op failed during execution".to_string())
-        })
+        });
+        // Per-batch cost-model drift: simulated FHEmem time for exactly
+        // this batch (sim-cycle delta — costing happens in prepare) over
+        // the measured wall-clock of preparing + executing it. Recorded
+        // as ratio×1000 so the integer histogram resolves drift to 0.1%
+        // (`scale` 1e-3 exposes it as the plain ratio).
+        let wall_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        let cycles = self
+            .metrics
+            .sim_cycles
+            .load(Ordering::Relaxed)
+            .saturating_sub(cycles_before);
+        if wall_ns > 0 && cycles > 0 {
+            let ratio = cycles as f64 * self.arch.cycle_ns() / wall_ns as f64;
+            self.obs.drift.record((ratio * 1000.0) as u64);
+        }
+        outs
     }
 
     /// Simulated accelerator time for everything executed so far.
@@ -779,6 +886,34 @@ mod tests {
             assert_eq!(got.level, want.level, "op {i} level");
             assert!((got.scale - want.scale).abs() < 1e-9, "op {i} scale");
         }
+    }
+
+    #[test]
+    fn isolated_batch_records_drift_and_per_kind_latency() {
+        let c = coord();
+        let slots = c.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 4) as f64).collect();
+        let ev = Arc::new({
+            let ctx = CkksContext::new(CkksParams::func_tiny());
+            let chain = Arc::new(crate::ckks::KeyChain::new(ctx.clone(), 909));
+            Evaluator::new(ctx, chain, 910)
+        });
+        let drift = crate::obs::Registry::global().histogram("cost_model_drift", 1e-3);
+        let rot_hist = crate::obs::Registry::global().histogram("coord_exec_rotate", 1e-9);
+        let (d0, r0) = (drift.count(), rot_hist.count());
+        let ops = vec![MixedOp::new(
+            ev.clone(),
+            MixedKind::Rotate(1),
+            ev.encrypt_real(&z, 2),
+            None,
+        )];
+        let outs = c.execute_mixed_batch_isolated(&ops);
+        assert!(outs[0].is_ok());
+        // `>=`: the registry is process-global and other tests' batches
+        // may land concurrently — this batch's sample is what we assert.
+        assert!(drift.count() >= d0 + 1, "one drift sample per batch");
+        assert!(rot_hist.count() >= r0 + 1, "per-kind execute histogram");
+        assert_eq!(MixedKind::Rotate(5).name(), "rotate");
     }
 
     #[test]

@@ -29,6 +29,9 @@
 //!   optimizing planner (CSE/DCE, rotation hoisting, auto-rescale, wave
 //!   scheduling) that maps whole applications onto the tiled evaluator
 //!   and the serving layer.
+//! * [`obs`] — zero-dependency telemetry: lock-free histograms, request
+//!   spans with a Chrome Trace exporter, Prometheus text exposition,
+//!   and cost-model drift tracking (simulated cycles vs wall-clock).
 
 // Style lints that fire on deliberate patterns in the from-scratch math
 // code (multi-array index loops, hardware-mirroring argument lists).
@@ -45,6 +48,7 @@ pub mod ckks;
 pub mod coordinator;
 pub mod mapping;
 pub mod math;
+pub mod obs;
 pub mod parallel;
 pub mod params;
 pub mod program;

@@ -172,6 +172,10 @@ impl NttContext {
     /// with one conditional subtract per butterfly instead of two full
     /// `mod q` reductions, and the final pass restores `[0, q)` exactly.
     pub fn forward(&self, a: &mut [u64]) {
+        // Kernel profiling hook: compiled out entirely unless the
+        // `obs-kernels` feature is on (zero default-build overhead).
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_forward");
         debug_assert_eq!(a.len(), self.n);
         debug_assert!(a.iter().all(|&x| x < self.two_q));
         let q = self.q;
@@ -210,6 +214,8 @@ impl NttContext {
     /// every intermediate in `[0, 2q)` and the final N⁻¹ scaling reduces
     /// to `[0, q)` exactly.
     pub fn inverse(&self, a: &mut [u64]) {
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_inverse");
         debug_assert_eq!(a.len(), self.n);
         debug_assert!(a.iter().all(|&x| x < self.two_q));
         let q = self.q;
@@ -405,6 +411,10 @@ impl NttContext {
         if n1 <= 1 || n2 <= 1 {
             return self.forward(a);
         }
+        // After the degenerate fallback, so a fallback call is timed
+        // once (by `forward`), not twice.
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_forward_fourstep");
         debug_assert_eq!(n1 * n2, self.n);
         // Column pass: first log2(n1) stages as whole-row butterflies.
         let mut t = n1;
@@ -438,6 +448,8 @@ impl NttContext {
         if n1 <= 1 || n2 <= 1 {
             return self.inverse(a);
         }
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_inverse_fourstep");
         debug_assert_eq!(n1 * n2, self.n);
         // Row pass first (the inverse runs the schedule backwards).
         for (r, row) in a.chunks_mut(n2).enumerate() {
@@ -496,6 +508,8 @@ impl NttContext {
         if !plan.is_split() {
             return self.forward(&mut tiles[0]);
         }
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_forward_tiled");
         let (n1, n2, rpt) = (plan.n1, plan.n2, plan.rows_per_tile);
         // Column pass.
         let mut t = n1;
@@ -530,6 +544,8 @@ impl NttContext {
         if !plan.is_split() {
             return self.inverse(&mut tiles[0]);
         }
+        #[cfg(feature = "obs-kernels")]
+        let _obs = crate::obs::KernelTimer::new("ntt_inverse_tiled");
         let (n1, n2, rpt) = (plan.n1, plan.n2, plan.rows_per_tile);
         // Row pass, tile-local.
         for (b, tile) in tiles.iter_mut().enumerate() {

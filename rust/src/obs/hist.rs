@@ -1,0 +1,222 @@
+//! Lock-free log-bucketed histogram (offline substitute for `hdrhistogram`).
+//!
+//! Values are `u64` raw units (the recorders use nanoseconds, or
+//! ratio×1000 for the cost-model drift); each value lands in one atomic
+//! bucket with a `fetch_add`, so recording is wait-free and safe from
+//! any number of threads with no loss — the concurrency test pins
+//! per-bucket counts bit-exact against a serial reference.
+//!
+//! **Bucket scheme** (HDR-style, [`SUB_BITS`] = 3 sub-buckets per
+//! octave): values below `2^(SUB_BITS+1)` = 16 are stored exactly (one
+//! bucket per value); above that, a value with highest set bit `h` maps
+//! to index `(v >> (h − 3)) + ((h − 3) << 3)` — 8 equal-width buckets
+//! per power of two. Bucket width is therefore at most `lo/8`, which
+//! bounds the **relative quantile error at 12.5%** (the estimator
+//! returns the bucket midpoint, and the exact order statistic provably
+//! falls in the same bucket — see the error-bound test in
+//! `tests/obs.rs`). 496 buckets cover the whole `u64` range.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-bucket resolution: `2^SUB_BITS` buckets per octave.
+pub const SUB_BITS: u32 = 3;
+/// Total bucket count covering all of `u64` (index of `u64::MAX` is
+/// `(60 << SUB_BITS) + 15 = 495`).
+pub const BUCKETS: usize = 496;
+
+/// Atomic log-bucketed histogram with p50/p90/p99/max estimation.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    /// Multiplier applied when exposing values (e.g. `1e-9` for a
+    /// nanosecond histogram exported in seconds). Raw recording and
+    /// quantile math stay in integer units.
+    scale: f64,
+}
+
+impl Histogram {
+    /// An empty histogram whose exported values are `raw * scale`.
+    pub fn new(scale: f64) -> Self {
+        let buckets: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            scale,
+        }
+    }
+
+    /// Which bucket `v` lands in.
+    pub fn bucket_index(v: u64) -> usize {
+        let h = 63 - (v | 1).leading_zeros();
+        if h <= SUB_BITS {
+            v as usize
+        } else {
+            let shift = h - SUB_BITS;
+            ((v >> shift) as usize) + ((shift as usize) << SUB_BITS)
+        }
+    }
+
+    /// Inclusive `(lo, hi)` value range of bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i < (2 << SUB_BITS) {
+            (i as u64, i as u64)
+        } else {
+            let shift = (i >> SUB_BITS) - 1;
+            let lo = ((i - (shift << SUB_BITS)) as u64) << shift;
+            // Parenthesised so the top bucket (hi = u64::MAX) does not
+            // overflow on the intermediate `lo + 2^shift`.
+            (lo, lo + ((1u64 << shift) - 1))
+        }
+    }
+
+    /// Record one raw value (wait-free; any thread).
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (saturating past ~584 years).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Raw-unit quantile estimate: the midpoint of the bucket holding
+    /// the `ceil(q·count)`-th smallest recorded value. Because bucket
+    /// index is monotone in value, that bucket is exactly the one the
+    /// true order statistic fell in, so the estimate is within one
+    /// bucket width (≤ 12.5% relative) of the exact answer.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= target {
+                let (lo, hi) = Self::bucket_bounds(i);
+                return lo + (hi - lo) / 2;
+            }
+        }
+        self.max()
+    }
+
+    /// Quantile in exposed units (`raw * scale`).
+    pub fn quantile_scaled(&self, q: f64) -> f64 {
+        self.quantile(q) as f64 * self.scale
+    }
+
+    /// Non-empty buckets as `(inclusive upper bound, count)`, ascending —
+    /// the exposition's `le` boundaries are exact bucket edges, so the
+    /// Prometheus text never invents boundaries the data didn't cross.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for i in 0..BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c > 0 {
+                out.push((Self::bucket_bounds(i).1, c));
+            }
+        }
+        out
+    }
+
+    /// Per-bucket counts (tests: bit-stability under concurrency).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("max", &self.max())
+            .field("scale", &self.scale)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_bounds_are_inverse() {
+        // Every bucket's bounds map back to that bucket, and the bucket
+        // ranges tile the line with no gaps or overlaps.
+        let mut expect_lo = 0u64;
+        for i in 0..BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert_eq!(lo, expect_lo, "bucket {i} starts where {} ended", i.max(1) - 1);
+            assert!(hi >= lo);
+            assert_eq!(Histogram::bucket_index(lo), i, "lo of bucket {i}");
+            assert_eq!(Histogram::bucket_index(hi), i, "hi of bucket {i}");
+            if hi == u64::MAX {
+                assert_eq!(i, BUCKETS - 1);
+                break;
+            }
+            expect_lo = hi + 1;
+        }
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(0), 0);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new(1.0);
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        for q in [0.1, 0.5, 0.9, 1.0] {
+            let exact = ((q * 16.0).ceil() as u64).clamp(1, 16) - 1;
+            assert_eq!(h.quantile(q), exact, "q={q}");
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.sum(), 120);
+        assert_eq!(h.max(), 15);
+    }
+
+    #[test]
+    fn relative_width_bound_holds() {
+        for i in (2 << SUB_BITS)..BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            let width = hi - lo + 1;
+            assert!(
+                width * (1 << SUB_BITS) <= lo,
+                "bucket {i}: width {width} > lo/{} ({lo})",
+                1 << SUB_BITS
+            );
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Zero-dependency telemetry: histograms, spans, and exposition.
+//!
+//! Three pieces, each usable on its own:
+//!
+//! - [`hist::Histogram`] — lock-free log-bucketed latency histogram
+//!   (atomic buckets, p50/p90/p99/max with a tested ≤ 12.5% relative
+//!   error bound).
+//! - [`span::SpanRecorder`] — bounded ring of recent request spans with
+//!   a Chrome Trace Event JSON exporter (`chrome://tracing`).
+//! - [`registry::Registry`] — process-wide name → metric table that
+//!   snapshots into the `util::json` doc and renders the Prometheus
+//!   text exposition format 0.0.4.
+//!
+//! The serving stack records into [`Registry::global`]; stage timings
+//! ride through the existing job plumbing (each job carries the
+//! `Instant`s it needs), never thread-locals. Kernel-level NTT timing
+//! is behind the `obs-kernels` cargo feature — with it off (the
+//! default) no instrumentation code exists in the NTT hot paths.
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use hist::{Histogram, BUCKETS, SUB_BITS};
+pub use registry::Registry;
+pub use span::{Span, SpanRecorder, SPAN_RING};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+/// RAII timer recording its lifetime into a global-registry histogram
+/// (nanoseconds, exposed as seconds). Used by the feature-gated kernel
+/// hooks; the per-call registry lookup makes this a profiling tool, not
+/// a hot-path citizen — which is exactly why the NTT call sites are
+/// compiled out by default.
+pub struct KernelTimer {
+    hist: Arc<Histogram>,
+    t0: Instant,
+}
+
+impl KernelTimer {
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            hist: Registry::global().histogram(name, 1e-9),
+            t0: Instant::now(),
+        }
+    }
+}
+
+impl Drop for KernelTimer {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.t0.elapsed());
+    }
+}

@@ -1,0 +1,221 @@
+//! Metric registry: named histograms, counters and gauges plus the
+//! recent-span ring, snapshotting into the `util::json` doc and the
+//! Prometheus text exposition format 0.0.4.
+//!
+//! Instrumentation sites get-or-create metrics by name (an `Arc` they
+//! cache and hit lock-free afterwards); exposition walks the registry.
+//! The process-wide instance ([`Registry::global`]) is what the serving
+//! stack records into; tests build private instances so golden output
+//! is not polluted by whatever else the process measured.
+
+use super::hist::Histogram;
+use super::span::SpanRecorder;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Named metrics + the span ring. Cheap to create; one global instance
+/// serves the process (see [`Registry::global`]).
+pub struct Registry {
+    hists: Mutex<Vec<(String, Arc<Histogram>)>>,
+    counters: Mutex<Vec<(String, Arc<AtomicU64>)>>,
+    gauges: Mutex<Vec<(String, f64)>>,
+    spans: SpanRecorder,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            hists: Mutex::new(Vec::new()),
+            counters: Mutex::new(Vec::new()),
+            gauges: Mutex::new(Vec::new()),
+            spans: SpanRecorder::default(),
+        }
+    }
+
+    /// The process-wide registry every built-in recorder writes to.
+    pub fn global() -> &'static Registry {
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Get or create a histogram. `scale` converts raw units for
+    /// exposition (`1e-9`: nanoseconds exported as seconds) and is fixed
+    /// by whichever caller registers the name first.
+    pub fn histogram(&self, name: &str, scale: f64) -> Arc<Histogram> {
+        let mut hists = self.hists.lock().unwrap();
+        if let Some((_, h)) = hists.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new(scale));
+        hists.push((name.to_string(), h.clone()));
+        h
+    }
+
+    /// Get or create a monotonic counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut counters = self.counters.lock().unwrap();
+        if let Some((_, c)) = counters.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        counters.push((name.to_string(), c.clone()));
+        c
+    }
+
+    /// Set a point-in-time gauge (overwrites; gauges are sampled by the
+    /// exposition caller right before rendering).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut gauges = self.gauges.lock().unwrap();
+        if let Some(slot) = gauges.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            gauges.push((name.to_string(), value));
+        }
+    }
+
+    /// The recent-span ring (request/program/wave spans).
+    pub fn spans(&self) -> &SpanRecorder {
+        &self.spans
+    }
+
+    /// Chrome Trace Event JSON of the recent spans (`GET /spans`).
+    pub fn trace_json(&self) -> String {
+        self.spans.trace_json()
+    }
+
+    /// Snapshot every metric into a `util::json` document: histograms as
+    /// `{count, p50, p90, p99, max, sum}` in exposed units, counters and
+    /// gauges as plain fields.
+    pub fn snapshot_json(&self) -> Json {
+        let mut hist_fields: Vec<(String, Json)> = Vec::new();
+        for (name, h) in self.sorted_hists() {
+            hist_fields.push((
+                name,
+                Json::obj([
+                    ("count", Json::Num(h.count())),
+                    ("p50", Json::Float(h.quantile_scaled(0.50))),
+                    ("p90", Json::Float(h.quantile_scaled(0.90))),
+                    ("p99", Json::Float(h.quantile_scaled(0.99))),
+                    ("max", Json::Float(h.max() as f64 * h.scale())),
+                    ("sum", Json::Float(h.sum() as f64 * h.scale())),
+                ]),
+            ));
+        }
+        let counter_fields: Vec<(String, Json)> = self
+            .sorted_counters()
+            .into_iter()
+            .map(|(name, c)| (name, Json::Num(c.load(Ordering::Relaxed))))
+            .collect();
+        let gauge_fields: Vec<(String, Json)> = self
+            .sorted_gauges()
+            .into_iter()
+            .map(|(name, v)| (name, Json::Float(v)))
+            .collect();
+        Json::obj([
+            ("histograms", Json::Object(hist_fields)),
+            ("counters", Json::Object(counter_fields)),
+            ("gauges", Json::Object(gauge_fields)),
+            ("spans_recorded", Json::Num(self.spans.len() as u64)),
+        ])
+    }
+
+    /// Prometheus text exposition 0.0.4. Histograms emit cumulative
+    /// `_bucket{le="..."}` series over the **non-empty** log buckets
+    /// (the `le` boundaries are exact bucket edges in exposed units),
+    /// then `+Inf`, `_sum` and `_count`; counters and gauges get `# TYPE`
+    /// lines. Families are sorted by name so output is stable.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, h) in self.sorted_hists() {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (hi, c) in h.nonzero_buckets() {
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    hi as f64 * h.scale()
+                ));
+            }
+            // Late concurrent records can make count() lag the bucket
+            // walk; +Inf must stay the largest cumulative value.
+            let total = h.count().max(cum);
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
+            out.push_str(&format!("{name}_sum {}\n", h.sum() as f64 * h.scale()));
+            out.push_str(&format!("{name}_count {total}\n"));
+        }
+        for (name, c) in self.sorted_counters() {
+            out.push_str(&format!(
+                "# TYPE {name} counter\n{name} {}\n",
+                c.load(Ordering::Relaxed)
+            ));
+        }
+        for (name, v) in self.sorted_gauges() {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        out
+    }
+
+    fn sorted_hists(&self) -> Vec<(String, Arc<Histogram>)> {
+        let mut v: Vec<_> = self.hists.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    fn sorted_counters(&self) -> Vec<(String, Arc<AtomicU64>)> {
+        let mut v: Vec<_> = self.counters.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    fn sorted_gauges(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<_> = self.gauges.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_the_same_instance() {
+        let reg = Registry::new();
+        let a = reg.histogram("h", 1.0);
+        let b = reg.histogram("h", 1e-9); // scale fixed by first caller
+        a.record(5);
+        assert_eq!(b.count(), 1);
+        assert_eq!(b.scale(), 1.0);
+        let c1 = reg.counter("c");
+        reg.counter("c").fetch_add(3, Ordering::Relaxed);
+        assert_eq!(c1.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn snapshot_json_carries_all_three_kinds() {
+        let reg = Registry::new();
+        reg.histogram("lat", 1.0).record(100);
+        reg.counter("reqs").fetch_add(2, Ordering::Relaxed);
+        reg.set_gauge("depth", 4.0);
+        let doc = Json::parse(&reg.snapshot_json().write()).unwrap();
+        let lat = doc.field("histograms").unwrap().field("lat").unwrap();
+        assert_eq!(lat.field("count").unwrap().as_u64().unwrap(), 1);
+        assert!(lat.field("p99").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            doc.field("counters").unwrap().field("reqs").unwrap().as_u64().unwrap(),
+            2
+        );
+        assert_eq!(
+            doc.field("gauges").unwrap().field("depth").unwrap().as_f64().unwrap(),
+            4.0
+        );
+    }
+}

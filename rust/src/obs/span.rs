@@ -1,0 +1,191 @@
+//! Per-request span recording with a Chrome Trace Event exporter.
+//!
+//! Spans are complete (`ph: "X"`) events: a name, a logical track
+//! (`tid` — the serving layer uses connection slots, the program
+//! executor one fresh track per program run), a start offset and a
+//! duration, both in microseconds since the recorder's epoch. Nesting
+//! is positional, exactly how `chrome://tracing` (and Perfetto) render
+//! it: two events on the same track where one's `[ts, ts+dur]` interval
+//! contains the other's draw as parent and child. The recorders
+//! therefore emit a program span covering its whole run and one span
+//! per wave inside it, and the trace viewer shows the wave structure
+//! with no explicit parent pointers.
+//!
+//! The ring is bounded ([`SPAN_RING`] by default): recent history for a
+//! dashboard or a one-off `GET /spans` scrape, not an unbounded log.
+//! Stage timings travel *on the span* as `args` — they are carried
+//! through the job plumbing by the callers (the worker stamps queue
+//! wait and execute time on the span it records), never via
+//! thread-locals.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default capacity of the recent-span ring.
+pub const SPAN_RING: usize = 4096;
+
+/// One complete span: `[start_us, start_us + dur_us]` on track `tid`.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    /// Logical track id (connection slot / program run).
+    pub tid: u64,
+    /// Microseconds since the recorder's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Free-form attributes rendered into the trace event's `args`.
+    pub args: Vec<(String, Json)>,
+}
+
+/// Bounded ring of recent spans with one process-stable epoch.
+pub struct SpanRecorder {
+    epoch: Instant,
+    ring: Mutex<VecDeque<Span>>,
+    cap: usize,
+}
+
+impl SpanRecorder {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            ring: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Microseconds elapsed since this recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record a span that **ends now** and lasted `elapsed` — the shape
+    /// every instrumentation site has on hand (an `Instant` it captured
+    /// at the start and the clock reading at completion).
+    pub fn record_elapsed(
+        &self,
+        name: &str,
+        tid: u64,
+        elapsed: Duration,
+        args: Vec<(String, Json)>,
+    ) {
+        let end = self.now_us();
+        let dur = elapsed.as_micros().min(u64::MAX as u128) as u64;
+        self.push(Span {
+            name: name.to_string(),
+            tid,
+            start_us: end.saturating_sub(dur),
+            dur_us: dur,
+            args,
+        });
+    }
+
+    /// Record a fully specified span (tests; callers with exact offsets).
+    pub fn push(&self, span: Span) {
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(span);
+        while ring.len() > self.cap {
+            ring.pop_front();
+        }
+    }
+
+    /// Snapshot of the ring, oldest first.
+    pub fn recent(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Chrome Trace Event JSON of the ring: paste into
+    /// `chrome://tracing` (or Perfetto's legacy loader) as-is. Events
+    /// are sorted by start time — the viewers don't require it, but it
+    /// makes the raw JSON diffable and the nesting test deterministic.
+    pub fn trace_json(&self) -> String {
+        let mut spans = self.recent();
+        spans.sort_by_key(|s| (s.start_us, std::cmp::Reverse(s.dur_us)));
+        let events: Vec<Json> = spans
+            .into_iter()
+            .map(|s| {
+                Json::obj([
+                    ("name", Json::Str(s.name)),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::Num(s.start_us)),
+                    ("dur", Json::Num(s.dur_us)),
+                    ("pid", Json::Num(1)),
+                    ("tid", Json::Num(s.tid)),
+                    ("args", Json::Object(s.args)),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("traceEvents", Json::Array(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+        .write()
+    }
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        Self::new(SPAN_RING)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let rec = SpanRecorder::new(3);
+        for i in 0..5u64 {
+            rec.push(Span {
+                name: format!("s{i}"),
+                tid: 1,
+                start_us: i * 10,
+                dur_us: 1,
+                args: Vec::new(),
+            });
+        }
+        let spans = rec.recent();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].name, "s2");
+        assert_eq!(spans[2].name, "s4");
+    }
+
+    #[test]
+    fn trace_json_is_valid_and_sorted() {
+        let rec = SpanRecorder::new(16);
+        rec.push(Span {
+            name: "late".into(),
+            tid: 7,
+            start_us: 100,
+            dur_us: 5,
+            args: vec![("k".to_string(), Json::Num(3))],
+        });
+        rec.push(Span {
+            name: "early".into(),
+            tid: 7,
+            start_us: 50,
+            dur_us: 60,
+            args: Vec::new(),
+        });
+        let doc = Json::parse(&rec.trace_json()).expect("trace JSON parses");
+        let events = doc.field("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].field("name").unwrap().as_str().unwrap(), "early");
+        assert_eq!(events[0].field("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[1].field("ts").unwrap().as_u64().unwrap(), 100);
+        assert_eq!(
+            events[1].field("args").unwrap().field("k").unwrap().as_u64().unwrap(),
+            3
+        );
+    }
+}

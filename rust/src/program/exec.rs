@@ -20,13 +20,24 @@ use super::passes::CompiledProgram;
 use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator};
 use crate::ckks::linear::eval_chebyshev;
 use crate::coordinator::{Coordinator, MixedKind, MixedOp, PlainOperand};
+use crate::obs::Registry;
 use crate::service::BatchScheduler;
 use crate::trace::Trace;
 use crate::util::json::Json;
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Monotonic program-run id: the span track (`tid`) every wave of one
+/// run is recorded on, so concurrent programs never interleave on a
+/// track and `chrome://tracing` nests each run's waves under its own
+/// program span.
+static NEXT_PROGRAM_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Offset keeping program tracks clear of the serving front-end's
+/// connection-slot tracks in one merged trace.
+const PROGRAM_TID_BASE: u64 = 1 << 20;
 
 /// Per-run report: what executed and what it costs on the FHEmem model.
 #[derive(Debug, Clone)]
@@ -226,6 +237,14 @@ impl CompiledProgram {
                 .clone()
                 .ok_or_else(|| ProgramError::Exec(format!("node {id} has no value yet")))
         };
+        // Span bookkeeping: every wave of this run records on one fresh
+        // track (tid = program id), inside one enclosing `program` span.
+        // All offsets are read from the recorder's single epoch clock so
+        // containment is exact and `chrome://tracing` nests the waves.
+        let spans = Registry::global().spans();
+        let pid = NEXT_PROGRAM_ID.fetch_add(1, Ordering::Relaxed);
+        let tid = PROGRAM_TID_BASE + pid;
+        let prog_start_us = spans.now_us();
         let plain_of = |id: usize| -> Result<Vec<f64>, ProgramError> {
             match &prog.nodes[id] {
                 OpKind::PlainVec(v) => Ok(v.clone()),
@@ -234,7 +253,8 @@ impl CompiledProgram {
                 ))),
             }
         };
-        for wave in &self.waves {
+        for (wave_idx, wave) in self.waves.iter().enumerate() {
+            let wave_start_us = spans.now_us();
             let mut batch: Vec<(usize, MixedOp)> = Vec::new();
             for &id in wave {
                 let kind = &prog.nodes[id];
@@ -307,7 +327,28 @@ impl CompiledProgram {
                     values[id] = Some(ct);
                 }
             }
+            spans.push(crate::obs::Span {
+                name: "wave".to_string(),
+                tid,
+                start_us: wave_start_us,
+                dur_us: spans.now_us().saturating_sub(wave_start_us),
+                args: vec![
+                    ("program".to_string(), Json::Num(pid)),
+                    ("wave".to_string(), Json::Num(wave_idx as u64)),
+                    ("nodes".to_string(), Json::Num(wave.len() as u64)),
+                ],
+            });
         }
+        spans.push(crate::obs::Span {
+            name: "program".to_string(),
+            tid,
+            start_us: prog_start_us,
+            dur_us: spans.now_us().saturating_sub(prog_start_us),
+            args: vec![
+                ("program".to_string(), Json::Num(pid)),
+                ("waves".to_string(), Json::Num(self.waves.len() as u64)),
+            ],
+        });
         prog.outputs
             .iter()
             .map(|(name, id)| Ok((name.clone(), ct_of(&values, *id)?)))

@@ -294,6 +294,22 @@ impl FheService {
         self.sched.metrics_json()
     }
 
+    /// Prometheus text exposition 0.0.4 (`GET /metrics/prometheus`):
+    /// every global-registry histogram (`le`-labelled buckets) plus the
+    /// scheduler's counters, queue-depth gauge, drift gauge and
+    /// per-tenant series.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = crate::obs::Registry::global().prometheus_text();
+        out.push_str(&self.sched.prometheus_extra());
+        out
+    }
+
+    /// Recent request/program/wave spans as Chrome Trace Event JSON
+    /// (`GET /spans`) — load the payload in `chrome://tracing`.
+    pub fn spans_json(&self) -> String {
+        crate::obs::Registry::global().trace_json()
+    }
+
     /// Drain the scheduler and stop its worker.
     pub fn shutdown(&self) {
         self.sched.shutdown();

@@ -30,6 +30,7 @@
 
 use crate::ckks::cipher::Ciphertext;
 use crate::coordinator::{Coordinator, MixedOp};
+use crate::obs::{Histogram, Registry};
 use crate::trace::Trace;
 use crate::util::json::Json;
 use std::collections::{HashMap, VecDeque};
@@ -137,6 +138,16 @@ impl SchedulerMetrics {
             ("throughput_ops_per_s", Json::Float(throughput)),
         ])
     }
+}
+
+/// Per-tenant serving totals: ops admitted to batches and cumulative
+/// queue wait. Tenants are reported by anonymous dense index (first
+/// tenant a batch ever drained = 0) — the pointer key never leaves the
+/// process.
+#[derive(Debug, Default, Clone)]
+pub struct TenantStat {
+    pub ops: u64,
+    pub queue_wait_ns: u64,
 }
 
 type OpResult = Result<Ciphertext, ServiceError>;
@@ -271,6 +282,14 @@ pub struct BatchScheduler {
     /// serving session can be replayed on the `sim` engine
     /// ([`Self::recent_traces`]); bounded at [`TRACE_RING`].
     traces: Mutex<VecDeque<Trace>>,
+    /// Queue-wait per op and wall-clock per batch, recorded into the
+    /// process-wide [`Registry`] under `serve_queue_wait` /
+    /// `serve_batch_exec` (nanoseconds, exposed as seconds) — shared by
+    /// name across schedulers in one process.
+    obs_queue_wait: Arc<Histogram>,
+    obs_batch_exec: Arc<Histogram>,
+    /// Per-tenant accounting, dense index order = first drain order.
+    tenant_stats: Mutex<Vec<(usize, TenantStat)>>,
 }
 
 /// How many per-batch traces [`BatchScheduler`] retains for replay.
@@ -298,6 +317,9 @@ impl BatchScheduler {
             metrics: SchedulerMetrics::default(),
             worker: Mutex::new(None),
             traces: Mutex::new(VecDeque::new()),
+            obs_queue_wait: Registry::global().histogram("serve_queue_wait", 1e-9),
+            obs_batch_exec: Registry::global().histogram("serve_batch_exec", 1e-9),
+            tenant_stats: Mutex::new(Vec::new()),
         });
         let clone = sched.clone();
         let handle = std::thread::Builder::new()
@@ -413,6 +435,23 @@ impl BatchScheduler {
         self.traces.lock().unwrap().iter().cloned().collect()
     }
 
+    /// Running cost-model drift: simulated FHEmem time over measured
+    /// host wall-clock, `sim_cycles_total × cycle_ns / wall_ns_total`.
+    /// This is the continuous model-vs-measurement check: the absolute
+    /// value mostly reflects accelerator-vs-host speedup, but a *stable*
+    /// ratio means the cost model tracks reality — drift over time (or
+    /// across workloads) is what flags the model diverging. `0.0` until
+    /// the first batch lands.
+    pub fn drift_ratio(&self) -> f64 {
+        let wall = self.metrics.wall_ns_total.load(Ordering::Relaxed);
+        if wall == 0 {
+            return 0.0;
+        }
+        let sim_ns = self.metrics.sim_cycles_total.load(Ordering::Relaxed) as f64
+            * self.coord.arch.cycle_ns();
+        sim_ns / wall as f64
+    }
+
     pub fn metrics_json(&self) -> String {
         let mut doc = self.metrics.snapshot_json();
         // Point-in-time queue depth rides along with the counters (lets
@@ -420,8 +459,97 @@ impl BatchScheduler {
         // test waiting for a flood to be fully queued).
         if let Json::Object(fields) = &mut doc {
             fields.push(("queued".to_string(), Json::Num(self.queued() as u64)));
+            fields.push((
+                "queue_wait_p99_ms".to_string(),
+                Json::Float(self.obs_queue_wait.quantile(0.99) as f64 * 1e-6),
+            ));
+            fields.push((
+                "exec_p99_ms".to_string(),
+                Json::Float(self.obs_batch_exec.quantile(0.99) as f64 * 1e-6),
+            ));
+            fields.push((
+                "cost_model_drift_ratio".to_string(),
+                Json::Float(self.drift_ratio()),
+            ));
+            let stats = self.tenant_stats.lock().unwrap();
+            let tenants: Vec<Json> = stats
+                .iter()
+                .enumerate()
+                .map(|(i, (_, st))| {
+                    Json::obj([
+                        ("tenant", Json::Num(i as u64)),
+                        ("ops", Json::Num(st.ops)),
+                        (
+                            "queue_wait_ms_total",
+                            Json::Float(st.queue_wait_ns as f64 * 1e-6),
+                        ),
+                    ])
+                })
+                .collect();
+            fields.push(("tenants".to_string(), Json::Array(tenants)));
         }
         doc.write_pretty()
+    }
+
+    /// Prometheus lines for the scheduler's own counters, queue-depth
+    /// gauge, drift gauge, and per-tenant accounting — appended to the
+    /// registry exposition by `FheService::prometheus_text` (the
+    /// histograms themselves live in the global [`Registry`] and render
+    /// there with `le`-labelled buckets).
+    pub fn prometheus_extra(&self) -> String {
+        let m = &self.metrics;
+        let mut out = String::new();
+        for (name, v) in [
+            ("serve_batches_total", m.batches.load(Ordering::Relaxed)),
+            (
+                "serve_ops_executed_total",
+                m.ops_executed.load(Ordering::Relaxed),
+            ),
+            ("serve_rejected_total", m.rejected.load(Ordering::Relaxed)),
+            ("serve_failed_total", m.failed.load(Ordering::Relaxed)),
+            (
+                "serve_fairness_deferrals_total",
+                m.fairness_deferrals.load(Ordering::Relaxed),
+            ),
+            (
+                "serve_multi_tenant_batches_total",
+                m.multi_tenant_batches.load(Ordering::Relaxed),
+            ),
+            (
+                "serve_wave_submits_total",
+                m.wave_submits.load(Ordering::Relaxed),
+            ),
+        ] {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        // Queue depth as a proper gauge (satellite: it was only an
+        // ad-hoc JSON field before).
+        out.push_str(&format!(
+            "# TYPE serve_queued gauge\nserve_queued {}\n",
+            self.queued()
+        ));
+        out.push_str(&format!(
+            "# TYPE cost_model_drift_ratio gauge\ncost_model_drift_ratio {}\n",
+            self.drift_ratio()
+        ));
+        let stats = self.tenant_stats.lock().unwrap();
+        if !stats.is_empty() {
+            out.push_str("# TYPE serve_tenant_ops_total counter\n");
+            for (i, (_, st)) in stats.iter().enumerate() {
+                out.push_str(&format!(
+                    "serve_tenant_ops_total{{tenant=\"{i}\"}} {}\n",
+                    st.ops
+                ));
+            }
+            out.push_str("# TYPE serve_tenant_queue_wait_seconds_total counter\n");
+            for (i, (_, st)) in stats.iter().enumerate() {
+                out.push_str(&format!(
+                    "serve_tenant_queue_wait_seconds_total{{tenant=\"{i}\"}} {}\n",
+                    st.queue_wait_ns as f64 * 1e-9
+                ));
+            }
+        }
+        out
     }
 
     /// Stop accepting work, drain what's queued, join the worker.
@@ -494,12 +622,34 @@ impl BatchScheduler {
         let mut ops = Vec::with_capacity(batch.len());
         let mut txs = Vec::with_capacity(batch.len());
         let mut tenants: Vec<usize> = Vec::with_capacity(batch.len());
-        for p in batch {
-            if !tenants.contains(&p.tenant) {
-                tenants.push(p.tenant);
+        {
+            // Queue wait ends here: the op has been drained into a batch
+            // (the satellite bugfix — `enqueued` was measured for the
+            // flush timer but never exported).
+            let mut stats = self.tenant_stats.lock().unwrap();
+            for p in batch {
+                let wait = p.enqueued.elapsed();
+                self.obs_queue_wait.record_duration(wait);
+                let wait_ns = wait.as_nanos().min(u64::MAX as u128) as u64;
+                match stats.iter_mut().find(|(k, _)| *k == p.tenant) {
+                    Some((_, st)) => {
+                        st.ops += 1;
+                        st.queue_wait_ns += wait_ns;
+                    }
+                    None => stats.push((
+                        p.tenant,
+                        TenantStat {
+                            ops: 1,
+                            queue_wait_ns: wait_ns,
+                        },
+                    )),
+                }
+                if !tenants.contains(&p.tenant) {
+                    tenants.push(p.tenant);
+                }
+                ops.push(p.op);
+                txs.push(p.tx);
             }
-            ops.push(p.op);
-            txs.push(p.tx);
         }
         if tenants.len() >= 2 {
             self.metrics
@@ -539,6 +689,7 @@ impl BatchScheduler {
         // this batch are taken down with it.
         let outs = self.coord.execute_mixed_batch_isolated(&ops);
         let wall_ns = t0.elapsed().as_nanos() as u64;
+        self.obs_batch_exec.record(wall_ns);
         let cycles = self
             .coord
             .metrics
@@ -630,6 +781,15 @@ mod tests {
         assert_eq!(sched.metrics.largest_batch.load(Ordering::Relaxed), 4);
         assert!(sched.metrics.sim_cycles_total.load(Ordering::Relaxed) > 0);
         assert!(sched.metrics.wall_ns_total.load(Ordering::Relaxed) > 0);
+        // Observability rides along: drift is computable once a batch
+        // landed, both tenants are accounted, and the exposition carries
+        // their series.
+        assert!(sched.drift_ratio() > 0.0);
+        let prom = sched.prometheus_extra();
+        assert!(prom.contains("serve_batches_total 1"));
+        assert!(prom.contains("serve_tenant_ops_total{tenant=\"0\"} 2"));
+        assert!(prom.contains("serve_tenant_ops_total{tenant=\"1\"} 2"));
+        assert!(prom.contains("# TYPE serve_queued gauge"));
         sched.shutdown();
     }
 
@@ -882,6 +1042,15 @@ mod tests {
         let doc = Json::parse(&json).expect("snapshot parses");
         assert_eq!(doc.field("batches").unwrap().as_u64().unwrap(), 0);
         assert!(doc.get("throughput_ops_per_s").is_some());
+        // New observability fields are always present (zero before any
+        // batch lands).
+        assert!(doc.get("queue_wait_p99_ms").is_some());
+        assert!(doc.get("exec_p99_ms").is_some());
+        assert_eq!(
+            doc.field("cost_model_drift_ratio").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert!(doc.field("tenants").unwrap().as_array().unwrap().is_empty());
         sched.shutdown();
     }
 }

@@ -48,6 +48,8 @@ use super::wire::{
     FrameKind,
 };
 use super::{FheService, ServiceError};
+use crate::obs::{Registry, Span};
+use crate::util::json::Json;
 
 /// Error codes carried by [`FrameKind::Error`] frames.
 pub mod error_code {
@@ -173,8 +175,11 @@ struct Conn {
     /// Encoded response bytes not yet accepted by the socket.
     wbuf: Vec<u8>,
     wpos: usize,
-    /// Complete frames waiting their turn (one in flight at a time).
-    queued: VecDeque<(FrameKind, Vec<u8>)>,
+    /// Complete frames waiting their turn (one in flight at a time),
+    /// each stamped with when it was parsed off the wire — the stamp
+    /// rides through the job plumbing so the worker can report how long
+    /// the frame waited for dispatch (no thread-locals involved).
+    queued: VecDeque<(FrameKind, Vec<u8>, Instant)>,
     /// A frame from this connection is in the worker pool.
     busy: bool,
     /// Peer half-closed; drain queued work + wbuf, then drop.
@@ -183,6 +188,9 @@ struct Conn {
     close_after_flush: bool,
     /// When the oldest unparsed byte arrived (read-deadline clock).
     partial_since: Option<Instant>,
+    /// When the currently pending response bytes were first queued
+    /// (response-write stage clock; cleared on full flush).
+    wbuf_since: Option<Instant>,
     last_activity: Instant,
     /// Bumped when the slot is reused so stale worker responses for a
     /// previous occupant are discarded.
@@ -194,6 +202,8 @@ struct Job {
     gen: u64,
     kind: FrameKind,
     payload: Vec<u8>,
+    /// When the frame was parsed off the wire (span/dispatch-wait stamp).
+    parsed_at: Instant,
 }
 
 struct Done {
@@ -231,6 +241,10 @@ fn event_loop(
 
     let mut conns: Vec<Option<Conn>> = Vec::new();
     let mut next_gen: u64 = 1;
+    // Response-write stage histogram (first response byte queued → wbuf
+    // fully flushed), resolved once so the sweep never takes the
+    // registry lock.
+    let resp_write_hist = Registry::global().histogram("serve_resp_write", 1e-9);
     while !stop.load(Ordering::Acquire) {
         let mut progressed = false;
         let now = Instant::now();
@@ -248,6 +262,9 @@ fn event_loop(
             if let Some(Some(c)) = conns.get_mut(done.conn) {
                 if c.gen == done.gen {
                     c.wbuf.extend_from_slice(&done.bytes);
+                    if c.wbuf_since.is_none() {
+                        c.wbuf_since = Some(now);
+                    }
                     c.busy = false;
                     dispatch_next(done.conn, c, &job_tx);
                 }
@@ -284,6 +301,9 @@ fn event_loop(
             if c.wpos == c.wbuf.len() && !c.wbuf.is_empty() {
                 c.wbuf.clear();
                 c.wpos = 0;
+                if let Some(t) = c.wbuf_since.take() {
+                    resp_write_hist.record_duration(t.elapsed());
+                }
                 if c.close_after_flush {
                     drop_conn = true;
                 }
@@ -320,7 +340,7 @@ fn event_loop(
                         match wire::try_extract_frame(&c.rbuf) {
                             Ok(Some((kind, payload, consumed))) => {
                                 c.rbuf.drain(..consumed);
-                                c.queued.push_back((kind, payload));
+                                c.queued.push_back((kind, payload, now));
                                 progressed = true;
                             }
                             Ok(None) => break,
@@ -336,6 +356,9 @@ fn event_loop(
                     Proto::Http => {
                         if let Some(resp) = parse_http_request(&mut c.rbuf, &svc) {
                             c.wbuf.extend_from_slice(&resp);
+                            if c.wbuf_since.is_none() {
+                                c.wbuf_since = Some(now);
+                            }
                             c.close_after_flush = true;
                             progressed = true;
                         } else if c.rbuf.len() > MAX_HTTP_HEAD {
@@ -431,6 +454,7 @@ fn accept_into(
                     eof: false,
                     close_after_flush: false,
                     partial_since: None,
+                    wbuf_since: None,
                     last_activity: now,
                     gen,
                 };
@@ -451,13 +475,14 @@ fn accept_into(
 }
 
 fn dispatch_next(idx: usize, c: &mut Conn, job_tx: &mpsc::Sender<Job>) {
-    if let Some((kind, payload)) = c.queued.pop_front() {
+    if let Some((kind, payload, parsed_at)) = c.queued.pop_front() {
         c.busy = true;
         let _ = job_tx.send(Job {
             conn: idx,
             gen: c.gen,
             kind,
             payload,
+            parsed_at,
         });
     }
 }
@@ -471,6 +496,7 @@ fn worker_loop(
     tx: mpsc::Sender<Done>,
     svc: Arc<FheService>,
 ) {
+    let dispatch_wait_hist = Registry::global().histogram("serve_dispatch_wait", 1e-9);
     loop {
         // Hold the lock only across the blocking recv; processing runs
         // unlocked so the pool genuinely parallelizes.
@@ -481,7 +507,14 @@ fn worker_loop(
             },
             Err(_) => return,
         };
+        // Dispatch wait: parsed off the wire → picked up by a worker
+        // (the per-connection one-in-flight queue plus channel time).
+        let wait = job.parsed_at.elapsed();
+        dispatch_wait_hist.record_duration(wait);
+        let t0 = Instant::now();
         let bytes = process_frame(job.kind, &job.payload, &svc);
+        let exec = t0.elapsed();
+        record_request_span(job.conn, job.kind, wait, exec);
         if tx
             .send(Done {
                 conn: job.conn,
@@ -493,6 +526,36 @@ fn worker_loop(
             return;
         }
     }
+}
+
+/// Record the request as a parent span (dispatch wait + execute, i.e.
+/// wire parse → response encoded) with a nested `execute` child —
+/// positional nesting on the connection-slot track is how
+/// `chrome://tracing` draws the parent/child relation. One `now` is
+/// read for both so containment is exact.
+fn record_request_span(conn: usize, kind: FrameKind, wait: Duration, exec: Duration) {
+    let rec = Registry::global().spans();
+    let end = rec.now_us();
+    let wait_us = wait.as_micros().min(u64::MAX as u128) as u64;
+    let exec_us = exec.as_micros().min(u64::MAX as u128) as u64;
+    rec.push(Span {
+        name: "request".to_string(),
+        tid: conn as u64,
+        start_us: end.saturating_sub(wait_us + exec_us),
+        dur_us: wait_us + exec_us,
+        args: vec![
+            ("kind".to_string(), Json::Str(format!("{kind:?}"))),
+            ("dispatch_wait_us".to_string(), Json::Num(wait_us)),
+            ("exec_us".to_string(), Json::Num(exec_us)),
+        ],
+    });
+    rec.push(Span {
+        name: "execute".to_string(),
+        tid: conn as u64,
+        start_us: end.saturating_sub(exec_us),
+        dur_us: exec_us,
+        args: Vec::new(),
+    });
 }
 
 /// Run one request frame to completion and encode the response frame.
@@ -601,7 +664,9 @@ fn handle_request(
 // ----------------------------------------------------------------------
 
 /// If `rbuf` holds a complete HTTP request head, consume it and build
-/// the response bytes. `GET /metrics` serves the scheduler snapshot;
+/// the response bytes. `GET /metrics` serves the scheduler snapshot as
+/// JSON, `GET /metrics/prometheus` the text exposition format 0.0.4,
+/// and `GET /spans` the recent-span ring as Chrome Trace Event JSON;
 /// anything else is 404. One request per connection (Connection: close).
 fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u8>> {
     let head_end = rbuf
@@ -614,14 +679,19 @@ fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("");
     let path = parts.next().unwrap_or("");
-    let (status, content_type, body) = if method == "GET" && path == "/metrics" {
-        ("200 OK", "application/json", svc.metrics_json())
-    } else {
-        (
+    let (status, content_type, body) = match (method, path) {
+        ("GET", "/metrics") => ("200 OK", "application/json", svc.metrics_json()),
+        ("GET", "/metrics/prometheus") => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            svc.prometheus_text(),
+        ),
+        ("GET", "/spans") => ("200 OK", "application/json", svc.spans_json()),
+        _ => (
             "404 Not Found",
             "text/plain",
-            "not found (try GET /metrics)\n".to_string(),
-        )
+            "not found (try GET /metrics, /metrics/prometheus, /spans)\n".to_string(),
+        ),
     };
     Some(
         format!(

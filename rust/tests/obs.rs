@@ -1,0 +1,343 @@
+//! Observability subsystem tests: histogram quantile error bounds
+//! against exact sorted references, concurrent-recording bit-stability,
+//! span nesting/ordering, a Prometheus text-format golden, and an e2e
+//! check that the HTTP endpoints serve well-formed payloads under
+//! pipelined load.
+
+use fhemem::obs::{Histogram, Registry, Span, SpanRecorder};
+use fhemem::params::CkksParams;
+use fhemem::program::Builder;
+use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient};
+use fhemem::sim::ArchConfig;
+use fhemem::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// Deterministic value stream (xorshift-style LCG) so every run and
+/// every thread sees the same data.
+fn lcg(seed: u64) -> impl FnMut() -> u64 {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    }
+}
+
+fn check_quantiles(name: &str, values: &[u64]) {
+    let h = Histogram::new(1.0);
+    for &v in values {
+        h.record(v);
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    for q in [0.01, 0.10, 0.50, 0.90, 0.99, 1.0] {
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        let exact = sorted[rank - 1];
+        let est = h.quantile(q);
+        // Midpoint-of-bucket estimate: the true order statistic lies in
+        // the same bucket, whose width is at most lo/8 — so the estimate
+        // is within 12.5% relative (+1 absolute for tiny values).
+        let err = (est as f64 - exact as f64).abs();
+        assert!(
+            err <= 0.125 * exact as f64 + 1.0,
+            "{name} q={q}: estimate {est} vs exact {exact} (err {err})"
+        );
+    }
+    assert_eq!(h.count(), n as u64);
+    assert_eq!(h.max(), *sorted.last().unwrap());
+}
+
+#[test]
+fn quantile_error_bound_holds_across_adversarial_distributions() {
+    let mut rng = lcg(0xD157);
+    // Uniform over a wide range.
+    let uniform: Vec<u64> = (0..5000).map(|_| rng() % 1_000_000).collect();
+    check_quantiles("uniform", &uniform);
+    // Exponential-ish: power-of-two magnitudes with jitter — every
+    // octave populated, the worst case for log bucketing.
+    let expo: Vec<u64> = (0..5000)
+        .map(|_| {
+            let mag = rng() % 40;
+            (1u64 << mag) + rng() % ((1u64 << mag).max(2) / 2 + 1)
+        })
+        .collect();
+    check_quantiles("exponential", &expo);
+    // Bimodal: a fast mode near 100 ns and a slow mode near 1 s — the
+    // shape where a mean hides everything and quantiles must not.
+    let bimodal: Vec<u64> = (0..5000)
+        .map(|i| {
+            if i % 2 == 0 {
+                90 + rng() % 20
+            } else {
+                1_000_000_000 + rng() % 100_000_000
+            }
+        })
+        .collect();
+    check_quantiles("bimodal", &bimodal);
+    // Constant: every quantile is the same bucket.
+    let constant: Vec<u64> = vec![42; 1000];
+    check_quantiles("constant", &constant);
+    // Values below 16 are stored exactly — no estimation error at all.
+    let small: Vec<u64> = (0..2000).map(|_| rng() % 16).collect();
+    let h = Histogram::new(1.0);
+    for &v in &small {
+        h.record(v);
+    }
+    let mut sorted = small.clone();
+    sorted.sort_unstable();
+    for q in [0.25, 0.5, 0.75, 1.0] {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        assert_eq!(h.quantile(q), sorted[rank - 1], "small values q={q}");
+    }
+}
+
+#[test]
+fn concurrent_recording_is_bit_stable() {
+    // N threads each record a deterministic value stream; the merged
+    // per-bucket counts, count, sum and max must be *bit-identical* to a
+    // serial replay — fetch_add loses nothing.
+    const THREADS: u64 = 8;
+    const PER_THREAD: usize = 20_000;
+    let concurrent = Histogram::new(1.0);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let h = &concurrent;
+            s.spawn(move || {
+                let mut rng = lcg(0xC0FFEE + t);
+                for _ in 0..PER_THREAD {
+                    h.record(rng() % 10_000_000);
+                }
+            });
+        }
+    });
+    let serial = Histogram::new(1.0);
+    for t in 0..THREADS {
+        let mut rng = lcg(0xC0FFEE + t);
+        for _ in 0..PER_THREAD {
+            serial.record(rng() % 10_000_000);
+        }
+    }
+    assert_eq!(concurrent.count(), serial.count());
+    assert_eq!(concurrent.sum(), serial.sum());
+    assert_eq!(concurrent.max(), serial.max());
+    assert_eq!(
+        concurrent.bucket_counts(),
+        serial.bucket_counts(),
+        "per-bucket counts diverged under concurrency"
+    );
+}
+
+#[test]
+fn spans_nest_positionally_and_sort_by_start() {
+    let rec = SpanRecorder::new(64);
+    // Pushed out of order on purpose; the exporter must sort by start
+    // time and, at equal starts, put the longer (outer) span first.
+    rec.push(Span {
+        name: "child".into(),
+        tid: 5,
+        start_us: 120,
+        dur_us: 30,
+        args: vec![("k".to_string(), Json::Num(1))],
+    });
+    rec.push(Span {
+        name: "parent".into(),
+        tid: 5,
+        start_us: 100,
+        dur_us: 100,
+        args: Vec::new(),
+    });
+    rec.push(Span {
+        name: "other-track".into(),
+        tid: 6,
+        start_us: 100,
+        dur_us: 10,
+        args: Vec::new(),
+    });
+    let doc = Json::parse(&rec.trace_json()).expect("trace JSON parses");
+    let events = doc.field("traceEvents").unwrap().as_array().unwrap();
+    assert_eq!(events.len(), 3);
+    let name = |e: &Json| e.field("name").unwrap().as_str().unwrap().to_string();
+    let ts = |e: &Json| e.field("ts").unwrap().as_u64().unwrap();
+    let dur = |e: &Json| e.field("dur").unwrap().as_u64().unwrap();
+    let tid = |e: &Json| e.field("tid").unwrap().as_u64().unwrap();
+    // Sorted by (start, -dur): parent and other-track at ts 100 (parent
+    // is longer so it comes first), child at 120.
+    assert_eq!(name(&events[0]), "parent");
+    assert_eq!(name(&events[2]), "child");
+    // Positional nesting: the child's interval is contained in the
+    // parent's on the same track — exactly what chrome://tracing uses.
+    let (p, c) = (&events[0], &events[2]);
+    assert_eq!(tid(p), tid(c));
+    assert!(ts(p) <= ts(c) && ts(c) + dur(c) <= ts(p) + dur(p));
+}
+
+#[test]
+fn prometheus_text_golden() {
+    // A private registry gives fully deterministic exposition (the
+    // global one is polluted by whatever else the test process ran).
+    let reg = Registry::new();
+    let h = reg.histogram("lat", 1.0);
+    h.record(100); // bucket 36: bounds (96, 103)
+    h.record(200_000); // bucket 124: bounds (196608, 212991)
+    reg.counter("reqs").fetch_add(7, Ordering::Relaxed);
+    reg.set_gauge("depth", 3.5);
+    let got = reg.prometheus_text();
+    let want = "\
+# TYPE lat histogram
+lat_bucket{le=\"103\"} 1
+lat_bucket{le=\"212991\"} 2
+lat_bucket{le=\"+Inf\"} 2
+lat_sum 200100
+lat_count 2
+# TYPE reqs counter
+reqs 7
+# TYPE depth gauge
+depth 3.5
+";
+    assert_eq!(got, want, "exposition drifted from the 0.0.4 golden");
+}
+
+/// Raw HTTP GET returning (status line ok, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect http");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read http response");
+    out
+}
+
+#[test]
+fn e2e_prometheus_and_spans_endpoints_under_load() {
+    let svc = FheService::new(
+        ArchConfig::default(),
+        SchedulerConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(2),
+            max_queue: 256,
+            max_tenant_inflight: 0,
+        },
+    );
+    let handle = server::spawn_with(
+        "127.0.0.1:0",
+        Some("127.0.0.1:0"),
+        svc.clone(),
+        server::ServeOptions::default(),
+    )
+    .expect("bind loopback");
+    let addr = handle.addr;
+    let http = handle.http_addr.expect("http listener");
+
+    // Pipelined load: two tenants fire single ops concurrently, then one
+    // runs a multi-wave program so the executor records program/wave
+    // spans server-side.
+    std::thread::scope(|s| {
+        for (tid, seed) in [(31u64, 0x31u64), (32, 0x32)] {
+            s.spawn(move || {
+                let mut client =
+                    ServiceClient::connect(addr, tid, CkksParams::func_tiny(), seed)
+                        .expect("connect+register");
+                let slots = client.ctx.encoder.slots();
+                let z: Vec<f64> = (0..slots).map(|i| 0.02 * ((i + 1) % 7) as f64).collect();
+                let ct = client.encrypt(&z, 3);
+                for k in 0..4 {
+                    if k % 2 == 0 {
+                        client.rotate(&ct, 1).expect("rotate");
+                    } else {
+                        client.add(&ct, &ct).expect("add");
+                    }
+                }
+            });
+        }
+    });
+    {
+        let mut client =
+            ServiceClient::connect(addr, 33, CkksParams::func_tiny(), 0x33).expect("connect");
+        let prog = {
+            let mut b = Builder::new();
+            let x = b.input("x");
+            let r = b.rotate(x, 1);
+            let y = b.add(r, x);
+            let out = b.sub(y, x);
+            b.output("out", out);
+            b.build().expect("well-formed program")
+        };
+        let slots = client.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 5) as f64).collect();
+        let wct = client.encrypt(&z, 3);
+        client
+            .run_program(&prog, &[("x".to_string(), wct)])
+            .expect("remote program");
+    }
+
+    // /metrics/prometheus: valid 0.0.4 text with at least one histogram
+    // family (cumulative buckets with le labels) and the queue gauge.
+    let prom = http_get(http, "/metrics/prometheus");
+    assert!(prom.starts_with("HTTP/1.1 200"), "bad status: {prom}");
+    assert!(prom.contains("version=0.0.4"), "missing exposition version: {prom}");
+    let prom_body = prom.split_once("\r\n\r\n").unwrap().1;
+    assert!(prom_body.contains("# TYPE"), "no TYPE lines:\n{prom_body}");
+    assert!(
+        prom_body.contains("_bucket{le=") && prom_body.contains("le=\"+Inf\""),
+        "no histogram buckets:\n{prom_body}"
+    );
+    assert!(
+        prom_body.contains("serve_queue_wait_bucket{le="),
+        "queue-wait histogram missing (the measured-but-never-exported bug is back):\n{prom_body}"
+    );
+    assert!(
+        prom_body.contains("# TYPE serve_queued gauge"),
+        "queue depth gauge missing:\n{prom_body}"
+    );
+    assert!(
+        prom_body.contains("# TYPE cost_model_drift histogram")
+            || prom_body.contains("# TYPE cost_model_drift_ratio gauge"),
+        "cost-model drift missing:\n{prom_body}"
+    );
+
+    // /spans: Chrome Trace Event JSON with the program's wave spans
+    // positionally nested inside its program span.
+    let spans_raw = http_get(http, "/spans");
+    assert!(spans_raw.starts_with("HTTP/1.1 200"), "bad status: {spans_raw}");
+    let spans_body = spans_raw.split_once("\r\n\r\n").unwrap().1;
+    let doc = Json::parse(spans_body).expect("span payload parses as JSON");
+    let events = doc.field("traceEvents").unwrap().as_array().unwrap();
+    assert!(!events.is_empty(), "no spans recorded under load");
+    let name = |e: &Json| e.field("name").unwrap().as_str().unwrap().to_string();
+    let ts = |e: &Json| e.field("ts").unwrap().as_u64().unwrap();
+    let dur = |e: &Json| e.field("dur").unwrap().as_u64().unwrap();
+    let tid = |e: &Json| e.field("tid").unwrap().as_u64().unwrap();
+    let program = events
+        .iter()
+        .find(|&e| name(e) == "program")
+        .expect("a program span was recorded");
+    let waves: Vec<&Json> = events
+        .iter()
+        .filter(|&e| name(e) == "wave" && tid(e) == tid(program))
+        .collect();
+    assert!(!waves.is_empty(), "program span has no wave spans on its track");
+    for &w in &waves {
+        assert!(
+            ts(program) <= ts(w) && ts(w) + dur(w) <= ts(program) + dur(program),
+            "wave span [{}, {}] escapes program span [{}, {}]",
+            ts(w),
+            ts(w) + dur(w),
+            ts(program),
+            ts(program) + dur(program)
+        );
+    }
+    // Request spans from the op load ride on connection-slot tracks.
+    assert!(
+        events.iter().any(|e| name(e) == "request"),
+        "no request spans recorded"
+    );
+
+    handle.stop();
+    svc.shutdown();
+}
