@@ -277,6 +277,132 @@ fn bench_tiled_hmul_vs_flat(records: &mut Vec<Record>) -> f64 {
     speedup
 }
 
+/// Deferred-correction vs eager-correction op chain at N = 2^15: an
+/// HMul-shaped tensor (fused cross term + add/sub), then INTT → rescale
+/// → automorphism. The lazy variant carries `Bound::Lazy2q` between ops
+/// and folds once at the chain exit (inside the transform); the eager
+/// variant normalizes after every op. Bit-identity is asserted first;
+/// the speedup is recorded as `lazy_chain_speedup_n32768` and CI-gated
+/// (> 1.0 required — eager does strictly more memory passes).
+fn bench_lazy_chain(records: &mut Vec<Record>) -> f64 {
+    use fhemem::math::poly::{Domain, RnsPoly};
+    use fhemem::math::tiled::TiledRnsPoly;
+    let ctx = CkksContext::new(CkksParams::func_wide());
+    let limbs = ctx.l();
+    let mut rng = SplitMix64::new(0x1A2);
+    let mut mk = |domain| {
+        let mut p = RnsPoly::zero(ctx.basis.clone(), limbs, domain);
+        for j in 0..limbs {
+            let q = ctx.basis.q(j);
+            for c in p.data[j].iter_mut() {
+                *c = rng.below(q);
+            }
+        }
+        TiledRnsPoly::from_flat(&p)
+    };
+    let a = mk(Domain::Ntt);
+    let b = mk(Domain::Ntt);
+    let c = mk(Domain::Ntt);
+    let k = RnsPoly::rotation_to_galois(1, ctx.n());
+
+    let lazy_chain = || {
+        let mut t = TiledRnsPoly::fused_mul_add(&[(&a, &b), (&c, &a)]);
+        t.add_assign(&b);
+        t.sub_assign(&c);
+        t.to_coeff(); // single fold, inside the inverse transform
+        let r = t.rescale_by_last();
+        r.automorphism(k)
+    };
+    let eager_chain = || {
+        let mut t = TiledRnsPoly::fused_mul_add(&[(&a, &b), (&c, &a)]);
+        t.normalize();
+        t.add_assign(&b);
+        t.normalize();
+        t.sub_assign(&c);
+        t.normalize();
+        t.to_coeff();
+        let r = t.rescale_by_last();
+        r.automorphism(k)
+    };
+    assert_eq!(
+        lazy_chain().to_flat().data,
+        eager_chain().to_flat().data,
+        "lazy chain diverged from eager"
+    );
+
+    let s_eager = bench_fn("op chain eager (normalize per op) n=2^15", || {
+        std::hint::black_box(eager_chain());
+    });
+    let s_lazy = bench_fn("op chain deferred correction n=2^15", || {
+        std::hint::black_box(lazy_chain());
+    });
+    let speedup = if s_lazy.median_ns() > 0.0 {
+        s_eager.median_ns() / s_lazy.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> deferred-correction chain {speedup:.2}x vs eager at N=2^15");
+    records.push(Record {
+        name: "op chain lazy-vs-eager n=2^15 (speedup field = vs eager)".to_string(),
+        threads: fhemem::parallel::pool().threads(),
+        median_ns: s_lazy.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    speedup
+}
+
+/// Batched HMul through the generic `CtRepr` fan-out at logN=15: a
+/// pre-tiled batch (the serving path — one conversion per batch edge)
+/// vs the flat batch. Recorded as
+/// `tiled_batch_hmul_speedup_vs_flat_batch_n32768`; CI requires the key
+/// to be present.
+fn bench_tiled_batch_hmul_vs_flat_batch(records: &mut Vec<Record>) -> f64 {
+    let ctx = CkksContext::new(CkksParams::func_wide());
+    let chain = Arc::new(KeyChain::new(ctx.clone(), 5));
+    let ev = Evaluator::new(ctx.clone(), chain, 6);
+    let slots = ctx.encoder.slots();
+    let batch = 4usize;
+    let mk = |seed: usize| {
+        let z: Vec<f64> = (0..slots).map(|i| 0.001 * ((i + seed) % 83) as f64).collect();
+        ev.encrypt_real(&z, ctx.l())
+    };
+    let fa: Vec<Ciphertext> = (0..batch).map(|i| mk(i)).collect();
+    let fb: Vec<Ciphertext> = (batch..2 * batch).map(|i| mk(i)).collect();
+    let ta: Vec<_> = fa.iter().map(|ct| ct.to_tiled()).collect();
+    let tb: Vec<_> = fb.iter().map(|ct| ct.to_tiled()).collect();
+
+    // Warm the key cache and cross-check bit-identity before timing.
+    let flat_out = ev.mul_batch(&fa, &fb);
+    let tiled_out = ev.mul_batch(&ta, &tb);
+    for (i, (t, f)) in tiled_out.iter().zip(&flat_out).enumerate() {
+        assert_eq!(
+            t.to_flat().c0.data, f.c0.data,
+            "tiled batch HMul [{i}] diverged from flat batch"
+        );
+    }
+
+    let s_flat = bench_fn("ckks_hmul_batch flat logN=15 batch=4", || {
+        std::hint::black_box(ev.mul_batch(&fa, &fb));
+    });
+    let s_tiled = bench_fn("ckks_hmul_batch tiled logN=15 batch=4", || {
+        std::hint::black_box(ev.mul_batch(&ta, &tb));
+    });
+    let speedup = if s_tiled.median_ns() > 0.0 {
+        s_flat.median_ns() / s_tiled.median_ns()
+    } else {
+        0.0
+    };
+    println!("    -> tiled batch HMul {speedup:.2}x vs flat batch at logN=15");
+    records.push(Record {
+        name: "ckks_hmul_batch tiled-vs-flat logN=15 batch=4 (speedup field = vs flat)"
+            .to_string(),
+        threads: fhemem::parallel::pool().threads(),
+        median_ns: s_tiled.median_ns(),
+        speedup_vs_serial: speedup,
+    });
+    speedup
+}
+
 /// One HELR iteration, hand-written vs `fhemem-compile`: the compiled
 /// path goes Builder graph → CSE + rotation hoisting + auto-rescale →
 /// tiled mixed-batch execution on the coordinator. Returns
@@ -530,6 +656,8 @@ fn write_json(
     ntt_speedup: f64,
     fourstep_speedup: f64,
     tiled_hmul_speedup: f64,
+    lazy_chain_speedup: f64,
+    tiled_batch_hmul_speedup: f64,
     service_ops_per_s: f64,
     compiled_helr_speedup: f64,
     hoisted_ks_reduction: f64,
@@ -565,6 +693,11 @@ fn write_json(
         (
             "tiled_hmul_speedup_vs_flat_n32768",
             Json::Float(tiled_hmul_speedup),
+        ),
+        ("lazy_chain_speedup_n32768", Json::Float(lazy_chain_speedup)),
+        (
+            "tiled_batch_hmul_speedup_vs_flat_batch_n32768",
+            Json::Float(tiled_batch_hmul_speedup),
         ),
         (
             "service_batch_throughput_ops_per_s",
@@ -622,6 +755,11 @@ fn main() {
     let fourstep_speedup = bench_fourstep_vs_radix2(&mut records);
     let tiled_hmul_speedup = bench_tiled_hmul_vs_flat(&mut records);
 
+    // The lazy [0,2q) discipline across whole op chains (CI-gated > 1.0)
+    // and the generic CtRepr batch fan-out, tiled vs flat.
+    let lazy_chain_speedup = bench_lazy_chain(&mut records);
+    let tiled_batch_hmul_speedup = bench_tiled_batch_hmul_vs_flat_batch(&mut records);
+
     // The bank-pool engine: batched limb-parallel NTT (acceptance: ≥2x
     // at N=8192 with ≥4 threads) + batched CKKS HMul.
     let bit_identical = bench_batched_ntt(&mut records);
@@ -678,6 +816,8 @@ fn main() {
             ntt_speedup,
             fourstep_speedup,
             tiled_hmul_speedup,
+            lazy_chain_speedup,
+            tiled_batch_hmul_speedup,
             service_ops_per_s,
             compiled_helr_speedup,
             hoisted_ks_reduction,

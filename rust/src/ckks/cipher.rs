@@ -82,7 +82,12 @@ impl TiledCiphertext {
 /// representations by construction, which `rust/tests/tiled_kernels.rs`
 /// asserts op by op. (The transitional `Evaluator::*_tiled` forwarders
 /// are gone; this trait is the only op surface.)
-pub trait CtRepr: Clone + Sized {
+///
+/// `Send + Sync` because the `Evaluator::*_batch` fan-out is generic
+/// over the representation: a batch of `R: CtRepr` is mapped across the
+/// bank pool, so batch callers pick flat or tiled by slice type and
+/// convert at most once per batch edge.
+pub trait CtRepr: Clone + Sized + Send + Sync {
     /// Wrap a flat ciphertext in this representation (memcpy at most).
     fn from_flat_ct(ct: Ciphertext) -> Self;
     /// Active q-limbs.
@@ -634,31 +639,42 @@ impl Evaluator {
     // ciphertexts. Each `_batch` op fans the slice out across the global
     // bank pool; per-item work is byte-identical to the serial op, so
     // results do not depend on the thread count.
+    //
+    // The fan-out is generic over [`CtRepr`]: the same body serves flat
+    // `&[Ciphertext]` slices (reference path) and `&[TiledCiphertext]`
+    // slices (the bank-tiled hot path), so tiled batch callers never
+    // round-trip intermediates through the flat representation — they
+    // convert once per batch edge at most. There are no flat-only batch
+    // bodies anymore.
 
-    /// HAdd over aligned slices.
-    pub fn add_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+    /// HAdd over aligned slices (generic over the representation).
+    pub fn add_batch<R: CtRepr>(&self, a: &[R], b: &[R]) -> Vec<R> {
         assert_eq!(a.len(), b.len(), "batch length mismatch");
-        crate::parallel::pool().par_map(a, |i, ct| self.add(ct, &b[i]))
+        crate::parallel::pool().par_map(a, |i, ct| ct.add(self, &b[i]))
     }
 
-    /// HSub over aligned slices.
-    pub fn sub_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+    /// HSub over aligned slices (generic over the representation).
+    pub fn sub_batch<R: CtRepr>(&self, a: &[R], b: &[R]) -> Vec<R> {
         assert_eq!(a.len(), b.len(), "batch length mismatch");
-        crate::parallel::pool().par_map(a, |i, ct| self.sub(ct, &b[i]))
+        crate::parallel::pool().par_map(a, |i, ct| ct.sub(self, &b[i]))
     }
 
     /// HMul (tensor + relinearize + rescale) over aligned slices. The
     /// relinearization keys for every level in the batch are materialized
     /// up front so banks never duplicate key generation.
-    pub fn mul_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+    pub fn mul_batch<R: CtRepr>(&self, a: &[R], b: &[R]) -> Vec<R> {
         assert_eq!(a.len(), b.len(), "batch length mismatch");
-        let mut levels: Vec<usize> = a.iter().zip(b).map(|(x, y)| x.level.min(y.level)).collect();
+        let mut levels: Vec<usize> = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| x.level().min(y.level()))
+            .collect();
         levels.sort_unstable();
         levels.dedup();
         for level in levels {
             let _ = self.chain.eval_key(level, KeyTag::Relin);
         }
-        crate::parallel::pool().par_map(a, |i, ct| self.mul(ct, &b[i]))
+        crate::parallel::pool().par_map(a, |i, ct| ct.mul(self, &b[i]))
     }
 
     // ------------------------------------------------------------------
@@ -731,22 +747,24 @@ impl Evaluator {
     }
 
     /// Rotation over a slice, one step per ciphertext (Galois keys
-    /// pre-materialized per distinct `(level, step)`).
-    pub fn rotate_batch(&self, a: &[Ciphertext], steps: &[i64]) -> Vec<Ciphertext> {
+    /// pre-materialized per distinct `(level, step)`; identity steps
+    /// clone without touching the key chain). Generic over the
+    /// representation like the other `_batch` ops.
+    pub fn rotate_batch<R: CtRepr>(&self, a: &[R], steps: &[i64]) -> Vec<R> {
         assert_eq!(a.len(), steps.len(), "batch length mismatch");
         let slots = self.ctx.encoder.slots() as i64;
         let mut keys: Vec<(usize, usize)> = a
             .iter()
             .zip(steps)
             .filter(|(_, &s)| s.rem_euclid(slots) != 0)
-            .map(|(ct, &s)| (ct.level, RnsPoly::rotation_to_galois(s, self.ctx.n())))
+            .map(|(ct, &s)| (ct.level(), RnsPoly::rotation_to_galois(s, self.ctx.n())))
             .collect();
         keys.sort_unstable();
         keys.dedup();
         for (level, k) in keys {
             let _ = self.chain.eval_key(level, KeyTag::Galois(k));
         }
-        crate::parallel::pool().par_map(a, |i, ct| self.rotate(ct, steps[i]))
+        crate::parallel::pool().par_map(a, |i, ct| ct.rotate(self, steps[i]))
     }
 }
 

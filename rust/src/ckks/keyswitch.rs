@@ -459,7 +459,14 @@ pub fn hoisted_key_switch(
 /// Inner product of tiled ext rows with a flat-row gadget polynomial,
 /// accumulated into `acc` (all in NTT domain). A flat row's tile `b` is
 /// its contiguous `[b·te, (b+1)·te)` slice, so the evaluation keys never
-/// need re-tiling. Arithmetic mirrors [`ExtPoly::mul_acc_into`] exactly.
+/// need re-tiling.
+///
+/// **Lazy**: products and running sums carry the `[0, 2q)` bound (one
+/// conditional subtract each, no full reduction per term);
+/// [`mod_down_tiled`] accepts the lazy accumulator directly — its entry
+/// iNTT absorbs `[0, 2q)` inputs and its own scaling pass is the chain
+/// exit. Congruent mod q to [`ExtPoly::mul_acc_into`], hence
+/// bit-identical once the transform corrects.
 fn mul_acc_tiles(
     ctx: &CkksContext,
     mods: &[usize],
@@ -473,19 +480,23 @@ fn mul_acc_tiles(
         let r = idx / banks;
         let b = idx % banks;
         let q = ctx.basis.q(mods[r]);
+        let twoq = 2 * q;
         let br = ctx.basis.barrett[mods[r]];
         let g = &gadget.rows[r][b * te..(b + 1) * te];
         let e = &ext[idx];
         for (c, out) in tile.iter_mut().enumerate() {
-            *out = add_mod(*out, br.mul(e[c], g[c]), q);
+            *out = crate::math::modarith::add_mod_lazy(*out, br.mul_lazy(e[c], g[c]), twoq);
         }
     });
 }
 
 /// ModDown on tiled ext accumulators: four-step iNTT per row group,
 /// per-bank BConv of the P-part, subtract-and-divide, four-step NTT
-/// back. Bit-identical to [`mod_down`] (BConv is per-coefficient, so
-/// converting bank tiles independently changes nothing).
+/// back. Accepts `[0, 2q)` (lazy inner-product) accumulators directly —
+/// the entry iNTT's Harvey butterflies absorb them and emit canonical
+/// residues for the BConv. Bit-identical to [`mod_down`] (BConv is
+/// per-coefficient, so converting bank tiles independently changes
+/// nothing, and the transform output depends only on residues mod q).
 fn mod_down_tiled(
     ctx: &CkksContext,
     mut ext: Vec<Vec<u64>>,
@@ -530,9 +541,13 @@ fn mod_down_tiled(
 /// [`key_switch`] on the bank-tiled representation: digit scaling and
 /// ModUp fan out per bank, the extended-basis transforms run the
 /// four-step NTT on tile groups, and the evk inner product accumulates
-/// per tile. Bit-identical to the flat path (asserted in
-/// `rust/tests/tiled_kernels.rs`) — the four-step transform reproduces
-/// the radix-2 kernels exactly and everything else is per-coefficient.
+/// per tile (lazily — see [`mul_acc_tiles`]). Bit-identical to the flat
+/// path (asserted in `rust/tests/tiled_kernels.rs`) — the four-step
+/// transform reproduces the radix-2 kernels exactly and everything else
+/// is per-coefficient. Accepts a `[0, 2q)`-bounded `d` directly: the
+/// entry `to_coeff` absorbs lazy NTT-domain inputs, and a lazy
+/// coefficient-domain input is exact under the digit scale's full
+/// `mul_mod` reduction.
 pub fn key_switch_tiled(
     ctx: &CkksContext,
     d: &TiledRnsPoly,
@@ -599,16 +614,34 @@ pub fn key_switch_tiled(
     )
 }
 
-/// Batched key switch under a shared evk: independent polys fan out
-/// across the bank pool (the ciphertext axis of FHEmem's bank
-/// parallelism). Per-item work is identical to [`key_switch`], so the
-/// output is bit-identical at any thread count.
+/// The one batched key-switch body: independent polys of **either**
+/// representation fan out across the bank pool (the ciphertext axis of
+/// FHEmem's bank parallelism); the per-item kernel is whatever closure
+/// the entry point instantiates, so flat and tiled batches share this
+/// fan-out instead of duplicating it.
+fn key_switch_batch_impl<P: Sync, O: Send>(ds: &[P], f: impl Fn(&P) -> O + Sync) -> Vec<O> {
+    crate::parallel::pool().par_map(ds, |_, d| f(d))
+}
+
+/// Batched flat key switch under a shared evk. Per-item work is
+/// identical to [`key_switch`], so the output is bit-identical at any
+/// thread count.
 pub fn key_switch_batch(
     ctx: &CkksContext,
     ds: &[RnsPoly],
     evk: &EvalKey,
 ) -> Vec<(RnsPoly, RnsPoly)> {
-    crate::parallel::pool().par_map(ds, |_, d| key_switch(ctx, d, evk))
+    key_switch_batch_impl(ds, |d| key_switch(ctx, d, evk))
+}
+
+/// Batched **tiled** key switch under a shared evk — the batch edge
+/// stays on bank tiles end to end (no flat round-trip per element).
+pub fn key_switch_batch_tiled(
+    ctx: &CkksContext,
+    ds: &[TiledRnsPoly],
+    evk: &EvalKey,
+) -> Vec<(TiledRnsPoly, TiledRnsPoly)> {
+    key_switch_batch_impl(ds, |d| key_switch_tiled(ctx, d, evk))
 }
 
 #[cfg(test)]

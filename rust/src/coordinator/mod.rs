@@ -10,7 +10,7 @@
 //! many independent ciphertexts concurrently across the bank pool — the
 //! software mirror of FHEmem assigning ciphertexts to banks.
 
-use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator};
+use crate::ckks::cipher::{Ciphertext, CtRepr, Evaluator, TiledCiphertext};
 use crate::ckks::{CkksContext, KeyChain, KeyTag};
 use crate::math::poly::RnsPoly;
 use crate::obs::{Histogram, Registry};
@@ -486,23 +486,31 @@ impl Coordinator {
 
     /// Batched HAdd: independent ciphertext pairs fan out across the
     /// bank pool; every op is still costed on the FHEmem model.
-    pub fn hadd_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+    ///
+    /// Generic over [`CtRepr`] like the evaluator's `_batch` layer it
+    /// delegates to: tiled callers pass `&[TiledCiphertext]` and get
+    /// tiled outputs back with no per-element flat round-trip — the
+    /// flat↔tiled conversion (if any) happens once at the caller's
+    /// batch edge.
+    pub fn hadd_batch<R: CtRepr>(&self, a: &[R], b: &[R]) -> Vec<R> {
         for _ in 0..a.len() {
             self.record(FheOp::HAdd);
         }
         self.eval.add_batch(a, b)
     }
 
-    /// Batched HMul (tensor + relinearize + rescale per pair).
-    pub fn hmul_batch(&self, a: &[Ciphertext], b: &[Ciphertext]) -> Vec<Ciphertext> {
+    /// Batched HMul (tensor + relinearize + rescale per pair). Generic
+    /// over the representation — see [`Self::hadd_batch`].
+    pub fn hmul_batch<R: CtRepr>(&self, a: &[R], b: &[R]) -> Vec<R> {
         for _ in 0..a.len() {
             self.record(FheOp::HMul);
         }
         self.eval.mul_batch(a, b)
     }
 
-    /// Batched rotation, one step per ciphertext.
-    pub fn rotate_batch(&self, a: &[Ciphertext], steps: &[i64]) -> Vec<Ciphertext> {
+    /// Batched rotation, one step per ciphertext. Generic over the
+    /// representation — see [`Self::hadd_batch`].
+    pub fn rotate_batch<R: CtRepr>(&self, a: &[R], steps: &[i64]) -> Vec<R> {
         for _ in 0..a.len() {
             self.record(FheOp::HRot);
         }
@@ -635,10 +643,12 @@ impl Coordinator {
     /// tiled once at the batch edge (a memcpy — tiles are contiguous
     /// chunks of the flat vectors), every kernel in between (four-step
     /// NTT, pointwise tensor, tiled key switch, rescale) runs on
-    /// `LayoutPlan` bank tiles, and the result is flattened for the
-    /// response. Bit-identical to the flat evaluator ops, so serving
-    /// results do not depend on the representation.
-    fn run_mixed_op(&self, op: &MixedOp) -> Ciphertext {
+    /// `LayoutPlan` bank tiles, and the result **stays tiled** — the
+    /// batch fan-out flattens once at its own edge for the response, so
+    /// no intermediate ever shuttles through the flat representation.
+    /// Bit-identical to the flat evaluator ops, so serving results do
+    /// not depend on the representation.
+    fn run_mixed_op(&self, op: &MixedOp) -> TiledCiphertext {
         let t0 = Instant::now();
         let out = self.run_mixed_op_inner(op);
         // Per-kind execute histogram (lock-free: the Arc was resolved at
@@ -648,12 +658,13 @@ impl Coordinator {
         out
     }
 
-    fn run_mixed_op_inner(&self, op: &MixedOp) -> Ciphertext {
+    fn run_mixed_op_inner(&self, op: &MixedOp) -> TiledCiphertext {
         let ev = &op.eval;
         // The hoisted group runs its own flat kernel (shared ext-basis
-        // accumulators don't decompose into per-tile ops).
+        // accumulators don't decompose into per-tile ops); its result is
+        // tiled at this op's exit like every other kind's.
         if let MixedKind::RotSumHoisted(w) = op.kind {
-            return ev.rotate_sum_hoisted(&op.a, w);
+            return ev.rotate_sum_hoisted(&op.a, w).to_tiled();
         }
         let b = op.b.as_ref();
         let a_t = op.a.to_tiled();
@@ -682,7 +693,7 @@ impl Coordinator {
             }
             MixedKind::RotSumHoisted(_) => unreachable!("handled above"),
         };
-        out.to_flat()
+        out
     }
 
     /// Execute a heterogeneous batch: ops from (possibly) different
@@ -697,7 +708,9 @@ impl Coordinator {
         for op in ops {
             self.prepare_mixed_op(op);
         }
-        crate::parallel::pool().par_map(ops, |_, op| self.run_mixed_op(op))
+        // `to_flat` here is the batch-edge conversion: everything between
+        // the op's entry tiling and this flatten ran on bank tiles.
+        crate::parallel::pool().par_map(ops, |_, op| self.run_mixed_op(op).to_flat())
     }
 
     /// [`Self::execute_mixed_batch`] with **per-op panic isolation**: a
@@ -729,7 +742,7 @@ impl Coordinator {
             if let Err(e) = &prepared[i] {
                 return Err(e.clone());
             }
-            catch_unwind(AssertUnwindSafe(|| self.run_mixed_op(op)))
+            catch_unwind(AssertUnwindSafe(|| self.run_mixed_op(op).to_flat()))
                 .map_err(|_| "op failed during execution".to_string())
         });
         // Per-batch cost-model drift: simulated FHEmem time for exactly

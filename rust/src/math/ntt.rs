@@ -40,6 +40,90 @@ use crate::util::log2_exact;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
+/// Lanes per unrolled butterfly strip: 8 × u64 is one 512-bit vector (or
+/// two 256-bit halves), wide enough for the autovectorizer to pay off and
+/// small enough that the scalar tail never dominates a row.
+const STRIP: usize = 8;
+
+/// One shared-twiddle forward (CT) butterfly pass over a `lo`/`hi` slice
+/// pair, in fixed-width unrolled strips. The `[u64; STRIP]` views erase
+/// every bounds check, so each strip body is straight-line 8-lane code
+/// rustc autovectorizes. Identical per-element operations in identical
+/// order to the scalar loop it replaces — bit-exact by construction.
+#[inline]
+fn fwd_butterfly_strips(lo: &mut [u64], hi: &mut [u64], w: u64, ws: u64, q: u64, two_q: u64) {
+    debug_assert_eq!(lo.len(), hi.len());
+    let mut xs_it = lo.chunks_exact_mut(STRIP);
+    let mut ys_it = hi.chunks_exact_mut(STRIP);
+    for (xs, ys) in (&mut xs_it).zip(&mut ys_it) {
+        let xs: &mut [u64; STRIP] = xs.try_into().unwrap();
+        let ys: &mut [u64; STRIP] = ys.try_into().unwrap();
+        for l in 0..STRIP {
+            // x ∈ [0, 4q) coming in; fold to [0, 2q) lazily.
+            let mut u = xs[l];
+            if u >= two_q {
+                u -= two_q;
+            }
+            // v ∈ [0, 2q) for any u64 operand — the Shoup trick absorbs
+            // the unreduced y from the previous stage.
+            let v = mul_shoup_lazy(ys[l], w, ws, q);
+            xs[l] = u + v; // < 4q
+            ys[l] = u + two_q - v; // < 4q
+        }
+    }
+    for (x, y) in xs_it
+        .into_remainder()
+        .iter_mut()
+        .zip(ys_it.into_remainder().iter_mut())
+    {
+        let mut u = *x;
+        if u >= two_q {
+            u -= two_q;
+        }
+        let v = mul_shoup_lazy(*y, w, ws, q);
+        *x = u + v;
+        *y = u + two_q - v;
+    }
+}
+
+/// One shared-twiddle inverse (GS) butterfly pass over a `lo`/`hi` slice
+/// pair, strip-unrolled exactly like [`fwd_butterfly_strips`].
+#[inline]
+fn inv_butterfly_strips(lo: &mut [u64], hi: &mut [u64], w: u64, ws: u64, q: u64, two_q: u64) {
+    debug_assert_eq!(lo.len(), hi.len());
+    let mut xs_it = lo.chunks_exact_mut(STRIP);
+    let mut ys_it = hi.chunks_exact_mut(STRIP);
+    for (xs, ys) in (&mut xs_it).zip(&mut ys_it) {
+        let xs: &mut [u64; STRIP] = xs.try_into().unwrap();
+        let ys: &mut [u64; STRIP] = ys.try_into().unwrap();
+        for l in 0..STRIP {
+            let u = xs[l]; // < 2q
+            let v = ys[l]; // < 2q
+            let mut s = u + v; // < 4q
+            if s >= two_q {
+                s -= two_q;
+            }
+            xs[l] = s; // < 2q
+            // u - v + 2q ∈ (0, 4q); lazy Shoup folds it back < 2q.
+            ys[l] = mul_shoup_lazy(u + two_q - v, w, ws, q);
+        }
+    }
+    for (x, y) in xs_it
+        .into_remainder()
+        .iter_mut()
+        .zip(ys_it.into_remainder().iter_mut())
+    {
+        let u = *x;
+        let v = *y;
+        let mut s = u + v;
+        if s >= two_q {
+            s -= two_q;
+        }
+        *x = s;
+        *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
+    }
+}
+
 /// Find a generator of the 2N-th roots of unity mod q (q ≡ 1 mod 2N).
 fn primitive_2n_root(q: u64, n: usize) -> u64 {
     let order = 2 * n as u64;
@@ -187,20 +271,9 @@ impl NttContext {
             for i in 0..m {
                 let w = self.psi_rev[m + i];
                 let ws = self.psi_rev_shoup[m + i];
-                // split borrows so the butterfly is bounds-check free
+                // split borrows, then the shared unrolled-strip kernel
                 let (lo, hi) = a[2 * i * t..2 * i * t + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    // x ∈ [0, 4q) coming in; fold to [0, 2q) lazily.
-                    let mut u = *x;
-                    if u >= two_q {
-                        u -= two_q;
-                    }
-                    // v ∈ [0, 2q) for any u64 operand — the Shoup trick
-                    // absorbs the unreduced y from the previous stage.
-                    let v = mul_shoup_lazy(*y, w, ws, q);
-                    *x = u + v; // < 4q
-                    *y = u + two_q - v; // < 4q
-                }
+                fwd_butterfly_strips(lo, hi, w, ws, q, two_q);
             }
             m <<= 1;
         }
@@ -229,17 +302,7 @@ impl NttContext {
                 let w = self.psi_inv_rev[h + i];
                 let ws = self.psi_inv_rev_shoup[h + i];
                 let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x; // < 2q
-                    let v = *y; // < 2q
-                    let mut s = u + v; // < 4q
-                    if s >= two_q {
-                        s -= two_q;
-                    }
-                    *x = s; // < 2q
-                    // u - v + 2q ∈ (0, 4q); lazy Shoup folds it back < 2q.
-                    *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
-                }
+                inv_butterfly_strips(lo, hi, w, ws, q, two_q);
                 j1 += 2 * t;
             }
             t <<= 1;
@@ -275,37 +338,17 @@ impl NttContext {
     // traffic the `sim::cost` model charges.
 
     /// Forward column-pass butterfly across a whole row pair: one
-    /// twiddle, `n2` lazy CT butterflies.
+    /// twiddle, `n2` lazy CT butterflies in unrolled strips.
     #[inline]
     fn fwd_cross_rows(&self, u_row: &mut [u64], v_row: &mut [u64], w: u64, ws: u64) {
-        let q = self.q;
-        let two_q = self.two_q;
-        for (x, y) in u_row.iter_mut().zip(v_row.iter_mut()) {
-            let mut u = *x;
-            if u >= two_q {
-                u -= two_q;
-            }
-            let v = mul_shoup_lazy(*y, w, ws, q);
-            *x = u + v;
-            *y = u + two_q - v;
-        }
+        fwd_butterfly_strips(u_row, v_row, w, ws, self.q, self.two_q);
     }
 
-    /// Inverse column-pass butterfly across a whole row pair (GS).
+    /// Inverse column-pass butterfly across a whole row pair (GS), in
+    /// unrolled strips.
     #[inline]
     fn inv_cross_rows(&self, u_row: &mut [u64], v_row: &mut [u64], w: u64, ws: u64) {
-        let q = self.q;
-        let two_q = self.two_q;
-        for (x, y) in u_row.iter_mut().zip(v_row.iter_mut()) {
-            let u = *x;
-            let v = *y;
-            let mut s = u + v;
-            if s >= two_q {
-                s -= two_q;
-            }
-            *x = s;
-            *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
-        }
+        inv_butterfly_strips(u_row, v_row, w, ws, self.q, self.two_q);
     }
 
     /// Row pass of the forward four-step: the last log2(n2) CT stages of
@@ -325,15 +368,7 @@ impl NttContext {
                 let w = self.psi_rev[base_tw + i2];
                 let ws = self.psi_rev_shoup[base_tw + i2];
                 let (lo, hi) = row[2 * i2 * t..2 * i2 * t + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let mut u = *x;
-                    if u >= two_q {
-                        u -= two_q;
-                    }
-                    let v = mul_shoup_lazy(*y, w, ws, q);
-                    *x = u + v;
-                    *y = u + two_q - v;
-                }
+                fwd_butterfly_strips(lo, hi, w, ws, q, two_q);
             }
             m2 <<= 1;
         }
@@ -356,16 +391,7 @@ impl NttContext {
                 let w = self.psi_inv_rev[base_tw + i2];
                 let ws = self.psi_inv_rev_shoup[base_tw + i2];
                 let (lo, hi) = row[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x;
-                    let v = *y;
-                    let mut s = u + v;
-                    if s >= two_q {
-                        s -= two_q;
-                    }
-                    *x = s;
-                    *y = mul_shoup_lazy(u + two_q - v, w, ws, q);
-                }
+                inv_butterfly_strips(lo, hi, w, ws, q, two_q);
                 j1 += 2 * t;
             }
             t <<= 1;
@@ -374,12 +400,26 @@ impl NttContext {
     }
 
     /// Final forward correction: `[0, 4q) → [0, q)` (same pass as
-    /// [`Self::forward`]).
+    /// [`Self::forward`]), in unrolled strips.
     #[inline]
     fn correct_forward(&self, a: &mut [u64]) {
         let q = self.q;
         let two_q = self.two_q;
-        for x in a.iter_mut() {
+        let mut it = a.chunks_exact_mut(STRIP);
+        for xs in &mut it {
+            let xs: &mut [u64; STRIP] = xs.try_into().unwrap();
+            for x in xs.iter_mut() {
+                let mut v = *x;
+                if v >= two_q {
+                    v -= two_q;
+                }
+                if v >= q {
+                    v -= q;
+                }
+                *x = v;
+            }
+        }
+        for x in it.into_remainder().iter_mut() {
             let mut v = *x;
             if v >= two_q {
                 v -= two_q;
@@ -391,13 +431,21 @@ impl NttContext {
         }
     }
 
-    /// Final inverse scaling by N⁻¹ (full Shoup reduction to `[0, q)`).
+    /// Final inverse scaling by N⁻¹ (full Shoup reduction to `[0, q)`),
+    /// in unrolled strips.
     #[inline]
     fn scale_inverse(&self, a: &mut [u64]) {
         let n_inv = self.n_inv;
         let ns = self.n_inv_shoup;
         let q = self.q;
-        for x in a.iter_mut() {
+        let mut it = a.chunks_exact_mut(STRIP);
+        for xs in &mut it {
+            let xs: &mut [u64; STRIP] = xs.try_into().unwrap();
+            for x in xs.iter_mut() {
+                *x = mul_shoup(*x, n_inv, ns, q);
+            }
+        }
+        for x in it.into_remainder().iter_mut() {
             *x = mul_shoup(*x, n_inv, ns, q);
         }
     }

@@ -28,11 +28,42 @@
 //! [`RnsPoly`]; `rust/tests/tiled_kernels.rs` asserts this end to end
 //! (add/mul/keyswitch and full ciphertext ops).
 
-use super::modarith::{add_mod, add_mod_lazy, mul_mod, neg_mod, sub_mod};
+use super::modarith::{add_mod_lazy, mul_mod, neg_mod, sub_mod};
 use super::poly::{Domain, RnsPoly};
 use super::rns::RnsBasis;
 use crate::mapping::layout::LayoutPlan;
 use std::sync::Arc;
+
+/// Residue-domain bound of a tiled polynomial's coefficients — the
+/// chain-level extension of the Harvey lazy discipline the NTT kernels
+/// already use internally. A `Lazy2q` value is congruent mod q to its
+/// canonical form; one conditional subtract per coefficient restores
+/// `Canonical`. Pointwise chains (add/sub/mul/fused_mul_add) stay lazy
+/// and pay that fold **once at chain exit** (`normalize` / `to_flat`)
+/// instead of once per op; the NTT transforms, `rescale_by_last`,
+/// `automorphism` and the keyswitch ModDown all accept `[0, 2q)` inputs
+/// directly (they fold in-register as they read), so no eager correction
+/// pass is ever forced mid-chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// Every coefficient fully reduced into `[0, q)`.
+    Canonical,
+    /// Every coefficient in `[0, 2q)` (requires q < 2^62, which every
+    /// modulus family in `math::primes` satisfies).
+    Lazy2q,
+}
+
+/// Fold one lazy coefficient `v < 2q` back into `[0, q)`. Identity on
+/// canonical inputs, so it is safe (and branch-predictable) to apply
+/// unconditionally when a kernel must read canonical values.
+#[inline(always)]
+pub(crate) fn fold2q(v: u64, q: u64) -> u64 {
+    if v >= q {
+        v - q
+    } else {
+        v
+    }
+}
 
 /// A polynomial in `R_{q_0 · … · q_{L-1}}` stored as bank tiles,
 /// limb-major: tile `b` of limb `j` sits at `tiles[j * plan.banks + b]`.
@@ -43,6 +74,8 @@ pub struct TiledRnsPoly {
     /// Number of active moduli (the "level + 1" prefix of the basis).
     pub limbs: usize,
     pub domain: Domain,
+    /// Residue-domain bound of every coefficient (see [`Bound`]).
+    pub bound: Bound,
     /// `limbs * plan.banks` tiles of `plan.tile_elems` words each.
     pub tiles: Vec<Vec<u64>>,
 }
@@ -56,6 +89,7 @@ impl TiledRnsPoly {
             plan,
             limbs,
             domain,
+            bound: Bound::Canonical,
             tiles,
         }
     }
@@ -75,18 +109,29 @@ impl TiledRnsPoly {
             plan,
             limbs: p.limbs,
             domain: p.domain,
+            bound: Bound::Canonical,
             tiles,
         }
     }
 
-    /// Reassemble the flat representation (pure memcpy; bit-exact).
+    /// Reassemble the flat representation. A pure memcpy for canonical
+    /// polys; a lazy poly is folded to `[0, q)` as it is copied (the flat
+    /// [`RnsPoly`] is always canonical), so the flat view of a lazy chain
+    /// is bit-identical to the eager chain's result.
     pub fn to_flat(&self) -> RnsPoly {
         let banks = self.plan.banks;
+        let lazy = self.bound == Bound::Lazy2q;
         let data: Vec<Vec<u64>> = (0..self.limbs)
             .map(|j| {
+                let q = self.basis.q(j);
                 let mut row = Vec::with_capacity(self.plan.n);
                 for b in 0..banks {
-                    row.extend_from_slice(&self.tiles[j * banks + b]);
+                    let tile = &self.tiles[j * banks + b];
+                    if lazy {
+                        row.extend(tile.iter().map(|&v| fold2q(v, q)));
+                    } else {
+                        row.extend_from_slice(tile);
+                    }
                 }
                 row
             })
@@ -97,6 +142,23 @@ impl TiledRnsPoly {
             domain: self.domain,
             data,
         }
+    }
+
+    /// Chain-exit correction: fold every coefficient back into `[0, q)`.
+    /// No-op (and no pass) when already canonical.
+    pub fn normalize(&mut self) {
+        if self.bound == Bound::Canonical {
+            return;
+        }
+        let basis = self.basis.clone();
+        let banks = self.plan.banks;
+        crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
+            for a in tile.iter_mut() {
+                *a = fold2q(*a, q);
+            }
+        });
+        self.bound = Bound::Canonical;
     }
 
     pub fn n(&self) -> usize {
@@ -117,6 +179,9 @@ impl TiledRnsPoly {
 
     /// Switch to NTT domain in place via the four-step transform on
     /// tiles (no-op if already there). Limbs fan out as tile groups.
+    /// Accepts `[0, 2q)` chain inputs directly — the Harvey butterflies
+    /// absorb them — and emits canonical values (the transform's own
+    /// correction pass doubles as the chain exit).
     pub fn to_ntt(&mut self) {
         if self.domain == Domain::Ntt {
             return;
@@ -127,9 +192,11 @@ impl TiledRnsPoly {
             basis.ntt[j].forward_tiled(group, &plan)
         });
         self.domain = Domain::Ntt;
+        self.bound = Bound::Canonical;
     }
 
-    /// Switch to coefficient domain in place (four-step inverse).
+    /// Switch to coefficient domain in place (four-step inverse). Same
+    /// bound contract as [`Self::to_ntt`]: `[0, 2q)` in, canonical out.
     pub fn to_coeff(&mut self) {
         if self.domain == Domain::Coeff {
             return;
@@ -140,54 +207,70 @@ impl TiledRnsPoly {
             basis.ntt[j].inverse_tiled(group, &plan)
         });
         self.domain = Domain::Coeff;
+        self.bound = Bound::Canonical;
     }
 
+    /// Lazy addition: both operands may be in `[0, 2q)`; the sum gets one
+    /// conditional subtract of 2q, so the result stays `[0, 2q)` and the
+    /// full `[0, q)` correction is deferred to chain exit.
     pub fn add_assign(&mut self, other: &Self) {
         self.check_compat(other);
         let basis = self.basis.clone();
         let banks = self.plan.banks;
         crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
-            let q = basis.q(idx / banks);
+            let twoq = 2 * basis.q(idx / banks);
             for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
-                *a = add_mod(*a, b, q);
+                *a = add_mod_lazy(*a, b, twoq);
             }
         });
+        self.bound = Bound::Lazy2q;
     }
 
+    /// Lazy subtraction: `a − b ≡ a + 2q − b` with one conditional
+    /// subtract, valid for both operands in `[0, 2q)`; result `[0, 2q)`.
     pub fn sub_assign(&mut self, other: &Self) {
         self.check_compat(other);
         let basis = self.basis.clone();
         let banks = self.plan.banks;
         crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
-            let q = basis.q(idx / banks);
+            let twoq = 2 * basis.q(idx / banks);
             for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
-                *a = sub_mod(*a, b, q);
+                let s = *a + twoq - b; // < 4q
+                *a = if s >= twoq { s - twoq } else { s };
             }
         });
+        self.bound = Bound::Lazy2q;
     }
 
     pub fn neg_assign(&mut self) {
         let banks = self.plan.banks;
+        let lazy = self.bound == Bound::Lazy2q;
         for (idx, tile) in self.tiles.iter_mut().enumerate() {
             let q = self.basis.q(idx / banks);
             for a in tile.iter_mut() {
-                *a = neg_mod(*a, q);
+                let v = if lazy { fold2q(*a, q) } else { *a };
+                *a = neg_mod(v, q);
             }
         }
+        self.bound = Bound::Canonical;
     }
 
-    /// Pointwise (NTT-domain) multiplication — Barrett, per-tile fan-out.
+    /// Pointwise (NTT-domain) multiplication — lazy Barrett, per-tile
+    /// fan-out. Operands in `[0, 2q)` are folded in-register as they are
+    /// read; the product keeps the `[0, 2q)` bound (correction deferred).
     pub fn mul_assign(&mut self, other: &Self) {
         self.check_compat(other);
         assert_eq!(self.domain, Domain::Ntt, "mul requires NTT domain");
         let basis = self.basis.clone();
         let banks = self.plan.banks;
         crate::parallel::par_tiles(&mut self.tiles, |idx, tile| {
+            let q = basis.q(idx / banks);
             let br = basis.barrett[idx / banks];
             for (a, &b) in tile.iter_mut().zip(&other.tiles[idx]) {
-                *a = br.mul(*a, b);
+                *a = br.mul_lazy(fold2q(*a, q), fold2q(b, q));
             }
         });
+        self.bound = Bound::Lazy2q;
     }
 
     /// Fused pointwise multiply–accumulate chain in the NTT domain —
@@ -212,15 +295,22 @@ impl TiledRnsPoly {
             for (c, acc) in tile.iter_mut().enumerate() {
                 let mut s = 0u64;
                 for (x, y) in terms {
-                    s = add_mod_lazy(s, br.mul_lazy(x.tiles[idx][c], y.tiles[idx][c]), twoq);
+                    // Operands may carry the [0, 2q) chain bound; fold
+                    // in-register (identity on canonical values).
+                    let xv = fold2q(x.tiles[idx][c], q);
+                    let yv = fold2q(y.tiles[idx][c], q);
+                    s = add_mod_lazy(s, br.mul_lazy(xv, yv), twoq);
                 }
-                *acc = if s >= q { s - q } else { s };
+                // Stay lazy: the chain-exit normalize pays the final fold.
+                *acc = s;
             }
         });
+        out.bound = Bound::Lazy2q;
         out
     }
 
-    /// Multiply by a per-limb scalar.
+    /// Multiply by a per-limb scalar (accepts `[0, 2q)` inputs; output
+    /// canonical).
     pub fn mul_scalar_per_limb(&mut self, scalars: &[u64]) {
         assert_eq!(scalars.len(), self.limbs);
         let basis = self.basis.clone();
@@ -229,9 +319,10 @@ impl TiledRnsPoly {
             let q = basis.q(idx / banks);
             let s = scalars[idx / banks] % q;
             for a in tile.iter_mut() {
-                *a = mul_mod(*a, s, q);
+                *a = mul_mod(fold2q(*a, q), s, q);
             }
         });
+        self.bound = Bound::Canonical;
     }
 
     /// Drop the last limb (rescale's tail step): truncates one tile
@@ -250,6 +341,7 @@ impl TiledRnsPoly {
             plan: self.plan.clone(),
             limbs,
             domain: self.domain,
+            bound: self.bound,
             tiles: self.tiles[..limbs * self.plan.banks].to_vec(),
         }
     }
@@ -274,6 +366,7 @@ impl TiledRnsPoly {
         let basis = self.basis.clone();
         let mut out = Self::zero(self.basis.clone(), l - 1, Domain::Coeff);
         let last_tiles = &self.tiles[(l - 1) * banks..l * banks];
+        let lazy = self.bound == Bound::Lazy2q;
         crate::parallel::par_tiles(&mut out.tiles, |idx, tile| {
             let j = idx / banks;
             let b = idx % banks;
@@ -282,7 +375,12 @@ impl TiledRnsPoly {
             let src = &self.tiles[idx];
             let last = &last_tiles[b];
             for c in 0..tile.len() {
-                let diff = sub_mod(src[c], last[c] % q, q);
+                // Lazy [0, 2q) inputs fold in-register — no eager
+                // normalize pass before the rescale. `last` lives mod
+                // q_last, so it folds against q_last before the `% q`.
+                let s = if lazy { fold2q(src[c], q) } else { src[c] };
+                let t = if lazy { fold2q(last[c], ql) } else { last[c] };
+                let diff = sub_mod(s, t % q, q);
                 tile[c] = mul_mod(diff, inv, q);
             }
         });
@@ -323,6 +421,7 @@ impl TiledRnsPoly {
             })
             .collect();
         let mut out = Self::zero(self.basis.clone(), self.limbs, Domain::Coeff);
+        let lazy = self.bound == Bound::Lazy2q;
         // Limbs are independent; within a limb the column map fixes each
         // element's destination tile/row/column directly.
         crate::parallel::par_tile_groups(&mut out.tiles, banks, |j, group| {
@@ -334,6 +433,8 @@ impl TiledRnsPoly {
                     let rk = (r * k) % two_n1;
                     let src_row = &src_tile[lr * n2..(lr + 1) * n2];
                     for (c, &v) in src_row.iter().enumerate() {
+                        // Accept [0, 2q) chain inputs: fold as we read.
+                        let v = if lazy { fold2q(v, q) } else { v };
                         let (c2, a) = col_map[c];
                         let mut rr = rk + a;
                         if rr >= two_n1 {
@@ -358,7 +459,7 @@ impl TiledRnsPoly {
         for (idx, tile) in self.tiles.iter().enumerate() {
             let q = self.basis.q(idx / banks);
             for (a, b) in tile.iter().zip(&other.tiles[idx]) {
-                let d = sub_mod(*a, *b, q);
+                let d = sub_mod(fold2q(*a, q), fold2q(*b, q), q);
                 let d = d.min(q - d);
                 worst = worst.max(d);
             }
@@ -518,6 +619,87 @@ mod tests {
                 assert_eq!(tiled.to_flat().data, flat.data, "n={n} k={k}");
             }
         }
+    }
+
+    #[test]
+    fn lazy_bound_state_machine() {
+        // Canonical → (add) → Lazy2q → {normalize, to_flat, rescale,
+        // automorphism, to_ntt} all exit canonical with the same
+        // residues as the eager chain.
+        let b = basis(6, 3);
+        let mut rng = crate::util::check::SplitMix64::new(7);
+        let x = random_poly(&b, 3, &mut rng);
+        let y = random_poly(&b, 3, &mut rng);
+        let mut t = TiledRnsPoly::from_flat(&x);
+        assert_eq!(t.bound, Bound::Canonical);
+        t.add_assign(&TiledRnsPoly::from_flat(&y));
+        assert_eq!(t.bound, Bound::Lazy2q);
+        // Lazy invariant: every coefficient < 2q.
+        for (idx, tile) in t.tiles.iter().enumerate() {
+            let q = b.q(idx / t.plan.banks);
+            assert!(tile.iter().all(|&v| v < 2 * q), "Lazy2q bound violated");
+        }
+        // Eager flat reference.
+        let mut eager = x.clone();
+        eager.add_assign(&y);
+        // to_flat folds without mutating; normalize folds in place.
+        assert_eq!(t.to_flat().data, eager.data);
+        let mut norm = t.clone();
+        norm.normalize();
+        assert_eq!(norm.bound, Bound::Canonical);
+        assert_eq!(norm.to_flat().data, eager.data);
+        // Lazy2q in → rescale out, canonical and bit-identical to the
+        // canonical-input rescale.
+        let r_lazy = t.rescale_by_last();
+        let r_norm = norm.rescale_by_last();
+        assert_eq!(r_lazy.bound, Bound::Canonical);
+        assert_eq!(r_lazy.to_flat().data, r_norm.to_flat().data);
+        // Lazy2q in → automorphism out, canonical and bit-identical.
+        let g_lazy = t.automorphism(5);
+        let g_norm = norm.automorphism(5);
+        assert_eq!(g_lazy.bound, Bound::Canonical);
+        assert_eq!(g_lazy.to_flat().data, g_norm.to_flat().data);
+        // Lazy2q in → forward NTT out, canonical and bit-identical.
+        let mut n_lazy = t.clone();
+        let mut n_norm = norm.clone();
+        n_lazy.to_ntt();
+        n_norm.to_ntt();
+        assert_eq!(n_lazy.bound, Bound::Canonical);
+        assert_eq!(n_lazy.to_flat().data, n_norm.to_flat().data);
+    }
+
+    #[test]
+    fn lazy_chain_matches_eager_chain() {
+        // A whole deferred-correction chain (add → sub → NTT → mul →
+        // iNTT) must land bit-identical to the flat eager chain.
+        let b = basis(7, 3);
+        forall("lazy chain == eager chain", 4, |rng| {
+            let x = random_poly(&b, 3, rng);
+            let y = random_poly(&b, 3, rng);
+            let z = random_poly(&b, 3, rng);
+            // Eager flat chain.
+            let mut f = x.clone();
+            f.add_assign(&y);
+            f.sub_assign(&z);
+            f.to_ntt();
+            let mut fz = z.clone();
+            fz.to_ntt();
+            f.mul_assign(&fz);
+            f.to_coeff();
+            // Lazy tiled chain: corrections deferred until the NTT edge
+            // and the final to_flat.
+            let mut t = TiledRnsPoly::from_flat(&x);
+            t.add_assign(&TiledRnsPoly::from_flat(&y));
+            t.sub_assign(&TiledRnsPoly::from_flat(&z));
+            assert_eq!(t.bound, Bound::Lazy2q);
+            t.to_ntt();
+            let mut tz = TiledRnsPoly::from_flat(&z);
+            tz.to_ntt();
+            t.mul_assign(&tz);
+            assert_eq!(t.bound, Bound::Lazy2q, "mul defers correction");
+            t.to_coeff();
+            assert_eq!(t.to_flat().data, f.data);
+        });
     }
 
     #[test]

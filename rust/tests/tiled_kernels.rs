@@ -11,7 +11,7 @@ use fhemem::ckks::keyswitch::{key_switch, key_switch_tiled};
 use fhemem::ckks::{CkksContext, Evaluator, KeyChain, KeyTag};
 use fhemem::mapping::LayoutPlan;
 use fhemem::math::poly::{Domain, RnsPoly};
-use fhemem::math::tiled::TiledRnsPoly;
+use fhemem::math::tiled::{Bound, TiledRnsPoly};
 use fhemem::params::CkksParams;
 use fhemem::util::check::{forall, SplitMix64};
 use std::sync::Arc;
@@ -225,5 +225,165 @@ fn tiled_chain_stays_bit_identical_over_depth() {
             dec[i],
             want[i]
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// lazy [0,2q) op chains: deferred correction == eager correction
+// ---------------------------------------------------------------------
+
+#[test]
+fn lazy_chain_bit_identity_across_param_sets() {
+    // The Harvey lazy discipline across whole op chains: running
+    // add/sub/mul/fused with deferred correction (Bound::Lazy2q carried
+    // between ops, one fold at chain exit) must be bit-identical to
+    // normalizing after every op, on every prime family — including the
+    // exits that accept [0,2q) inputs directly (rescale_by_last,
+    // automorphism, to_ntt). Two limbs keep the 2^16 paper ring cheap.
+    let sets: Vec<CkksParams> = vec![
+        CkksParams::func_tiny(),
+        CkksParams::func_default(),
+        CkksParams::func_boot(),
+        CkksParams::artifact(),
+        CkksParams::paper_lola(4),
+        CkksParams::paper_deep(),
+    ];
+    for p in sets {
+        let ctx = CkksContext::new(p);
+        let name = ctx.params.name;
+        let mut rng = SplitMix64::new(ctx.n() as u64 ^ 0x1A2B);
+
+        // --- coeff-domain chain: (a + b) - c, exits via rescale /
+        //     automorphism / to_ntt, all fed a Lazy2q input.
+        let a = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Coeff));
+        let b = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Coeff));
+        let c = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Coeff));
+
+        let mut lazy = a.clone();
+        lazy.add_assign(&b);
+        lazy.sub_assign(&c);
+        assert_eq!(lazy.bound, Bound::Lazy2q, "{name}: chain stays lazy");
+
+        let mut eager = a.clone();
+        eager.add_assign(&b);
+        eager.normalize();
+        eager.sub_assign(&c);
+        eager.normalize();
+        assert_eq!(eager.bound, Bound::Canonical);
+
+        assert_eq!(lazy.to_flat().data, eager.to_flat().data, "{name}: to_flat exit");
+
+        let r_lazy = lazy.rescale_by_last();
+        let r_eager = eager.rescale_by_last();
+        assert_eq!(r_lazy.bound, Bound::Canonical, "{name}: rescale exits canonical");
+        assert_eq!(r_lazy.to_flat().data, r_eager.to_flat().data, "{name}: rescale exit");
+
+        let k = RnsPoly::rotation_to_galois(1, ctx.n());
+        let g_lazy = lazy.automorphism(k);
+        let g_eager = eager.automorphism(k);
+        assert_eq!(g_lazy.bound, Bound::Canonical, "{name}: automorphism exits canonical");
+        assert_eq!(g_lazy.to_flat().data, g_eager.to_flat().data, "{name}: automorphism exit");
+
+        let mut n_lazy = lazy.clone();
+        n_lazy.to_ntt();
+        let mut n_eager = eager.clone();
+        n_eager.to_ntt();
+        assert_eq!(n_lazy.bound, Bound::Canonical, "{name}: NTT exits canonical");
+        assert_eq!(n_lazy.to_flat().data, n_eager.to_flat().data, "{name}: NTT exit");
+
+        // --- NTT-domain chain: ((x·y) + z) then a fused cross term,
+        //     correction deferred through the whole thing.
+        let x = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Ntt));
+        let y = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Ntt));
+        let z = TiledRnsPoly::from_flat(&random_poly(&ctx, 2, &mut rng, Domain::Ntt));
+
+        let mut ml = x.clone();
+        ml.mul_assign(&y);
+        ml.add_assign(&z);
+        let fl = TiledRnsPoly::fused_mul_add(&[(&ml, &y), (&z, &x)]);
+        assert_eq!(fl.bound, Bound::Lazy2q, "{name}: fused stays lazy");
+
+        let mut me = x.clone();
+        me.mul_assign(&y);
+        me.normalize();
+        me.add_assign(&z);
+        me.normalize();
+        let mut fe = TiledRnsPoly::fused_mul_add(&[(&me, &y), (&z, &x)]);
+        fe.normalize();
+
+        assert_eq!(fl.to_flat().data, fe.to_flat().data, "{name}: fused chain exit");
+    }
+}
+
+// ---------------------------------------------------------------------
+// generic batch layer: tiled batch == flat batch, element for element
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiled_batch_bit_identical_to_flat_batch() {
+    // The Evaluator *_batch fan-out is generic over CtRepr: a batch of
+    // TiledCiphertext must produce exactly the flat batch's bits, with
+    // no per-element flat round-trip in between.
+    let ev = evaluator(CkksParams::func_tiny(), 0x1234);
+    let slots = ev.ctx.encoder.slots();
+    let mut rng = SplitMix64::new(0xBA7C);
+    let level = 3;
+    let n = 4;
+    let mk = |rng: &mut SplitMix64| {
+        let z: Vec<f64> = (0..slots).map(|_| rng.f64() - 0.5).collect();
+        ev.encrypt_real(&z, level)
+    };
+    let fa: Vec<_> = (0..n).map(|_| mk(&mut rng)).collect();
+    let fb: Vec<_> = (0..n).map(|_| mk(&mut rng)).collect();
+    let ta: Vec<TiledCiphertext> = fa.iter().map(|c| c.to_tiled()).collect();
+    let tb: Vec<TiledCiphertext> = fb.iter().map(|c| c.to_tiled()).collect();
+    // Include a zero rotation so the identity-skip path is exercised.
+    let steps = [1i64, 0, -2, 3];
+
+    let cases = [
+        (ev.add_batch(&ta, &tb), ev.add_batch(&fa, &fb), "add_batch"),
+        (ev.sub_batch(&ta, &tb), ev.sub_batch(&fa, &fb), "sub_batch"),
+        (ev.mul_batch(&ta, &tb), ev.mul_batch(&fa, &fb), "mul_batch"),
+        (
+            ev.rotate_batch(&ta, &steps),
+            ev.rotate_batch(&fa, &steps),
+            "rotate_batch",
+        ),
+    ];
+    for (tiled, flat, what) in &cases {
+        assert_eq!(tiled.len(), flat.len(), "{what}: length");
+        for (i, (t, f)) in tiled.iter().zip(flat).enumerate() {
+            assert_ct_bit_identical(t, f, &format!("{what}[{i}]"));
+        }
+    }
+}
+
+#[test]
+fn key_switch_batch_bit_identical_to_singles() {
+    // The batch key-switch entry points are a pure fan-out: element i of
+    // the batch must match the single-call result bit for bit, flat and
+    // tiled alike.
+    let ev = evaluator(CkksParams::func_tiny(), 0x5EED);
+    let ctx = &ev.ctx;
+    let level = 3;
+    let evk = ev.chain.eval_key(level, KeyTag::Relin);
+    let mut rng = SplitMix64::new(0xD1CE);
+    let ds: Vec<RnsPoly> = (0..3)
+        .map(|_| random_poly(ctx, level, &mut rng, Domain::Ntt))
+        .collect();
+    let dts: Vec<TiledRnsPoly> = ds.iter().map(TiledRnsPoly::from_flat).collect();
+
+    let flat_batch = fhemem::ckks::keyswitch::key_switch_batch(ctx, &ds, &evk);
+    let tiled_batch = fhemem::ckks::keyswitch::key_switch_batch_tiled(ctx, &dts, &evk);
+    assert_eq!(flat_batch.len(), ds.len());
+    assert_eq!(tiled_batch.len(), ds.len());
+    for i in 0..ds.len() {
+        let (f0, f1) = key_switch(ctx, &ds[i], &evk);
+        assert_eq!(flat_batch[i].0.data, f0.data, "flat ks0 [{i}]");
+        assert_eq!(flat_batch[i].1.data, f1.data, "flat ks1 [{i}]");
+        let (t0, t1) = key_switch_tiled(ctx, &dts[i], &evk);
+        assert_eq!(tiled_batch[i].0.to_flat().data, t0.to_flat().data, "tiled ks0 [{i}]");
+        assert_eq!(tiled_batch[i].1.to_flat().data, t1.to_flat().data, "tiled ks1 [{i}]");
+        assert_eq!(tiled_batch[i].0.to_flat().data, f0.data, "tiled==flat ks0 [{i}]");
     }
 }
