@@ -84,6 +84,21 @@ fn main() {
         }
     };
 
+    // Readiness + scrape-window baseline: /healthz proves the HTTP
+    // listener is live before the fleet fires, and one /metrics scrape
+    // advances the `*_delta` histogram baselines so the post-run
+    // snapshot's delta figures cover exactly this run — even against a
+    // long-lived external server that has absorbed earlier traffic.
+    if let Some(http) = &http_addr {
+        let health = http_get(http, "/healthz").expect("GET /healthz");
+        assert!(
+            health.contains("\"status\": \"ok\""),
+            "healthz did not report ok: {health}"
+        );
+        println!("GET /healthz OK ({} bytes)", health.len());
+        let _ = http_get(http, "/metrics");
+    }
+
     // Idle block: raw connections that never send a byte. Under the
     // readiness loop they cost two empty buffers each and zero threads;
     // under thread-per-connection they would each pin a thread.
@@ -174,19 +189,43 @@ fn main() {
          p50 {p50:.1} ms, p99 {p99:.1} ms, sustained {sustained:.1} ops/s"
     );
 
+    // One traced probe op: stamp a trace id on the wire, run a rotate,
+    // then pull the stitched trace back out of `/spans?trace=<id>` —
+    // request → queue-wait → batch-exec linked end-to-end over TCP.
+    let mut probe = ServiceClient::connect(&addr, 1000, CkksParams::func_tiny(), 0xF1EE7)
+        .expect("metrics probe");
+    let trace_id: u64 = 0xF1EE7_000 + tenants as u64;
+    probe.set_trace(trace_id);
+    {
+        let slots = probe.ctx.encoder.slots();
+        let z: Vec<f64> = vec![0.05; slots];
+        let ct = probe.encrypt(&z, 3);
+        probe.rotate(&ct, 1).expect("traced probe rotate");
+    }
+    probe.set_trace(0);
+
     // Scrape the HTTP endpoints (proves the plain-GET paths e2e) and the
-    // wire-level snapshot for batching evidence.
+    // wire-level snapshot for batching evidence. The first /metrics body
+    // after the run is the one the bench figures come from: its `*_delta`
+    // window spans exactly the load (the pre-run scrape set the
+    // baseline).
+    let mut mdoc_http: Option<Json> = None;
     if let Some(http) = &http_addr {
         let body = http_get(http, "/metrics").expect("GET /metrics");
         assert!(
             body.contains("\"batches\""),
             "metrics endpoint returned no scheduler snapshot: {body}"
         );
+        mdoc_http = Some(Json::parse(&body).expect("metrics JSON parses"));
         println!("GET /metrics OK ({} bytes)", body.len());
         let prom = http_get(http, "/metrics/prometheus").expect("GET /metrics/prometheus");
         assert!(
             prom.contains("_bucket{le=") && prom.contains("# TYPE"),
             "prometheus exposition carries no histogram buckets: {prom}"
+        );
+        assert!(
+            prom.contains("calib_factor_computation"),
+            "prometheus exposition carries no calibration gauges: {prom}"
         );
         println!("GET /metrics/prometheus OK ({} bytes)", prom.len());
         let spans = http_get(http, "/spans").expect("GET /spans");
@@ -195,16 +234,25 @@ fn main() {
             "span endpoint returned no trace document: {spans}"
         );
         println!("GET /spans OK ({} bytes)", spans.len());
+        let stitched = http_get(http, &format!("/spans?trace={trace_id}"))
+            .expect("GET /spans?trace=");
+        for name in ["\"request\"", "\"queue-wait\"", "\"batch-exec\""] {
+            assert!(
+                stitched.contains(name),
+                "trace {trace_id} is missing its {name} span: {stitched}"
+            );
+        }
+        println!("GET /spans?trace={trace_id} OK ({} bytes)", stitched.len());
     }
-    let mut probe = ServiceClient::connect(&addr, 1000, CkksParams::func_tiny(), 0xF1EE7)
-        .expect("metrics probe");
     let metrics_text = probe.metrics().expect("metrics");
     println!("scheduler metrics:\n{metrics_text}");
     // Server-side observability figures for the bench artifact: the
     // scheduler's own queue-wait/exec p99s and the running cost-model
-    // drift ratio, straight from the metrics snapshot (works identically
-    // for in-process and external servers).
-    let mdoc = Json::parse(&metrics_text).expect("metrics JSON parses");
+    // drift ratios (raw and calibration-corrected), straight from the
+    // metrics snapshot (works identically for in-process and external
+    // servers). Prefer the HTTP body scraped right after the run so the
+    // delta figures cover the load window.
+    let mdoc = mdoc_http.unwrap_or_else(|| Json::parse(&metrics_text).expect("metrics JSON parses"));
     let figure = |key: &str| -> f64 {
         mdoc.field(key)
             .ok()
@@ -214,18 +262,24 @@ fn main() {
     let queue_wait_p99 = figure("queue_wait_p99_ms");
     let exec_p99 = figure("exec_p99_ms");
     let drift = figure("cost_model_drift_ratio");
+    let calibrated = figure("calibrated_drift_ratio");
+    let queue_wait_delta = figure("queue_wait_p99_ms_delta");
+    let exec_delta = figure("exec_p99_ms_delta");
     println!(
-        "server obs: queue-wait p99 {queue_wait_p99:.3} ms, exec p99 {exec_p99:.3} ms, \
-         cost-model drift ratio {drift:.3}"
+        "server obs: queue-wait p99 {queue_wait_p99:.3} ms (window {queue_wait_delta:.3}), \
+         exec p99 {exec_p99:.3} ms (window {exec_delta:.3}), \
+         cost-model drift ratio {drift:.3} (calibrated {calibrated:.3})"
     );
 
     if let Some(path) = json_path {
         merge_bench_json(
             &path, tenants, idle_conns, p50, p99, sustained, queue_wait_p99, exec_p99, drift,
+            calibrated,
         );
         println!(
             "recorded serve_p50_ms/serve_p99_ms/serve_sustained_ops_per_s/\
-             serve_queue_wait_p99_ms/serve_exec_p99_ms/cost_model_drift_ratio into {path}"
+             serve_queue_wait_p99_ms/serve_exec_p99_ms/cost_model_drift_ratio/\
+             calibrated_drift_ratio into {path}"
         );
     }
 
@@ -262,6 +316,7 @@ fn merge_bench_json(
     queue_wait_p99: f64,
     exec_p99: f64,
     drift: f64,
+    calibrated: f64,
 ) {
     let mut doc = match std::fs::read_to_string(path) {
         Ok(text) => Json::parse(&text).unwrap_or_else(|_| Json::Object(Vec::new())),
@@ -286,6 +341,7 @@ fn merge_bench_json(
         set("serve_queue_wait_p99_ms", Json::Float(queue_wait_p99));
         set("serve_exec_p99_ms", Json::Float(exec_p99));
         set("cost_model_drift_ratio", Json::Float(drift));
+        set("calibrated_drift_ratio", Json::Float(calibrated));
     }
     std::fs::write(path, doc.write_pretty()).expect("write bench json");
 }

@@ -16,11 +16,12 @@ use crate::math::poly::RnsPoly;
 use crate::obs::{Histogram, Registry};
 use crate::params::CkksParams;
 use crate::runtime::{literal_to_rows, mat_literal, vec_literal, Runtime};
-use crate::sim::{ArchConfig, Breakdown, CostModel, FheShape, SimOptions};
+use crate::sim::{ArchConfig, Breakdown, Calibration, CostModel, FheShape, SimOptions};
+use crate::sim::{PHASE_COUNT, PHASE_NAMES};
 use crate::trace::FheOp;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Which engine executes the pointwise hot path.
@@ -40,6 +41,10 @@ pub struct Metrics {
     pub rotations: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub sim_energy_pj: AtomicU64,
+    /// `sim_cycles` split by [`PHASE_NAMES`] cost phase. Per-coordinator
+    /// (not the process-global registry mirror) so batch deltas stay
+    /// clean when tests run several coordinators concurrently.
+    pub sim_cycles_phase: [AtomicU64; PHASE_COUNT],
 }
 
 /// Which homomorphic op a [`MixedOp`] requests. The first four are the
@@ -132,17 +137,35 @@ const KIND_NAMES: [&str; 11] = [
 struct CoordObs {
     per_kind: Vec<Arc<Histogram>>,
     drift: Arc<Histogram>,
+    /// Per-batch drift of the *calibrated* model
+    /// (`cost_model_drift_calibrated`, same ratio×1000 encoding).
+    drift_cal: Arc<Histogram>,
+    /// Simulated-cycle attribution counters in the global registry:
+    /// aggregate per phase (`sim_cycles_phase_<phase>`) and per
+    /// (kind, phase) (`sim_cycles_<kind>_<phase>`) — drift as a vector,
+    /// not one scalar.
+    phase_total: [Arc<AtomicU64>; PHASE_COUNT],
+    per_kind_phase: Vec<[Arc<AtomicU64>; PHASE_COUNT]>,
 }
 
 impl CoordObs {
     fn new() -> Self {
         let reg = Registry::global();
+        let phases = |prefix: &str| -> [Arc<AtomicU64>; PHASE_COUNT] {
+            std::array::from_fn(|j| reg.counter(&format!("{prefix}_{}", PHASE_NAMES[j])))
+        };
         Self {
             per_kind: KIND_NAMES
                 .iter()
                 .map(|n| reg.histogram(&format!("coord_exec_{n}"), 1e-9))
                 .collect(),
             drift: reg.histogram("cost_model_drift", 1e-3),
+            drift_cal: reg.histogram("cost_model_drift_calibrated", 1e-3),
+            phase_total: phases("sim_cycles_phase"),
+            per_kind_phase: KIND_NAMES
+                .iter()
+                .map(|n| phases(&format!("sim_cycles_{n}")))
+                .collect(),
         }
     }
 }
@@ -331,6 +354,13 @@ pub struct Coordinator {
     pub arch: ArchConfig,
     pub metrics: Metrics,
     obs: CoordObs,
+    /// Online per-phase cost-model calibration, fed one sample per
+    /// executed batch by [`Self::execute_mixed_batch_isolated`].
+    calib: Mutex<Calibration>,
+    /// Where to persist the fit (`--calibration <path>`); saved after
+    /// every observation because serving processes are routinely killed
+    /// rather than shut down.
+    calib_path: Mutex<Option<PathBuf>>,
 }
 
 impl Coordinator {
@@ -351,7 +381,34 @@ impl Coordinator {
             arch,
             metrics: Metrics::default(),
             obs: CoordObs::new(),
+            calib: Mutex::new(Calibration::default()),
+            calib_path: Mutex::new(None),
         }
+    }
+
+    /// Enable calibration persistence: warm-start from `path` if a valid
+    /// fit is already there, then save the fit back after every observed
+    /// batch.
+    pub fn set_calibration_path(&self, path: PathBuf) {
+        if let Some(loaded) = Calibration::load(&path) {
+            *self.calib.lock().unwrap() = loaded;
+        }
+        *self.calib_path.lock().unwrap() = Some(path);
+    }
+
+    /// Calibrated drift over everything this coordinator has executed
+    /// this run — current per-phase factors applied to the accumulated
+    /// attribution vector, over accumulated wall time. `None` until the
+    /// first batch lands. The uncalibrated counterpart is the
+    /// scheduler's `cost_model_drift_ratio`.
+    pub fn calibrated_drift_ratio(&self) -> Option<f64> {
+        self.calib.lock().unwrap().aggregate_ratio()
+    }
+
+    /// Current calibration state as pretty JSON (the `--calibration`
+    /// file format).
+    pub fn calibration_json(&self) -> String {
+        self.calib.lock().unwrap().to_json().write_pretty()
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -365,10 +422,47 @@ impl Coordinator {
         self.record_for(op, &self.ctx.params, self.ctx.l());
     }
 
+    /// Fold one costed breakdown into the metrics totals and the
+    /// per-phase attribution counters — aggregate always, per-kind when
+    /// the op came through the mixed-batch path (`kind_idx`).
+    fn charge_breakdown(&self, kind_idx: Option<usize>, bd: &Breakdown) {
+        let t = bd.total();
+        self.metrics
+            .sim_cycles
+            .fetch_add(t.cycles as u64, Ordering::Relaxed);
+        self.metrics
+            .sim_energy_pj
+            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+        for (j, &cycles) in bd.phase_cycles().iter().enumerate() {
+            let cycles = cycles as u64;
+            if cycles == 0 {
+                continue;
+            }
+            self.metrics.sim_cycles_phase[j].fetch_add(cycles, Ordering::Relaxed);
+            self.obs.phase_total[j].fetch_add(cycles, Ordering::Relaxed);
+            if let Some(k) = kind_idx {
+                self.obs.per_kind_phase[k][j].fetch_add(cycles, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// [`Self::record`] against an explicit parameter set + limb count —
     /// the multi-tenant batch path costs each op on its *own* tenant's
     /// shape, which may differ from this coordinator's context.
     fn record_for(&self, op: FheOp, params: &CkksParams, limbs: usize) {
+        self.record_attributed(op, params, limbs, None);
+    }
+
+    /// [`Self::record_for`] with per-`MixedKind` attribution: the mixed
+    /// batch path passes the kind's dense index so simulated cycles land
+    /// in the `sim_cycles_<kind>_<phase>` counters too.
+    fn record_attributed(
+        &self,
+        op: FheOp,
+        params: &CkksParams,
+        limbs: usize,
+        kind_idx: Option<usize>,
+    ) {
         self.metrics.ops.fetch_add(1, Ordering::Relaxed);
         match op {
             FheOp::HMul => {
@@ -405,13 +499,7 @@ impl Coordinator {
             FheOp::HAdd => model.modadd_poly().scaled(2.0 * shape.limbs as f64),
             _ => model.modmul_poly().scaled(shape.limbs as f64),
         };
-        let t = bd.total();
-        self.metrics
-            .sim_cycles
-            .fetch_add(t.cycles as u64, Ordering::Relaxed);
-        self.metrics
-            .sim_energy_pj
-            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+        self.charge_breakdown(kind_idx, &bd);
     }
 
     /// Cost a batch of trace-IR ops executed outside the mixed-op path
@@ -555,7 +643,12 @@ impl Coordinator {
         if let MixedKind::RotSumHoisted(w) = op.kind {
             self.record_hoisted_rot_sum(&op.eval.ctx.params, op.level(), w);
         } else {
-            self.record_for(op.fhe_op(), &op.eval.ctx.params, op.level());
+            self.record_attributed(
+                op.fhe_op(),
+                &op.eval.ctx.params,
+                op.level(),
+                Some(op.kind.index()),
+            );
         }
     }
 
@@ -580,13 +673,7 @@ impl Coordinator {
             .automorphism_poly()
             .scaled(2.0 * shape.limbs as f64 * width.saturating_sub(1) as f64);
         bd.add(&model.keyswitch_hoisted(width.saturating_sub(1), true));
-        let t = bd.total();
-        self.metrics
-            .sim_cycles
-            .fetch_add(t.cycles as u64, Ordering::Relaxed);
-        self.metrics
-            .sim_energy_pj
-            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+        self.charge_breakdown(Some(MixedKind::RotSumHoisted(width).index()), &bd);
     }
 
     /// Cost a hoisted-BSGS linear transform on the FHEmem model: the
@@ -630,13 +717,9 @@ impl Coordinator {
                 .modadd_poly()
                 .scaled(2.0 * shape.limbs as f64 * pmuls as f64),
         );
-        let t = bd.total();
-        self.metrics
-            .sim_cycles
-            .fetch_add(t.cycles as u64, Ordering::Relaxed);
-        self.metrics
-            .sim_energy_pj
-            .fetch_add(t.energy_pj as u64, Ordering::Relaxed);
+        // Macro node outside the mixed-op surface: aggregate-phase
+        // attribution only, no per-kind slot.
+        self.charge_breakdown(None, &bd);
     }
 
     /// Execute one mixed op on the **bank-tiled hot path**: operands are
@@ -725,6 +808,8 @@ impl Coordinator {
     ) -> Vec<Result<Ciphertext, String>> {
         use std::panic::{catch_unwind, AssertUnwindSafe};
         let cycles_before = self.metrics.sim_cycles.load(Ordering::Relaxed);
+        let phases_before: [u64; PHASE_COUNT] =
+            std::array::from_fn(|j| self.metrics.sim_cycles_phase[j].load(Ordering::Relaxed));
         let t0 = Instant::now();
         // Known-bad ops are refused by validation (no panic, no stderr
         // noise); catch_unwind remains only as the backstop for the
@@ -759,8 +844,39 @@ impl Coordinator {
         if wall_ns > 0 && cycles > 0 {
             let ratio = cycles as f64 * self.arch.cycle_ns() / wall_ns as f64;
             self.obs.drift.record((ratio * 1000.0) as u64);
+            self.observe_calibration(&phases_before, wall_ns);
         }
         outs
+    }
+
+    /// Close the loop on one batch: feed its (per-phase simulated ns,
+    /// measured wall ns) sample to the online fit, record the calibrated
+    /// model's own drift beside the raw one, export the factors +
+    /// residual as gauges, and persist the fit if a path is configured.
+    fn observe_calibration(&self, phases_before: &[u64; PHASE_COUNT], wall_ns: u64) {
+        let cycle_ns = self.arch.cycle_ns();
+        let phase_ns: [f64; PHASE_COUNT] = std::array::from_fn(|j| {
+            self.metrics.sim_cycles_phase[j]
+                .load(Ordering::Relaxed)
+                .saturating_sub(phases_before[j]) as f64
+                * cycle_ns
+        });
+        let mut cal = self.calib.lock().unwrap();
+        cal.observe(&phase_ns, wall_ns as f64);
+        let cal_ratio = cal.predict_ns(&phase_ns) / wall_ns as f64;
+        if cal_ratio > 0.0 {
+            self.obs.drift_cal.record((cal_ratio * 1000.0) as u64);
+        }
+        let reg = Registry::global();
+        for (j, name) in PHASE_NAMES.iter().enumerate() {
+            reg.set_gauge(&format!("calib_factor_{name}"), cal.factors()[j]);
+        }
+        reg.set_gauge("calib_residual", cal.residual());
+        // Persist after every observation: serving processes are killed,
+        // not shut down, and a lost fit is a cold restart.
+        if let Some(path) = self.calib_path.lock().unwrap().as_ref() {
+            let _ = cal.save(path);
+        }
     }
 
     /// Simulated accelerator time for everything executed so far.
@@ -927,6 +1043,67 @@ mod tests {
         assert!(drift.count() >= d0 + 1, "one drift sample per batch");
         assert!(rot_hist.count() >= r0 + 1, "per-kind execute histogram");
         assert_eq!(MixedKind::Rotate(5).name(), "rotate");
+    }
+
+    #[test]
+    fn calibration_loop_attributes_phases_and_persists() {
+        let c = coord();
+        let ctx = CkksContext::new(CkksParams::func_tiny());
+        let chain = Arc::new(crate::ckks::KeyChain::new(ctx.clone(), 611));
+        let ev = Arc::new(Evaluator::new(ctx, chain, 612));
+        let slots = ev.ctx.encoder.slots();
+        let z: Vec<f64> = (0..slots).map(|i| 0.01 * (i % 6) as f64).collect();
+        let path = std::env::temp_dir().join(format!(
+            "fhemem_calib_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        c.set_calibration_path(path.clone());
+        let mk = || {
+            vec![
+                MixedOp::new(ev.clone(), MixedKind::Rotate(1), ev.encrypt_real(&z, 2), None),
+                MixedOp::new(
+                    ev.clone(),
+                    MixedKind::Add,
+                    ev.encrypt_real(&z, 2),
+                    Some(ev.encrypt_real(&z, 2)),
+                ),
+            ]
+        };
+        for _ in 0..3 {
+            for r in c.execute_mixed_batch_isolated(&mk()) {
+                assert!(r.is_ok());
+            }
+        }
+        // Attribution: a keyswitch-bearing rotation charges computation
+        // AND movement phases, split per kind.
+        let phase = |j: usize| c.metrics.sim_cycles_phase[j].load(Ordering::Relaxed);
+        assert!(phase(0) > 0, "computation cycles attributed");
+        assert!(phase(1) > 0, "permutation cycles attributed");
+        assert!(phase(3) > 0, "interbank cycles attributed");
+        let reg = crate::obs::Registry::global();
+        assert!(
+            reg.counter("sim_cycles_rotate_permutation")
+                .load(Ordering::Relaxed)
+                > 0,
+            "per-kind phase counter"
+        );
+        assert!(
+            reg.counter("sim_cycles_add_computation")
+                .load(Ordering::Relaxed)
+                > 0
+        );
+        // The loop closed: calibrated ratio exists, gauges exported,
+        // fit persisted and loadable.
+        assert!(c.calibrated_drift_ratio().is_some());
+        assert!(c.calibration_json().contains("factors"));
+        let saved = Calibration::load(&path).expect("fit persisted after each batch");
+        assert!(saved.samples() >= 3);
+        // A fresh coordinator warm-starts from the persisted fit.
+        let c2 = coord();
+        c2.set_calibration_path(path.clone());
+        assert_eq!(c2.calib.lock().unwrap().samples(), saved.samples());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -27,7 +27,7 @@ fn main() {
                  [--workload helr] [--artifacts DIR] [--threads N] \
                  [--port 7070] [--metrics-port P] [--workers 8] [--max-batch 8] \
                  [--max-delay-ms 5] [--max-queue 64] [--read-deadline-ms 10000] \
-                 [--idle-timeout-ms 600000]"
+                 [--idle-timeout-ms 600000] [--calibration PATH]"
             );
             std::process::exit(2);
         }
@@ -58,6 +58,14 @@ fn cmd_serve(args: &Args) {
     // `GET /metrics` serves the scheduler snapshot for dashboards.
     let metrics_port = args.get("metrics-port").map(|_| args.get_port("metrics-port", 0));
     let svc = FheService::new(arch, cfg.clone());
+    // `--calibration PATH`: warm-start the online per-phase cost-model
+    // calibration from a previous run's fit (if the file exists) and
+    // persist every update back to it — the fit survives restarts.
+    let calib_path = args.get("calibration").map(std::path::PathBuf::from);
+    if let Some(path) = &calib_path {
+        svc.coord.set_calibration_path(path.clone());
+        println!("fhemem-serve calibration persisted at {}", path.display());
+    }
     let handle = server::spawn_with(
         ("127.0.0.1", port),
         metrics_port.map(|p| ("127.0.0.1", p)),

@@ -17,6 +17,7 @@
 //! `tests/obs.rs`). 496 buckets cover the whole `u64` range.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Sub-bucket resolution: `2^SUB_BITS` buckets per octave.
@@ -35,6 +36,65 @@ pub struct Histogram {
     /// nanosecond histogram exported in seconds). Raw recording and
     /// quantile math stay in integer units.
     scale: f64,
+    /// What [`Self::snapshot_delta`] last saw — per-bucket counts plus
+    /// the sum, so a scraper can compute steady-state quantiles over
+    /// just the records since its previous scrape. Off the record path:
+    /// `record` never touches this lock.
+    baseline: Mutex<Baseline>,
+}
+
+#[derive(Default)]
+struct Baseline {
+    buckets: Vec<u64>,
+    sum: u64,
+}
+
+/// Windowed view of a [`Histogram`]: the records that landed between
+/// the two most recent [`Histogram::snapshot_delta`] calls, with the
+/// same midpoint quantile estimator (and error bound) as the cumulative
+/// histogram. The cumulative counters are untouched — Prometheus
+/// exposition semantics stay monotone.
+pub struct HistogramSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    scale: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Raw-unit quantile over the window (midpoint estimator; see
+    /// [`Histogram::quantile`]). `0` for an empty window.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= target {
+                let (lo, hi) = Histogram::bucket_bounds(i);
+                return lo + (hi - lo) / 2;
+            }
+        }
+        0
+    }
+
+    /// Window quantile in exposed units (`raw * scale`).
+    pub fn quantile_scaled(&self, q: f64) -> f64 {
+        self.quantile(q) as f64 * self.scale
+    }
 }
 
 impl Histogram {
@@ -47,6 +107,7 @@ impl Histogram {
             sum: AtomicU64::new(0),
             max: AtomicU64::new(0),
             scale,
+            baseline: Mutex::new(Baseline::default()),
         }
     }
 
@@ -155,6 +216,39 @@ impl Histogram {
             .map(|b| b.load(Ordering::Relaxed))
             .collect()
     }
+
+    /// Counts recorded **since the previous `snapshot_delta` call** (the
+    /// whole history on the first call), then advance the baseline. This
+    /// is how a scraper reads steady-state quantiles — warmup recorded
+    /// before its last scrape no longer skews p99 — while the cumulative
+    /// counters (and the Prometheus exposition built on them) stay
+    /// monotone. One logical scraper per histogram: concurrent callers
+    /// split the window between them.
+    pub fn snapshot_delta(&self) -> HistogramSnapshot {
+        let mut base = self.baseline.lock().unwrap();
+        if base.buckets.is_empty() {
+            base.buckets = vec![0; BUCKETS];
+        }
+        let mut counts = vec![0u64; BUCKETS];
+        let mut count = 0u64;
+        for i in 0..BUCKETS {
+            let now = self.buckets[i].load(Ordering::Relaxed);
+            // saturating: a record can land between this load and the
+            // next scrape's; it is then counted in the next window.
+            counts[i] = now.saturating_sub(base.buckets[i]);
+            count += counts[i];
+            base.buckets[i] = now;
+        }
+        let sum_now = self.sum();
+        let sum = sum_now.saturating_sub(base.sum);
+        base.sum = sum_now;
+        HistogramSnapshot {
+            counts,
+            count,
+            sum,
+            scale: self.scale,
+        }
+    }
 }
 
 impl std::fmt::Debug for Histogram {
@@ -205,6 +299,37 @@ mod tests {
         assert_eq!(h.count(), 16);
         assert_eq!(h.sum(), 120);
         assert_eq!(h.max(), 15);
+    }
+
+    #[test]
+    fn snapshot_delta_windows_without_touching_cumulative() {
+        let h = Histogram::new(1.0);
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let w1 = h.snapshot_delta();
+        assert_eq!(w1.count(), 3);
+        assert_eq!(w1.sum(), 60);
+        assert_eq!(w1.quantile(0.5), 20);
+        // Steady state after warmup: the next window sees only the new
+        // records, so its p99 is the new records' p99.
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        let w2 = h.snapshot_delta();
+        assert_eq!(w2.count(), 10);
+        assert_eq!(w2.sum(), 10_000);
+        let q = w2.quantile(0.99);
+        let (lo, hi) = Histogram::bucket_bounds(Histogram::bucket_index(1000));
+        assert!((lo..=hi).contains(&q), "window p99 {q} outside [{lo},{hi}]");
+        // Empty window.
+        assert_eq!(h.snapshot_delta().count(), 0);
+        assert_eq!(h.snapshot_delta().quantile(0.99), 0);
+        // Cumulative semantics untouched by all three snapshots.
+        assert_eq!(h.count(), 13);
+        assert_eq!(h.sum(), 10_060);
+        assert_eq!(h.quantile(1.0), h.quantile(1.0));
+        assert!(h.quantile(0.99) >= lo, "cumulative p99 still sees all records");
     }
 
     #[test]

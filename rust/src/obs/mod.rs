@@ -21,7 +21,7 @@ pub mod hist;
 pub mod registry;
 pub mod span;
 
-pub use hist::{Histogram, BUCKETS, SUB_BITS};
+pub use hist::{Histogram, HistogramSnapshot, BUCKETS, SUB_BITS};
 pub use registry::Registry;
 pub use span::{Span, SpanRecorder, SPAN_RING};
 

@@ -108,7 +108,27 @@ impl SpanRecorder {
     /// are sorted by start time — the viewers don't require it, but it
     /// makes the raw JSON diffable and the nesting test deterministic.
     pub fn trace_json(&self) -> String {
-        let mut spans = self.recent();
+        self.render(self.recent())
+    }
+
+    /// [`Self::trace_json`] restricted to spans stamped with `trace` —
+    /// an args entry `("trace", Json::Num(trace))`. This is what backs
+    /// `GET /spans?trace=<id>`: one client's request, queue-wait and
+    /// batch-execute spans, pulled out of everything else on the ring.
+    pub fn trace_json_filtered(&self, trace: u64) -> String {
+        let spans = self
+            .recent()
+            .into_iter()
+            .filter(|s| {
+                s.args
+                    .iter()
+                    .any(|(k, v)| k == "trace" && *v == Json::Num(trace))
+            })
+            .collect();
+        self.render(spans)
+    }
+
+    fn render(&self, mut spans: Vec<Span>) -> String {
         spans.sort_by_key(|s| (s.start_us, std::cmp::Reverse(s.dur_us)));
         let events: Vec<Json> = spans
             .into_iter()
@@ -187,5 +207,45 @@ mod tests {
             events[1].field("args").unwrap().field("k").unwrap().as_u64().unwrap(),
             3
         );
+    }
+
+    #[test]
+    fn trace_filter_selects_only_matching_spans() {
+        let rec = SpanRecorder::new(16);
+        let tagged = |name: &str, trace: u64| Span {
+            name: name.into(),
+            tid: trace,
+            start_us: 10,
+            dur_us: 5,
+            args: vec![("trace".to_string(), Json::Num(trace))],
+        };
+        rec.push(tagged("request", 42));
+        rec.push(tagged("batch-exec", 42));
+        rec.push(tagged("request", 7));
+        rec.push(Span {
+            name: "untraced".into(),
+            tid: 1,
+            start_us: 0,
+            dur_us: 1,
+            args: Vec::new(),
+        });
+        let doc = Json::parse(&rec.trace_json_filtered(42)).unwrap();
+        let events = doc.field("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(
+                e.field("args").unwrap().field("trace").unwrap().as_u64().unwrap(),
+                42
+            );
+        }
+        // Unknown id: valid document, zero events.
+        let empty = Json::parse(&rec.trace_json_filtered(999)).unwrap();
+        assert_eq!(
+            empty.field("traceEvents").unwrap().as_array().unwrap().len(),
+            0
+        );
+        // The unfiltered export still carries everything.
+        let all = Json::parse(&rec.trace_json()).unwrap();
+        assert_eq!(all.field("traceEvents").unwrap().as_array().unwrap().len(), 4);
     }
 }

@@ -21,7 +21,7 @@ use super::server::error_code;
 use super::wire::{
     decode_ciphertext, decode_error, decode_metrics, decode_program_outputs, encode_eval_request,
     encode_evalkey_frame, encode_program_request, encode_register, read_frame_from,
-    write_frame_to, FrameKind, WireCiphertext, WireOp,
+    write_frame_to, write_frame_to_traced, FrameKind, WireCiphertext, WireOp,
 };
 use super::ServiceError;
 use crate::ckks::keys::KeyTag;
@@ -34,6 +34,10 @@ pub struct ServiceClient {
     /// Local twin of the server-side tenant (same params + key seed).
     pub ctx: Arc<CkksContext>,
     pub eval: Arc<Evaluator>,
+    /// Trace id stamped on outgoing request frames (`0` = untraced).
+    /// The server threads it through its queue/batch pipeline so this
+    /// client's spans stitch into one trace (`GET /spans?trace=<id>`).
+    trace: u64,
 }
 
 impl ServiceClient {
@@ -68,7 +72,16 @@ impl ServiceClient {
             tenant_id,
             ctx: local.ctx.clone(),
             eval: local.eval.clone(),
+            trace: 0,
         })
+    }
+
+    /// Stamp subsequent requests with `id` (0 turns tracing back off).
+    /// Pick ids client-side — random or request-scoped — and query
+    /// `GET /spans?trace=<id>` on the server's HTTP listener to read
+    /// back the stitched trace.
+    pub fn set_trace(&mut self, id: u64) {
+        self.trace = id;
     }
 
     /// Encrypt a fresh real-slot vector, seed-compressed for the wire.
@@ -123,7 +136,7 @@ impl ServiceClient {
         inputs: &[(String, WireCiphertext)],
     ) -> Result<Vec<(String, Ciphertext)>, ServiceError> {
         let payload = encode_program_request(self.tenant_id, prog, inputs);
-        write_frame_to(&mut self.stream, FrameKind::Program, &payload)
+        write_frame_to_traced(&mut self.stream, FrameKind::Program, &payload, self.trace)
             .map_err(ServiceError::Io)?;
         match read_response(&mut self.stream)? {
             (FrameKind::ProgramOk, payload) => {
@@ -186,7 +199,8 @@ impl ServiceClient {
         cts: &[&WireCiphertext],
     ) -> Result<Ciphertext, ServiceError> {
         let payload = encode_eval_request(self.tenant_id, op, step, cts);
-        write_frame_to(&mut self.stream, FrameKind::Eval, &payload).map_err(ServiceError::Io)?;
+        write_frame_to_traced(&mut self.stream, FrameKind::Eval, &payload, self.trace)
+            .map_err(ServiceError::Io)?;
         match read_response(&mut self.stream)? {
             (FrameKind::EvalOk, payload) => {
                 decode_ciphertext(FrameKind::CtFull, &payload, &self.ctx)

@@ -39,8 +39,10 @@ use crate::coordinator::{Coordinator, MixedKind, MixedOp};
 use crate::params::CkksParams;
 use crate::program::{self, PassOptions, ProgramRun};
 use crate::sim::ArchConfig;
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Anything the serving path can fail with.
 #[derive(Debug)]
@@ -104,6 +106,8 @@ pub struct FheService {
     /// → the gadget digits received so far. Completed keys move into the
     /// tenant's key chain and the entry is dropped.
     pending_keys: Mutex<HashMap<(u64, usize, KeyTag), Vec<Option<(ExtPoly, ExtPoly)>>>>,
+    /// When the service was assembled (`GET /healthz` uptime).
+    started: Instant,
 }
 
 impl FheService {
@@ -118,6 +122,7 @@ impl FheService {
             sched,
             coord,
             pending_keys: Mutex::new(HashMap::new()),
+            started: Instant::now(),
         })
     }
 
@@ -138,7 +143,21 @@ impl FheService {
         tenant: &Arc<Tenant>,
         op: WireOp,
         step: i64,
+        cts: Vec<Ciphertext>,
+    ) -> Result<Ciphertext, ServiceError> {
+        self.eval_decoded_traced(tenant, op, step, cts, 0)
+    }
+
+    /// [`Self::eval_decoded`] carrying the client's wire trace id (`0` =
+    /// untraced): the scheduler stamps queue-wait and batch-execute
+    /// spans with it so the op's whole path stitches into one trace.
+    pub fn eval_decoded_traced(
+        &self,
+        tenant: &Arc<Tenant>,
+        op: WireOp,
+        step: i64,
         mut cts: Vec<Ciphertext>,
+        trace: u64,
     ) -> Result<Ciphertext, ServiceError> {
         if cts.len() != op.arity() {
             return Err(ServiceError::Protocol(format!(
@@ -156,7 +175,7 @@ impl FheService {
             WireOp::Rotate => MixedKind::Rotate(step),
         };
         self.sched
-            .execute_blocking(MixedOp::new(tenant.eval.clone(), kind, a, b))
+            .execute_blocking_traced(MixedOp::new(tenant.eval.clone(), kind, a, b), trace)
     }
 
     /// Convenience for in-process callers (bench, tests): look the
@@ -308,6 +327,27 @@ impl FheService {
     /// (`GET /spans`) — load the payload in `chrome://tracing`.
     pub fn spans_json(&self) -> String {
         crate::obs::Registry::global().trace_json()
+    }
+
+    /// [`Self::spans_json`] restricted to one client trace id
+    /// (`GET /spans?trace=<id>`): only spans stamped with that id —
+    /// request, queue-wait, batch-exec — come back.
+    pub fn spans_json_filtered(&self, trace: u64) -> String {
+        crate::obs::Registry::global().spans().trace_json_filtered(trace)
+    }
+
+    /// Liveness snapshot (`GET /healthz`): process is up, for how long,
+    /// and the scheduler's current queue depth.
+    pub fn healthz_json(&self) -> String {
+        Json::obj([
+            ("status", Json::Str("ok".to_string())),
+            (
+                "uptime_s",
+                Json::Float(self.started.elapsed().as_secs_f64()),
+            ),
+            ("queued", Json::Num(self.sched.queued() as u64)),
+        ])
+        .write_pretty()
     }
 
     /// Drain the scheduler and stop its worker.

@@ -160,6 +160,10 @@ struct Pending {
     /// (see `service::keystore`), so the evaluator pointer is a stable
     /// per-tenant key without widening the submit API.
     tenant: usize,
+    /// Client-supplied trace id (`0` = untraced). Carried from the wire
+    /// frame through the queue so the batch worker can stamp queue-wait
+    /// and batch-execute spans that stitch into the client's trace.
+    trace: u64,
 }
 
 /// Per-tenant segmented queue drained round-robin across tenants.
@@ -334,6 +338,17 @@ impl BatchScheduler {
     /// fails fast with [`ServiceError::Backpressure`] when the queue is
     /// at capacity (admission control).
     pub fn submit(&self, op: MixedOp) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
+        self.submit_traced(op, 0)
+    }
+
+    /// [`Self::submit`] carrying a client trace id (`0` = untraced): the
+    /// batch worker stamps queue-wait and batch-execute spans with it so
+    /// `GET /spans?trace=<id>` returns this op's whole pipeline.
+    pub fn submit_traced(
+        &self,
+        op: MixedOp,
+        trace: u64,
+    ) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.lock().unwrap();
@@ -354,6 +369,7 @@ impl BatchScheduler {
                 tx,
                 enqueued: Instant::now(),
                 tenant,
+                trace,
             });
         }
         self.notify.notify_all();
@@ -400,6 +416,7 @@ impl BatchScheduler {
                     tx,
                     enqueued: now,
                     tenant,
+                    trace: 0,
                 });
                 rxs.push(rx);
             }
@@ -411,7 +428,12 @@ impl BatchScheduler {
 
     /// Submit and block until the batch containing this op completes.
     pub fn execute_blocking(&self, op: MixedOp) -> OpResult {
-        let rx = self.submit(op)?;
+        self.execute_blocking_traced(op, 0)
+    }
+
+    /// [`Self::execute_blocking`] carrying a client trace id.
+    pub fn execute_blocking_traced(&self, op: MixedOp, trace: u64) -> OpResult {
+        let rx = self.submit_traced(op, trace)?;
         rx.recv()
             .unwrap_or_else(|_| Err(ServiceError::Rejected("scheduler dropped the op".into())))
     }
@@ -470,6 +492,26 @@ impl BatchScheduler {
             fields.push((
                 "cost_model_drift_ratio".to_string(),
                 Json::Float(self.drift_ratio()),
+            ));
+            // Drift recomputed with the online per-phase calibration
+            // applied (`sim::calib`): `0.0` until the coordinator has
+            // observed at least one batch. The CI gate asserts this sits
+            // strictly closer to 1.0 than the raw ratio above.
+            fields.push((
+                "calibrated_drift_ratio".to_string(),
+                Json::Float(self.coord.calibrated_drift_ratio().unwrap_or(0.0)),
+            ));
+            // Scrape-window percentiles: counts since the previous
+            // `metrics_json` call (the harness snapshots at warmup end
+            // so its figures exclude cold-start batches). The cumulative
+            // series above and the Prometheus exposition are untouched.
+            fields.push((
+                "queue_wait_p99_ms_delta".to_string(),
+                Json::Float(self.obs_queue_wait.snapshot_delta().quantile(0.99) as f64 * 1e-6),
+            ));
+            fields.push((
+                "exec_p99_ms_delta".to_string(),
+                Json::Float(self.obs_batch_exec.snapshot_delta().quantile(0.99) as f64 * 1e-6),
             ));
             let stats = self.tenant_stats.lock().unwrap();
             let tenants: Vec<Json> = stats
@@ -531,6 +573,10 @@ impl BatchScheduler {
         out.push_str(&format!(
             "# TYPE cost_model_drift_ratio gauge\ncost_model_drift_ratio {}\n",
             self.drift_ratio()
+        ));
+        out.push_str(&format!(
+            "# TYPE cost_model_drift_ratio_calibrated gauge\ncost_model_drift_ratio_calibrated {}\n",
+            self.coord.calibrated_drift_ratio().unwrap_or(0.0)
         ));
         let stats = self.tenant_stats.lock().unwrap();
         if !stats.is_empty() {
@@ -622,6 +668,7 @@ impl BatchScheduler {
         let mut ops = Vec::with_capacity(batch.len());
         let mut txs = Vec::with_capacity(batch.len());
         let mut tenants: Vec<usize> = Vec::with_capacity(batch.len());
+        let mut traced: Vec<u64> = Vec::new();
         {
             // Queue wait ends here: the op has been drained into a batch
             // (the satellite bugfix — `enqueued` was measured for the
@@ -630,6 +677,18 @@ impl BatchScheduler {
             for p in batch {
                 let wait = p.enqueued.elapsed();
                 self.obs_queue_wait.record_duration(wait);
+                if p.trace != 0 {
+                    // Queue-wait span on the trace's own track: it ends
+                    // here (drain = admission into a batch) and lasted
+                    // the whole time the op sat queued.
+                    Registry::global().spans().record_elapsed(
+                        "queue-wait",
+                        p.trace,
+                        wait,
+                        vec![("trace".to_string(), Json::Num(p.trace))],
+                    );
+                    traced.push(p.trace);
+                }
                 let wait_ns = wait.as_nanos().min(u64::MAX as u128) as u64;
                 match stats.iter_mut().find(|(k, _)| *k == p.tenant) {
                     Some((_, st)) => {
@@ -688,8 +747,24 @@ impl BatchScheduler {
         // slot — neither the worker nor the other tenants coalesced into
         // this batch are taken down with it.
         let outs = self.coord.execute_mixed_batch_isolated(&ops);
-        let wall_ns = t0.elapsed().as_nanos() as u64;
+        let exec_elapsed = t0.elapsed();
+        let wall_ns = exec_elapsed.as_nanos() as u64;
         self.obs_batch_exec.record(wall_ns);
+        // One batch-execute span per traced op, each on its trace's
+        // track: the client's `GET /spans?trace=<id>` pulls out request
+        // → queue-wait → batch-exec for exactly its op, even when the
+        // batch coalesced ops from many tenants.
+        for trace in traced {
+            Registry::global().spans().record_elapsed(
+                "batch-exec",
+                trace,
+                exec_elapsed,
+                vec![
+                    ("trace".to_string(), Json::Num(trace)),
+                    ("batch".to_string(), Json::Num(n)),
+                ],
+            );
+        }
         let cycles = self
             .coord
             .metrics
@@ -869,6 +944,7 @@ mod tests {
             tx,
             enqueued: Instant::now(),
             tenant: Arc::as_ptr(&t.eval) as usize,
+            trace: 0,
         }
     }
 
@@ -1050,6 +1126,12 @@ mod tests {
             doc.field("cost_model_drift_ratio").unwrap().as_f64().unwrap(),
             0.0
         );
+        assert_eq!(
+            doc.field("calibrated_drift_ratio").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert!(doc.get("queue_wait_p99_ms_delta").is_some());
+        assert!(doc.get("exec_p99_ms_delta").is_some());
         assert!(doc.field("tenants").unwrap().as_array().unwrap().is_empty());
         sched.shutdown();
     }

@@ -176,10 +176,12 @@ struct Conn {
     wbuf: Vec<u8>,
     wpos: usize,
     /// Complete frames waiting their turn (one in flight at a time),
-    /// each stamped with when it was parsed off the wire — the stamp
-    /// rides through the job plumbing so the worker can report how long
-    /// the frame waited for dispatch (no thread-locals involved).
-    queued: VecDeque<(FrameKind, Vec<u8>, Instant)>,
+    /// each stamped with its wire trace id (`0` = untraced) and when it
+    /// was parsed off the wire — both ride through the job plumbing so
+    /// the worker can report how long the frame waited for dispatch and
+    /// stitch its spans into the client's trace (no thread-locals
+    /// involved).
+    queued: VecDeque<(FrameKind, Vec<u8>, u64, Instant)>,
     /// A frame from this connection is in the worker pool.
     busy: bool,
     /// Peer half-closed; drain queued work + wbuf, then drop.
@@ -202,6 +204,8 @@ struct Job {
     gen: u64,
     kind: FrameKind,
     payload: Vec<u8>,
+    /// Client-supplied wire trace id (`0` = untraced).
+    trace: u64,
     /// When the frame was parsed off the wire (span/dispatch-wait stamp).
     parsed_at: Instant,
 }
@@ -337,10 +341,10 @@ fn event_loop(
             if !drop_conn {
                 match c.proto {
                     Proto::Wire => loop {
-                        match wire::try_extract_frame(&c.rbuf) {
-                            Ok(Some((kind, payload, consumed))) => {
+                        match wire::try_extract_frame_traced(&c.rbuf) {
+                            Ok(Some((kind, payload, trace, consumed))) => {
                                 c.rbuf.drain(..consumed);
-                                c.queued.push_back((kind, payload, now));
+                                c.queued.push_back((kind, payload, trace, now));
                                 progressed = true;
                             }
                             Ok(None) => break,
@@ -475,13 +479,14 @@ fn accept_into(
 }
 
 fn dispatch_next(idx: usize, c: &mut Conn, job_tx: &mpsc::Sender<Job>) {
-    if let Some((kind, payload, parsed_at)) = c.queued.pop_front() {
+    if let Some((kind, payload, trace, parsed_at)) = c.queued.pop_front() {
         c.busy = true;
         let _ = job_tx.send(Job {
             conn: idx,
             gen: c.gen,
             kind,
             payload,
+            trace,
             parsed_at,
         });
     }
@@ -512,9 +517,9 @@ fn worker_loop(
         let wait = job.parsed_at.elapsed();
         dispatch_wait_hist.record_duration(wait);
         let t0 = Instant::now();
-        let bytes = process_frame(job.kind, &job.payload, &svc);
+        let bytes = process_frame(job.kind, &job.payload, job.trace, &svc);
         let exec = t0.elapsed();
-        record_request_span(job.conn, job.kind, wait, exec);
+        record_request_span(job.conn, job.kind, wait, exec, job.trace);
         if tx
             .send(Done {
                 conn: job.conn,
@@ -532,37 +537,46 @@ fn worker_loop(
 /// wire parse → response encoded) with a nested `execute` child —
 /// positional nesting on the connection-slot track is how
 /// `chrome://tracing` draws the parent/child relation. One `now` is
-/// read for both so containment is exact.
-fn record_request_span(conn: usize, kind: FrameKind, wait: Duration, exec: Duration) {
+/// read for both so containment is exact. A nonzero wire trace id is
+/// stamped on both spans' args, which is what lets
+/// `GET /spans?trace=<id>` stitch them together with the scheduler's
+/// queue-wait and batch-exec spans for the same op.
+fn record_request_span(conn: usize, kind: FrameKind, wait: Duration, exec: Duration, trace: u64) {
     let rec = Registry::global().spans();
     let end = rec.now_us();
     let wait_us = wait.as_micros().min(u64::MAX as u128) as u64;
     let exec_us = exec.as_micros().min(u64::MAX as u128) as u64;
+    let mut args = vec![
+        ("kind".to_string(), Json::Str(format!("{kind:?}"))),
+        ("dispatch_wait_us".to_string(), Json::Num(wait_us)),
+        ("exec_us".to_string(), Json::Num(exec_us)),
+    ];
+    let mut exec_args = Vec::new();
+    if trace != 0 {
+        args.push(("trace".to_string(), Json::Num(trace)));
+        exec_args.push(("trace".to_string(), Json::Num(trace)));
+    }
     rec.push(Span {
         name: "request".to_string(),
         tid: conn as u64,
         start_us: end.saturating_sub(wait_us + exec_us),
         dur_us: wait_us + exec_us,
-        args: vec![
-            ("kind".to_string(), Json::Str(format!("{kind:?}"))),
-            ("dispatch_wait_us".to_string(), Json::Num(wait_us)),
-            ("exec_us".to_string(), Json::Num(exec_us)),
-        ],
+        args,
     });
     rec.push(Span {
         name: "execute".to_string(),
         tid: conn as u64,
         start_us: end.saturating_sub(exec_us),
         dur_us: exec_us,
-        args: Vec::new(),
+        args: exec_args,
     });
 }
 
 /// Run one request frame to completion and encode the response frame.
 /// Application errors (decode/eval/registration) become [`FrameKind::Error`]
 /// frames — workers never touch sockets, so there is no torn-write case.
-fn process_frame(kind: FrameKind, payload: &[u8], svc: &Arc<FheService>) -> Vec<u8> {
-    match handle_request(kind, payload, svc) {
+fn process_frame(kind: FrameKind, payload: &[u8], trace: u64, svc: &Arc<FheService>) -> Vec<u8> {
+    match handle_request(kind, payload, trace, svc) {
         Ok((k, body)) => wire::encode_frame(k, &body),
         Err(err) => {
             let (code, detail, msg) = match &err {
@@ -590,6 +604,7 @@ fn process_frame(kind: FrameKind, payload: &[u8], svc: &Arc<FheService>) -> Vec<
 fn handle_request(
     kind: FrameKind,
     payload: &[u8],
+    trace: u64,
     svc: &Arc<FheService>,
 ) -> Result<(FrameKind, Vec<u8>), ServiceError> {
     match kind {
@@ -611,7 +626,7 @@ fn handle_request(
                         .map_err(ServiceError::Wire)?,
                 );
             }
-            let out = svc.eval_decoded(&tenant, req.op, req.step, cts)?;
+            let out = svc.eval_decoded_traced(&tenant, req.op, req.step, cts, trace)?;
             Ok((FrameKind::EvalOk, encode_ciphertext(&out)))
         }
         FrameKind::Program => {
@@ -666,8 +681,10 @@ fn handle_request(
 /// If `rbuf` holds a complete HTTP request head, consume it and build
 /// the response bytes. `GET /metrics` serves the scheduler snapshot as
 /// JSON, `GET /metrics/prometheus` the text exposition format 0.0.4,
-/// and `GET /spans` the recent-span ring as Chrome Trace Event JSON;
-/// anything else is 404. One request per connection (Connection: close).
+/// `GET /spans` the recent-span ring as Chrome Trace Event JSON
+/// (`?trace=<id>` restricts it to one client trace), and
+/// `GET /healthz` a liveness snapshot; anything else is 404. One
+/// request per connection (Connection: close).
 fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u8>> {
     let head_end = rbuf
         .windows(4)
@@ -678,7 +695,12 @@ fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u
     let request_line = head.lines().next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    // Route on the path; the query string only parameterizes /spans.
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
     let (status, content_type, body) = match (method, path) {
         ("GET", "/metrics") => ("200 OK", "application/json", svc.metrics_json()),
         ("GET", "/metrics/prometheus") => (
@@ -686,11 +708,18 @@ fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u
             "text/plain; version=0.0.4",
             svc.prometheus_text(),
         ),
-        ("GET", "/spans") => ("200 OK", "application/json", svc.spans_json()),
+        ("GET", "/spans") => {
+            let body = match spans_trace_param(query) {
+                Some(id) => svc.spans_json_filtered(id),
+                None => svc.spans_json(),
+            };
+            ("200 OK", "application/json", body)
+        }
+        ("GET", "/healthz") => ("200 OK", "application/json", svc.healthz_json()),
         _ => (
             "404 Not Found",
             "text/plain",
-            "not found (try GET /metrics, /metrics/prometheus, /spans)\n".to_string(),
+            "not found (try GET /metrics, /metrics/prometheus, /spans, /healthz)\n".to_string(),
         ),
     };
     Some(
@@ -700,6 +729,16 @@ fn parse_http_request(rbuf: &mut Vec<u8>, svc: &Arc<FheService>) -> Option<Vec<u
         )
         .into_bytes(),
     )
+}
+
+/// Extract a `trace=<u64>` pair from an HTTP query string. A missing or
+/// unparseable value means "no filter" (the full ring comes back)
+/// rather than an error — the endpoint is a read-only debugging aid.
+fn spans_trace_param(query: &str) -> Option<u64> {
+    query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("trace="))
+        .and_then(|v| v.parse::<u64>().ok())
 }
 
 // Re-export for callers that match on response kinds.

@@ -8,16 +8,27 @@
 //! |---|---|---|
 //! | 0 | 4 | magic `"FHW1"` (trailing byte = format version) |
 //! | 4 | 1 | frame kind ([`FrameKind`]) |
-//! | 5 | 1 | flags (reserved, must be 0) |
+//! | 5 | 1 | flags ([`FLAG_TRACE`]; all other bits must be 0) |
 //! | 6 | 4 | payload length `L` (u32) |
-//! | 10 | L | payload |
-//! | 10+L | 8 | FNV-1a 64 checksum of the payload |
+//! | 10 | 0 or 8 | trace id (u64, present iff [`FLAG_TRACE`]) |
+//! | …  | L | payload |
+//! | …+L | 8 | FNV-1a 64 checksum of the payload |
 //!
-//! Decoding is **strict**: bad magic, unknown kind, nonzero flags, short
-//! buffers, checksum mismatches and trailing bytes are all hard errors
-//! ([`WireError`]), and every ciphertext residue is bounds-checked
-//! against its modulus — a corrupted frame can never become a
-//! half-valid polynomial.
+//! Decoding is **strict**: bad magic, unknown kind, unknown flag bits,
+//! short buffers, checksum mismatches and trailing bytes are all hard
+//! errors ([`WireError`]), and every ciphertext residue is
+//! bounds-checked against its modulus — a corrupted frame can never
+//! become a half-valid polynomial.
+//!
+//! ## Trace context
+//!
+//! A client may stamp a request frame with an 8-byte trace id
+//! ([`encode_frame_traced`] / [`write_frame_to_traced`]); the server
+//! threads the id through its job/scheduler pipeline so the request's
+//! spans stitch into one trace (`GET /spans?trace=<id>`). Trace id `0`
+//! means "untraced" and encodes with no flag, byte-identical to the
+//! pre-flag format. The id is metadata, deliberately outside the payload
+//! checksum: corrupting it can mislabel a span but never an answer.
 //!
 //! ## Seed-compressed fresh ciphertexts
 //!
@@ -44,6 +55,9 @@ pub const MAX_FRAME_PAYLOAD: usize = 1 << 28;
 
 /// Frame header bytes before the payload (magic + kind + flags + len).
 pub const FRAME_HEADER_LEN: usize = 10;
+
+/// Flags bit 0: an 8-byte little-endian trace id follows the header.
+pub const FLAG_TRACE: u8 = 0x01;
 
 /// What a frame carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -301,36 +315,50 @@ impl<'a> WireReader<'a> {
 // framing
 // ----------------------------------------------------------------------
 
-/// Wrap a payload in a checksummed frame.
+/// Wrap a payload in a checksummed frame (no trace context; byte-for-
+/// byte the pre-flag format).
 pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    encode_frame_traced(kind, payload, 0)
+}
+
+/// Wrap a payload in a checksummed frame carrying a trace id. `trace`
+/// of `0` means untraced: no flag bit, no extra bytes.
+pub fn encode_frame_traced(kind: FrameKind, payload: &[u8], trace: u64) -> Vec<u8> {
     assert!(payload.len() <= MAX_FRAME_PAYLOAD, "payload exceeds cap");
-    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len() + 8);
+    let extra = if trace != 0 { 8 } else { 0 };
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + extra + payload.len() + 8);
     out.extend_from_slice(&WIRE_MAGIC);
     out.push(kind as u8);
-    out.push(0); // flags
+    out.push(if trace != 0 { FLAG_TRACE } else { 0 });
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    if trace != 0 {
+        out.extend_from_slice(&trace.to_le_bytes());
+    }
     out.extend_from_slice(payload);
     out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
     out
 }
 
 /// Validate the fixed 10-byte header shared by the buffer and stream
-/// decoders: magic, kind, flags, length cap. Returns (kind, payload len).
-fn validate_header(header: &[u8]) -> Result<(FrameKind, usize), WireError> {
+/// decoders: magic, kind, flags, length cap. Returns (kind, payload
+/// len, flags); any flag bit beyond [`FLAG_TRACE`] is a hard error, so
+/// strictness is preserved for everything not explicitly defined.
+fn validate_header(header: &[u8]) -> Result<(FrameKind, usize, u8), WireError> {
     debug_assert_eq!(header.len(), FRAME_HEADER_LEN);
     let magic: [u8; 4] = header[0..4].try_into().unwrap();
     if magic != WIRE_MAGIC {
         return Err(WireError::BadMagic(magic));
     }
     let kind = FrameKind::from_u8(header[4]).ok_or(WireError::UnknownKind(header[4]))?;
-    if header[5] != 0 {
-        return malformed(format!("reserved flags byte is {}", header[5]));
+    let flags = header[5];
+    if flags & !FLAG_TRACE != 0 {
+        return malformed(format!("reserved flags byte is {flags}"));
     }
     let len = u32::from_le_bytes(header[6..10].try_into().unwrap()) as usize;
     if len > MAX_FRAME_PAYLOAD {
         return Err(WireError::Oversized(len));
     }
-    Ok((kind, len))
+    Ok((kind, len, flags))
 }
 
 fn verify_checksum(payload: &[u8], want: u64) -> Result<(), WireError> {
@@ -349,8 +377,9 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameKind, &[u8]), WireError> {
             have: buf.len(),
         });
     }
-    let (kind, len) = validate_header(&buf[..FRAME_HEADER_LEN])?;
-    let total = FRAME_HEADER_LEN + len + 8;
+    let (kind, len, flags) = validate_header(&buf[..FRAME_HEADER_LEN])?;
+    let body = FRAME_HEADER_LEN + if flags & FLAG_TRACE != 0 { 8 } else { 0 };
+    let total = body + len + 8;
     if buf.len() < total {
         return Err(WireError::Truncated {
             need: total,
@@ -360,7 +389,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameKind, &[u8]), WireError> {
     if buf.len() > total {
         return Err(WireError::TrailingBytes(buf.len() - total));
     }
-    let payload = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len];
+    let payload = &buf[body..body + len];
     let want = u64::from_le_bytes(buf[total - 8..total].try_into().unwrap());
     verify_checksum(payload, want)?;
     Ok((kind, payload))
@@ -372,20 +401,36 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameKind, &[u8]), WireError> {
 /// frame is whole — the caller drains `consumed` bytes and may call
 /// again for pipelined frames. Header or checksum corruption is an
 /// error as soon as it is detectable (a bad header never waits for the
-/// rest of the frame).
+/// rest of the frame). Drops the trace id; servers use
+/// [`try_extract_frame_traced`].
 pub fn try_extract_frame(buf: &[u8]) -> Result<Option<(FrameKind, Vec<u8>, usize)>, WireError> {
+    Ok(try_extract_frame_traced(buf)?.map(|(kind, payload, _, consumed)| (kind, payload, consumed)))
+}
+
+/// [`try_extract_frame`] that also surfaces the frame's trace id
+/// (`0` when the frame carried none).
+pub fn try_extract_frame_traced(
+    buf: &[u8],
+) -> Result<Option<(FrameKind, Vec<u8>, u64, usize)>, WireError> {
     if buf.len() < FRAME_HEADER_LEN {
         return Ok(None);
     }
-    let (kind, len) = validate_header(&buf[..FRAME_HEADER_LEN])?;
-    let total = FRAME_HEADER_LEN + len + 8;
+    let (kind, len, flags) = validate_header(&buf[..FRAME_HEADER_LEN])?;
+    let traced = flags & FLAG_TRACE != 0;
+    let body = FRAME_HEADER_LEN + if traced { 8 } else { 0 };
+    let total = body + len + 8;
     if buf.len() < total {
         return Ok(None);
     }
-    let payload = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len];
+    let trace = if traced {
+        u64::from_le_bytes(buf[FRAME_HEADER_LEN..body].try_into().unwrap())
+    } else {
+        0
+    };
+    let payload = &buf[body..body + len];
     let want = u64::from_le_bytes(buf[total - 8..total].try_into().unwrap());
     verify_checksum(payload, want)?;
-    Ok(Some((kind, payload.to_vec(), total)))
+    Ok(Some((kind, payload.to_vec(), trace, total)))
 }
 
 /// Write one frame to a stream.
@@ -395,6 +440,17 @@ pub fn write_frame_to<W: std::io::Write>(
     payload: &[u8],
 ) -> std::io::Result<()> {
     w.write_all(&encode_frame(kind, payload))?;
+    w.flush()
+}
+
+/// Write one frame stamped with a trace id (no-op stamp when `0`).
+pub fn write_frame_to_traced<W: std::io::Write>(
+    w: &mut W,
+    kind: FrameKind,
+    payload: &[u8],
+    trace: u64,
+) -> std::io::Result<()> {
+    w.write_all(&encode_frame_traced(kind, payload, trace))?;
     w.flush()
 }
 
@@ -417,7 +473,13 @@ pub fn read_frame_from<R: std::io::Read>(
     }
     header[0] = first[0];
     r.read_exact(&mut header[1..]).map_err(ServiceError::Io)?;
-    let (kind, len) = validate_header(&header).map_err(ServiceError::Wire)?;
+    let (kind, len, flags) = validate_header(&header).map_err(ServiceError::Wire)?;
+    if flags & FLAG_TRACE != 0 {
+        // Blocking readers (clients) accept but do not surface trace
+        // context — responses are correlated by pipeline order.
+        let mut trace = [0u8; 8];
+        r.read_exact(&mut trace).map_err(ServiceError::Io)?;
+    }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(ServiceError::Io)?;
     let mut check = [0u8; 8];
@@ -1397,6 +1459,60 @@ mod tests {
         let mut flags = frame;
         flags[5] = 7;
         assert!(matches!(decode_frame(&flags), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn traced_frames_roundtrip_and_stay_strict() {
+        let payload = b"traced request";
+        let frame = encode_frame_traced(FrameKind::Eval, payload, 0xDEAD_BEEF_0042);
+        // The flag + id are visible to the incremental decoder...
+        let (kind, back, trace, consumed) =
+            try_extract_frame_traced(&frame).unwrap().expect("complete");
+        assert_eq!(kind, FrameKind::Eval);
+        assert_eq!(back, payload);
+        assert_eq!(trace, 0xDEAD_BEEF_0042);
+        assert_eq!(consumed, frame.len());
+        assert_eq!(consumed, FRAME_HEADER_LEN + 8 + payload.len() + 8);
+        // ...transparent to the strict whole-buffer decoder...
+        let (k2, p2) = decode_frame(&frame).unwrap();
+        assert_eq!((k2, p2), (FrameKind::Eval, payload.as_slice()));
+        // ...and the trace-dropping incremental decoder still consumes
+        // the whole frame, so the stream never desyncs.
+        let (_, _, c2) = try_extract_frame(&frame).unwrap().expect("complete");
+        assert_eq!(c2, frame.len());
+
+        // trace=0 encodes byte-identically to the pre-flag format.
+        assert_eq!(
+            encode_frame_traced(FrameKind::Eval, payload, 0),
+            encode_frame(FrameKind::Eval, payload)
+        );
+
+        // An untraced frame reads back trace 0.
+        let plain = encode_frame(FrameKind::Ack, b"x");
+        let (_, _, t0, _) = try_extract_frame_traced(&plain).unwrap().unwrap();
+        assert_eq!(t0, 0);
+
+        // Truncation at every prefix: incomplete, never wrong.
+        for cut in 0..frame.len() {
+            match try_extract_frame_traced(&frame[..cut]) {
+                Ok(None) => {}
+                other => panic!("cut={cut}: {other:?}"),
+            }
+        }
+
+        // Undefined flag bits stay hard errors even with bit 0 set.
+        let mut bad = frame.clone();
+        bad[5] = FLAG_TRACE | 2;
+        assert!(matches!(
+            try_extract_frame_traced(&bad),
+            Err(WireError::Malformed(_))
+        ));
+        assert!(matches!(decode_frame(&bad), Err(WireError::Malformed(_))));
+
+        // A blocking reader skips the id and returns the payload.
+        let mut cursor = std::io::Cursor::new(frame.clone());
+        let (k3, p3) = read_frame_from(&mut cursor).unwrap().expect("one frame");
+        assert_eq!((k3, p3.as_slice()), (FrameKind::Eval, payload.as_slice()));
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Online cost-model calibration: per-phase scale factors fitted from
+//! (simulated, measured) batch samples.
+//!
+//! The coordinator charges every batch on the analytical [`super::cost`]
+//! model and also measures its wall-clock time. Each batch therefore
+//! yields one equation: the measured nanoseconds should equal the sum of
+//! the six [`super::Breakdown`] phases' simulated nanoseconds, each
+//! scaled by an unknown per-phase factor. [`Calibration`] maintains an
+//! exponentially decayed least-squares fit of those factors — the
+//! normal equations `A·f = b` are EMA'd sample by sample and re-solved
+//! with a ridge prior pulling unidentified directions toward `1.0` (a
+//! phase the workload never exercises keeps its uncalibrated factor
+//! instead of drifting on noise). No external deps: the 6×6 solve is a
+//! hand-rolled Gaussian elimination.
+//!
+//! The fit is the feedback signal the ROADMAP's cost-model autotuner
+//! searches with: a factor far from 1.0 names the phase whose constants
+//! are wrong, and [`Calibration::residual`] says how much of the
+//! measurement the calibrated model still cannot explain.
+//!
+//! Serialization goes through `util::json` so `--calibration <path>`
+//! can persist the fit (factors *and* the decayed normal equations, so
+//! a restarted server warm-starts instead of re-learning) across runs.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Number of cost phases — the six [`super::Breakdown`] fields.
+pub const PHASE_COUNT: usize = 6;
+
+/// Phase names, in [`super::Breakdown`] field order (the same order
+/// `Breakdown::phase_cycles` returns).
+pub const PHASE_NAMES: [&str; PHASE_COUNT] = [
+    "computation",
+    "permutation",
+    "read_write",
+    "interbank",
+    "channel",
+    "stack",
+];
+
+/// Default per-sample EMA decay of the normal equations. At 0.97 the
+/// effective window is ~33 batches — long enough to separate phases
+/// across mixed batch shapes, short enough to track a workload shift.
+pub const DEFAULT_DECAY: f64 = 0.97;
+
+/// Default ridge strength (relative to the normal matrix trace) of the
+/// pull-toward-1.0 prior.
+pub const DEFAULT_RIDGE: f64 = 0.02;
+
+/// EMA'd least-squares fit of per-phase cost-model scale factors.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    decay: f64,
+    ridge: f64,
+    /// EMA'd normal matrix Σ λ^k · p·pᵀ (p = per-phase simulated ns).
+    a: [[f64; PHASE_COUNT]; PHASE_COUNT],
+    /// EMA'd Σ λ^k · p·w (w = measured wall ns).
+    b: [f64; PHASE_COUNT],
+    factors: [f64; PHASE_COUNT],
+    samples: u64,
+    /// EMA of the relative squared residual (w − f·p)² / w².
+    resid_ema: f64,
+    /// Per-phase simulated ns observed this run (not persisted).
+    seen_phase_ns: [f64; PHASE_COUNT],
+    /// Measured wall ns observed this run (not persisted).
+    seen_wall_ns: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Self::new(DEFAULT_DECAY, DEFAULT_RIDGE)
+    }
+}
+
+impl Calibration {
+    pub fn new(decay: f64, ridge: f64) -> Self {
+        assert!((0.0..1.0).contains(&decay), "decay must be in [0, 1)");
+        assert!(ridge >= 0.0, "ridge must be non-negative");
+        Self {
+            decay,
+            ridge,
+            a: [[0.0; PHASE_COUNT]; PHASE_COUNT],
+            b: [0.0; PHASE_COUNT],
+            factors: [1.0; PHASE_COUNT],
+            samples: 0,
+            resid_ema: 0.0,
+            seen_phase_ns: [0.0; PHASE_COUNT],
+            seen_wall_ns: 0.0,
+        }
+    }
+
+    /// Current per-phase scale factors, in [`PHASE_NAMES`] order.
+    pub fn factors(&self) -> &[f64; PHASE_COUNT] {
+        &self.factors
+    }
+
+    /// Samples folded into the fit so far (including persisted history).
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// EMA'd relative RMS residual of the calibrated prediction —
+    /// `0.0` means the calibrated model explains the measurements
+    /// exactly, `1.0` means it is off by as much as the measurement.
+    pub fn residual(&self) -> f64 {
+        self.resid_ema.sqrt()
+    }
+
+    /// Calibrated prediction for one sample: Σ factor_j · phase_ns_j.
+    pub fn predict_ns(&self, phase_ns: &[f64; PHASE_COUNT]) -> f64 {
+        self.factors
+            .iter()
+            .zip(phase_ns)
+            .map(|(f, p)| f * p)
+            .sum()
+    }
+
+    /// Fold one (per-phase simulated ns, measured wall ns) batch sample
+    /// into the fit and re-solve the factors.
+    pub fn observe(&mut self, phase_ns: &[f64; PHASE_COUNT], wall_ns: f64) {
+        if wall_ns <= 0.0 || phase_ns.iter().all(|&p| p <= 0.0) {
+            return;
+        }
+        for j in 0..PHASE_COUNT {
+            self.b[j] = self.decay * self.b[j] + phase_ns[j] * wall_ns;
+            for k in 0..PHASE_COUNT {
+                self.a[j][k] = self.decay * self.a[j][k] + phase_ns[j] * phase_ns[k];
+            }
+        }
+        self.samples += 1;
+        self.refit();
+        // Residual of the *updated* factors on this sample.
+        let err = (wall_ns - self.predict_ns(phase_ns)) / wall_ns;
+        self.resid_ema = self.decay * self.resid_ema + (1.0 - self.decay) * err * err;
+        for j in 0..PHASE_COUNT {
+            self.seen_phase_ns[j] += phase_ns[j];
+        }
+        self.seen_wall_ns += wall_ns;
+    }
+
+    /// Calibrated drift over everything observed **this run**: current
+    /// factors applied to the accumulated per-phase simulated ns, over
+    /// the accumulated measured ns. `None` before the first sample. The
+    /// uncalibrated counterpart of this ratio is the scheduler's
+    /// `cost_model_drift_ratio`; calibration's job is to move this one
+    /// toward 1.0.
+    pub fn aggregate_ratio(&self) -> Option<f64> {
+        if self.seen_wall_ns <= 0.0 {
+            return None;
+        }
+        Some(self.predict_ns(&self.seen_phase_ns) / self.seen_wall_ns)
+    }
+
+    /// Uncalibrated drift over the same observed samples (all factors
+    /// pinned at 1.0) — the like-for-like baseline for
+    /// [`Self::aggregate_ratio`].
+    pub fn uncalibrated_ratio(&self) -> Option<f64> {
+        if self.seen_wall_ns <= 0.0 {
+            return None;
+        }
+        Some(self.seen_phase_ns.iter().sum::<f64>() / self.seen_wall_ns)
+    }
+
+    /// Re-solve `(A + μI)·f = b + μ·1` — ridge-regularized normal
+    /// equations with the prior `f = 1`. μ scales with `trace(A)/6` so
+    /// the prior strength is invariant to the workload's magnitude.
+    fn refit(&mut self) {
+        let trace: f64 = (0..PHASE_COUNT).map(|j| self.a[j][j]).sum();
+        if trace <= 0.0 {
+            return;
+        }
+        let mu = self.ridge * trace / PHASE_COUNT as f64 + f64::MIN_POSITIVE;
+        let mut m = [[0.0f64; PHASE_COUNT + 1]; PHASE_COUNT];
+        for j in 0..PHASE_COUNT {
+            for k in 0..PHASE_COUNT {
+                m[j][k] = self.a[j][k];
+            }
+            m[j][j] += mu;
+            m[j][PHASE_COUNT] = self.b[j] + mu;
+        }
+        if let Some(f) = solve(&mut m) {
+            // Physical sanity: a phase cannot run backwards, and a
+            // transiently wild fit must not poison the drift gauges.
+            for j in 0..PHASE_COUNT {
+                self.factors[j] = f[j].clamp(0.05, 20.0);
+            }
+        }
+    }
+
+    /// Serialize the fit (config, factors, decayed normal equations).
+    pub fn to_json(&self) -> Json {
+        let row = |r: &[f64]| Json::Array(r.iter().map(|&v| Json::Float(v)).collect());
+        Json::obj([
+            ("version", Json::Num(1)),
+            ("decay", Json::Float(self.decay)),
+            ("ridge", Json::Float(self.ridge)),
+            ("samples", Json::Num(self.samples)),
+            ("residual", Json::Float(self.residual())),
+            (
+                "phases",
+                Json::Array(
+                    PHASE_NAMES
+                        .iter()
+                        .map(|&n| Json::Str(n.to_string()))
+                        .collect(),
+                ),
+            ),
+            ("factors", row(&self.factors)),
+            ("normal_b", row(&self.b)),
+            (
+                "normal_a",
+                Json::Array(self.a.iter().map(|r| row(r)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self, String> {
+        let vec6 = |j: &Json, what: &str| -> Result<[f64; PHASE_COUNT], String> {
+            let arr = j.as_array().map_err(|e| format!("{what}: {e}"))?;
+            if arr.len() != PHASE_COUNT {
+                return Err(format!("{what}: expected {PHASE_COUNT} entries, got {}", arr.len()));
+            }
+            let mut out = [0.0; PHASE_COUNT];
+            for (i, v) in arr.iter().enumerate() {
+                out[i] = v.as_f64().map_err(|e| format!("{what}[{i}]: {e}"))?;
+            }
+            Ok(out)
+        };
+        let decay = doc.field("decay")?.as_f64()?;
+        let ridge = doc.field("ridge")?.as_f64()?;
+        if !(0.0..1.0).contains(&decay) || ridge < 0.0 {
+            return Err(format!("bad calibration config: decay {decay}, ridge {ridge}"));
+        }
+        let mut cal = Self::new(decay, ridge);
+        cal.samples = doc.field("samples")?.as_u64()?;
+        cal.factors = vec6(doc.field("factors")?, "factors")?;
+        cal.b = vec6(doc.field("normal_b")?, "normal_b")?;
+        let rows = doc.field("normal_a")?.as_array()?;
+        if rows.len() != PHASE_COUNT {
+            return Err(format!("normal_a: expected {PHASE_COUNT} rows, got {}", rows.len()));
+        }
+        for (j, r) in rows.iter().enumerate() {
+            cal.a[j] = vec6(r, "normal_a row")?;
+        }
+        for f in cal.factors {
+            if !f.is_finite() || !(0.05..=20.0).contains(&f) {
+                return Err(format!("factor {f} outside sane range"));
+            }
+        }
+        Ok(cal)
+    }
+
+    /// Load a persisted fit; `None` (fresh calibration) if the file does
+    /// not exist or does not parse — a corrupt file must not take the
+    /// server down.
+    pub fn load(path: &Path) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        Self::from_json(&doc).ok()
+    }
+
+    /// Persist the fit (pretty JSON, atomic enough for a single writer).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().write_pretty())
+    }
+}
+
+/// Solve the 6×7 augmented system in place by Gaussian elimination with
+/// partial pivoting. Returns `None` only on a numerically singular
+/// pivot, which the ridge term rules out for observed data.
+fn solve(m: &mut [[f64; PHASE_COUNT + 1]; PHASE_COUNT]) -> Option<[f64; PHASE_COUNT]> {
+    for col in 0..PHASE_COUNT {
+        let pivot = (col..PHASE_COUNT)
+            .max_by(|&a, &b| m[a][col].abs().total_cmp(&m[b][col].abs()))
+            .unwrap();
+        if m[pivot][col].abs() < 1e-300 {
+            return None;
+        }
+        m.swap(col, pivot);
+        for row in col + 1..PHASE_COUNT {
+            let ratio = m[row][col] / m[col][col];
+            for k in col..=PHASE_COUNT {
+                m[row][k] -= ratio * m[col][k];
+            }
+        }
+    }
+    let mut f = [0.0f64; PHASE_COUNT];
+    for col in (0..PHASE_COUNT).rev() {
+        let mut acc = m[col][PHASE_COUNT];
+        for k in col + 1..PHASE_COUNT {
+            acc -= m[col][k] * f[k];
+        }
+        f[col] = acc / m[col][col];
+    }
+    if f.iter().all(|v| v.is_finite()) {
+        Some(f)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::SplitMix64;
+
+    /// Random positive phase mix with per-sample shape variation — the
+    /// diversity that makes the six factors identifiable.
+    fn sample_mix(rng: &mut SplitMix64) -> [f64; PHASE_COUNT] {
+        let mut p = [0.0; PHASE_COUNT];
+        for slot in p.iter_mut() {
+            *slot = 1e4 + rng.f64() * 1e6;
+        }
+        p
+    }
+
+    #[test]
+    fn converges_to_planted_per_phase_skew() {
+        let planted = [1.6, 0.5, 2.2, 1.0, 0.7, 1.3];
+        let mut cal = Calibration::default();
+        let mut rng = SplitMix64::new(0xCA11B);
+        for _ in 0..400 {
+            let p = sample_mix(&mut rng);
+            let w: f64 = planted.iter().zip(&p).map(|(f, x)| f * x).sum();
+            cal.observe(&p, w);
+        }
+        for (j, (&got, &want)) in cal.factors().iter().zip(&planted).enumerate() {
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel < 0.15,
+                "phase {} ({}) did not converge: got {got:.3}, planted {want:.3}",
+                j,
+                PHASE_NAMES[j]
+            );
+        }
+        assert!(cal.residual() < 0.10, "residual too high: {}", cal.residual());
+        // The calibrated aggregate ratio must sit essentially at 1.0
+        // while the uncalibrated one carries the planted skew.
+        let cal_ratio = cal.aggregate_ratio().unwrap();
+        let unc_ratio = cal.uncalibrated_ratio().unwrap();
+        assert!((cal_ratio - 1.0).abs() < 0.05, "calibrated ratio {cal_ratio}");
+        assert!((cal_ratio - 1.0).abs() < (unc_ratio - 1.0).abs());
+    }
+
+    #[test]
+    fn unexercised_phases_hold_the_prior() {
+        // Samples that only ever exercise phase 0: the fit must scale
+        // phase 0 and leave the unidentified phases at 1.0 (the ridge
+        // prior), not drift them on noise.
+        let mut cal = Calibration::default();
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..200 {
+            let mut p = [0.0; PHASE_COUNT];
+            p[0] = 1e5 + rng.f64() * 1e5;
+            cal.observe(&p, 3.0 * p[0]);
+        }
+        assert!((cal.factors()[0] - 3.0).abs() < 0.2, "got {}", cal.factors()[0]);
+        for j in 1..PHASE_COUNT {
+            assert!(
+                (cal.factors()[j] - 1.0).abs() < 1e-6,
+                "unexercised phase {j} drifted to {}",
+                cal.factors()[j]
+            );
+        }
+    }
+
+    #[test]
+    fn collinear_samples_still_drive_ratio_to_one() {
+        // A serving workload where every batch has the same phase mix:
+        // the six factors are not identifiable, but the fitted
+        // combination must still predict the wall time — the calibrated
+        // drift ratio goes to 1.0 even without identifiability.
+        let mix = [5e5, 3e5, 2e5, 1e5, 5e4, 2e4];
+        let mut cal = Calibration::default();
+        for _ in 0..100 {
+            cal.observe(&mix, 0.25 * mix.iter().sum::<f64>());
+        }
+        let ratio = cal.aggregate_ratio().unwrap();
+        assert!((ratio - 1.0).abs() < 0.05, "collinear ratio {ratio}");
+        let unc = cal.uncalibrated_ratio().unwrap();
+        assert!((unc - 4.0).abs() < 0.2, "uncalibrated should stay ~4: {unc}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_fit() {
+        let mut cal = Calibration::default();
+        let mut rng = SplitMix64::new(99);
+        let planted = [0.8, 1.4, 1.0, 2.0, 0.6, 1.1];
+        for _ in 0..50 {
+            let p = sample_mix(&mut rng);
+            let w: f64 = planted.iter().zip(&p).map(|(f, x)| f * x).sum();
+            cal.observe(&p, w);
+        }
+        let text = cal.to_json().write_pretty();
+        let back = Calibration::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.samples(), cal.samples());
+        for j in 0..PHASE_COUNT {
+            assert!(
+                (back.factors()[j] - cal.factors()[j]).abs() < 1e-9,
+                "factor {j} changed across roundtrip"
+            );
+        }
+        // A restored fit keeps learning from where it left off.
+        let mut warm = back.clone();
+        let p = sample_mix(&mut rng);
+        warm.observe(&p, planted.iter().zip(&p).map(|(f, x)| f * x).sum());
+        assert_eq!(warm.samples(), cal.samples() + 1);
+    }
+
+    #[test]
+    fn rejects_corrupt_payloads() {
+        assert!(Calibration::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut cal = Calibration::default();
+        cal.observe(&[1e5; PHASE_COUNT], 6e5);
+        let mut doc = cal.to_json().write();
+        doc = doc.replace("\"decay\": 0.97", "\"decay\": 1.5");
+        assert!(Calibration::from_json(&Json::parse(&doc).unwrap()).is_err());
+    }
+
+    #[test]
+    fn degenerate_samples_are_ignored() {
+        let mut cal = Calibration::default();
+        cal.observe(&[0.0; PHASE_COUNT], 100.0);
+        cal.observe(&[1e5; PHASE_COUNT], 0.0);
+        assert_eq!(cal.samples(), 0);
+        assert!(cal.aggregate_ratio().is_none());
+        assert_eq!(cal.factors(), &[1.0; PHASE_COUNT]);
+    }
+}

@@ -80,6 +80,19 @@ impl Breakdown {
             stack: self.stack.scaled(f),
         }
     }
+
+    /// Per-phase cycle counts in [`super::calib::PHASE_NAMES`] order —
+    /// the attribution vector the calibration loop fits factors over.
+    pub fn phase_cycles(&self) -> [f64; super::calib::PHASE_COUNT] {
+        [
+            self.computation.cycles,
+            self.permutation.cycles,
+            self.read_write.cycles,
+            self.interbank.cycles,
+            self.channel.cycles,
+            self.stack.cycles,
+        ]
+    }
 }
 
 /// FHE parameter shape the cost model needs (decoupled from the

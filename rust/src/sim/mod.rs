@@ -3,11 +3,13 @@
 //! primitive cost models, the area/power model, and the workload engine.
 
 pub mod area;
+pub mod calib;
 pub mod commands;
 pub mod config;
 pub mod cost;
 pub mod engine;
 
+pub use calib::{Calibration, PHASE_COUNT, PHASE_NAMES};
 pub use config::ArchConfig;
 pub use cost::{Breakdown, Cost, CostModel, FheShape};
 pub use engine::{simulate, SimOptions, SimResult};

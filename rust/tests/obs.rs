@@ -4,15 +4,17 @@
 //! check that the HTTP endpoints serve well-formed payloads under
 //! pipelined load.
 
+use fhemem::coordinator::{Coordinator, MixedKind, MixedOp};
 use fhemem::obs::{Histogram, Registry, Span, SpanRecorder};
 use fhemem::params::CkksParams;
 use fhemem::program::Builder;
-use fhemem::service::{server, FheService, SchedulerConfig, ServiceClient};
+use fhemem::service::{server, BatchScheduler, FheService, SchedulerConfig, ServiceClient, Tenant};
 use fhemem::sim::ArchConfig;
 use fhemem::util::json::Json;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Deterministic value stream (xorshift-style LCG) so every run and
@@ -340,4 +342,128 @@ fn e2e_prometheus_and_spans_endpoints_under_load() {
 
     handle.stop();
     svc.shutdown();
+}
+
+#[test]
+fn trace_id_links_request_queue_and_batch_spans_over_tcp() {
+    let svc = FheService::new(
+        ArchConfig::default(),
+        SchedulerConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(2),
+            max_queue: 256,
+            max_tenant_inflight: 0,
+        },
+    );
+    let handle = server::spawn_with(
+        "127.0.0.1:0",
+        Some("127.0.0.1:0"),
+        svc.clone(),
+        server::ServeOptions::default(),
+    )
+    .expect("bind loopback");
+    let http = handle.http_addr.expect("http listener");
+    let mut client =
+        ServiceClient::connect(handle.addr, 41, CkksParams::func_tiny(), 0x41).expect("connect");
+    let slots = client.ctx.encoder.slots();
+    let z: Vec<f64> = (0..slots).map(|i| 0.02 * (i % 5) as f64).collect();
+    let ct = client.encrypt(&z, 3);
+    let trace: u64 = 0xABC123;
+    // Untraced traffic around two traced ops under one id: the filter
+    // must pull exactly the traced pipeline out of everything else the
+    // test process has recorded.
+    client.rotate(&ct, 1).expect("untraced warmup");
+    client.set_trace(trace);
+    client.rotate(&ct, 1).expect("traced rotate");
+    client.add(&ct, &ct).expect("traced add");
+    client.set_trace(0);
+    client.rotate(&ct, 1).expect("untraced tail");
+
+    let raw = http_get(http, &format!("/spans?trace={trace}"));
+    assert!(raw.starts_with("HTTP/1.1 200"), "bad status: {raw}");
+    let body = raw.split_once("\r\n\r\n").unwrap().1;
+    let doc = Json::parse(body).expect("filtered span payload parses");
+    let events = doc.field("traceEvents").unwrap().as_array().unwrap();
+    let names: Vec<&str> = events
+        .iter()
+        .map(|e| e.field("name").unwrap().as_str().unwrap())
+        .collect();
+    // One trace id stitches the whole pipeline: the server's request
+    // span, the scheduler's queue-wait, and the batch execute — once
+    // per traced op.
+    for want in ["request", "queue-wait", "batch-exec"] {
+        assert_eq!(
+            names.iter().filter(|n| **n == want).count(),
+            2,
+            "expected two {want} spans for the two traced ops, got {names:?}"
+        );
+    }
+    for e in events {
+        assert_eq!(
+            e.field("args").unwrap().field("trace").unwrap().as_u64().unwrap(),
+            trace
+        );
+    }
+    // An id nobody used filters to an empty, still-valid document.
+    let none = http_get(http, "/spans?trace=987654321");
+    let ndoc = Json::parse(none.split_once("\r\n\r\n").unwrap().1).unwrap();
+    assert!(ndoc.field("traceEvents").unwrap().as_array().unwrap().is_empty());
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn calibrated_drift_lands_closer_to_one_than_raw_drift() {
+    // Replay a small mixed workload through the scheduler; the
+    // coordinator's online calibration observes every batch, so the
+    // calibration-corrected drift must end up at least as close to 1.0
+    // as the raw sim-vs-wall ratio (the CI load-smoke gate in unit form).
+    let coord = Arc::new(Coordinator::new(
+        CkksParams::func_tiny(),
+        ArchConfig::default(),
+        None,
+    ));
+    let sched = BatchScheduler::start(
+        coord,
+        SchedulerConfig {
+            max_batch: 2,
+            max_delay: Duration::from_millis(1),
+            max_queue: 64,
+            max_tenant_inflight: 0,
+        },
+    );
+    let t = Tenant::new(1, CkksParams::func_tiny(), 77);
+    let z: Vec<f64> = vec![0.1; t.ctx.encoder.slots()];
+    for k in 0..18 {
+        let a = t.eval.encrypt_real(&z, 3);
+        let (kind, b) = match k % 3 {
+            0 => (MixedKind::Rotate(1), None),
+            1 => (MixedKind::Add, Some(t.eval.encrypt_real(&z, 3))),
+            _ => (MixedKind::Mul, Some(t.eval.encrypt_real(&z, 3))),
+        };
+        sched
+            .execute_blocking(MixedOp::new(t.eval.clone(), kind, a, b))
+            .expect("replayed op");
+    }
+    let unc = sched.drift_ratio();
+    let cal = sched
+        .coordinator()
+        .calibrated_drift_ratio()
+        .expect("calibration observed the batches");
+    assert!(unc > 0.0, "no batches landed");
+    assert!(cal > 0.0, "calibrated ratio must be positive, got {cal}");
+    // Strictly closer than raw — unless raw was already essentially
+    // perfect, in which case matching it within noise is the win.
+    assert!(
+        (cal - 1.0).abs() <= (unc - 1.0).abs() + 1e-9 || (cal - 1.0).abs() < 0.25,
+        "calibrated drift {cal} is no closer to 1.0 than raw drift {unc}"
+    );
+    // Both ratios ride the metrics snapshot for scrapers.
+    let doc = Json::parse(&sched.metrics_json()).expect("snapshot parses");
+    assert!(
+        doc.field("calibrated_drift_ratio").unwrap().as_f64().unwrap() > 0.0,
+        "snapshot lost the calibrated ratio"
+    );
+    sched.shutdown();
 }

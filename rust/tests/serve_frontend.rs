@@ -9,6 +9,7 @@
 use fhemem::service::wire::{encode_frame, read_frame_from, FrameKind};
 use fhemem::service::{server, FheService, SchedulerConfig};
 use fhemem::sim::ArchConfig;
+use fhemem::util::json::Json;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -187,6 +188,39 @@ fn http_metrics_endpoint_serves_snapshot_and_404() {
 
     let missing = get("/nope");
     assert!(missing.starts_with("HTTP/1.1 404"), "bad status: {missing}");
+
+    handle.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn healthz_reports_liveness_and_router_still_404s() {
+    let (svc, handle) = spawn_with_opts(server::ServeOptions::default(), true);
+    let http = handle.http_addr.expect("http listener");
+
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(http).expect("connect http");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read http response");
+        out
+    };
+
+    let ok = get("/healthz");
+    assert!(ok.starts_with("HTTP/1.1 200"), "bad status: {ok}");
+    let body = ok.split_once("\r\n\r\n").expect("body").1;
+    let doc = Json::parse(body).expect("healthz body parses as JSON");
+    assert_eq!(doc.field("status").unwrap().as_str().unwrap(), "ok");
+    assert!(doc.field("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(doc.field("queued").unwrap().as_u64().unwrap(), 0);
+
+    // The exact-match router is unchanged: near-misses stay 404.
+    for path in ["/healthz/", "/health", "/healthzz"] {
+        let miss = get(path);
+        assert!(miss.starts_with("HTTP/1.1 404"), "{path} escaped the router: {miss}");
+    }
 
     handle.stop();
     svc.shutdown();
